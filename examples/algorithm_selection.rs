@@ -1,0 +1,39 @@
+//! Algorithm selection (paper §4.5): rank the 8 triangular-inversion
+//! variants by prediction alone, then validate against execution.
+//!
+//! Run: `cargo run --release --example algorithm_selection`
+
+use dlapm::machine::{CpuId, Elem, Library, Machine};
+use dlapm::modeling::ModelStore;
+use dlapm::predict::algorithms::trtri::Trtri;
+use dlapm::predict::algorithms::BlockedAlg;
+use dlapm::predict::measurement::coverage;
+use dlapm::predict::selection::{rank_and_validate, selection_quality};
+
+fn main() {
+    let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+    let algs = Trtri::all(Elem::D);
+    let refs: Vec<&dyn BlockedAlg> = algs.iter().map(|a| a as _).collect();
+    let mut store = ModelStore::new(&machine.label());
+    let t0 = std::time::Instant::now();
+    coverage::ensure_models(&machine, &mut store, &refs, 2056, 536, 42);
+    eprintln!("model generation: {:.1}s wall, {:.1}s virtual measurement", t0.elapsed().as_secs_f64(), store.total_gen_cost());
+
+    for n in [520usize, 2008] {
+        let t0 = std::time::Instant::now();
+        let ranked = rank_and_validate(&machine, &store, &refs, n, 128, 5, 3);
+        let pred_wall = t0.elapsed().as_secs_f64();
+        println!("\nn = {n} (prediction wall time {:.3}s):", pred_wall);
+        for (i, r) in ranked.iter().enumerate() {
+            println!(
+                "  {:>2}. {:<16} predicted {:>9.3} ms   measured {:>9.3} ms",
+                i + 1,
+                r.name,
+                r.predicted.med * 1e3,
+                r.measured.unwrap().med * 1e3
+            );
+        }
+        let q = selection_quality(&ranked, 0.02).unwrap();
+        println!("  selected algorithm achieves {:.1}% of the true best", 100.0 / q);
+    }
+}

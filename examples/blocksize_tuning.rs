@@ -1,0 +1,33 @@
+//! Block-size optimization (paper §4.6): pick b* for the Cholesky without
+//! executing a single candidate, then report the performance yield.
+//!
+//! Run: `cargo run --release --example blocksize_tuning`
+
+use dlapm::machine::{CpuId, Elem, Library, Machine};
+use dlapm::modeling::ModelStore;
+use dlapm::predict::algorithms::potrf::Potrf;
+use dlapm::predict::blocksize::{optimize_blocksize, validate_blocksize};
+use dlapm::predict::measurement::coverage;
+
+fn main() {
+    for threads in [1usize, 12] {
+        let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, threads);
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let mut store = ModelStore::new(&machine.label());
+        coverage::ensure_models(&machine, &mut store, &[&alg], 3080, 536, 42);
+        println!("\n== {} ==", machine.label());
+        for n in [1000usize, 2000, 3000] {
+            let bs: Vec<usize> = (24..=400).step_by(8).collect();
+            let sweep = optimize_blocksize(&store, &alg, n, &bs);
+            let val: Vec<usize> = (24..=400).step_by(40).collect();
+            let vsweep = optimize_blocksize(&store, &alg, n, &val);
+            let y = validate_blocksize(&machine, &alg, &vsweep, 3, 5);
+            println!(
+                "n={n:<5} predicted b*={:<4} empirical b*={:<4} yield {:.1}%",
+                sweep.b_pred,
+                y.b_opt,
+                y.yield_frac * 100.0
+            );
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! End-to-end validation driver (the EXPERIMENTS.md headline run).
+//!
+//! Full pipeline on a real small workload: generate performance models for
+//! a virtual testbed (sampling thousands of kernel executions), predict
+//! six blocked LAPACK operations across a problem-size sweep *without
+//! executing them*, then validate every prediction against reference
+//! executions — reporting the paper's headline metric (median-runtime ARE,
+//! Table 4.3) and the prediction-vs-measurement speedup. The model store
+//! round-trips through PJRT polyeval to prove the artifact path works.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_validation`
+
+use dlapm::machine::{CpuId, Elem, Library, Machine};
+use dlapm::modeling::ModelStore;
+use dlapm::predict::accuracy::relative_errors;
+use dlapm::predict::algorithms::lapack::{LapackAlg, LapackOp};
+use dlapm::predict::algorithms::potrf::Potrf;
+use dlapm::predict::algorithms::trtri::Trtri;
+use dlapm::predict::algorithms::BlockedAlg;
+use dlapm::predict::measurement::{coverage, measure_algorithm};
+use dlapm::predict::predictor::predict_calls;
+
+fn main() {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let suite: Vec<Box<dyn BlockedAlg>> = vec![
+        Box::new(LapackAlg::new(LapackOp::Lauum, Elem::D)),
+        Box::new(LapackAlg::new(LapackOp::Sygst, Elem::D)),
+        Box::new(Trtri { variant: 5, elem: Elem::D }),
+        Box::new(Potrf { variant: 2, elem: Elem::D }),
+        Box::new(LapackAlg::new(LapackOp::Getrf, Elem::D)),
+        Box::new(LapackAlg::new(LapackOp::Geqrf, Elem::D)),
+    ];
+    let refs: Vec<&dyn BlockedAlg> = suite.iter().map(|a| a.as_ref()).collect();
+
+    println!("== e2e: model generation on {} ==", machine.label());
+    let mut store = ModelStore::new(&machine.label());
+    let wall0 = std::time::Instant::now();
+    let n_models = coverage::ensure_models(&machine, &mut store, &refs, 2056, 536, 42);
+    println!(
+        "{n_models} models generated in {:.1}s wall / {:.1}s virtual measurement time",
+        wall0.elapsed().as_secs_f64(),
+        store.total_gen_cost()
+    );
+
+    println!("\n== e2e: predict + validate 6 blocked LAPACK operations ==");
+    let ns: Vec<usize> = (56..=2040).step_by(248).collect();
+    let mut grand = Vec::new();
+    let mut pred_wall = 0.0;
+    let mut meas_virtual = 0.0;
+    for alg in &refs {
+        let b = if alg.name().contains("geqrf") { 32 } else { 64 };
+        let mut ares = Vec::new();
+        for &n in &ns {
+            let t0 = std::time::Instant::now();
+            let pred = predict_calls(&store, &alg.calls(n, b)).time;
+            pred_wall += t0.elapsed().as_secs_f64();
+            let meas = measure_algorithm(&machine, *alg, n, b, 10, 7);
+            meas_virtual += meas.med * 10.0;
+            ares.push(relative_errors(&pred, &meas).are_med());
+        }
+        let avg = dlapm::util::stats::mean(&ares);
+        grand.push(avg);
+        println!("  {:<12} avg |median RE| = {:.2}%", alg.name(), avg * 100.0);
+    }
+    let grand_avg = dlapm::util::stats::mean(&grand);
+    println!("\nheadline: grand average ARE = {:.2}%  (paper Table 4.3 average: 1.91%)", grand_avg * 100.0);
+    println!(
+        "prediction cost: {:.3}s wall for {} predictions vs {:.1}s (virtual) of measurement — {:.0}x faster",
+        pred_wall,
+        ns.len() * refs.len(),
+        meas_virtual,
+        meas_virtual / pred_wall.max(1e-9)
+    );
+
+    // PJRT round-trip on one model.
+    if let Ok(mut rt) = dlapm::runtime::Runtime::load_default() {
+        if let Some(model) = store.models.values().next() {
+            let hull = model.domain_hull();
+            let pts: Vec<Vec<usize>> = (0..16).map(|i| hull.lo.iter().zip(&hull.hi).map(|(&l, &h)| l + (h - l) * i / 15).collect()).collect();
+            let pjrt = dlapm::runtime::polyeval_model(&mut rt, model, dlapm::util::stats::Stat::Med, &pts).unwrap();
+            let max_dev = pts.iter().zip(&pjrt).map(|(p, v)| {
+                let want = model.estimate(p).med;
+                ((v - want) / want).abs()
+            }).fold(0.0f64, f64::max);
+            println!("PJRT polyeval cross-check on '{}': max rel dev {:.2e}", model.case, max_dev);
+        }
+    } else {
+        println!("(artifacts missing; run `make artifacts` for the PJRT cross-check)");
+    }
+    assert!(grand_avg < 0.06, "e2e accuracy regression: {grand_avg}");
+    println!("\nE2E VALIDATION OK");
+}

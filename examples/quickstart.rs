@@ -1,0 +1,66 @@
+//! Quickstart: all three layers in one run.
+//!
+//! 1. L3: model a kernel on a virtual testbed and predict a blocked
+//!    Cholesky without executing it.
+//! 2. L2/L1 via PJRT: run the AOT-compiled Pallas polyeval artifact for
+//!    the same prediction and the real Pallas gemm for a sanity matmul.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use dlapm::machine::{CpuId, Elem, Library, Machine};
+use dlapm::modeling::ModelStore;
+use dlapm::predict::algorithms::potrf::Potrf;
+use dlapm::predict::algorithms::BlockedAlg;
+use dlapm::predict::measurement::{coverage, measure_algorithm};
+use dlapm::predict::predictor::{performance, predict_calls};
+
+fn main() -> anyhow::Result<()> {
+    // ------------------------------------------------------------- L3
+    let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+    println!("virtual testbed: {} (peak {:.1} GFLOPs/s)", machine.label(), machine.peak_gflops(Elem::D));
+
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let mut store = ModelStore::new(&machine.label());
+    let generated = coverage::ensure_models(&machine, &mut store, &[&alg], 2056, 536, 42);
+    println!("generated {generated} kernel models ({:.1} virtual s of measurements)", store.total_gen_cost());
+
+    let (n, b) = (2008, 128);
+    let pred = predict_calls(&store, &alg.calls(n, b));
+    let perf = performance(&pred.time, alg.op_flops(n));
+    println!("\npredicted dpotrf var3 (n={n}, b={b}): {:.3} ms ({:.1} GFLOPs/s)", pred.time.med * 1e3, perf.med);
+
+    let meas = measure_algorithm(&machine, &alg, n, b, 10, 7);
+    println!("measured on the testbed:              {:.3} ms  (prediction error {:+.2}%)",
+        meas.med * 1e3, (pred.time.med - meas.med) / meas.med * 100.0);
+
+    // ---------------------------------------------------------- L2/L1
+    match dlapm::runtime::Runtime::load_default() {
+        Ok(mut rt) => {
+            // Same prediction through the Pallas polyeval artifact.
+            let case = dlapm::modeling::case_key(&{
+                let mut c = dlapm::machine::Call::new(dlapm::machine::KernelId::Potf2, Elem::D);
+                c.flags.uplo = Some(dlapm::machine::Uplo::Lower);
+                c
+            });
+            if let Some(model) = store.get(&case) {
+                let points: Vec<Vec<usize>> = (24..=536).step_by(64).map(|v| vec![v]).collect();
+                let pjrt = dlapm::runtime::polyeval_model(&mut rt, model, dlapm::util::stats::Stat::Med, &points)?;
+                let rust: Vec<f64> = points.iter().map(|p| model.estimate(p).med).collect();
+                let max_dev = pjrt.iter().zip(&rust).map(|(a, b)| (a - b).abs() / b).fold(0.0f64, f64::max);
+                println!("\nPJRT polyeval vs in-process eval on {} points: max rel dev {:.2e}", points.len(), max_dev);
+            }
+            // Real compute through the Pallas gemm kernel.
+            let nn = rt.entry("gemm")?.constants["n"];
+            let a: Vec<f32> = (0..nn * nn).map(|i| (i % 13) as f32 * 0.1).collect();
+            let mut eye = vec![0.0f32; nn * nn];
+            for i in 0..nn {
+                eye[i * nn + i] = 1.0;
+            }
+            let c = rt.gemm(&a, &eye)?;
+            let ok = c.iter().zip(&a).all(|(x, y)| (x - y).abs() < 1e-5);
+            println!("Pallas gemm ({nn}x{nn}) through PJRT: identity check {}", if ok { "OK" } else { "FAILED" });
+        }
+        Err(e) => println!("\n(PJRT artifacts unavailable: {e}; run `make artifacts`)"),
+    }
+    Ok(())
+}

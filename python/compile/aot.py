@@ -1,0 +1,119 @@
+"""AOT compile path: lower the L2 graphs to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the published `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one <entry>.hlo.txt per graph plus manifest.json describing shapes,
+dtypes and the static layout constants the Rust runtime must honor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Static artifact geometry. The Rust runtime pads/chunks to these shapes;
+# keep in sync with rust/src/runtime/manifest.rs expectations (it reads
+# manifest.json, so only the names here are load-bearing).
+FIT_N = 512  # max samples per fit (rows are zero-padded)
+FIT_M = 24  # max monomials per fit (columns are zero-padded)
+EVAL_K = 2048  # eval points per polyeval dispatch
+EVAL_P = 64  # max pieces per dispatch
+EVAL_D = 3  # max size-argument dimensionality
+GEMM_N = 256  # quickstart matmul size
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries():
+    """(name, fn, arg specs, constants) for every artifact."""
+    f8 = jnp.float64
+    f4 = jnp.float32
+    i4 = jnp.int32
+    return [
+        (
+            "fit",
+            model.fit_fn,
+            [spec((FIT_N, FIT_M), f8)],
+            {"n": FIT_N, "m": FIT_M},
+        ),
+        (
+            "polyeval",
+            model.polyeval_fn,
+            [
+                spec((EVAL_P, FIT_M), f8),
+                spec((EVAL_K,), i4),
+                spec((EVAL_K, EVAL_D), f8),
+                spec((FIT_M, EVAL_D), i4),
+            ],
+            {"k": EVAL_K, "p": EVAL_P, "m": FIT_M, "d": EVAL_D},
+        ),
+        (
+            "gemm",
+            model.gemm_fn,
+            [spec((GEMM_N, GEMM_N), f4), spec((GEMM_N, GEMM_N), f4)],
+            {"n": GEMM_N},
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text", "entries": []}
+    for name, fn, specs, constants in entries():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+                ],
+                "constants": constants,
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

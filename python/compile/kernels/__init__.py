@@ -1,0 +1,3 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from . import gemm, gram, polyeval, ref  # noqa: F401

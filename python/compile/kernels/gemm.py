@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: tiled matmul.
+
+The paper's subject is the performance of BLAS kernels; the virtual testbed
+(rust/src/machine/) times *simulated* kernels, and this Pallas gemm is the
+one real compute kernel shipped with the framework. It grounds the
+quickstart example (the simulated dgemm's FLOP accounting is checked
+against a real matmul executed through all three layers) and doubles as the
+MXU-style reference for the §Perf roofline discussion.
+
+Classic three-level tiling: grid over (M/bm, N/bn, K/bk); the (bm, bn)
+output block lives across the K steps and accumulates partial products —
+the BlockSpec expresses the HBM->VMEM schedule that a CPU BLAS expresses
+with cache blocking.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(a, b, *, bm: int = 64, bn: int = 64, bk: int = 64):
+    """C = A @ B with A (M, K), B (K, N); dims multiples of the block sizes."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

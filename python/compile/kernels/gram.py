@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: tiled normal-equation assembly (Gram matrix build).
+
+Model fitting (Ch. 3 §3.2.4 of the paper) solves the relative least-squares
+problem min ||1 - X beta||² where X[i, j] = m_j(x_i) / y_i. The expensive
+part is forming G = XᵀX and b = Xᵀ1; this kernel tiles the sample axis N and
+accumulates both into the output across grid steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, g_ref, b_ref):
+    """Accumulate one N-block: G += XbᵀXb, b += Xbᵀ1.
+
+    Grid iterates over N blocks; outputs map every step to the same block,
+    so they act as accumulators (initialized at step 0).
+    """
+    xb = x_ref[...]  # (BN, M)
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    g_ref[...] += jnp.dot(xb.T, xb)
+    b_ref[...] += jnp.sum(xb, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gram(x, *, block_n: int = 128):
+    """G = XᵀX and b = Xᵀ1 for x of shape (N, M); N multiple of block_n.
+
+    Zero-padded rows (mask) contribute nothing to either output, so callers
+    simply zero rows beyond the live sample count.
+    """
+    n, m = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, m), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, m), x.dtype),
+            jax.ShapeDtypeStruct((m,), x.dtype),
+        ],
+        interpret=True,
+    )(x)

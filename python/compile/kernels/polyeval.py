@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: batched piecewise-polynomial evaluation.
+
+This is the hot spot of the prediction path (Ch. 4 of the paper): a
+prediction sweep evaluates the runtime polynomial of thousands of kernel
+calls. The kernel fuses monomial-basis construction with the per-point
+coefficient dot product, tiled over evaluation points.
+
+TPU adaptation note (DESIGN.md §3): the paper is CPU work, so there is no
+GPU schedule to port. The BlockSpec tiles the K axis so one block of points
+plus the full (small) coefficient and exponent tables fit in VMEM-style
+scratch; the inner contraction over M is a dense fused multiply-add chain
+that maps onto the VPU. ``interpret=True`` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Largest exponent that can appear in a monomial table. Degree-3 complexity
+# (BLAS 3) + overfitting 2 + cross terms stay well below this.
+MAX_EXP = 8
+
+
+def _polyeval_kernel(coeffs_ref, piece_ref, pts_ref, exps_ref, out_ref):
+    """One block of evaluation points against the full piece table.
+
+    coeffs_ref: (P, M)  piece coefficients (whole table per block)
+    piece_ref:  (BK,)   int32 piece index per point
+    pts_ref:    (BK, D) points
+    exps_ref:   (M, D)  int32 exponent table
+    out_ref:    (BK,)   estimates
+    """
+    pts = pts_ref[...]  # (BK, D)
+    exps = exps_ref[...]  # (M, D)
+    coeffs = coeffs_ref[...]  # (P, M)
+    piece = piece_ref[...]  # (BK,)
+
+    # Monomial basis by exponent masking: acc[:, j] *= pts[:, d] while the
+    # remaining exponent of monomial j in dimension d exceeds e. This keeps
+    # every shape static and avoids integer pow lowering.
+    bk = pts.shape[0]
+    m = exps.shape[0]
+    acc = jnp.ones((bk, m), dtype=pts.dtype)
+    for d in range(pts.shape[1]):
+        xd = pts[:, d][:, None]  # (BK, 1)
+        ed = exps[:, d][None, :]  # (1, M)
+        for e in range(MAX_EXP):
+            acc = acc * jnp.where(ed > e, xd, jnp.ones_like(xd))
+
+    # Gather each point's coefficient row and contract over M.
+    c = coeffs[piece]  # (BK, M)
+    out_ref[...] = jnp.sum(acc * c, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def polyeval(coeffs, piece_idx, pts, exps, *, block_k: int = 256):
+    """Piecewise-polynomial batch evaluation via Pallas.
+
+    coeffs (P, M), piece_idx (K,) int32, pts (K, D), exps (M, D) int32
+    -> (K,) estimates. K must be a multiple of block_k.
+    """
+    k, d = pts.shape
+    p, m = coeffs.shape
+    assert exps.shape == (m, d), (exps.shape, (m, d))
+    assert k % block_k == 0, f"K={k} not a multiple of block_k={block_k}"
+    grid = (k // block_k,)
+    return pl.pallas_call(
+        _polyeval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, m), lambda i: (0, 0)),
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+            pl.BlockSpec((block_k, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), pts.dtype),
+        interpret=True,
+    )(coeffs, piece_idx, pts, exps)

@@ -1,0 +1,56 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a corresponding reference here,
+written with nothing but jax.numpy ops. The pytest suite asserts
+``assert_allclose(pallas(x), ref(x))`` across shapes and dtypes; the AOT
+artifacts are only ever produced from kernels that passed that gate.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def monomials_ref(pts: jnp.ndarray, exps: jnp.ndarray) -> jnp.ndarray:
+    """Monomial basis evaluation.
+
+    pts:  (K, D) evaluation points (already scaled to the fit domain).
+    exps: (M, D) integer exponent table; monomial j is prod_d pts[:, d]**exps[j, d].
+    returns (K, M).
+    """
+    # (K, 1, D) ** (1, M, D) -> (K, M, D) -> product over D.
+    return jnp.prod(pts[:, None, :] ** exps[None, :, :].astype(pts.dtype), axis=-1)
+
+
+def polyeval_ref(
+    coeffs: jnp.ndarray,
+    piece_idx: jnp.ndarray,
+    pts: jnp.ndarray,
+    exps: jnp.ndarray,
+) -> jnp.ndarray:
+    """Piecewise-polynomial batch evaluation.
+
+    coeffs:    (P, M) per-piece coefficient rows.
+    piece_idx: (K,)   int32, which piece evaluates each point.
+    pts:       (K, D) points.
+    exps:      (M, D) exponent table shared by all pieces.
+    returns (K,) estimates.
+    """
+    basis = monomials_ref(pts, exps)  # (K, M)
+    c = coeffs[piece_idx]  # (K, M)
+    return jnp.sum(basis * c, axis=-1)
+
+
+def gram_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Normal-equation assembly for relative least squares.
+
+    x: (N, M) scaled design matrix with rows m_j(x_i)/y_i (padded rows are
+       all-zero and therefore contribute nothing).
+    returns (XᵀX, Xᵀ1): ((M, M), (M,)).
+    """
+    return x.T @ x, jnp.sum(x, axis=0)
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle for the tiled Pallas gemm."""
+    return a @ b

@@ -1,0 +1,69 @@
+"""L2: JAX compute graphs for model fitting and prediction.
+
+Two graphs, both AOT-lowered by aot.py and executed from the Rust
+coordinator via PJRT (Python never runs at prediction time):
+
+* ``fit_fn``     — relative least-squares polynomial fit (paper §3.2.4):
+                   Pallas Gram build + in-graph Gauss-Jordan SPD solve.
+* ``polyeval_fn``— batched piecewise polynomial evaluation (paper §4.1 hot
+                   path) via the Pallas polyeval kernel.
+
+A third graph, ``gemm_fn``, ships the real tiled-matmul kernel for the
+quickstart example.
+
+The SPD solve is written with plain jnp ops only: jnp.linalg.solve would
+lower to LAPACK custom-calls that the pinned xla_extension 0.5.1 CPU client
+cannot execute (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.gemm import gemm
+from .kernels.gram import gram
+from .kernels.polyeval import polyeval
+
+# Relative ridge applied to the Gram matrix before the solve. The Rust side
+# scales size arguments into [0, 1] before building the design matrix, so
+# the Gram matrix is poorly conditioned but bounded; a tiny relative ridge
+# keeps the elimination stable without visibly biasing the coefficients.
+RIDGE = 1e-11
+
+
+def spd_solve(g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve g @ beta = b for SPD g via unpivoted Gauss-Jordan elimination.
+
+    g: (M, M), b: (M,). The loop over M is a Python loop (M is static), so
+    the lowered graph is M rank-1 updates — small and custom-call-free.
+    """
+    m = g.shape[0]
+    g = g + (RIDGE * jnp.trace(g) / m) * jnp.eye(m, dtype=g.dtype)
+    a = jnp.concatenate([g, b[:, None]], axis=1)  # (M, M+1)
+    for k in range(m):
+        pivot = a[k, k]
+        row = a[k] / pivot  # (M+1,)
+        factor = a[:, k]  # (M,)
+        a = a - factor[:, None] * row[None, :]
+        a = a.at[k].set(row)
+    return a[:, m]
+
+
+def fit_fn(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Fit beta minimizing ||1 - X beta||² for the scaled design matrix x.
+
+    x: (N, M) with rows m_j(x_i)/y_i; zero rows are padding. Returns (beta,)
+    (a 1-tuple: the AOT bridge lowers with return_tuple=True).
+    """
+    g, b = gram(x)
+    return (spd_solve(g, b),)
+
+
+def polyeval_fn(coeffs, piece_idx, pts, exps) -> tuple[jnp.ndarray]:
+    """Batched piecewise polynomial evaluation; see kernels.polyeval."""
+    return (polyeval(coeffs, piece_idx, pts, exps),)
+
+
+def gemm_fn(a, b) -> tuple[jnp.ndarray]:
+    """Real tiled matmul through the Pallas kernel."""
+    return (gemm(a, b),)

@@ -1,0 +1,48 @@
+"""AOT pipeline tests: artifacts lower to HLO text and manifest is sane."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+PYDIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=PYDIR,
+    )
+    return out
+
+
+def test_manifest_lists_all_entries(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    names = {e["name"] for e in manifest["entries"]}
+    assert names == {"fit", "polyeval", "gemm"}
+    for entry in manifest["entries"]:
+        assert (artifacts / entry["file"]).exists()
+
+
+def test_hlo_text_is_parseable_header(artifacts):
+    for entry in json.loads((artifacts / "manifest.json").read_text())["entries"]:
+        text = (artifacts / entry["file"]).read_text()
+        assert text.startswith("HloModule"), entry["name"]
+        assert "ENTRY" in text
+
+
+def test_manifest_shapes_match_design(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    by_name = {e["name"]: e for e in manifest["entries"]}
+    fit = by_name["fit"]
+    assert fit["inputs"][0]["shape"] == [fit["constants"]["n"], fit["constants"]["m"]]
+    assert fit["inputs"][0]["dtype"] == "float64"
+    pe = by_name["polyeval"]
+    k, p, m, d = (pe["constants"][c] for c in "kpmd")
+    shapes = [tuple(i["shape"]) for i in pe["inputs"]]
+    assert shapes == [(p, m), (k,), (k, d), (m, d)]

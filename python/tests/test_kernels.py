@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles: the core L1 correctness signal."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm import gemm
+from compile.kernels.gram import gram
+from compile.kernels.polyeval import MAX_EXP, polyeval
+from compile.kernels.ref import gemm_ref, gram_ref, monomials_ref, polyeval_ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, dtype=np.float64, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- polyeval
+
+
+def make_polyeval_case(k, p, m, d, dtype, max_exp=3, seed=0):
+    rng = np.random.default_rng(seed)
+    coeffs = rng.standard_normal((p, m)).astype(dtype)
+    piece = rng.integers(0, p, size=k).astype(np.int32)
+    pts = rng.uniform(0.1, 1.0, size=(k, d)).astype(dtype)
+    exps = rng.integers(0, max_exp + 1, size=(m, d)).astype(np.int32)
+    return coeffs, piece, pts, exps
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("k,p,m,d", [(256, 4, 6, 2), (512, 64, 24, 3), (256, 1, 1, 1)])
+def test_polyeval_matches_ref(dtype, k, p, m, d):
+    coeffs, piece, pts, exps = make_polyeval_case(k, p, m, d, dtype)
+    got = polyeval(coeffs, piece, pts, exps, block_k=128)
+    # Compare against the oracle evaluated in f64: with cancellation across
+    # up to 24 terms, f32 absolute error is bounded but relative error is not.
+    want = polyeval_ref(
+        coeffs.astype(np.float64), piece, pts.astype(np.float64), exps
+    )
+    if dtype == np.float32:
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_polyeval_handles_max_exponent():
+    k, p, m, d = 128, 2, 4, 2
+    coeffs, piece, pts, _ = make_polyeval_case(k, p, m, d, np.float64)
+    exps = np.full((m, d), MAX_EXP, dtype=np.int32)
+    got = polyeval(coeffs, piece, pts, exps, block_k=128)
+    want = polyeval_ref(coeffs, piece, pts, exps)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_polyeval_zero_exponents_is_constant_sum():
+    k, p, m, d = 128, 3, 5, 3
+    coeffs, piece, pts, _ = make_polyeval_case(k, p, m, d, np.float64)
+    exps = np.zeros((m, d), dtype=np.int32)
+    got = polyeval(coeffs, piece, pts, exps, block_k=128)
+    want = coeffs.sum(axis=1)[piece]
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k_blocks=st.integers(1, 4),
+    p=st.integers(1, 16),
+    m=st.integers(1, 24),
+    d=st.integers(1, 3),
+    max_exp=st.integers(0, MAX_EXP),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_polyeval_hypothesis_sweep(k_blocks, p, m, d, max_exp, seed):
+    k = 64 * k_blocks
+    coeffs, piece, pts, exps = make_polyeval_case(
+        k, p, m, d, np.float64, max_exp=max_exp, seed=seed
+    )
+    got = polyeval(coeffs, piece, pts, exps, block_k=64)
+    want = polyeval_ref(coeffs, piece, pts, exps)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-12)
+
+
+def test_monomials_ref_basic():
+    pts = jnp.array([[2.0, 3.0]])
+    exps = jnp.array([[0, 0], [1, 0], [0, 1], [2, 1]], dtype=jnp.int32)
+    want = np.array([[1.0, 2.0, 3.0, 12.0]])
+    np.testing.assert_allclose(monomials_ref(pts, exps), want)
+
+
+# -------------------------------------------------------------------- gram
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("n,m", [(128, 6), (512, 24), (256, 1)])
+def test_gram_matches_ref(dtype, n, m):
+    x = rand((n, m), dtype)
+    g, b = gram(x, block_n=128)
+    g_ref, b_ref = gram_ref(x)
+    rtol = 1e-4 if dtype == np.float32 else 1e-11
+    np.testing.assert_allclose(g, g_ref, rtol=rtol, atol=1e-6)
+    np.testing.assert_allclose(b, b_ref, rtol=rtol, atol=1e-6)
+
+
+def test_gram_zero_padding_rows_are_inert():
+    x = rand((256, 8))
+    x_padded = np.concatenate([x, np.zeros((256, 8))]).astype(np.float64)
+    g1, b1 = gram(x, block_n=128)
+    g2, b2 = gram(x_padded, block_n=128)
+    np.testing.assert_allclose(g1, g2, rtol=1e-12)
+    np.testing.assert_allclose(b1, b2, rtol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    m=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_hypothesis_sweep(n_blocks, m, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((64 * n_blocks, m))
+    g, b = gram(x, block_n=64)
+    g_ref, b_ref = gram_ref(x)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(b, b_ref, rtol=1e-10, atol=1e-10)
+
+
+# -------------------------------------------------------------------- gemm
+
+
+@pytest.mark.parametrize("dtype,rtol", [(np.float32, 2e-5), (np.float64, 1e-12)])
+def test_gemm_matches_ref(dtype, rtol):
+    a = rand((128, 192), dtype, 0.3)
+    b = rand((192, 64), dtype, 0.3)
+    got = gemm(a, b, bm=64, bn=64, bk=64)
+    np.testing.assert_allclose(got, gemm_ref(a, b), rtol=rtol, atol=1e-5)
+
+
+def test_gemm_identity():
+    a = rand((64, 64))
+    eye = np.eye(64)
+    np.testing.assert_allclose(gemm(a, eye), a, rtol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mb=st.integers(1, 3),
+    nb=st.integers(1, 3),
+    kb=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_hypothesis_shapes(mb, nb, kb, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((64 * mb, 64 * kb))
+    b = rng.standard_normal((64 * kb, 64 * nb))
+    np.testing.assert_allclose(gemm(a, b), a @ b, rtol=1e-10, atol=1e-10)

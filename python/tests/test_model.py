@@ -1,0 +1,109 @@
+"""L2 graph tests: the relative-LSQ fit vs numpy's reference solution."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import monomials_ref
+
+
+def design_matrix(pts, exps, y):
+    """X[i, j] = m_j(x_i) / y_i — the paper's relative-LSQ scaling."""
+    basis = np.asarray(monomials_ref(pts, exps))
+    return basis / y[:, None]
+
+
+def lstsq_ref(x):
+    """Reference solution of min ||1 - X beta||² via numpy lstsq."""
+    ones = np.ones(x.shape[0])
+    beta, *_ = np.linalg.lstsq(x, ones, rcond=None)
+    return beta
+
+
+def make_fit_case(n, m, d, seed, noise=0.01, max_exp=3):
+    rng = np.random.default_rng(seed)
+    exps = rng.integers(0, max_exp + 1, size=(m, d)).astype(np.int32)
+    pts = rng.uniform(0.05, 1.0, size=(n, d))
+    true_beta = rng.uniform(0.5, 2.0, size=m)
+    basis = np.asarray(monomials_ref(pts, exps))
+    y = basis @ true_beta
+    y = y * (1.0 + noise * rng.standard_normal(n))
+    y = np.maximum(y, 1e-9)
+    return pts, exps, y, true_beta
+
+
+def test_spd_solve_matches_numpy():
+    rng = np.random.default_rng(3)
+    for m in (1, 2, 5, 12, 24):
+        a = rng.standard_normal((m, m))
+        g = a @ a.T + m * np.eye(m)
+        b = rng.standard_normal(m)
+        got = model.spd_solve(g, b)
+        want = np.linalg.solve(g, b)
+        np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-10)
+
+
+@pytest.mark.parametrize("n,m,d", [(128, 6, 2), (512, 12, 3), (128, 1, 1)])
+def test_fit_fn_matches_lstsq(n, m, d):
+    pts, exps, y, _ = make_fit_case(n, m, d, seed=7)
+    x = design_matrix(pts, exps, y)
+    (beta,) = model.fit_fn(x)
+    want = lstsq_ref(x)
+    np.testing.assert_allclose(beta, want, rtol=1e-5, atol=1e-8)
+
+
+def test_fit_fn_recovers_exact_polynomial():
+    """With zero noise the fit must recover the generating coefficients."""
+    pts, exps, y, true_beta = make_fit_case(256, 6, 2, seed=11, noise=0.0)
+    x = design_matrix(pts, exps, y)
+    (beta,) = model.fit_fn(x)
+    np.testing.assert_allclose(beta, true_beta, rtol=1e-6)
+
+
+def test_fit_fn_zero_padded_rows_are_inert():
+    pts, exps, y, _ = make_fit_case(128, 6, 2, seed=13)
+    x = design_matrix(pts, exps, y)
+    x_pad = np.concatenate([x, np.zeros((128, 6))])
+    (b1,) = model.fit_fn(x)
+    (b2,) = model.fit_fn(x_pad)
+    np.testing.assert_allclose(b1, b2, rtol=1e-9)
+
+
+def test_fit_fn_zero_padded_columns_yield_zero_coeffs():
+    """Unused monomial columns (all-zero) must not blow up the solve."""
+    pts, exps, y, _ = make_fit_case(128, 6, 2, seed=17)
+    x = design_matrix(pts, exps, y)
+    x_pad = np.concatenate([x, np.zeros((128, 4))], axis=1)
+    (beta,) = model.fit_fn(x_pad)
+    np.testing.assert_allclose(beta[:6], lstsq_ref(x), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(beta[6:], 0.0, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 256]),
+    m=st.integers(2, 12),
+    d=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fit_fn_hypothesis(n, m, d, seed):
+    pts, exps, y, _ = make_fit_case(n, m, d, seed=seed)
+    # Dedup exponent rows: duplicated monomials make the system singular
+    # beyond what the ridge handles (the Rust generator never emits dups).
+    _, keep = np.unique(exps, axis=0, return_index=True)
+    exps = exps[np.sort(keep)]
+    m = exps.shape[0]
+    x = design_matrix(pts, exps, y)
+    (beta,) = model.fit_fn(x)
+    want = lstsq_ref(x)
+    # Relative residuals must agree even when the system is ill-conditioned
+    # and individual coefficients differ.
+    ones = np.ones(n)
+    res_got = np.linalg.norm(ones - x @ np.asarray(beta))
+    res_want = np.linalg.norm(ones - x @ want)
+    assert res_got <= res_want * (1 + 1e-4) + 1e-8

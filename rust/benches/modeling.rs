@@ -1,0 +1,31 @@
+//! Bench: model generation (Table 3.2 "model cost" analogue) and the
+//! relative-LSQ fit backends (Rust vs PJRT artifact).
+use dlapm::machine::{CpuId, Elem, Library, Machine};
+use dlapm::machine::{Call, KernelId, Uplo};
+use dlapm::modeling::fit::{design_matrix, rust_fit};
+use dlapm::modeling::generator::{generate_model, GenConfig};
+use dlapm::modeling::Domain;
+use dlapm::util::bench::BenchSuite;
+use dlapm::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::from_env("modeling");
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let mut potf2 = Call::new(KernelId::Potf2, Elem::D);
+    potf2.flags.uplo = Some(Uplo::Lower);
+    let domain = Domain::new(vec![24], vec![536]);
+    suite.add("generate_model/dpotf2-1D", || {
+        generate_model(&machine, &GenConfig { reps: 5, ..Default::default() }, &potf2, &domain, 1).1.pieces
+    });
+
+    // Fit backends on a 128x12 system.
+    let mut rng = Rng::new(3);
+    let exps: Vec<Vec<u8>> = (0..4u8).flat_map(|i| (0..3u8).map(move |j| vec![i, j])).collect();
+    let pts: Vec<Vec<f64>> = (0..128).map(|_| vec![rng.range_f64(0.05, 1.0), rng.range_f64(0.05, 1.0)]).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p[0] * p[0] * p[1] + 0.01).collect();
+    let x = design_matrix(&pts, &ys, &exps);
+    suite.add("fit/rust-128x12", || rust_fit(&x, 128, 12)[0]);
+    if let Ok(mut rt) = dlapm::runtime::Runtime::load_default() {
+        suite.add("fit/pjrt-128x12", || rt.fit(&x, 128, 12).unwrap()[0]);
+    }
+}

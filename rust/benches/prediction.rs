@@ -1,0 +1,46 @@
+//! Bench: the prediction hot path (paper headline — predictions are
+//! orders of magnitude faster than measurement). Covers Fig 4.12/4.14
+//! selection sweeps and the scalar vs PJRT polyeval backends.
+use dlapm::machine::{CpuId, Elem, Library, Machine};
+use dlapm::modeling::ModelStore;
+use dlapm::predict::algorithms::potrf::Potrf;
+use dlapm::predict::algorithms::BlockedAlg;
+use dlapm::predict::measurement::coverage;
+use dlapm::predict::predictor::predict_calls;
+use dlapm::util::bench::BenchSuite;
+
+fn main() {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let mut store = ModelStore::new(&machine.label());
+    coverage::ensure_models(&machine, &mut store, &[&alg], 2056, 536, 42);
+
+    let mut suite = BenchSuite::from_env("prediction");
+    let calls = alg.calls(2008, 128);
+    suite.add_throughput("predict_calls/potrf-n2008", calls.len() as u64, "calls", || {
+        predict_calls(&store, &calls).time.med
+    });
+    suite.add("call_sequence_gen/potrf-n2008", || alg.calls(2008, 128).len());
+    suite.add("blocksize_sweep/65-candidates", || {
+        let bs: Vec<usize> = (24..=536).step_by(8).collect();
+        dlapm::predict::blocksize::optimize_blocksize(&store, &alg, 2008, &bs).b_pred
+    });
+    // PJRT vs scalar backend on one model.
+    if let Ok(mut rt) = dlapm::runtime::Runtime::load_default() {
+        // Pick a model that fits one 64-piece polyeval dispatch.
+        let model = store
+            .models
+            .values()
+            .filter(|m| m.pieces.len() <= 64)
+            .max_by_key(|m| m.pieces.len())
+            .unwrap()
+            .clone();
+        let pts: Vec<Vec<usize>> = (24..536).step_by(2).map(|v| vec![v.min(536); model.dims()]).collect();
+        suite.add_throughput("polyeval/scalar", pts.len() as u64, "pts", || {
+            pts.iter().map(|p| model.estimate(p).med).sum::<f64>()
+        });
+        suite.add_throughput("polyeval/pjrt", pts.len() as u64, "pts", || {
+            dlapm::runtime::polyeval_model(&mut rt, &model, dlapm::util::stats::Stat::Med, &pts).unwrap().len()
+        });
+    }
+}

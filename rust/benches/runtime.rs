@@ -1,0 +1,22 @@
+//! Bench: PJRT artifact dispatch latencies (L2/L1 layer costs).
+use dlapm::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::from_env("runtime");
+    let Ok(mut rt) = dlapm::runtime::Runtime::load_default() else {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    };
+    let n = rt.entry("gemm").unwrap().constants["n"];
+    let a: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32).collect();
+    let b = a.clone();
+    suite.add("gemm/pallas-256", || rt.gemm(&a, &b).unwrap().len());
+
+    let coeffs = vec![1.0; 24 * 4];
+    let exps: Vec<i32> = (0..24).flat_map(|_| [1, 0, 0]).collect();
+    let idx = vec![0i32; 2048];
+    let pts = vec![0.5f64; 2048 * 3];
+    suite.add_throughput("polyeval/full-batch-2048", 2048, "pts", || {
+        rt.polyeval(&coeffs, 4, 24, &idx, &pts, 3, &exps).unwrap().len()
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench: tensor-contraction micro-benchmark prediction vs full execution
+//! (§6.3.4 efficiency study).
+use dlapm::machine::{CpuId, Elem, Library, Machine};
+use dlapm::tensor::exec::execute_full;
+use dlapm::tensor::{generate, micro, Contraction};
+use dlapm::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::from_env("tensor");
+    let machine = Machine::standard(CpuId::Harpertown, Library::OpenBlas { fixed_dswap: false }, 1);
+    let con = Contraction::example_abc(48);
+    let algs = generate(&con);
+    suite.add("generate/abc=ai,ibc", || generate(&con).len());
+    let gemm = algs.iter().find(|a| a.name().contains("gemm")).unwrap();
+    suite.add("micro_predict/one-alg", || micro::predict(&machine, &con, gemm, Elem::D, 3).seconds);
+    suite.add("execute_full/one-alg", || execute_full(&machine, &con, gemm, Elem::D, 3));
+    suite.add("rank/36-algorithms", || micro::rank(&machine, &con, &algs, Elem::D, 3).len());
+}

@@ -1,0 +1,205 @@
+//! Chapter 2 drivers: performance effects and the Sampler.
+
+use crate::machine::kernels::{Call, KernelId, Trans};
+use crate::machine::{CpuId, Elem, Library, Machine};
+use crate::sampler::Sampler;
+use crate::util::plot;
+
+use super::Ctx;
+
+fn gemm(n: usize) -> Call {
+    let mut c = Call::new(KernelId::Gemm, Elem::D);
+    (c.m, c.n, c.k) = (n, n, n);
+    c.flags.trans_a = Some(Trans::No);
+    c.flags.trans_b = Some(Trans::No);
+    c
+}
+
+/// Table 2.1: first vs second dgemm per library (init overhead).
+pub fn tab2_1(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    for lib in Library::DEFAULTS {
+        let m = Machine::standard(CpuId::SandyBridge, lib, 1);
+        let mut s = m.session(ctx.seed);
+        let c = gemm(200);
+        let t1 = s.execute(&c).seconds * 1e3;
+        let t2 = s.execute(&c).seconds * 1e3;
+        rows.push(vec![
+            lib.name().to_string(),
+            format!("{t1:.2}"),
+            format!("{t2:.2}"),
+            format!("{:.2}", t1 - t2),
+        ]);
+    }
+    let txt = plot::table(&["library", "1st dgemm [ms]", "2nd dgemm [ms]", "overhead [ms]"], &rows);
+    let csv = plot::csv(&["library", "first_ms", "second_ms", "overhead_ms"], &rows);
+    ctx.report.emit("tab2_1", &txt, &csv);
+}
+
+/// Fig 2.1: runtime fluctuations with/without background noise.
+pub fn fig2_1(ctx: &Ctx) {
+    let reps = if ctx.scale == super::Scale::Full { 1000 } else { 200 };
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for (label, cpu, noise) in [
+        ("broadwell+background", CpuId::Broadwell, true),
+        ("sandybridge quiet", CpuId::SandyBridge, false),
+    ] {
+        let mut m = Machine::standard(cpu, Library::Mkl, 1);
+        m.background_noise = noise;
+        let mut s = m.session(ctx.seed);
+        s.warmup();
+        let c = gemm(100);
+        let mut pts = Vec::new();
+        for i in 0..reps {
+            let t = s.execute(&c).seconds * 1e6;
+            pts.push((i as f64, t));
+            rows.push(vec![label.to_string(), i.to_string(), format!("{t:.3}")]);
+        }
+        let times: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let sum = crate::util::stats::Summary::from_samples(&times);
+        rows.push(vec![
+            format!("{label}/rel_std"),
+            "-".into(),
+            format!("{:.4}", sum.std / sum.mean),
+        ]);
+        series.push((label.to_string(), pts));
+    }
+    let txt = plot::line_plot("Fig 2.1: dgemm(100) runtime fluctuations", "repetition", "µs", &series, 76, 18);
+    let csv = plot::csv(&["setup", "rep", "us"], &rows);
+    ctx.report.emit("fig2_1", &txt, &csv);
+}
+
+/// Fig 2.2: Turbo Boost thermal trajectory on the Broadwell laptop.
+pub fn fig2_2(ctx: &Ctx) {
+    let m = Machine::standard(CpuId::Broadwell, Library::Mkl, 2);
+    let mut s = m.session(ctx.seed);
+    s.warmup();
+    let c = gemm(1300);
+    let reps = if ctx.scale == super::Scale::Full { 600 } else { 300 };
+    let mut time_series = Vec::new();
+    let mut temp_series = Vec::new();
+    let mut rows = Vec::new();
+    for i in 0..reps {
+        let t = s.execute(&c).seconds * 1e3;
+        time_series.push((i as f64, t));
+        temp_series.push((i as f64, s.state.temp_c));
+        rows.push(vec![i.to_string(), format!("{t:.2}"), format!("{:.1}", s.state.temp_c)]);
+    }
+    let txt = format!(
+        "{}\n{}",
+        plot::line_plot("Fig 2.2a: dgemm(1300) runtime under turbo", "repetition", "ms", &[("runtime".into(), time_series)], 76, 14),
+        plot::line_plot("Fig 2.2b: package temperature", "repetition", "°C", &[("temp".into(), temp_series)], 76, 10),
+    );
+    let csv = plot::csv(&["rep", "ms", "temp_c"], &rows);
+    ctx.report.emit("fig2_2", &txt, &csv);
+}
+
+/// Fig 2.3: two distinct long-term performance levels.
+pub fn fig2_3(ctx: &Ctx) {
+    let m = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let mut s = m.session(ctx.seed);
+    s.warmup();
+    let mut c = gemm(4000);
+    (c.n, c.m, c.k) = (200, 4000, 4000);
+    let reps = if ctx.scale == super::Scale::Full { 1000 } else { 250 };
+    let mut pts = Vec::new();
+    let mut rows = Vec::new();
+    for i in 0..reps {
+        let t = s.execute(&c).seconds * 1e3;
+        pts.push((i as f64, t));
+        rows.push(vec![i.to_string(), format!("{t:.3}")]);
+    }
+    let times: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let sum = crate::util::stats::Summary::from_samples(&times);
+    let gap = (sum.max - sum.min) / sum.min;
+    let txt = format!(
+        "{}\nlevel gap (max-min)/min = {:.2}% (paper: ~1.4% on Sandy Bridge)\n",
+        plot::line_plot("Fig 2.3: skewed dgemm runtime levels", "repetition", "ms", &[("runtime".into(), pts)], 76, 14),
+        gap * 100.0
+    );
+    let csv = plot::csv(&["rep", "ms"], &rows);
+    ctx.report.emit("fig2_3", &txt, &csv);
+}
+
+/// Fig 2.4: thread pinning effect on a skewed dgemm.
+pub fn fig2_4(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let mut times = [0.0f64; 2];
+        for (i, pinned) in [true, false].into_iter().enumerate() {
+            let mut m = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, threads);
+            m.pinned = pinned;
+            let mut s = m.session(ctx.seed);
+            s.warmup();
+            let mut c = gemm(2000);
+            c.m = 64;
+            c.flags.trans_a = Some(Trans::Yes);
+            let samples: Vec<f64> = (0..20).map(|_| s.execute(&c).seconds).collect();
+            times[i] = crate::util::stats::Summary::from_samples(&samples).med;
+        }
+        rows.push(vec![
+            threads.to_string(),
+            format!("{:.3}", times[0] * 1e3),
+            format!("{:.3}", times[1] * 1e3),
+            format!("{:+.2}%", (times[1] / times[0] - 1.0) * 100.0),
+        ]);
+    }
+    let txt = plot::table(&["threads", "pinned [ms]", "unpinned [ms]", "unpinned slowdown"], &rows);
+    let csv = plot::csv(&["threads", "pinned_ms", "unpinned_ms", "slowdown"], &rows);
+    ctx.report.emit("fig2_4", &txt, &csv);
+}
+
+/// Table 2.2: dgemv in- vs out-of-cache per library.
+pub fn tab2_2(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    for lib in Library::DEFAULTS {
+        let m = Machine::standard(CpuId::SandyBridge, lib, 1);
+        let mut c = Call::new(KernelId::Gemv, Elem::D);
+        (c.m, c.n) = (1000, 1000);
+        (c.incx, c.incy) = (1, 1);
+        c.flags.trans_a = Some(Trans::No);
+        let warm = crate::cachepred::pure_time(&m, &c, true, ctx.seed);
+        let cold = crate::cachepred::pure_time(&m, &c, false, ctx.seed);
+        rows.push(vec![
+            lib.name().to_string(),
+            format!("{:.3}", cold * 1e3),
+            format!("{:.3}", warm * 1e3),
+            format!("{:.3}", (cold - warm) * 1e3),
+        ]);
+    }
+    let txt = plot::table(&["library", "out-of-cache [ms]", "in-cache [ms]", "overhead [ms]"], &rows);
+    let csv = plot::csv(&["library", "cold_ms", "warm_ms", "overhead_ms"], &rows);
+    ctx.report.emit("tab2_2", &txt, &csv);
+}
+
+/// Ex 2.7: a scripted Sampler session (dgemm x5 with counters, daxpy x5).
+pub fn ex2_7(ctx: &Ctx) {
+    let m = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+    let mut sampler = Sampler::new(m.session(ctx.seed));
+    let script = "\
+dmalloc A 1000000
+dmalloc B 1000000
+dmalloc C 1000000
+set_counters PAPI_L3_TCM
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+go
+daxpy 100000 1.5 [100000] 1 [100000] 1
+daxpy 100000 1.5 [100000] 1 [100000] 1
+daxpy 100000 1.5 [100000] 1 [100000] 1
+daxpy 100000 1.5 [100000] 1 [100000] 1
+daxpy 100000 1.5 [100000] 1 [100000] 1
+go";
+    let out = sampler.run_script(script).unwrap();
+    let txt = format!(
+        "## Ex 2.7: Sampler session (cycles  L3 misses)\ninput:\n{script}\n\noutput:\n{}\n",
+        out.join("\n")
+    );
+    let rows: Vec<Vec<String>> = out.iter().map(|l| vec![l.replace('\t', ",")]).collect();
+    let csv = plot::csv(&["cycles,misses"], &rows);
+    ctx.report.emit("ex2_7", &txt, &csv);
+}

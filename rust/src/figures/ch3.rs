@@ -1,0 +1,299 @@
+//! Chapter 3 drivers: kernel argument effects and model generation.
+
+use crate::machine::kernels::{Call, Diag, KernelId, Scalar, Side, Trans, Uplo};
+use crate::machine::{CpuId, Elem, Library, Machine};
+use crate::modeling::configsearch::{self, SweepSpace};
+use crate::modeling::generator::{generate_model, GenConfig};
+use crate::modeling::{Domain, GridKind};
+use crate::util::plot;
+
+use super::{Ctx, Scale};
+
+fn trsm(m: usize, n: usize) -> Call {
+    let mut c = Call::new(KernelId::Trsm, Elem::D);
+    c.flags = crate::machine::Flags {
+        side: Some(Side::Left),
+        uplo: Some(Uplo::Lower),
+        trans_a: Some(Trans::No),
+        trans_b: None,
+        diag: Some(Diag::NonUnit),
+    };
+    (c.m, c.n) = (m, n);
+    (c.lda, c.ldb) = (m.max(n), m.max(n));
+    c
+}
+
+fn setups() -> Vec<Machine> {
+    let mut v = Vec::new();
+    for cpu in [CpuId::SandyBridge, CpuId::Haswell] {
+        for lib in [Library::OpenBlas { fixed_dswap: false }, Library::Blis, Library::Mkl] {
+            v.push(Machine::standard(cpu, lib, 1));
+        }
+    }
+    v
+}
+
+fn warm_us(m: &Machine, c: &Call) -> f64 {
+    let s = m.session(1);
+    s.warm_seconds(c) * 1e6
+}
+
+/// Fig 3.1: dtrsm runtime over all 16 flag combinations x 6 setups.
+pub fn fig3_1(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    let mut header = vec!["flags".to_string()];
+    let machines = setups();
+    header.extend(machines.iter().map(|m| m.label()));
+    for side in [Side::Left, Side::Right] {
+        for uplo in [Uplo::Lower, Uplo::Upper] {
+            for tr in [Trans::No, Trans::Yes] {
+                for diag in [Diag::NonUnit, Diag::Unit] {
+                    let mut c = trsm(256, 256);
+                    c.flags.side = Some(side);
+                    c.flags.uplo = Some(uplo);
+                    c.flags.trans_a = Some(tr);
+                    c.flags.diag = Some(diag);
+                    let mut row = vec![c.flags.code()];
+                    for m in &machines {
+                        row.push(format!("{:.2}", warm_us(m, &c)));
+                    }
+                    rows.push(row);
+                }
+            }
+        }
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let txt = plot::table(&hdr, &rows);
+    let csv = plot::csv(&hdr, &rows);
+    ctx.report.emit("fig3_1", &format!("## Fig 3.1: dtrsm(256) runtime [µs] per flag combo\n{txt}"), &csv);
+}
+
+/// Fig 3.2: alpha scalar classes.
+pub fn fig3_2(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    for (label, alpha) in [("0.6", Scalar::Other), ("0", Scalar::Zero), ("-1", Scalar::MinusOne), ("1", Scalar::One)] {
+        let mut row = vec![label.to_string()];
+        for m in setups() {
+            let mut c = trsm(100, 800);
+            c.alpha = alpha;
+            row.push(format!("{:.2}", warm_us(&m, &c)));
+        }
+        rows.push(row);
+    }
+    let machines = setups();
+    let mut hdr = vec!["alpha".to_string()];
+    hdr.extend(machines.iter().map(|m| m.label()));
+    let hdr: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
+    ctx.report.emit(
+        "fig3_2",
+        &format!("## Fig 3.2: dtrsm_LLNN(100x800) [µs] per alpha\n{}", plot::table(&hdr, &rows)),
+        &plot::csv(&hdr, &rows),
+    );
+}
+
+fn ld_sweep(ctx: &Ctx, id: &str, title: &str, lds: Vec<usize>) {
+    let machines = setups();
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for m in &machines {
+        let mut pts = Vec::new();
+        for &ld in &lds {
+            let mut c = trsm(256, 256);
+            (c.lda, c.ldb) = (ld, ld);
+            let t = warm_us(m, &c);
+            pts.push((ld as f64, t));
+            rows.push(vec![m.label(), ld.to_string(), format!("{t:.3}")]);
+        }
+        series.push((m.label(), pts));
+    }
+    let txt = plot::line_plot(title, "ld", "µs", &series, 76, 16);
+    ctx.report.emit(id, &txt, &plot::csv(&["setup", "ld", "us"], &rows));
+}
+
+/// Fig 3.3: leading dimension, small scale (256..320 step 1).
+pub fn fig3_3(ctx: &Ctx) {
+    ld_sweep(ctx, "fig3_3", "Fig 3.3: dtrsm(256) vs ld (small scale)", (256..=320).collect());
+}
+
+/// Fig 3.4: leading dimension conflict spikes (256..8320 step 128).
+pub fn fig3_4(ctx: &Ctx) {
+    ld_sweep(ctx, "fig3_4", "Fig 3.4: dtrsm(256) vs ld (conflict spikes)", (256..=8320).step_by(128).collect());
+}
+
+/// Fig 3.5: increment arguments for daxpy and dtrsv.
+pub fn fig3_5(ctx: &Ctx) {
+    let machines = setups();
+    let mut rows = Vec::new();
+    let mut series_axpy = Vec::new();
+    for m in &machines {
+        let mut pts = Vec::new();
+        for inc in 1..=100usize {
+            let mut c = Call::new(KernelId::Axpy, Elem::D);
+            c.n = 1024;
+            c.alpha = Scalar::Other;
+            (c.incx, c.incy) = (inc, inc);
+            let t = warm_us(m, &c);
+            pts.push((inc as f64, t));
+            rows.push(vec![m.label(), "axpy".into(), inc.to_string(), format!("{t:.4}")]);
+        }
+        series_axpy.push((m.label(), pts));
+    }
+    let txt = plot::line_plot("Fig 3.5a: daxpy(1024) vs increment", "inc", "µs", &series_axpy, 76, 16);
+    ctx.report.emit("fig3_5", &txt, &plot::csv(&["setup", "kernel", "inc", "us"], &rows));
+}
+
+/// Fig 3.6: size-argument sawtooth (n = 256..320 step 1).
+pub fn fig3_6(ctx: &Ctx) {
+    let machines = setups();
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for m in &machines {
+        let mut pts = Vec::new();
+        for n in 256..=320usize {
+            let mut c = trsm(n, n);
+            (c.lda, c.ldb) = (5000, 5000);
+            let t = warm_us(m, &c);
+            pts.push((n as f64, t));
+            rows.push(vec![m.label(), n.to_string(), format!("{t:.3}")]);
+        }
+        series.push((m.label(), pts));
+    }
+    let txt = plot::line_plot("Fig 3.6: dtrsm(n) vs n (sawtooth)", "n", "µs", &series, 76, 16);
+    ctx.report.emit("fig3_6", &txt, &plot::csv(&["setup", "n", "us"], &rows));
+}
+
+/// Fig 3.7: single vs 2- vs 3-piece cubic fit of dtrsm(n).
+pub fn fig3_7(ctx: &Ctx) {
+    use crate::modeling::fit::{design_matrix, relative_errors, rust_fit};
+    let m = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let ns: Vec<usize> = (24..=536).step_by(16).collect();
+    let ys: Vec<f64> = ns
+        .iter()
+        .map(|&n| {
+            let mut c = trsm(n, n);
+            (c.lda, c.ldb) = (5000, 5000);
+            m.session(1).warm_seconds(&c)
+        })
+        .collect();
+    let exps: Vec<Vec<u8>> = (0..4u8).map(|e| vec![e]).collect();
+    let scale = 536.0;
+    let splits: [Vec<(usize, usize)>; 3] = [
+        vec![(24, 536)],
+        vec![(24, 280), (280, 536)],
+        vec![(24, 152), (152, 280), (280, 536)],
+    ];
+    let mut rows = Vec::new();
+    for (pi, pieces) in splits.iter().enumerate() {
+        let mut all_errs = Vec::new();
+        for &(lo, hi) in pieces {
+            let idx: Vec<usize> = ns
+                .iter()
+                .enumerate()
+                .filter(|(_, &n)| n >= lo && n <= hi)
+                .map(|(i, _)| i)
+                .collect();
+            let pts: Vec<Vec<f64>> = idx.iter().map(|&i| vec![ns[i] as f64 / scale]).collect();
+            let yv: Vec<f64> = idx.iter().map(|&i| ys[i]).collect();
+            let x = design_matrix(&pts, &yv, &exps);
+            let beta = rust_fit(&x, pts.len(), exps.len());
+            all_errs.extend(relative_errors(&pts, &yv, &exps, &beta));
+        }
+        let avg = all_errs.iter().sum::<f64>() / all_errs.len() as f64;
+        let max = all_errs.iter().cloned().fold(0.0, f64::max);
+        rows.push(vec![
+            format!("{} piece(s)", pi + 1),
+            format!("{:.3}%", avg * 100.0),
+            format!("{:.3}%", max * 100.0),
+        ]);
+    }
+    let txt = format!(
+        "## Fig 3.7: piecewise cubic fit errors for dtrsm(n), n=24..536\n{}",
+        plot::table(&["fit", "avg rel err", "max rel err"], &rows)
+    );
+    ctx.report.emit("fig3_7", &txt, &plot::csv(&["pieces", "avg", "max"], &rows));
+}
+
+/// Fig 3.8: in- vs out-of-cache dtrsm per setup.
+pub fn fig3_8(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    for m in setups() {
+        let c = trsm(256, 256);
+        let warm = crate::cachepred::pure_time(&m, &c, true, ctx.seed) * 1e6;
+        let cold = crate::cachepred::pure_time(&m, &c, false, ctx.seed) * 1e6;
+        rows.push(vec![
+            m.label(),
+            format!("{warm:.2}"),
+            format!("{cold:.2}"),
+            format!("{:+.1}%", (cold / warm - 1.0) * 100.0),
+        ]);
+    }
+    let txt = plot::table(&["setup", "in-cache [µs]", "out-of-cache [µs]", "cold penalty"], &rows);
+    ctx.report.emit("fig3_8", &format!("## Fig 3.8: dtrsm(256) cache preconditions\n{txt}"),
+        &plot::csv(&["setup", "warm_us", "cold_us", "penalty"], &rows));
+}
+
+/// Fig 3.11: adaptive refinement on dtrsm (piece boundaries).
+pub fn fig3_11(ctx: &Ctx) {
+    let m = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let max_n = if ctx.scale == Scale::Full { 4152 } else { 2056 };
+    let domain = Domain::new(vec![24, 24], vec![536, max_n]);
+    let cfg = GenConfig { oversampling: 2, reps: 10, grid: GridKind::Chebyshev, err_bound: 0.01, min_width: 64, ..Default::default() };
+    let (model, stats) = generate_model(&m, &cfg, &trsm(0, 0), &domain, ctx.seed);
+    let mut rows = Vec::new();
+    for (i, p) in model.pieces.iter().enumerate() {
+        rows.push(vec![
+            i.to_string(),
+            format!("[{}, {}]", p.domain.lo[0], p.domain.hi[0]),
+            format!("[{}, {}]", p.domain.lo[1], p.domain.hi[1]),
+        ]);
+    }
+    let txt = format!(
+        "## Fig 3.11: adaptive refinement for dtrsm_LLNN over m∈[24,536], n∈[24,{max_n}]\n\
+         refinements: {}, measured points: {}, pieces: {}, cost: {:.2} virtual s\n{}",
+        stats.refinements,
+        stats.measured_points,
+        stats.pieces,
+        model.gen_cost,
+        plot::table(&["piece", "m range", "n range"], &rows)
+    );
+    ctx.report.emit("fig3_11", &txt, &plot::csv(&["piece", "m", "n"], &rows));
+}
+
+/// Fig 3.13 + Tables 3.1-3.3: generator-configuration trade-off search.
+pub fn fig3_13(ctx: &Ctx) {
+    let m = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let (space, max_n, step) = if ctx.scale == Scale::Full {
+        (SweepSpace::full(), 4152, 128)
+    } else {
+        (SweepSpace::reduced(), 1048, 256)
+    };
+    let domain = Domain::new(vec![24, 24], vec![536, max_n]);
+    let template = trsm(0, 0);
+    let truth = configsearch::ground_truth(&m, &template, &domain, step, 5, ctx.seed);
+    let mut scores = Vec::new();
+    for (i, cfg) in space.enumerate().into_iter().enumerate() {
+        scores.push(configsearch::evaluate_config(&m, &cfg, &template, &domain, &truth, ctx.seed ^ i as u64));
+    }
+    let pruned = configsearch::prune(scores);
+    let mut rows = Vec::new();
+    for (i, s) in pruned.all.iter().enumerate() {
+        rows.push(vec![
+            i.to_string(),
+            format!("{:.4}", s.model_error * 100.0),
+            format!("{:.3}", s.model_cost),
+            s.pieces.to_string(),
+            if pruned.after_cost.contains(&i) { "kept".into() } else { "".into() },
+        ]);
+    }
+    let d = &pruned.default_cfg;
+    let txt = format!(
+        "## Fig 3.13: config search — {} configs, {} after accuracy prune, {} after cost prune\n\
+         selected default: overfit={} oversampling={} grid={} reps={} ref={} bound={} min_width={}\n\
+         (paper's selection: overfit=2, oversampling=4, Chebyshev, 10 reps, min, max, 1%, 32)\n",
+        pruned.all.len(),
+        pruned.after_accuracy.len(),
+        pruned.after_cost.len(),
+        d.overfit, d.oversampling, d.grid.name(), d.reps, d.ref_stat.name(), d.err_bound, d.min_width
+    );
+    ctx.report.emit("fig3_13", &txt, &plot::csv(&["config", "err_pct", "cost_s", "pieces", "kept"], &rows));
+}

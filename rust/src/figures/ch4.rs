@@ -1,0 +1,401 @@
+//! Chapter 4 drivers: prediction accuracy, algorithm selection, block-size
+//! optimization. Model stores are generated once per machine label and
+//! cached under `out/models/`.
+
+use crate::machine::{CpuId, Elem, Library, Machine};
+use crate::modeling::ModelStore;
+use crate::predict::accuracy::relative_errors;
+use crate::predict::algorithms::lapack::{LapackAlg, LapackOp};
+use crate::predict::algorithms::potrf::Potrf;
+use crate::predict::algorithms::trsyl::TrsylAlg;
+use crate::predict::algorithms::trtri::Trtri;
+use crate::predict::algorithms::BlockedAlg;
+use crate::predict::blocksize;
+use crate::predict::measurement::{coverage, measure_algorithm};
+use crate::predict::predictor::{performance, predict_calls};
+use crate::util::plot;
+
+use super::{Ctx, Scale};
+
+/// Build (or load) a model store covering `algs` on `machine`.
+pub fn store_for(ctx: &Ctx, machine: &Machine, algs: &[&dyn BlockedAlg], max_n: usize) -> ModelStore {
+    // Store files are keyed by coverage size: a store generated for a
+    // smaller domain must not be reused for larger problems (its models
+    // clamp at their hull).
+    let path = ctx
+        .report
+        .out_dir
+        .join("models")
+        .join(format!("{}_n{max_n}.json", machine.label().replace('/', "_")));
+    let mut store = ModelStore::load(&path).unwrap_or_else(|_| ModelStore::new(&machine.label()));
+    let generated = coverage::ensure_models(machine, &mut store, algs, max_n, 536, ctx.seed);
+    if generated > 0 {
+        store.save(&path).ok();
+        eprintln!(
+            "[dlapm] {}: generated {generated} models (total cost {:.1} virtual s)",
+            machine.label(),
+            store.total_gen_cost()
+        );
+    }
+    store
+}
+
+fn max_n(ctx: &Ctx) -> usize {
+    if ctx.scale == Scale::Full {
+        4152
+    } else {
+        2056
+    }
+}
+
+fn n_grid(ctx: &Ctx) -> Vec<usize> {
+    // Paper: 56..4152 step 64 (never multiples of 256 — see §3.1.3.2).
+    let step = if ctx.scale == Scale::Full { 64 } else { 256 };
+    (56..=max_n(ctx)).step_by(step).collect()
+}
+
+/// Figs 4.2/4.3: potrf-var3 prediction vs measurement over n.
+pub fn fig4_2(ctx: &Ctx) {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let store = store_for(ctx, &machine, &[&alg], max_n(ctx));
+    let mut rows = Vec::new();
+    let mut series_p = Vec::new();
+    let mut series_m = Vec::new();
+    let mut ares = Vec::new();
+    for n in n_grid(ctx) {
+        let pred = predict_calls(&store, &alg.calls(n, 128)).time;
+        let meas = measure_algorithm(&machine, &alg, n, 128, 10, ctx.seed);
+        let re = relative_errors(&pred, &meas);
+        ares.push(re.are_med());
+        let perf = performance(&pred, alg.op_flops(n)).med;
+        let perf_m = performance(&meas, alg.op_flops(n)).med;
+        series_p.push((n as f64, perf));
+        series_m.push((n as f64, perf_m));
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.4}", pred.med * 1e3),
+            format!("{:.4}", meas.med * 1e3),
+            format!("{:+.2}%", re.med * 100.0),
+        ]);
+    }
+    let avg_are = crate::util::stats::mean(&ares);
+    let txt = format!(
+        "{}\naverage |median RE| = {:.2}% (paper: ~0.9% single-threaded)\n",
+        plot::line_plot(
+            "Fig 4.2: dpotrf var3 performance, predicted vs measured",
+            "n",
+            "GFLOPs/s",
+            &[("predicted".into(), series_p), ("measured".into(), series_m)],
+            76,
+            16
+        ),
+        avg_are * 100.0
+    );
+    ctx.report.emit("fig4_2", &txt, &plot::csv(&["n", "pred_ms", "meas_ms", "re_med"], &rows));
+}
+
+/// Fig 4.5: median-ARE heat map over (n, b).
+pub fn fig4_5(ctx: &Ctx) {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let store = store_for(ctx, &machine, &[&alg], max_n(ctx));
+    let ns: Vec<usize> = n_grid(ctx).into_iter().step_by(2).collect();
+    let bstep = if ctx.scale == Scale::Full { 24 } else { 64 };
+    let bs: Vec<usize> = (24..=536).step_by(bstep).collect();
+    let mut grid = Vec::new();
+    let mut rows = Vec::new();
+    let mut all = Vec::new();
+    for &b in &bs {
+        let mut row = Vec::new();
+        for &n in &ns {
+            let pred = predict_calls(&store, &alg.calls(n, b)).time.med;
+            let meas = measure_algorithm(&machine, &alg, n, b, 5, ctx.seed).med;
+            let are = ((pred - meas) / meas).abs();
+            row.push(are);
+            all.push(are);
+            rows.push(vec![n.to_string(), b.to_string(), format!("{:.4}", are)]);
+        }
+        grid.push(row);
+    }
+    let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    let ys: Vec<f64> = bs.iter().map(|&b| b as f64).collect();
+    let txt = format!(
+        "{}\naverage ARE over the grid: {:.2}% (paper Fig. 4.5: 0.45%)\n",
+        plot::heat_map("Fig 4.5: |median RE| over (n, b), dpotrf var3", &xs, &ys, &grid, 0.05),
+        crate::util::stats::mean(&all) * 100.0
+    );
+    ctx.report.emit("fig4_5", &txt, &plot::csv(&["n", "b", "are_med"], &rows));
+}
+
+/// Fig 4.6: data types s/d/c/z.
+pub fn fig4_6(ctx: &Ctx) {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let mut rows = Vec::new();
+    for elem in Elem::ALL {
+        let alg = Potrf { variant: 3, elem };
+        let store = store_for(ctx, &machine, &[&alg], max_n(ctx));
+        let mut ares = Vec::new();
+        let mut effs = Vec::new();
+        for n in n_grid(ctx) {
+            let pred = predict_calls(&store, &alg.calls(n, 128)).time;
+            let meas = measure_algorithm(&machine, &alg, n, 128, 5, ctx.seed);
+            ares.push(relative_errors(&pred, &meas).are_med());
+            let perf = performance(&meas, alg.op_flops(n)).med;
+            effs.push(perf / machine.peak_gflops(elem));
+        }
+        rows.push(vec![
+            format!("{}potrf", elem.prefix()),
+            format!("{:.1}%", effs.last().unwrap() * 100.0),
+            format!("{:.2}%", crate::util::stats::mean(&ares) * 100.0),
+        ]);
+    }
+    let txt = format!(
+        "## Fig 4.6: Cholesky across data types (b=128)\n{}",
+        plot::table(&["routine", "efficiency @ max n", "avg ARE"], &rows)
+    );
+    ctx.report.emit("fig4_6", &txt, &plot::csv(&["routine", "eff", "are"], &rows));
+}
+
+/// Fig 4.7: multi-threaded accuracy (1/2/4/8 threads on Sandy Bridge).
+pub fn fig4_7(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, threads);
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let store = store_for(ctx, &machine, &[&alg], max_n(ctx));
+        let mut ares = Vec::new();
+        let mut peak_eff: f64 = 0.0;
+        for n in n_grid(ctx) {
+            let pred = predict_calls(&store, &alg.calls(n, 128)).time;
+            let meas = measure_algorithm(&machine, &alg, n, 128, 5, ctx.seed);
+            ares.push(relative_errors(&pred, &meas).are_med());
+            let eff = performance(&meas, alg.op_flops(n)).med / machine.peak_gflops(Elem::D);
+            peak_eff = peak_eff.max(eff);
+        }
+        rows.push(vec![
+            threads.to_string(),
+            format!("{:.1}%", peak_eff * 100.0),
+            format!("{:.2}%", crate::util::stats::mean(&ares) * 100.0),
+        ]);
+    }
+    let txt = format!(
+        "## Fig 4.7: multi-threaded Cholesky (b=128)\n{}\n(paper: efficiency falls 87.7% -> 70.8% from 1 to 8 threads; ARE grows ~0.5% -> ~1%)\n",
+        plot::table(&["threads", "max efficiency", "avg ARE"], &rows)
+    );
+    ctx.report.emit("fig4_7", &txt, &plot::csv(&["threads", "eff", "are"], &rows));
+}
+
+fn lapack_suite() -> Vec<Box<dyn BlockedAlg>> {
+    let mut v: Vec<Box<dyn BlockedAlg>> = vec![
+        Box::new(LapackAlg::new(LapackOp::Lauum, Elem::D)),
+        Box::new(LapackAlg::new(LapackOp::Sygst, Elem::D)),
+        Box::new(Trtri { variant: 5, elem: Elem::D }),
+        Box::new(Potrf { variant: 2, elem: Elem::D }),
+        Box::new(LapackAlg::new(LapackOp::Getrf, Elem::D)),
+        Box::new(LapackAlg::new(LapackOp::Geqrf, Elem::D)),
+    ];
+    v.shrink_to_fit();
+    v
+}
+
+fn are_table(ctx: &Ctx, id: &str, title: &str, machines: Vec<Machine>, b_of: impl Fn(&str) -> usize) {
+    let suite = lapack_suite();
+    let mut rows = Vec::new();
+    let mut header = vec!["routine".to_string()];
+    header.extend(machines.iter().map(|m| m.label()));
+    header.push("average".into());
+    let mut per_alg: Vec<Vec<f64>> = vec![Vec::new(); suite.len()];
+    for machine in &machines {
+        let refs: Vec<&dyn BlockedAlg> = suite.iter().map(|a| a.as_ref()).collect();
+        let store = store_for(ctx, machine, &refs, max_n(ctx));
+        for (ai, alg) in suite.iter().enumerate() {
+            let b = b_of(&alg.name());
+            let mut ares = Vec::new();
+            for n in n_grid(ctx) {
+                let pred = predict_calls(&store, &alg.calls(n, b)).time;
+                let meas = measure_algorithm(machine, alg.as_ref(), n, b, 5, ctx.seed);
+                ares.push(relative_errors(&pred, &meas).are_med());
+            }
+            per_alg[ai].push(crate::util::stats::mean(&ares));
+        }
+    }
+    let mut grand = Vec::new();
+    for (ai, alg) in suite.iter().enumerate() {
+        let mut row = vec![alg.name()];
+        for v in &per_alg[ai] {
+            row.push(format!("{:.2}%", v * 100.0));
+        }
+        let avg = crate::util::stats::mean(&per_alg[ai]);
+        grand.push(avg);
+        row.push(format!("{:.2}%", avg * 100.0));
+        rows.push(row);
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let txt = format!(
+        "## {title}\n{}\ngrand average ARE: {:.2}%\n",
+        plot::table(&hdr, &rows),
+        crate::util::stats::mean(&grand) * 100.0
+    );
+    ctx.report.emit(id, &txt, &plot::csv(&hdr, &rows));
+}
+
+/// Table 4.3: single-threaded ARE across setups (paper avg 1.91%).
+pub fn tab4_3(ctx: &Ctx) {
+    let machines: Vec<Machine> = if ctx.scale == Scale::Full {
+        [CpuId::SandyBridge, CpuId::Haswell]
+            .into_iter()
+            .flat_map(|cpu| {
+                [Library::OpenBlas { fixed_dswap: false }, Library::Blis, Library::Mkl]
+                    .into_iter()
+                    .map(move |lib| Machine::standard(cpu, lib, 1))
+            })
+            .collect()
+    } else {
+        vec![
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1),
+            Machine::standard(CpuId::Haswell, Library::Mkl, 1),
+        ]
+    };
+    // LAPACK default block sizes: 64 (32 for dgeqrf).
+    are_table(ctx, "tab4_3", "Table 4.3: single-threaded median-runtime ARE", machines, |name| {
+        if name.contains("geqrf") {
+            32
+        } else {
+            64
+        }
+    });
+}
+
+/// Table 4.4: multi-threaded ARE (paper avg 4.85%).
+pub fn tab4_4(ctx: &Ctx) {
+    let machines: Vec<Machine> = if ctx.scale == Scale::Full {
+        vec![
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 8),
+            Machine::standard(CpuId::SandyBridge, Library::Mkl, 8),
+            Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 12),
+            Machine::standard(CpuId::Haswell, Library::Mkl, 12),
+        ]
+    } else {
+        vec![Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 12)]
+    };
+    are_table(ctx, "tab4_4", "Table 4.4: multi-threaded median-runtime ARE (b=128)", machines, |_| 128);
+}
+
+fn selection_figure(ctx: &Ctx, id: &str, title: &str, algs: Vec<Box<dyn BlockedAlg>>, machine: Machine, n: usize, b: usize, validate: usize) {
+    let refs: Vec<&dyn BlockedAlg> = algs.iter().map(|a| a.as_ref()).collect();
+    let store = store_for(ctx, &machine, &refs, max_n(ctx).max(n));
+    let mut ranked = crate::predict::selection::rank_algorithms(&store, &refs, n, b);
+    // Validate the top `validate` and bottom 1 empirically.
+    let k = ranked.len();
+    for (i, r) in ranked.iter_mut().enumerate() {
+        if i < validate || i == k - 1 {
+            let alg = refs.iter().find(|a| a.name() == r.name).unwrap();
+            r.measured = Some(measure_algorithm(&machine, *alg, n, b, 5, ctx.seed));
+        }
+    }
+    let mut rows = Vec::new();
+    for (i, r) in ranked.iter().enumerate() {
+        rows.push(vec![
+            (i + 1).to_string(),
+            r.name.clone(),
+            format!("{:.3}", r.predicted.med * 1e3),
+            r.measured
+                .map(|m| format!("{:.3}", m.med * 1e3))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    let txt = format!(
+        "## {title} (n={n}, b={b}, {})\n{}",
+        machine.label(),
+        plot::table(&["rank", "algorithm", "predicted [ms]", "measured [ms]"], &rows)
+    );
+    ctx.report.emit(id, &txt, &plot::csv(&["rank", "alg", "pred_ms", "meas_ms"], &rows));
+}
+
+/// Fig 4.12: Cholesky selection (3 variants).
+pub fn fig4_12(ctx: &Ctx) {
+    let algs: Vec<Box<dyn BlockedAlg>> = Potrf::all(Elem::D)
+        .into_iter()
+        .map(|a| Box::new(a) as Box<dyn BlockedAlg>)
+        .collect();
+    let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+    selection_figure(ctx, "fig4_12", "Fig 4.12: blocked Cholesky selection", algs, machine, 2104, 128, 3);
+}
+
+/// Fig 4.14: triangular inversion selection (8 variants).
+pub fn fig4_14(ctx: &Ctx) {
+    let algs: Vec<Box<dyn BlockedAlg>> = Trtri::all(Elem::D)
+        .into_iter()
+        .map(|a| Box::new(a) as Box<dyn BlockedAlg>)
+        .collect();
+    let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+    selection_figure(ctx, "fig4_14", "Fig 4.14: trtri selection (8 algorithms)", algs, machine, 2104, 128, 4);
+}
+
+/// Fig 4.17: Sylvester selection (64 complete algorithms).
+pub fn fig4_17(ctx: &Ctx) {
+    let n = if ctx.scale == Scale::Full { 1048 } else { 520 };
+    let algs: Vec<Box<dyn BlockedAlg>> = TrsylAlg::all(Elem::D)
+        .into_iter()
+        .map(|a| Box::new(a) as Box<dyn BlockedAlg>)
+        .collect();
+    let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+    selection_figure(ctx, "fig4_17", "Fig 4.17: trsyl selection (64 algorithms)", algs, machine, n, 64, 2);
+}
+
+/// Fig 4.18: per-kernel runtime/performance breakdown vs block size.
+pub fn fig4_18(ctx: &Ctx) {
+    let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let store = store_for(ctx, &machine, &[&alg], max_n(ctx));
+    let n = 1000;
+    let mut rows = Vec::new();
+    for b in (24..=400).step_by(16) {
+        let calls = alg.calls(n, b);
+        let mut per_kernel = std::collections::BTreeMap::<&'static str, f64>::new();
+        for c in &calls {
+            let t = store.estimate_call(c).map(|s| s.med).unwrap_or(0.0);
+            *per_kernel.entry(crate::machine::kernels::name(c.kernel)).or_default() += t;
+        }
+        let mut row = vec![b.to_string()];
+        for k in ["potf2", "trsm", "syrk"] {
+            row.push(format!("{:.4}", per_kernel.get(k).copied().unwrap_or(0.0) * 1e3));
+        }
+        rows.push(row);
+    }
+    let txt = format!(
+        "## Fig 4.18: dpotrf var3 kernel breakdown (n={n}) [ms]\n{}",
+        plot::table(&["b", "potf2", "trsm", "syrk"], &rows)
+    );
+    ctx.report.emit("fig4_18", &txt, &plot::csv(&["b", "potf2_ms", "trsm_ms", "syrk_ms"], &rows));
+}
+
+/// Figs 4.19/4.20: block-size optimization + yields.
+pub fn fig4_19(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    for threads in [1usize, 12] {
+        let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, threads);
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let store = store_for(ctx, &machine, &[&alg], max_n(ctx));
+        for n in [1000usize, 2000, 3000] {
+            let bs: Vec<usize> = (24..=400).step_by(16).collect();
+            let sweep = blocksize::optimize_blocksize(&store, &alg, n, &bs);
+            let val_bs: Vec<usize> = (24..=400).step_by(48).collect();
+            let val_sweep = blocksize::optimize_blocksize(&store, &alg, n, &val_bs);
+            let y = blocksize::validate_blocksize(&machine, &alg, &val_sweep, 3, ctx.seed);
+            rows.push(vec![
+                threads.to_string(),
+                n.to_string(),
+                sweep.b_pred.to_string(),
+                y.b_opt.to_string(),
+                format!("{:.1}%", y.yield_frac * 100.0),
+            ]);
+        }
+    }
+    let txt = format!(
+        "## Figs 4.19/4.20: predicted block sizes and performance yield\n{}\n(paper: yields ≥ 98.5%; 1-thread optima 96-184, 12-thread 56-112)\n",
+        plot::table(&["threads", "n", "b_pred", "b_opt", "yield"], &rows)
+    );
+    ctx.report.emit("fig4_19", &txt, &plot::csv(&["threads", "n", "b_pred", "b_opt", "yield"], &rows));
+}

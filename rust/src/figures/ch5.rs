@@ -1,0 +1,87 @@
+//! Chapter 5 drivers: cache modeling case studies.
+
+use crate::cachepred;
+use crate::machine::{CpuId, Elem, Library, Machine};
+use crate::predict::algorithms::lapack::{LapackAlg, LapackOp};
+use crate::predict::algorithms::potrf::Potrf;
+use crate::util::plot;
+
+use super::{Ctx, Scale};
+
+/// Figs 5.1-5.2: per-kernel in-algorithm vs pure warm/cold timings for
+/// dgeqrf (and dpotrf) on the Harpertown.
+pub fn fig5_1(ctx: &Ctx) {
+    let m = Machine::standard(CpuId::Harpertown, Library::OpenBlas { fixed_dswap: false }, 1);
+    let n = if ctx.scale == Scale::Full { 1536 } else { 768 };
+    let mut rows = Vec::new();
+    let mut txt = String::new();
+    for (name, alg) in [
+        ("dgeqrf", Box::new(LapackAlg::new(LapackOp::Geqrf, Elem::D)) as Box<dyn crate::predict::algorithms::BlockedAlg>),
+        ("dpotrf", Box::new(Potrf { variant: 3, elem: Elem::D })),
+    ] {
+        let traces = cachepred::trace_algorithm(&m, alg.as_ref(), n, 96, ctx.seed);
+        let mut within = 0usize;
+        let mut counted = 0usize;
+        for t in traces.iter() {
+            if t.warm <= 0.0 {
+                continue;
+            }
+            counted += 1;
+            let combined = cachepred::combined_estimate(t.warm, t.cold, t.residency);
+            let err_warm = ((t.warm - t.in_algorithm) / t.in_algorithm).abs();
+            let err_comb = ((combined - t.in_algorithm) / t.in_algorithm).abs();
+            if err_comb <= err_warm + 1e-12 {
+                within += 1;
+            }
+            rows.push(vec![
+                name.into(),
+                t.call_desc.clone(),
+                format!("{:.2}", t.in_algorithm * 1e6),
+                format!("{:.2}", t.warm * 1e6),
+                format!("{:.2}", t.cold * 1e6),
+                format!("{:.2}", t.residency),
+                format!("{:.2}", combined * 1e6),
+            ]);
+        }
+        txt.push_str(&format!(
+            "{name}: residency-combined estimate at least as close as pure-warm for {within}/{counted} calls\n"
+        ));
+    }
+    txt = format!(
+        "## Figs 5.1-5.2: in-algorithm kernel timings vs warm/cold micro-timings (Harpertown, n={n}, b=96)\n{txt}\n(first 12 rows)\n{}",
+        plot::table(
+            &["alg", "call", "in-alg [µs]", "warm [µs]", "cold [µs]", "residency", "combined [µs]"],
+            &rows.iter().take(12).cloned().collect::<Vec<_>>()
+        )
+    );
+    ctx.report.emit("fig5_1", &txt, &plot::csv(&["alg", "call", "in_alg_us", "warm_us", "cold_us", "residency", "combined_us"], &rows));
+}
+
+/// §5.3: feasibility on modern hardware — the warm/cold spread collapses
+/// relative to Harpertown once prefetchers overlap most of the stream.
+pub fn fig5_3(ctx: &Ctx) {
+    let mut rows = Vec::new();
+    for cpu in [CpuId::Harpertown, CpuId::SandyBridge, CpuId::Haswell] {
+        let m = Machine::standard(cpu, Library::OpenBlas { fixed_dswap: false }, 1);
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let traces = cachepred::trace_algorithm(&m, &alg, 1024, 128, ctx.seed);
+        let spreads: Vec<f64> = traces
+            .iter()
+            .filter(|t| t.warm > 0.0)
+            .map(|t| t.cold / t.warm)
+            .collect();
+        let s = crate::util::stats::Summary::from_samples(&spreads);
+        rows.push(vec![
+            m.cpu.name.to_string(),
+            format!("{:.3}", s.med),
+            format!("{:.3}", s.max),
+        ]);
+    }
+    let txt = format!(
+        "## §5.3: cold/warm kernel-time ratio per architecture (dpotrf var3, n=1024)\n{}\n\
+         The spread narrows on newer parts — the paper's conclusion that\n\
+         algorithm-independent cache corrections stop paying off on modern CPUs.\n",
+        plot::table(&["cpu", "median cold/warm", "max cold/warm"], &rows)
+    );
+    ctx.report.emit("fig5_3", &txt, &plot::csv(&["cpu", "med_ratio", "max_ratio"], &rows));
+}

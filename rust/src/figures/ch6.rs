@@ -1,0 +1,146 @@
+//! Chapter 6 drivers: tensor contraction generation, micro-benchmark
+//! predictions and rankings.
+
+use crate::machine::{CpuId, Elem, Library, Machine};
+use crate::tensor::exec::execute_full;
+use crate::tensor::micro;
+use crate::tensor::{generate, Contraction, KernelKind};
+use crate::util::plot;
+
+use super::{Ctx, Scale};
+
+fn harpertown() -> Machine {
+    Machine::standard(CpuId::Harpertown, Library::OpenBlas { fixed_dswap: false }, 1)
+}
+
+fn gflops(con: &Contraction, secs: f64) -> f64 {
+    con.flops() / secs / 1e9
+}
+
+/// §6.1 + Fig 1.5a: all algorithms for C_abc := A_ai B_ibc, measured.
+pub fn fig6_1(ctx: &Ctx) {
+    let n = if ctx.scale == Scale::Full { 100 } else { 64 };
+    let con = Contraction::example_abc(n);
+    let algs = generate(&con);
+    let m = harpertown();
+    let mut rows = Vec::new();
+    let mut best: HashMapLite = Default::default();
+    for alg in &algs {
+        let t = execute_full(&m, &con, alg, Elem::D, ctx.seed);
+        let g = gflops(&con, t);
+        best.update(alg.kind, g);
+        rows.push(vec![alg.name(), format!("{:?}", alg.kind), format!("{g:.3}")]);
+    }
+    rows.sort_by(|a, b| b[2].parse::<f64>().unwrap().partial_cmp(&a[2].parse::<f64>().unwrap()).unwrap());
+    let txt = format!(
+        "## Fig 1.5a / §6.1: {} algorithms for C_abc := A_ai B_ibc (n={n}, i=8)\n\
+         best per kernel class [GFLOPs/s]: gemm={:.2} gemv={:.2} ger={:.2} axpy={:.2} dot={:.2}\n{}",
+        algs.len(),
+        best.gemm, best.gemv, best.ger, best.axpy, best.dot,
+        plot::table(&["algorithm", "kernel", "GFLOPs/s"], &rows)
+    );
+    ctx.report.emit("fig6_1", &txt, &plot::csv(&["algorithm", "kernel", "gflops"], &rows));
+}
+
+#[derive(Default)]
+struct HashMapLite {
+    gemm: f64,
+    gemv: f64,
+    ger: f64,
+    axpy: f64,
+    dot: f64,
+}
+
+impl HashMapLite {
+    fn update(&mut self, k: KernelKind, g: f64) {
+        let slot = match k {
+            KernelKind::Gemm => &mut self.gemm,
+            KernelKind::GemvA | KernelKind::GemvB => &mut self.gemv,
+            KernelKind::Ger => &mut self.ger,
+            KernelKind::Axpy => &mut self.axpy,
+            KernelKind::Dot => &mut self.dot,
+        };
+        *slot = slot.max(g);
+    }
+}
+
+fn ranking_figure(ctx: &Ctx, id: &str, title: &str, con: Contraction, validate: usize) {
+    let m = harpertown();
+    let algs = generate(&con);
+    let ranked = micro::rank(&m, &con, &algs, Elem::D, ctx.seed);
+    let mut rows = Vec::new();
+    let mut micro_total = 0.0;
+    for (i, p) in ranked.iter().enumerate() {
+        micro_total += p.micro_cost;
+        let measured = if i < validate || i + 1 == ranked.len() {
+            let alg = algs.iter().find(|a| a.name() == p.alg_name).unwrap();
+            format!("{:.4}", execute_full(&m, &con, alg, Elem::D, ctx.seed ^ 9) * 1e3)
+        } else {
+            "-".into()
+        };
+        rows.push(vec![
+            (i + 1).to_string(),
+            p.alg_name.clone(),
+            format!("{:.4}", p.seconds * 1e3),
+            measured,
+            p.kernel_runs.to_string(),
+        ]);
+    }
+    // Selection check: the predicted winner measured vs true best among
+    // the validated set.
+    let txt = format!(
+        "## {title} ({} algorithms)\ntotal micro-benchmark cost: {:.3} ms (vs {:.3} ms for ONE execution of the predicted winner)\n{}",
+        ranked.len(),
+        micro_total * 1e3,
+        ranked[0].seconds * 1e3,
+        plot::table(
+            &["rank", "algorithm", "predicted [ms]", "measured [ms]", "kernel runs"],
+            &rows.iter().take(15).cloned().collect::<Vec<_>>()
+        )
+    );
+    ctx.report.emit(id, &txt, &plot::csv(&["rank", "alg", "pred_ms", "meas_ms", "runs"], &rows));
+}
+
+/// §6.3.1: ranking for the running example.
+pub fn fig6_3a(ctx: &Ctx) {
+    let n = if ctx.scale == Scale::Full { 100 } else { 64 };
+    ranking_figure(ctx, "fig6_3a", "§6.3.1: micro-benchmark ranking, C_abc := A_ai B_ibc", Contraction::example_abc(n), 4);
+}
+
+/// §6.3.2: the vector contraction without any gemm algorithm.
+pub fn fig6_3b(ctx: &Ctx) {
+    let n = if ctx.scale == Scale::Full { 4096 } else { 1024 };
+    ranking_figure(ctx, "fig6_3b", "§6.3.2: vector contraction C_a := A_iaj B_ji", Contraction::example_vector(n, 8), 3);
+}
+
+/// §6.3.3: the challenging contraction.
+pub fn fig6_3c(ctx: &Ctx) {
+    let n = if ctx.scale == Scale::Full { 96 } else { 48 };
+    ranking_figure(ctx, "fig6_3c", "§6.3.3: challenging contraction C_abc := A_ija B_jbic", Contraction::example_challenging(n, 8), 3);
+}
+
+/// §6.3.4: efficiency — prediction cost vs execution cost across sizes.
+pub fn fig6_4(ctx: &Ctx) {
+    let m = harpertown();
+    let mut rows = Vec::new();
+    let sizes: &[usize] = if ctx.scale == Scale::Full { &[48, 64, 96, 128] } else { &[48, 64] };
+    for &n in sizes {
+        let con = Contraction::example_abc(n);
+        let algs = generate(&con);
+        let ranked = micro::rank(&m, &con, &algs, Elem::D, ctx.seed);
+        let micro_cost: f64 = ranked.iter().map(|p| p.micro_cost).sum();
+        let exec_all: f64 = ranked.iter().map(|p| p.seconds).sum();
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.3}", micro_cost * 1e3),
+            format!("{:.1}", exec_all * 1e3),
+            format!("{:.0}x", exec_all / micro_cost),
+        ]);
+    }
+    let txt = format!(
+        "## §6.3.4: prediction cost vs exhaustive execution (all 36 algorithms)\n{}\n\
+         (paper: predictions are several orders of magnitude faster)\n",
+        plot::table(&["n", "micro cost [ms]", "all execs [ms]", "speedup"], &rows)
+    );
+    ctx.report.emit("fig6_4", &txt, &plot::csv(&["n", "micro_ms", "exec_ms", "speedup"], &rows));
+}

@@ -1,0 +1,152 @@
+//! Additional experiment drivers: the remaining paper artifacts plus the
+//! extension experiments the dissertation's outlook points to.
+
+use crate::machine::{CpuId, Elem, Library, Machine};
+use crate::predict::accuracy::relative_errors;
+use crate::predict::algorithms::lapack::{LapackAlg, LapackOp};
+use crate::predict::algorithms::potrf::Potrf;
+use crate::predict::algorithms::recursive::{RecOp, Recursive};
+use crate::predict::algorithms::trsyl::TrsylAlg;
+use crate::predict::algorithms::trtri::Trtri;
+use crate::predict::algorithms::BlockedAlg;
+use crate::predict::measurement::measure_algorithm;
+use crate::predict::predictor::{performance, predict_calls};
+use crate::util::plot;
+
+use super::ch4::store_for;
+use super::{Ctx, Scale};
+
+/// Fig 4.4: prediction accuracy as the block size varies (n = 3000).
+pub fn fig4_4(ctx: &Ctx) {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let store = store_for(ctx, &machine, &[&alg], 3080);
+    let n = 3000;
+    let step = if ctx.scale == Scale::Full { 8 } else { 32 };
+    let mut rows = Vec::new();
+    let mut ares = Vec::new();
+    let mut series = Vec::new();
+    for b in (24..=536).step_by(step) {
+        let pred = predict_calls(&store, &alg.calls(n, b)).time;
+        let meas = measure_algorithm(&machine, &alg, n, b, 5, ctx.seed);
+        let re = relative_errors(&pred, &meas);
+        ares.push(re.are_med());
+        let perf = performance(&pred, alg.op_flops(n)).med;
+        series.push((b as f64, perf));
+        rows.push(vec![
+            b.to_string(),
+            format!("{:.2}", pred.med * 1e3),
+            format!("{:.2}", meas.med * 1e3),
+            format!("{:+.2}%", re.med * 100.0),
+        ]);
+    }
+    let txt = format!(
+        "{}\naverage |median RE| over block sizes: {:.2}% (paper Fig. 4.4: 0.42%)\n",
+        plot::line_plot("Fig 4.4: predicted performance vs block size (n=3000)", "b", "GFLOPs/s", &[("predicted".into(), series)], 76, 14),
+        crate::util::stats::mean(&ares) * 100.0
+    );
+    ctx.report.emit("fig4_4", &txt, &plot::csv(&["b", "pred_ms", "meas_ms", "re"], &rows));
+}
+
+/// §4.5.3.2: the multi-threaded Sylvester collapse — all 64 algorithms are
+/// slower on 12 cores than on 1 because the unblocked leaf's tiny dswaps
+/// pay the OpenBLAS 0.2.15 dispatch overhead; fixed in 0.2.16.
+pub fn fig4_17mt(ctx: &Ctx) {
+    let n = if ctx.scale == Scale::Full { 1048 } else { 520 };
+    let algs = TrsylAlg::orthogonal_eight(Elem::D);
+    let mut rows = Vec::new();
+    for (lib, label) in [
+        (Library::OpenBlas { fixed_dswap: false }, "openblas-0.2.15"),
+        (Library::OpenBlas { fixed_dswap: true }, "openblas-0.2.16"),
+    ] {
+        for threads in [1usize, 12] {
+            let machine = Machine::standard(CpuId::Haswell, lib, threads);
+            let alg = &algs[7]; // n2m2, the single-thread winner
+            let t = measure_algorithm(&machine, alg, n, 64, 3, ctx.seed).med;
+            let gf = alg.op_flops(n) / t / 1e9;
+            rows.push(vec![
+                label.to_string(),
+                threads.to_string(),
+                format!("{:.3}", t * 1e3),
+                format!("{gf:.2}"),
+            ]);
+        }
+    }
+    let txt = format!(
+        "## §4.5.3.2: multi-threaded Sylvester collapse (n2m2, n={n}, b=64)\n{}\n\
+         With 0.2.15, 12 threads are far slower than 1 (tiny-dswap dispatch\n\
+         overhead in the unblocked leaves); the 0.2.16 fix restores scaling\n\
+         — exactly the paper's finding.\n",
+        plot::table(&["library", "threads", "time [ms]", "GFLOPs/s"], &rows)
+    );
+    ctx.report.emit("fig4_17mt", &txt, &plot::csv(&["library", "threads", "ms", "gflops"], &rows));
+}
+
+/// §4.4.1 (Fig 4.10b): dsygst is under-predicted once its two operands
+/// exceed the LLC — prediction error vs problem size.
+pub fn fig4_10(ctx: &Ctx) {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = LapackAlg::new(LapackOp::Sygst, Elem::D);
+    let store = store_for(ctx, &machine, &[&alg], 3080);
+    // LLC 20 MiB; 2 x n²/2 doubles cross capacity at n ≈ 1620.
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for n in (312..=2872).step_by(256) {
+        let pred = predict_calls(&store, &alg.calls(n, 64)).time;
+        let meas = measure_algorithm(&machine, &alg, n, 64, 5, ctx.seed);
+        let re = relative_errors(&pred, &meas).med;
+        series.push((n as f64, re * 100.0));
+        rows.push(vec![n.to_string(), format!("{:+.2}%", re * 100.0)]);
+    }
+    let small: Vec<f64> = series.iter().filter(|(n, _)| *n < 1500.0).map(|(_, r)| *r).collect();
+    let large: Vec<f64> = series.iter().filter(|(n, _)| *n > 1800.0).map(|(_, r)| *r).collect();
+    let txt = format!(
+        "{}\nmean RE below capacity: {:+.2}%, above: {:+.2}%\n\
+         (paper §4.4.1: consistent under-estimation beyond n≈1600 on this\n\
+         machine because warm models miss the mutual eviction of A and L)\n",
+        plot::line_plot("§4.4.1: dsygst median relative error vs n (b=64)", "n", "RE %", &[("re".into(), series)], 76, 14),
+        crate::util::stats::mean(&small),
+        crate::util::stats::mean(&large)
+    );
+    ctx.report.emit("fig4_10", &txt, &plot::csv(&["n", "re_med"], &rows));
+}
+
+/// Extension (§7.1 outlook / ReLAPACK): recursive vs best blocked
+/// algorithms, both predicted and measured.
+pub fn fig7_1(ctx: &Ctx) {
+    let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+    let mut rows = Vec::new();
+    for (family, blocked, recursive) in [
+        (
+            "potrf_L",
+            Box::new(Potrf { variant: 3, elem: Elem::D }) as Box<dyn BlockedAlg>,
+            Recursive::new(RecOp::Potrf, Elem::D),
+        ),
+        (
+            "trtri_LN",
+            Box::new(Trtri { variant: 3, elem: Elem::D }),
+            Recursive::new(RecOp::Trtri, Elem::D),
+        ),
+    ] {
+        let refs: Vec<&dyn BlockedAlg> = vec![blocked.as_ref(), &recursive];
+        let store = store_for(ctx, &machine, &refs, 3080);
+        for n in [1096usize, 2872] {
+            let mut cells = vec![family.to_string(), n.to_string()];
+            for alg in &refs {
+                let b = 128;
+                let pred = predict_calls(&store, &alg.calls(n, b)).time.med;
+                let meas = measure_algorithm(&machine, *alg, n, b, 5, ctx.seed).med;
+                cells.push(format!("{:.2}/{:.2}", pred * 1e3, meas * 1e3));
+            }
+            rows.push(cells);
+        }
+    }
+    let txt = format!(
+        "## Extension fig7_1: blocked vs recursive (ReLAPACK-style), pred/meas [ms]\n{}\n\
+         Recursion is parameter-free; the same kernel models predict both\n\
+         families — demonstrating the framework extends beyond blocked\n\
+         algorithms (the dissertation's outlook, §7.1).\n",
+        plot::table(&["operation", "n", "blocked (b=128)", "recursive"], &rows)
+    );
+    ctx.report.emit("fig7_1", &txt, &plot::csv(&["op", "n", "blocked", "recursive"], &rows));
+}

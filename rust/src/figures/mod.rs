@@ -1,0 +1,89 @@
+//! Experiment drivers regenerating the paper's tables and figures
+//! (DESIGN.md §6 maps each id to its paper artifact). Each driver writes
+//! `out/<id>.csv` (numbers) and `out/<id>.txt` (rendered table/plot).
+//!
+//! Scale knob: `--scale full` reproduces paper-sized sweeps; the default
+//! `quick` shrinks problem-size grids so the whole suite runs in minutes.
+
+pub mod ch2;
+pub mod ch3;
+pub mod ch4;
+pub mod ch5;
+pub mod ch6;
+pub mod extra;
+
+use crate::report::Report;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+pub struct Ctx<'a> {
+    pub report: &'a Report,
+    pub scale: Scale,
+    pub seed: u64,
+}
+
+type Driver = fn(&Ctx);
+
+/// (id, paper artifact, driver) registry.
+pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
+    vec![
+        ("tab2_1", "Table 2.1: library init overhead", ch2::tab2_1),
+        ("fig2_1", "Fig 2.1: noise fluctuations", ch2::fig2_1),
+        ("fig2_2", "Fig 2.2: Turbo Boost trajectory", ch2::fig2_2),
+        ("fig2_3", "Fig 2.3: long-term performance levels", ch2::fig2_3),
+        ("fig2_4", "Fig 2.4: thread pinning", ch2::fig2_4),
+        ("tab2_2", "Table 2.2: dgemv caching", ch2::tab2_2),
+        ("ex2_7", "Ex 2.7: Sampler session", ch2::ex2_7),
+        ("fig3_1", "Fig 3.1: dtrsm flag arguments", ch3::fig3_1),
+        ("fig3_2", "Fig 3.2: dtrsm alpha scalars", ch3::fig3_2),
+        ("fig3_3", "Fig 3.3: leading dims small scale", ch3::fig3_3),
+        ("fig3_4", "Fig 3.4: leading-dim conflict spikes", ch3::fig3_4),
+        ("fig3_5", "Fig 3.5: increments daxpy/dtrsv", ch3::fig3_5),
+        ("fig3_6", "Fig 3.6: size sawtooth", ch3::fig3_6),
+        ("fig3_7", "Fig 3.7: piecewise cubic fits", ch3::fig3_7),
+        ("fig3_8", "Fig 3.8: cache preconditions", ch3::fig3_8),
+        ("fig3_11", "Fig 3.11: adaptive refinement", ch3::fig3_11),
+        ("fig3_13", "Fig 3.13/Tab 3.3: config search", ch3::fig3_13),
+        ("fig1_2", "Fig 1.2/4.12: Cholesky variants", ch4::fig4_12),
+        ("fig1_3", "Fig 1.3: Cholesky block sizes", ch4::fig4_19),
+        ("fig4_2", "Figs 4.2-4.3: potrf accuracy vs n", ch4::fig4_2),
+        ("fig4_5", "Fig 4.5: ARE heat-map over (n,b)", ch4::fig4_5),
+        ("fig4_6", "Fig 4.6: data types s/d/c/z", ch4::fig4_6),
+        ("fig4_7", "Fig 4.7: multi-threaded accuracy", ch4::fig4_7),
+        ("tab4_3", "Table 4.3: 1-thread ARE, 6 algorithms", ch4::tab4_3),
+        ("tab4_4", "Table 4.4: multi-thread ARE", ch4::tab4_4),
+        ("fig4_12", "Fig 4.12: Cholesky selection", ch4::fig4_12),
+        ("fig4_14", "Fig 4.14: trtri selection (8 algs)", ch4::fig4_14),
+        ("fig4_17", "Fig 4.17: trsyl selection (64 algs)", ch4::fig4_17),
+        ("fig4_4", "Fig 4.4: accuracy vs block size (n=3000)", extra::fig4_4),
+        ("fig4_10", "§4.4.1: dsygst cache-capacity under-prediction", extra::fig4_10),
+        ("fig4_17mt", "§4.5.3.2: multi-threaded trsyl collapse", extra::fig4_17mt),
+        ("fig7_1", "Extension: blocked vs recursive (ReLAPACK)", extra::fig7_1),
+        ("fig4_18", "Fig 4.18: block-size kernel breakdown", ch4::fig4_18),
+        ("fig4_19", "Figs 4.19-4.20: block-size optimization", ch4::fig4_19),
+        ("fig5_1", "Figs 5.1-5.2: dgeqrf cache traces (Harpertown)", ch5::fig5_1),
+        ("fig5_3", "§5.3: modern-hardware feasibility", ch5::fig5_3),
+        ("fig6_1", "§6.1/Fig 1.5: contraction algorithms + perf", ch6::fig6_1),
+        ("fig6_3a", "§6.3.1: ranking C_abc=A_ai B_ibc", ch6::fig6_3a),
+        ("fig6_3b", "§6.3.2: vector contraction", ch6::fig6_3b),
+        ("fig6_3c", "§6.3.3: challenging contraction", ch6::fig6_3c),
+        ("fig6_4", "§6.3.4: prediction efficiency", ch6::fig6_4),
+    ]
+}
+
+pub fn run(ids: &[String], all: bool, ctx: &Ctx) -> usize {
+    let reg = registry();
+    let mut ran = 0;
+    for (id, desc, driver) in reg {
+        if all || ids.iter().any(|x| x == id) {
+            eprintln!("[dlapm] running {id} — {desc}");
+            driver(ctx);
+            ran += 1;
+        }
+    }
+    ran
+}

@@ -1,0 +1,32 @@
+//! # dlapm — performance modeling and prediction for dense linear algebra
+//!
+//! A reproduction of Elmar Peise, *"Performance Modeling and Prediction for
+//! Dense Linear Algebra"* (RWTH Aachen dissertation, 2017) as a
+//! three-layer Rust + JAX + Pallas framework:
+//!
+//! * [`machine`] — the virtual testbed substrate (CPUs, BLAS library
+//!   personalities, caches, noise) that substitutes for the paper's five
+//!   Intel Xeon machines;
+//! * [`sampler`] — the ELAPS Sampler analogue (Ch. 2);
+//! * [`modeling`] — automated piecewise-polynomial performance models
+//!   (Ch. 3), with the relative least-squares fit running either in-process
+//!   or through the AOT-compiled JAX/Pallas artifact via PJRT;
+//! * [`predict`] — model-based predictions for blocked algorithms:
+//!   algorithm selection and block-size optimization (Ch. 4);
+//! * [`cachepred`] — cache-aware timing combination (Ch. 5);
+//! * [`tensor`] — micro-benchmark-based predictions for BLAS-based tensor
+//!   contractions (Ch. 6);
+//! * [`runtime`] — the PJRT bridge loading `artifacts/*.hlo.txt`;
+//! * [`figures`] — drivers regenerating every table and figure of the
+//!   paper's evaluation (see DESIGN.md §6).
+
+pub mod machine;
+pub mod util;
+pub mod sampler;
+pub mod modeling;
+pub mod predict;
+pub mod runtime;
+pub mod tensor;
+pub mod cachepred;
+pub mod figures;
+pub mod report;

@@ -1,0 +1,274 @@
+//! Last-level-cache residency tracking (paper §2.1.4, Ch. 5).
+//!
+//! The cross-kernel caching effects that Ch. 5 studies — "prior to each
+//! kernel invocation only a portion of its operands are in cache" — are
+//! simulated by tracking which operand *tiles* currently live in the LLC.
+//! A tile is a fixed square sub-block of a parent matrix; an invocation
+//! touches the tiles its operand regions overlap, missing bytes for tiles
+//! not resident, and leaves its tiles most-recently-used.
+//!
+//! This granularity deliberately matches the scale at which the paper's
+//! phenomena live (operand panels of blocked algorithms, full tensors in
+//! contractions), not cache-line-accurate simulation.
+
+use std::collections::HashMap;
+
+use super::kernels::Region;
+
+/// Side length of a tile in elements.
+pub const TILE: usize = 64;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct TileKey {
+    matrix: u64,
+    trow: u32,
+    tcol: u32,
+}
+
+/// LRU set of tiles bounded by a byte capacity.
+#[derive(Clone, Debug)]
+pub struct CacheTracker {
+    capacity: usize,
+    used: usize,
+    clock: u64,
+    /// tile -> (last-use stamp, bytes)
+    tiles: HashMap<TileKey, (u64, u32)>,
+}
+
+/// Result of touching a call's operands.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TouchResult {
+    pub total_bytes: usize,
+    pub miss_bytes: usize,
+}
+
+impl CacheTracker {
+    pub fn new(capacity_bytes: usize) -> CacheTracker {
+        CacheTracker {
+            capacity: capacity_bytes,
+            used: 0,
+            clock: 0,
+            tiles: HashMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Empty the cache (e.g. the Sampler's explicit cache-flush command).
+    pub fn flush(&mut self) {
+        self.tiles.clear();
+        self.used = 0;
+    }
+
+    /// Touch all tiles of `regions`; returns total vs missed bytes and
+    /// leaves every touched tile most recently used.
+    pub fn touch(&mut self, regions: &[Region]) -> TouchResult {
+        let mut res = TouchResult::default();
+        for r in regions {
+            self.touch_region(r, &mut res);
+        }
+        self.evict_to_capacity();
+        res
+    }
+
+    /// Touch a single region without bringing it in (query only).
+    pub fn resident_fraction(&self, r: &Region) -> f64 {
+        if r.rows == 0 || r.cols == 0 {
+            return 1.0;
+        }
+        let mut total = 0usize;
+        let mut hit = 0usize;
+        self.for_tiles(r, |key, bytes| {
+            total += bytes;
+            if self.tiles.contains_key(&key) {
+                hit += bytes;
+            }
+        });
+        if total == 0 {
+            1.0
+        } else {
+            hit as f64 / total as f64
+        }
+    }
+
+    fn touch_region(&mut self, r: &Region, res: &mut TouchResult) {
+        if r.rows == 0 || r.cols == 0 {
+            return;
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut inserts: Vec<(TileKey, u32)> = Vec::new();
+        self.for_tiles(r, |key, bytes| {
+            inserts.push((key, bytes as u32));
+        });
+        for (key, bytes) in inserts {
+            res.total_bytes += bytes as usize;
+            match self.tiles.get_mut(&key) {
+                Some(entry) => {
+                    // Resident: refresh stamp; if the recorded tile is
+                    // smaller than this touch (partial tile grown), count
+                    // the growth as a miss.
+                    if entry.1 < bytes {
+                        res.miss_bytes += (bytes - entry.1) as usize;
+                        self.used += (bytes - entry.1) as usize;
+                        entry.1 = bytes;
+                    }
+                    entry.0 = stamp;
+                }
+                None => {
+                    res.miss_bytes += bytes as usize;
+                    self.used += bytes as usize;
+                    self.tiles.insert(key, (stamp, bytes));
+                }
+            }
+        }
+    }
+
+    fn for_tiles(&self, r: &Region, mut f: impl FnMut(TileKey, usize)) {
+        let t0r = r.row0 / TILE;
+        let t1r = (r.row0 + r.rows - 1) / TILE;
+        let t0c = r.col0 / TILE;
+        let t1c = (r.col0 + r.cols - 1) / TILE;
+        for tr in t0r..=t1r {
+            for tc in t0c..=t1c {
+                // Bytes of this region that fall inside the tile.
+                let row_lo = r.row0.max(tr * TILE);
+                let row_hi = (r.row0 + r.rows).min((tr + 1) * TILE);
+                let col_lo = r.col0.max(tc * TILE);
+                let col_hi = (r.col0 + r.cols).min((tc + 1) * TILE);
+                let bytes = (row_hi - row_lo) * (col_hi - col_lo) * r.elem_bytes;
+                f(
+                    TileKey { matrix: r.matrix, trow: tr as u32, tcol: tc as u32 },
+                    bytes,
+                );
+            }
+        }
+    }
+
+    fn evict_to_capacity(&mut self) {
+        if self.used <= self.capacity {
+            return;
+        }
+        // Evict least-recently-used tiles until under capacity. Collect and
+        // sort by stamp — eviction is rare relative to touches.
+        let mut entries: Vec<(TileKey, u64, u32)> = self
+            .tiles
+            .iter()
+            .map(|(k, &(stamp, bytes))| (*k, stamp, bytes))
+            .collect();
+        entries.sort_by_key(|&(_, stamp, _)| stamp);
+        for (key, _, bytes) in entries {
+            if self.used <= self.capacity {
+                break;
+            }
+            self.tiles.remove(&key);
+            self.used -= bytes as usize;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::elem::Elem;
+
+    fn region(matrix: u64, rows: usize, cols: usize) -> Region {
+        Region::new(matrix, 0, 0, rows, cols, Elem::D)
+    }
+
+    #[test]
+    fn first_touch_misses_everything() {
+        let mut c = CacheTracker::new(1 << 20);
+        let r = region(1, 128, 128);
+        let res = c.touch(&[r]);
+        assert_eq!(res.total_bytes, 128 * 128 * 8);
+        assert_eq!(res.miss_bytes, res.total_bytes);
+    }
+
+    #[test]
+    fn second_touch_hits() {
+        let mut c = CacheTracker::new(1 << 20);
+        let r = region(1, 128, 128);
+        c.touch(&[r]);
+        let res = c.touch(&[r]);
+        assert_eq!(res.miss_bytes, 0);
+        assert!((c.resident_fraction(&r) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_under_pressure() {
+        // Capacity of one 64x64 f64 tile (32 KiB): the second matrix evicts
+        // the first.
+        let mut c = CacheTracker::new(TILE * TILE * 8);
+        let a = region(1, TILE, TILE);
+        let b = region(2, TILE, TILE);
+        c.touch(&[a]);
+        c.touch(&[b]);
+        let res = c.touch(&[a]);
+        assert_eq!(res.miss_bytes, res.total_bytes);
+    }
+
+    #[test]
+    fn overlapping_subregions_share_tiles() {
+        let mut c = CacheTracker::new(8 << 20);
+        let whole = region(1, 256, 256);
+        c.touch(&[whole]);
+        // A sub-rectangle of the same parent is fully resident.
+        let sub = Region::new(1, 64, 64, 128, 128, Elem::D);
+        let res = c.touch(&[sub]);
+        assert_eq!(res.miss_bytes, 0);
+    }
+
+    #[test]
+    fn disjoint_submatrices_tracked_separately() {
+        let mut c = CacheTracker::new(8 << 20);
+        let left = Region::new(1, 0, 0, 128, 128, Elem::D);
+        let right = Region::new(1, 0, 128, 128, 128, Elem::D);
+        c.touch(&[left]);
+        let res = c.touch(&[right]);
+        assert_eq!(res.miss_bytes, res.total_bytes);
+    }
+
+    #[test]
+    fn flush_empties() {
+        let mut c = CacheTracker::new(1 << 20);
+        let r = region(1, 64, 64);
+        c.touch(&[r]);
+        c.flush();
+        assert_eq!(c.used(), 0);
+        let res = c.touch(&[r]);
+        assert_eq!(res.miss_bytes, res.total_bytes);
+    }
+
+    #[test]
+    fn lru_order_is_respected() {
+        // Cap = 2 tiles. Touch a, b, then a again; touching c should evict
+        // b (least recent), not a.
+        let cap = 2 * TILE * TILE * 8;
+        let mut c = CacheTracker::new(cap);
+        let a = region(1, TILE, TILE);
+        let b = region(2, TILE, TILE);
+        let d = region(3, TILE, TILE);
+        c.touch(&[a]);
+        c.touch(&[b]);
+        c.touch(&[a]);
+        c.touch(&[d]);
+        assert!(c.resident_fraction(&a) > 0.99);
+        assert!(c.resident_fraction(&b) < 0.01);
+    }
+
+    #[test]
+    fn partial_tiles_count_partial_bytes() {
+        let mut c = CacheTracker::new(1 << 20);
+        let r = region(1, 10, 10); // much smaller than a tile
+        let res = c.touch(&[r]);
+        assert_eq!(res.total_bytes, 800);
+        assert_eq!(res.miss_bytes, 800);
+    }
+}

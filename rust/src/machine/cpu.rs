@@ -1,0 +1,212 @@
+//! Virtual CPU specifications mirroring the dissertation's testbeds
+//! (Appendix C). The paper's absolute numbers anchor the simulator:
+//! e.g. the Sandy Bridge-EP E5-2670's single-threaded DP peak of
+//! 20.8 GFLOPs/s (2.6 GHz x 8 flops/cycle) is quoted in §2.2.2.
+
+/// One cache level.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheLevel {
+    pub bytes: usize,
+    pub line: usize,
+    pub ways: usize,
+    /// Shared by all cores (true for LLC) or per-core?
+    pub shared: bool,
+}
+
+impl CacheLevel {
+    pub fn sets(&self) -> usize {
+        self.bytes / (self.line * self.ways)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CpuId {
+    /// Harpertown E5450 (2007): no L3, large shared L2, SSE (4 DP flops/cy).
+    Harpertown,
+    /// Sandy Bridge-EP E5-2670: AVX, 8 cores, 20 MiB L3. Turbo disabled in
+    /// the paper's experiments.
+    SandyBridge,
+    /// Ivy Bridge-EP E5-2680 v2: 10 cores, 25 MiB L3.
+    IvyBridge,
+    /// Haswell-EP E5-2680 v3: FMA+AVX2 (16 DP flops/cy), 12 cores, 30 MiB
+    /// L3. Turbo enabled in the paper's experiments.
+    Haswell,
+    /// Broadwell i7-5557U (laptop): 2 cores, strong turbo, weak cooling.
+    Broadwell,
+}
+
+#[derive(Clone, Debug)]
+pub struct CpuSpec {
+    pub id: CpuId,
+    pub name: &'static str,
+    /// Base (non-turbo) core frequency in GHz.
+    pub freq_ghz: f64,
+    /// Max single-core turbo frequency in GHz (== base when turbo is off).
+    pub turbo_ghz: f64,
+    pub cores: usize,
+    /// Double-precision flops/cycle/core (x2 for single precision).
+    pub dp_flops_per_cycle: f64,
+    pub l1d: CacheLevel,
+    pub l2: CacheLevel,
+    /// Last-level cache; `None` for Harpertown (L2 is the LLC).
+    pub l3: Option<CacheLevel>,
+    /// Sustained main-memory bandwidth per socket, bytes/cycle (at base
+    /// frequency), for the miss-penalty model.
+    pub mem_bytes_per_cycle: f64,
+    /// Effective cache-hierarchy bandwidth for streaming kernels whose
+    /// working set fits in LLC, bytes/cycle/core.
+    pub cache_bytes_per_cycle: f64,
+    /// How quickly the package heats under full load (thermal model for the
+    /// turbo trajectory; arbitrary units/sec) and cools.
+    pub heat_rate: f64,
+    pub cool_rate: f64,
+}
+
+impl CpuSpec {
+    pub fn get(id: CpuId) -> CpuSpec {
+        match id {
+            CpuId::Harpertown => CpuSpec {
+                id,
+                name: "Harpertown E5450",
+                freq_ghz: 3.0,
+                turbo_ghz: 3.0,
+                cores: 4,
+                dp_flops_per_cycle: 4.0,
+                l1d: CacheLevel { bytes: 32 << 10, line: 64, ways: 8, shared: false },
+                // 6 MiB per core pair; the LLC in this machine.
+                l2: CacheLevel { bytes: 6 << 20, line: 64, ways: 24, shared: true },
+                l3: None,
+                mem_bytes_per_cycle: 2.7,
+                cache_bytes_per_cycle: 10.0,
+                heat_rate: 0.0,
+                cool_rate: 1.0,
+            },
+            CpuId::SandyBridge => CpuSpec {
+                id,
+                name: "Sandy Bridge-EP E5-2670",
+                freq_ghz: 2.6,
+                turbo_ghz: 2.6, // paper: Turbo Boost disabled
+                cores: 8,
+                dp_flops_per_cycle: 8.0,
+                l1d: CacheLevel { bytes: 32 << 10, line: 64, ways: 8, shared: false },
+                l2: CacheLevel { bytes: 256 << 10, line: 64, ways: 8, shared: false },
+                l3: Some(CacheLevel { bytes: 20 << 20, line: 64, ways: 20, shared: true }),
+                mem_bytes_per_cycle: 12.0,
+                cache_bytes_per_cycle: 16.0,
+                heat_rate: 0.0,
+                cool_rate: 1.0,
+            },
+            CpuId::IvyBridge => CpuSpec {
+                id,
+                name: "Ivy Bridge-EP E5-2680 v2",
+                freq_ghz: 2.8,
+                turbo_ghz: 2.8,
+                cores: 10,
+                dp_flops_per_cycle: 8.0,
+                l1d: CacheLevel { bytes: 32 << 10, line: 64, ways: 8, shared: false },
+                l2: CacheLevel { bytes: 256 << 10, line: 64, ways: 8, shared: false },
+                l3: Some(CacheLevel { bytes: 25 << 20, line: 64, ways: 20, shared: true }),
+                mem_bytes_per_cycle: 14.0,
+                cache_bytes_per_cycle: 16.0,
+                heat_rate: 0.0,
+                cool_rate: 1.0,
+            },
+            CpuId::Haswell => CpuSpec {
+                id,
+                name: "Haswell-EP E5-2680 v3",
+                freq_ghz: 2.5,
+                turbo_ghz: 3.3, // paper: Turbo Boost enabled on this testbed
+                cores: 12,
+                dp_flops_per_cycle: 16.0,
+                l1d: CacheLevel { bytes: 32 << 10, line: 64, ways: 8, shared: false },
+                l2: CacheLevel { bytes: 256 << 10, line: 64, ways: 8, shared: false },
+                l3: Some(CacheLevel { bytes: 30 << 20, line: 64, ways: 20, shared: true }),
+                mem_bytes_per_cycle: 20.0,
+                cache_bytes_per_cycle: 24.0,
+                // Well-cooled cluster node: heats slowly, throttles mildly.
+                heat_rate: 0.4,
+                cool_rate: 1.0,
+            },
+            CpuId::Broadwell => CpuSpec {
+                id,
+                name: "Broadwell i7-5557U",
+                freq_ghz: 3.1,
+                turbo_ghz: 3.4,
+                cores: 2,
+                dp_flops_per_cycle: 16.0,
+                l1d: CacheLevel { bytes: 32 << 10, line: 64, ways: 8, shared: false },
+                l2: CacheLevel { bytes: 256 << 10, line: 64, ways: 8, shared: false },
+                l3: Some(CacheLevel { bytes: 4 << 20, line: 64, ways: 16, shared: true }),
+                mem_bytes_per_cycle: 8.0,
+                cache_bytes_per_cycle: 24.0,
+                // Laptop: heats fast, throttles hard (Fig. 2.2).
+                heat_rate: 4.5,
+                cool_rate: 0.6,
+            },
+        }
+    }
+
+    /// The last-level cache (L3, or L2 on Harpertown).
+    pub fn llc(&self) -> CacheLevel {
+        self.l3.unwrap_or(self.l2)
+    }
+
+    /// Peak DP GFLOPs/s for `threads` cores at base frequency.
+    pub fn peak_gflops(&self, threads: usize, single_precision: bool) -> f64 {
+        let simd = if single_precision { 2.0 } else { 1.0 };
+        self.freq_ghz * self.dp_flops_per_cycle * simd * threads.min(self.cores) as f64
+    }
+
+    pub fn parse(s: &str) -> Option<CpuId> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "harpertown" | "e5450" => CpuId::Harpertown,
+            "sandybridge" | "sandy-bridge" | "e5-2670" => CpuId::SandyBridge,
+            "ivybridge" | "ivy-bridge" | "e5-2680v2" => CpuId::IvyBridge,
+            "haswell" | "e5-2680v3" => CpuId::Haswell,
+            "broadwell" | "i7-5557u" => CpuId::Broadwell,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sandy_bridge_peak_matches_paper() {
+        // §2.2.2: "single-threaded peak floating-point performance of
+        // 20.8 GFLOPs/s (Turbo Boost disabled)".
+        let sb = CpuSpec::get(CpuId::SandyBridge);
+        assert!((sb.peak_gflops(1, false) - 20.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn haswell_multi_core_peak_matches_paper() {
+        // §4.5.3.2: "12-core peak performance of 480 GFLOPs/s (without
+        // Turbo Boost)".
+        let hw = CpuSpec::get(CpuId::Haswell);
+        assert!((hw.peak_gflops(12, false) - 480.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l1_has_64_sets() {
+        // §3.1.3.2: "the L1d fits 32 KiB organized as 64 sets of 8 lines".
+        let sb = CpuSpec::get(CpuId::SandyBridge);
+        assert_eq!(sb.l1d.sets(), 64);
+        assert_eq!(sb.l2.sets(), 512);
+    }
+
+    #[test]
+    fn harpertown_llc_is_l2() {
+        let hp = CpuSpec::get(CpuId::Harpertown);
+        assert_eq!(hp.llc().bytes, 6 << 20);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(CpuSpec::parse("haswell"), Some(CpuId::Haswell));
+        assert_eq!(CpuSpec::parse("E5-2670"), Some(CpuId::SandyBridge));
+        assert_eq!(CpuSpec::parse("nope"), None);
+    }
+}

@@ -1,0 +1,86 @@
+//! Numeric element types (BLAS s/d/c/z prefixes).
+
+/// The four de-facto standard numeric data types (paper §4.3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Elem {
+    /// single-precision real (s)
+    S,
+    /// double-precision real (d)
+    D,
+    /// single-precision complex (c)
+    C,
+    /// double-precision complex (z)
+    Z,
+}
+
+impl Elem {
+    pub const ALL: [Elem; 4] = [Elem::S, Elem::D, Elem::C, Elem::Z];
+
+    pub fn bytes(self) -> usize {
+        match self {
+            Elem::S => 4,
+            Elem::D => 8,
+            Elem::C => 8,
+            Elem::Z => 16,
+        }
+    }
+
+    /// Multiplier turning a real-arithmetic FLOP formula into the actual
+    /// real-FLOP count: complex fused multiply-adds cost 4 real ones.
+    pub fn flop_mult(self) -> f64 {
+        match self {
+            Elem::S | Elem::D => 1.0,
+            Elem::C | Elem::Z => 4.0,
+        }
+    }
+
+    /// Is the underlying scalar single precision (doubles the SIMD width)?
+    pub fn single_precision(self) -> bool {
+        matches!(self, Elem::S | Elem::C)
+    }
+
+    pub fn prefix(self) -> char {
+        match self {
+            Elem::S => 's',
+            Elem::D => 'd',
+            Elem::C => 'c',
+            Elem::Z => 'z',
+        }
+    }
+
+    pub fn parse(c: char) -> Option<Elem> {
+        Some(match c {
+            's' => Elem::S,
+            'd' => Elem::D,
+            'c' => Elem::C,
+            'z' => Elem::Z,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_roundtrip() {
+        for e in Elem::ALL {
+            assert_eq!(Elem::parse(e.prefix()), Some(e));
+        }
+    }
+
+    #[test]
+    fn complex_costs_four_real_flops() {
+        assert_eq!(Elem::Z.flop_mult(), 4.0);
+        assert_eq!(Elem::D.flop_mult(), 1.0);
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(Elem::S.bytes(), 4);
+        assert_eq!(Elem::D.bytes(), 8);
+        assert_eq!(Elem::C.bytes(), 8);
+        assert_eq!(Elem::Z.bytes(), 16);
+    }
+}

@@ -1,0 +1,570 @@
+//! Kernel catalog: the BLAS / unblocked-LAPACK routines the framework
+//! models, with their argument semantics, minimal FLOP counts and data
+//! volumes (paper Appendices A-B).
+//!
+//! A [`Call`] is one kernel invocation with concrete arguments. Calls are
+//! what the Sampler executes (on the virtual testbed), what blocked
+//! algorithms emit, and what performance models estimate.
+
+use super::elem::Elem;
+
+// ------------------------------------------------------------------ flags
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Uplo {
+    Lower,
+    Upper,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Diag {
+    NonUnit,
+    Unit,
+}
+
+/// Flag arguments (paper §3.1.1). Unused flags are `None`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct Flags {
+    pub side: Option<Side>,
+    pub uplo: Option<Uplo>,
+    pub trans_a: Option<Trans>,
+    pub trans_b: Option<Trans>,
+    pub diag: Option<Diag>,
+}
+
+impl Flags {
+    pub fn code(&self) -> String {
+        let mut s = String::new();
+        if let Some(v) = self.side {
+            s.push(match v {
+                Side::Left => 'L',
+                Side::Right => 'R',
+            });
+        }
+        if let Some(v) = self.uplo {
+            s.push(match v {
+                Uplo::Lower => 'L',
+                Uplo::Upper => 'U',
+            });
+        }
+        if let Some(v) = self.trans_a {
+            s.push(match v {
+                Trans::No => 'N',
+                Trans::Yes => 'T',
+            });
+        }
+        if let Some(v) = self.trans_b {
+            s.push(match v {
+                Trans::No => 'N',
+                Trans::Yes => 'T',
+            });
+        }
+        if let Some(v) = self.diag {
+            s.push(match v {
+                Diag::NonUnit => 'N',
+                Diag::Unit => 'U',
+            });
+        }
+        s
+    }
+}
+
+/// Scalar-argument classes (paper §3.1.2): only -1, 0, 1 vs anything else
+/// change kernel behaviour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Scalar {
+    MinusOne,
+    Zero,
+    #[default]
+    One,
+    Other,
+}
+
+impl Scalar {
+    pub fn classify(v: f64) -> Scalar {
+        if v == 0.0 {
+            Scalar::Zero
+        } else if v == 1.0 {
+            Scalar::One
+        } else if v == -1.0 {
+            Scalar::MinusOne
+        } else {
+            Scalar::Other
+        }
+    }
+}
+
+// ----------------------------------------------------------------- kernels
+
+/// Catalog of modeled kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelId {
+    // BLAS 3
+    Gemm,
+    Symm,
+    Syrk,
+    Syr2k,
+    Trmm,
+    Trsm,
+    // BLAS 2
+    Gemv,
+    Trsv,
+    Ger,
+    // BLAS 1
+    Axpy,
+    Dot,
+    Copy,
+    Swap,
+    Scal,
+    // unblocked LAPACK
+    Potf2,
+    Trti2,
+    Lauu2,
+    Getf2,
+    Sygs2,
+    Geqr2,
+    Larft,
+    Larfb,
+    Laswp,
+    TrsylUnb,
+}
+
+/// How many independent size arguments a kernel has — the dimensionality of
+/// its performance-model domain (paper §3.2.1).
+pub fn size_dims(kernel: KernelId) -> usize {
+    use KernelId::*;
+    match kernel {
+        Gemm => 3,
+        Symm | Syrk | Syr2k | Trmm | Trsm | Gemv | Ger | Getf2 | Geqr2 | Larft | TrsylUnb => 2,
+        Larfb => 3,
+        Trsv | Axpy | Dot | Copy | Swap | Scal | Potf2 | Trti2 | Lauu2 | Sygs2 | Laswp => 1,
+    }
+}
+
+/// BLAS "level" grouping used by the timing model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    L1,
+    L2,
+    L3,
+    /// Unblocked LAPACK routine (rich in division/sqrt, poorly vectorized).
+    Unblocked,
+}
+
+pub fn level(kernel: KernelId) -> Level {
+    use KernelId::*;
+    match kernel {
+        Gemm | Symm | Syrk | Syr2k | Trmm | Trsm | Larfb => Level::L3,
+        Gemv | Trsv | Ger => Level::L2,
+        Axpy | Dot | Copy | Swap | Scal | Laswp => Level::L1,
+        Potf2 | Trti2 | Lauu2 | Getf2 | Sygs2 | Geqr2 | Larft | TrsylUnb => Level::Unblocked,
+    }
+}
+
+pub fn name(kernel: KernelId) -> &'static str {
+    use KernelId::*;
+    match kernel {
+        Gemm => "gemm",
+        Symm => "symm",
+        Syrk => "syrk",
+        Syr2k => "syr2k",
+        Trmm => "trmm",
+        Trsm => "trsm",
+        Gemv => "gemv",
+        Trsv => "trsv",
+        Ger => "ger",
+        Axpy => "axpy",
+        Dot => "dot",
+        Copy => "copy",
+        Swap => "swap",
+        Scal => "scal",
+        Potf2 => "potf2",
+        Trti2 => "trti2",
+        Lauu2 => "lauu2",
+        Getf2 => "getf2",
+        Sygs2 => "sygs2",
+        Geqr2 => "geqr2",
+        Larft => "larft",
+        Larfb => "larfb",
+        Laswp => "laswp",
+        TrsylUnb => "trsyl",
+    }
+}
+
+pub fn parse_name(s: &str) -> Option<KernelId> {
+    use KernelId::*;
+    Some(match s {
+        "gemm" => Gemm,
+        "symm" => Symm,
+        "syrk" => Syrk,
+        "syr2k" => Syr2k,
+        "trmm" => Trmm,
+        "trsm" => Trsm,
+        "gemv" => Gemv,
+        "trsv" => Trsv,
+        "ger" => Ger,
+        "axpy" => Axpy,
+        "dot" => Dot,
+        "copy" => Copy,
+        "swap" => Swap,
+        "scal" => Scal,
+        "potf2" => Potf2,
+        "trti2" => Trti2,
+        "lauu2" => Lauu2,
+        "getf2" => Getf2,
+        "sygs2" => Sygs2,
+        "geqr2" => Geqr2,
+        "larft" => Larft,
+        "larfb" => Larfb,
+        "laswp" => Laswp,
+        "trsyl" => TrsylUnb,
+        _ => return None,
+    })
+}
+
+// ------------------------------------------------------------------ calls
+
+/// A memory region an operand occupies; drives the cache-residency model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Region {
+    /// Identity of the parent allocation (matrix).
+    pub matrix: u64,
+    /// Element offsets of the sub-matrix within the parent.
+    pub row0: usize,
+    pub col0: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub elem_bytes: usize,
+}
+
+impl Region {
+    pub fn new(matrix: u64, row0: usize, col0: usize, rows: usize, cols: usize, elem: Elem) -> Region {
+        Region { matrix, row0, col0, rows, cols, elem_bytes: elem.bytes() }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.rows * self.cols * self.elem_bytes
+    }
+}
+
+/// One concrete kernel invocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Call {
+    pub kernel: KernelId,
+    pub elem: Elem,
+    pub flags: Flags,
+    /// Size arguments; unused trailing dims are 0.
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub alpha: Scalar,
+    pub beta: Scalar,
+    /// Leading dimensions of up to three matrix operands (0 = unused).
+    pub lda: usize,
+    pub ldb: usize,
+    pub ldc: usize,
+    /// Increments of up to two vector operands (0 = unused).
+    pub incx: usize,
+    pub incy: usize,
+    /// Operand memory regions, used by the cache model. May be empty for
+    /// "ad-hoc operands" (the Sampler's `[len]` syntax), in which case every
+    /// invocation touches fresh memory.
+    pub operands: Vec<Region>,
+    /// True for inlined non-BLAS work inside an algorithm (e.g. dgeqrf's
+    /// nested-loop matrix addition, paper §4.4.1): executed by the
+    /// simulator but invisible to performance models.
+    pub unmodeled: bool,
+}
+
+impl Call {
+    pub fn new(kernel: KernelId, elem: Elem) -> Call {
+        Call {
+            kernel,
+            elem,
+            flags: Flags::default(),
+            m: 0,
+            n: 0,
+            k: 0,
+            alpha: Scalar::One,
+            beta: Scalar::One,
+            lda: 0,
+            ldb: 0,
+            ldc: 0,
+            incx: 0,
+            incy: 0,
+            operands: Vec::new(),
+            unmodeled: false,
+        }
+    }
+
+    /// The size-argument vector in model-domain order.
+    pub fn sizes(&self) -> Vec<usize> {
+        match size_dims(self.kernel) {
+            1 => vec![self.sizes3()[0]],
+            2 => {
+                let s = self.sizes3();
+                vec![s[0], s[1]]
+            }
+            _ => vec![self.m, self.n, self.k],
+        }
+    }
+
+    fn sizes3(&self) -> [usize; 3] {
+        use KernelId::*;
+        match self.kernel {
+            // 1-D kernels: the meaningful size is n (or m for panel ops).
+            Trsv | Potf2 | Trti2 | Lauu2 | Sygs2 => [self.n, 0, 0],
+            Axpy | Dot | Copy | Swap | Scal => [self.n, 0, 0],
+            Laswp => [self.n, 0, 0],
+            // 2-D kernels with (m, n) size arguments.
+            Gemv | Ger | Getf2 | Geqr2 | TrsylUnb | Symm | Trmm | Trsm | Larft => {
+                [self.m, self.n, 0]
+            }
+            // Rank-k updates: size arguments are (n, k).
+            Syrk | Syr2k => [self.n, self.k, 0],
+            Gemm | Larfb => [self.m, self.n, self.k],
+        }
+    }
+
+    /// Inverse of [`Call::sizes`]: set (m, n, k) from a model-domain point.
+    pub fn set_sizes(&mut self, point: &[usize]) {
+        use KernelId::*;
+        match (size_dims(self.kernel), self.kernel) {
+            (1, _) => {
+                self.n = point[0];
+                self.m = point[0];
+            }
+            (2, Syrk | Syr2k) => {
+                self.n = point[0];
+                self.k = point[1];
+            }
+            (2, _) => {
+                self.m = point[0];
+                self.n = point[1];
+            }
+            _ => {
+                self.m = point[0];
+                self.n = point[1];
+                self.k = point[2];
+            }
+        }
+    }
+
+    /// Minimal FLOP count (paper App. A.1.1 / App. B), including the
+    /// complex-arithmetic multiplier.
+    pub fn flops(&self) -> f64 {
+        use KernelId::*;
+        let (m, n, k) = (self.m as f64, self.n as f64, self.k as f64);
+        let raw = match self.kernel {
+            Gemm => 2.0 * m * n * k,
+            Symm => match self.flags.side {
+                Some(Side::Right) => 2.0 * m * n * n,
+                _ => 2.0 * m * m * n,
+            },
+            Syrk => n * (n + 1.0) * k,
+            Syr2k => 2.0 * n * (n + 1.0) * k,
+            Trmm | Trsm => match self.flags.side {
+                Some(Side::Right) => m * n * n,
+                _ => m * m * n,
+            },
+            Gemv => 2.0 * m * n,
+            Trsv => n * n,
+            Ger => 2.0 * m * n,
+            Axpy => 2.0 * n,
+            Dot => 2.0 * n,
+            Copy | Swap => 0.0,
+            Scal => n,
+            Potf2 | Trti2 | Lauu2 => n * n * n / 3.0,
+            // Unblocked LU of an m x n panel (m >= n): n^2 (m - n/3).
+            Getf2 => n * n * (m - n / 3.0),
+            Sygs2 => n * n * n,
+            // Unblocked QR of an m x n panel: 2 n^2 (m - n/3).
+            Geqr2 => 2.0 * n * n * (m - n / 3.0),
+            // Form T (n x n) from V (m x n): ~ m n^2.
+            Larft => m * n * n,
+            // Apply block reflector: ~ 4 m n k.
+            Larfb => 4.0 * m * n * k,
+            Laswp => 0.0,
+            // Triangular Sylvester solve on m x n: ~ m n (m + n).
+            TrsylUnb => m * n * (m + n),
+        };
+        raw * self.elem.flop_mult()
+    }
+
+    /// Total operand data volume in bytes (ignoring leading-dimension gaps).
+    pub fn bytes(&self) -> f64 {
+        if !self.operands.is_empty() {
+            return self.operands.iter().map(|r| r.bytes() as f64).sum();
+        }
+        // Fall back to formula-based volumes when regions are not tracked.
+        use KernelId::*;
+        let e = self.elem.bytes() as f64;
+        let (m, n, k) = (self.m as f64, self.n as f64, self.k as f64);
+        e * match self.kernel {
+            Gemm => m * k + k * n + 2.0 * m * n,
+            Symm => match self.flags.side {
+                Some(Side::Right) => n * n / 2.0 + 2.0 * m * n,
+                _ => m * m / 2.0 + 2.0 * m * n,
+            },
+            Syrk => n * k + n * n / 2.0,
+            Syr2k => 2.0 * n * k + n * n / 2.0,
+            Trmm | Trsm => match self.flags.side {
+                Some(Side::Right) => n * n / 2.0 + 2.0 * m * n,
+                _ => m * m / 2.0 + 2.0 * m * n,
+            },
+            Gemv => m * n + m + 2.0 * n,
+            Trsv => n * n / 2.0 + 2.0 * n,
+            Ger => m * n + m + n,
+            Axpy | Swap => 3.0 * n,
+            Dot => 2.0 * n,
+            Copy => 2.0 * n,
+            Scal => 2.0 * n,
+            Potf2 | Trti2 | Lauu2 | Sygs2 => n * n / 2.0 * if self.kernel == Sygs2 { 2.0 } else { 1.0 },
+            Getf2 | Geqr2 => m * n,
+            Larft => m * n + n * n / 2.0,
+            Larfb => m * n + m * k + k * k / 2.0,
+            Laswp => 2.0 * m * n,
+            TrsylUnb => m * m / 2.0 + n * n / 2.0 + m * n,
+        }
+    }
+
+    /// Human-readable one-liner, e.g. `dtrsm_LLNN(m=256, n=256)`.
+    pub fn describe(&self) -> String {
+        let flags = self.flags.code();
+        let flags = if flags.is_empty() { String::new() } else { format!("_{flags}") };
+        let labels: &[&str] = if size_dims(self.kernel) == 1 { &["n"] } else { &["m", "n", "k"] };
+        let dims: Vec<String> = self
+            .sizes()
+            .iter()
+            .zip(labels)
+            .map(|(v, l)| format!("{l}={v}"))
+            .collect();
+        format!(
+            "{}{}{}({})",
+            self.elem.prefix(),
+            name(self.kernel),
+            flags,
+            dims.join(", ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn call(kernel: KernelId) -> Call {
+        Call::new(kernel, Elem::D)
+    }
+
+    #[test]
+    fn gemm_flops() {
+        let mut c = call(KernelId::Gemm);
+        (c.m, c.n, c.k) = (100, 200, 300);
+        assert_eq!(c.flops(), 2.0 * 100.0 * 200.0 * 300.0);
+    }
+
+    #[test]
+    fn trsm_flops_depend_on_side() {
+        let mut c = call(KernelId::Trsm);
+        (c.m, c.n) = (100, 200);
+        c.flags.side = Some(Side::Left);
+        assert_eq!(c.flops(), 100.0 * 100.0 * 200.0);
+        c.flags.side = Some(Side::Right);
+        assert_eq!(c.flops(), 100.0 * 200.0 * 200.0);
+    }
+
+    #[test]
+    fn complex_flops_are_4x() {
+        let mut c = call(KernelId::Gemm);
+        (c.m, c.n, c.k) = (10, 10, 10);
+        let d = c.flops();
+        c.elem = Elem::Z;
+        assert_eq!(c.flops(), 4.0 * d);
+    }
+
+    #[test]
+    fn zero_size_calls_have_zero_flops() {
+        let mut c = call(KernelId::Trmm);
+        (c.m, c.n) = (300, 0);
+        c.flags.side = Some(Side::Right);
+        assert_eq!(c.flops(), 0.0);
+    }
+
+    #[test]
+    fn potrf_kernel_flop_sum_matches_operation() {
+        // Sum of potf2+trsm+syrk FLOPs over the blocked traversal must be
+        // ~ n^3/3 (the Cholesky cost), for any block size.
+        let n = 768usize;
+        let b = 128usize;
+        let mut total = 0.0;
+        let mut j = 0;
+        while j < n {
+            let jb = b.min(n - j);
+            let rest = n - j - jb;
+            let mut p = call(KernelId::Potf2);
+            p.n = jb;
+            total += p.flops();
+            let mut t = call(KernelId::Trsm);
+            t.flags.side = Some(Side::Right);
+            (t.m, t.n) = (rest, jb);
+            total += t.flops();
+            let mut s = call(KernelId::Syrk);
+            (s.n, s.k) = (rest, jb);
+            total += s.flops();
+            j += jb;
+        }
+        let op = n as f64;
+        let expect = op * op * op / 3.0;
+        let rel = (total - expect).abs() / expect;
+        assert!(rel < 0.02, "rel={rel}");
+    }
+
+    #[test]
+    fn describe_formats() {
+        let mut c = call(KernelId::Trsm);
+        c.flags = Flags {
+            side: Some(Side::Left),
+            uplo: Some(Uplo::Lower),
+            trans_a: Some(Trans::No),
+            diag: Some(Diag::NonUnit),
+            trans_b: None,
+        };
+        (c.m, c.n) = (256, 256);
+        assert_eq!(c.describe(), "dtrsm_LLNN(m=256, n=256)");
+    }
+
+    #[test]
+    fn region_bytes() {
+        let r = Region::new(1, 0, 0, 100, 50, Elem::D);
+        assert_eq!(r.bytes(), 100 * 50 * 8);
+    }
+
+    #[test]
+    fn sizes_dimensionality_matches_catalog() {
+        for k in [
+            KernelId::Gemm,
+            KernelId::Trsm,
+            KernelId::Syrk,
+            KernelId::Potf2,
+            KernelId::Axpy,
+            KernelId::Gemv,
+        ] {
+            let mut c = call(k);
+            (c.m, c.n, c.k) = (4, 5, 6);
+            assert_eq!(c.sizes().len(), size_dims(k));
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! The virtual testbed: CPUs, BLAS library personalities, caches, noise
+//! processes and the timing engine (DESIGN.md §5).
+//!
+//! This module substitutes for the dissertation's physical machines; all
+//! measurements in the repo — the Sampler's, the model generator's and the
+//! "empirical" reference data that predictions are validated against — run
+//! on a [`Session`].
+
+pub mod cache;
+pub mod cpu;
+pub mod elem;
+pub mod kernels;
+pub mod library;
+pub mod state;
+pub mod timing;
+
+pub use cpu::{CpuId, CpuSpec};
+pub use elem::Elem;
+pub use kernels::{Call, Diag, Flags, KernelId, Region, Scalar, Side, Trans, Uplo};
+pub use library::Library;
+pub use timing::{CallTiming, Machine};
+
+use state::MachineState;
+
+impl Machine {
+    /// Standard pinned, quiet-machine configuration (the paper's default
+    /// measurement hygiene, §2.1.5).
+    pub fn standard(cpu: CpuId, lib: Library, threads: usize) -> Machine {
+        let spec = CpuSpec::get(cpu);
+        Machine {
+            turbo: matches!(cpu, CpuId::Haswell | CpuId::Broadwell),
+            cpu: spec,
+            lib,
+            threads,
+            pinned: true,
+            background_noise: false,
+        }
+    }
+
+    /// A configuration label like `haswell/openblas/12t` used in model
+    /// stores and reports.
+    pub fn label(&self) -> String {
+        let cpu = self
+            .cpu
+            .name
+            .split(' ')
+            .next()
+            .unwrap_or("cpu")
+            .to_ascii_lowercase();
+        let cpu = cpu.trim_end_matches("-ep");
+        format!("{}/{}/{}t", cpu, self.lib.name(), self.threads)
+    }
+
+    /// Open a measurement session (deterministic for a given seed).
+    pub fn session(&self, seed: u64) -> Session {
+        Session {
+            params: self.lib.params(),
+            state: MachineState::new(&self.cpu, seed),
+            machine: self.clone(),
+        }
+    }
+
+    /// Peak GFLOPs/s of this configuration (for efficiency metrics).
+    pub fn peak_gflops(&self, elem: Elem) -> f64 {
+        self.cpu
+            .peak_gflops(self.threads, elem.single_precision())
+    }
+}
+
+/// A live measurement session: machine + mutable state (virtual clock,
+/// cache contents, thermal/noise processes).
+pub struct Session {
+    pub machine: Machine,
+    pub params: library::LibParams,
+    pub state: MachineState,
+}
+
+impl Session {
+    /// Execute one call, returning its timing and advancing machine state.
+    pub fn execute(&mut self, call: &Call) -> CallTiming {
+        timing::execute(&self.machine, &self.params, &mut self.state, call)
+    }
+
+    /// Execute a sequence; returns total seconds.
+    pub fn execute_all(&mut self, calls: &[Call]) -> f64 {
+        calls.iter().map(|c| self.execute(c).seconds).sum()
+    }
+
+    /// Deterministic expected time of a call with the current cache state
+    /// *not* consulted (fully warm). Used by figure drivers for reference
+    /// curves.
+    pub fn warm_seconds(&self, call: &Call) -> f64 {
+        timing::base_seconds(&self.machine, &self.params, call, 0.0)
+    }
+
+    /// Flush the cache tracker (the Sampler's cold-data setup).
+    pub fn flush_cache(&mut self) {
+        self.state.cache.flush();
+    }
+
+    /// Mark library initialization as already done (measurement hygiene:
+    /// the paper precedes measurements with a warm-up call, §2.1.1).
+    pub fn warmup(&mut self) {
+        self.state.initialized = true;
+    }
+
+    pub fn virtual_time(&self) -> f64 {
+        self.state.clock_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_format() {
+        let m = Machine::standard(
+            CpuId::Haswell,
+            Library::OpenBlas { fixed_dswap: false },
+            12,
+        );
+        assert_eq!(m.label(), "haswell/openblas/12t");
+    }
+
+    #[test]
+    fn session_clock_advances() {
+        let m = Machine::standard(CpuId::SandyBridge, Library::Blis, 1);
+        let mut s = m.session(1);
+        s.warmup();
+        let mut c = Call::new(KernelId::Gemm, Elem::D);
+        (c.m, c.n, c.k) = (500, 500, 500);
+        let t = s.execute(&c);
+        assert!(t.seconds > 0.0);
+        assert!((s.virtual_time() - t.seconds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn turbo_default_per_testbed_matches_paper() {
+        // §2.1.2.2: Turbo disabled on Sandy Bridge, enabled on Haswell.
+        let sb = Machine::standard(CpuId::SandyBridge, Library::Mkl, 1);
+        let hw = Machine::standard(CpuId::Haswell, Library::Mkl, 1);
+        assert!(!sb.turbo);
+        assert!(hw.turbo);
+    }
+}

@@ -1,0 +1,169 @@
+//! Mutable machine state: the virtual clock and the stochastic performance
+//! processes of paper §2.1.2 (system noise, Turbo Boost thermal trajectory,
+//! distinct long-term performance levels) plus library initialization.
+
+use crate::util::rng::Rng;
+
+use super::cache::CacheTracker;
+use super::cpu::CpuSpec;
+
+/// Ambient/cool package temperature and the throttle threshold (Fig. 2.2).
+pub const TEMP_COOL: f64 = 53.0;
+pub const TEMP_THROTTLE: f64 = 105.0;
+
+#[derive(Clone, Debug)]
+pub struct MachineState {
+    /// Virtual wall-clock in seconds since session start.
+    pub clock_s: f64,
+    /// LLC residency tracker.
+    pub cache: CacheTracker,
+    /// Package temperature (°C) for the turbo model.
+    pub temp_c: f64,
+    /// Index of the current long-term performance level (0 = fast).
+    pub level: usize,
+    /// Virtual time at which the performance level re-randomizes.
+    pub level_until_s: f64,
+    /// Has the library run its first-call initialization yet?
+    pub initialized: bool,
+    pub rng: Rng,
+    /// Calls executed so far.
+    pub calls: u64,
+}
+
+impl MachineState {
+    pub fn new(cpu: &CpuSpec, seed: u64) -> MachineState {
+        let mut rng = Rng::new(seed);
+        let level_until_s = sample_dwell(&mut rng);
+        MachineState {
+            clock_s: 0.0,
+            cache: CacheTracker::new(cpu.llc().bytes),
+            temp_c: TEMP_COOL,
+            level: 0,
+            level_until_s,
+            initialized: false,
+            rng,
+            calls: 0,
+        }
+    }
+
+    /// Advance the virtual clock by `dt` seconds under compute load
+    /// `load` in [0, 1], updating the thermal state.
+    pub fn advance(&mut self, dt: f64, load: f64, cpu: &CpuSpec) {
+        self.clock_s += dt;
+        // dT/dt = heat*load - cool*(T - ambient)/10; forward Euler with the
+        // call duration as the step (calls are short vs thermal constants).
+        let dtemp =
+            cpu.heat_rate * load * 10.0 - cpu.cool_rate * (self.temp_c - TEMP_COOL) * 0.1;
+        self.temp_c = (self.temp_c + dtemp * dt).clamp(TEMP_COOL, TEMP_THROTTLE);
+        // Long-term performance level process (§2.1.2.3): re-randomize the
+        // level after an exponential dwell (mean ~15 s).
+        if self.clock_s >= self.level_until_s {
+            self.level = if self.rng.chance(0.5) { 0 } else { 1 };
+            self.level_until_s = self.clock_s + sample_dwell(&mut self.rng);
+        }
+    }
+
+    /// Runtime factor (>= 1) of the current long-term performance level.
+    /// The two levels differ by 1.4 % on Sandy Bridge and 3.9 % on Haswell
+    /// (paper Ex. 2.4); other machines interpolate by FLOP width.
+    pub fn level_factor(&self, cpu: &CpuSpec) -> f64 {
+        if self.level == 0 {
+            1.0
+        } else {
+            1.0 + level_gap(cpu)
+        }
+    }
+
+    /// Effective frequency in GHz under the turbo/thermal model.
+    pub fn frequency_ghz(&mut self, cpu: &CpuSpec, turbo: bool) -> f64 {
+        if !turbo || cpu.turbo_ghz <= cpu.freq_ghz {
+            return cpu.freq_ghz;
+        }
+        if self.temp_c >= TEMP_THROTTLE - 1e-9 {
+            // Throttled: the controller oscillates below max turbo
+            // (Fig. 2.2: 3.0-3.2 GHz out of 3.4 on the Broadwell).
+            let span = cpu.turbo_ghz - cpu.freq_ghz;
+            let osc = 0.35 + 0.25 * (self.clock_s * 0.7).sin().abs();
+            cpu.turbo_ghz - span * osc
+        } else {
+            // Max turbo, with the small sub-maximum fluctuations the paper
+            // reports even on well-cooled cluster nodes.
+            cpu.turbo_ghz * (1.0 - 0.005 * self.rng.f64())
+        }
+    }
+}
+
+fn sample_dwell(rng: &mut Rng) -> f64 {
+    // Exponential with mean 15 s, clamped away from zero ("commonly stay at
+    // the same level for 10 s or longer").
+    (-15.0 * (1.0 - rng.f64()).ln()).max(4.0)
+}
+
+pub fn level_gap(cpu: &CpuSpec) -> f64 {
+    // 1.4 % at 8 DP flops/cycle, 3.9 % at 16 (paper Ex. 2.4).
+    match cpu.dp_flops_per_cycle as u64 {
+        0..=4 => 0.010,
+        5..=8 => 0.014,
+        _ => 0.039,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::cpu::CpuId;
+
+    #[test]
+    fn thermal_heats_under_load_and_cools_idle() {
+        let cpu = CpuSpec::get(CpuId::Broadwell);
+        let mut st = MachineState::new(&cpu, 1);
+        for _ in 0..200 {
+            st.advance(0.06, 1.0, &cpu); // 12 s of dgemm-like load
+        }
+        assert!(st.temp_c > 100.0, "temp={}", st.temp_c);
+        for _ in 0..2000 {
+            st.advance(0.06, 0.0, &cpu);
+        }
+        assert!(st.temp_c < 60.0, "temp={}", st.temp_c);
+    }
+
+    #[test]
+    fn broadwell_throttles_haswell_does_not() {
+        let bw = CpuSpec::get(CpuId::Broadwell);
+        let hw = CpuSpec::get(CpuId::Haswell);
+        let mut sbw = MachineState::new(&bw, 2);
+        let mut shw = MachineState::new(&hw, 2);
+        for _ in 0..400 {
+            sbw.advance(0.06, 1.0, &bw);
+            shw.advance(0.06, 1.0, &hw);
+        }
+        assert!(sbw.frequency_ghz(&bw, true) < bw.turbo_ghz - 0.05);
+        assert!(shw.frequency_ghz(&hw, true) > hw.turbo_ghz * 0.99);
+    }
+
+    #[test]
+    fn no_turbo_means_base_frequency() {
+        let cpu = CpuSpec::get(CpuId::SandyBridge);
+        let mut st = MachineState::new(&cpu, 3);
+        assert_eq!(st.frequency_ghz(&cpu, true), cpu.freq_ghz); // turbo==base
+        assert_eq!(st.frequency_ghz(&cpu, false), cpu.freq_ghz);
+    }
+
+    #[test]
+    fn levels_alternate_over_long_horizons() {
+        let cpu = CpuSpec::get(CpuId::Haswell);
+        let mut st = MachineState::new(&cpu, 4);
+        let mut seen = [false; 2];
+        for _ in 0..10_000 {
+            st.advance(0.05, 1.0, &cpu);
+            seen[st.level] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+
+    #[test]
+    fn level_gap_matches_paper_magnitudes() {
+        assert!((level_gap(&CpuSpec::get(CpuId::SandyBridge)) - 0.014).abs() < 1e-12);
+        assert!((level_gap(&CpuSpec::get(CpuId::Haswell)) - 0.039).abs() < 1e-12);
+    }
+}

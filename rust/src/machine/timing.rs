@@ -1,0 +1,483 @@
+//! The timing engine: cycles/seconds for one kernel call on a virtual
+//! testbed. This is the substrate substituting for the paper's physical
+//! machines (DESIGN.md §5); every effect in paper §2.1/§3.1 enters here.
+
+use super::cache::TouchResult;
+use super::cpu::CpuSpec;
+use super::kernels::{level, Call, KernelId, Level, Scalar, Side};
+use super::library::LibParams;
+use super::state::MachineState;
+
+/// Static description of a machine configuration.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub cpu: CpuSpec,
+    pub lib: super::library::Library,
+    pub threads: usize,
+    pub pinned: bool,
+    /// Turbo Boost enabled?
+    pub turbo: bool,
+    /// Desktop-style background applications running (Fig. 2.1)?
+    pub background_noise: bool,
+}
+
+/// Timing breakdown of one call (the Sampler reports cycles and the PAPI
+/// cache-miss analogue).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CallTiming {
+    pub seconds: f64,
+    pub cycles: f64,
+    /// LLC miss count (lines), mirroring PAPI_L3_TCM.
+    pub llc_misses: u64,
+}
+
+/// Output-shape decomposition for the efficiency model: (out_a, out_b, red)
+/// — the two output dimensions and the reduction depth.
+fn shape_dims(call: &Call) -> (f64, f64, f64) {
+    use KernelId::*;
+    let (m, n, k) = (call.m as f64, call.n as f64, call.k as f64);
+    match call.kernel {
+        Gemm => (m, n, k),
+        Symm | Trmm | Trsm => match call.flags.side {
+            Some(Side::Right) => (m, n, n),
+            _ => (m, n, m),
+        },
+        Syrk | Syr2k => (n, n, k),
+        Larfb => (m, n, k),
+        Gemv => (m, 1.0, n),
+        Trsv => (n, 1.0, n),
+        Ger => (m, n, 1.0),
+        Axpy | Dot | Copy | Swap | Scal | Laswp => (n, 1.0, 1.0),
+        Potf2 | Trti2 | Lauu2 | Sygs2 => (n, n, n),
+        Getf2 | Geqr2 => (m, n, n),
+        Larft => (m, n, n),
+        TrsylUnb => (m, n, (m + n) / 2.0),
+    }
+}
+
+/// The dimension a multi-threaded implementation splits across cores.
+fn split_dim(call: &Call) -> usize {
+    use KernelId::*;
+    match call.kernel {
+        Gemm | Larfb => call.m.max(call.n),
+        Syrk | Syr2k => call.n,
+        Symm | Trmm | Trsm => match call.flags.side {
+            Some(Side::Right) => call.m,
+            _ => call.n,
+        },
+        Gemv | Ger => call.m.max(call.n),
+        Trsv | Axpy | Dot | Copy | Swap | Scal | Laswp => call.n,
+        // Unblocked LAPACK kernels do not parallelize.
+        Potf2 | Trti2 | Lauu2 | Sygs2 | Getf2 | Geqr2 | Larft | TrsylUnb => 0,
+    }
+}
+
+fn saturate(d: f64, half: f64) -> f64 {
+    // Softened saturation with a floor: even very small dimensions retain
+    // ~30 % of the asymptotic efficiency (optimized kernels handle skewed
+    // shapes, e.g. rank-8 gemm updates, far better than a pure d/(d+h)
+    // law would suggest).
+    if d <= 0.0 {
+        1.0
+    } else {
+        (d + 0.3 * half) / (d + 1.3 * half)
+    }
+}
+
+/// Deterministic "expected" seconds for a call, before noise/levels/turbo
+/// — the quantity the paper's models try to learn. `miss_bytes` comes from
+/// the cache tracker (0 for fully warm data).
+pub fn base_seconds(
+    machine: &Machine,
+    params: &LibParams,
+    call: &Call,
+    miss_bytes: f64,
+) -> f64 {
+    let cpu = &machine.cpu;
+    let flops = call.flops();
+    let bytes = call.bytes();
+    let lvl = level(call.kernel);
+
+    // alpha = 0: the kernel only zero-writes the output (paper §3.1.2).
+    if call.alpha == Scalar::Zero && matches!(lvl, Level::L3) {
+        let out_bytes = (call.m.max(1) * call.n.max(1) * call.elem.bytes()) as f64;
+        let cycles = out_bytes / cpu.cache_bytes_per_cycle;
+        return cycles / (cpu.freq_ghz * 1e9) + params.call_overhead_ns * 1e-9;
+    }
+
+    let (out_a, out_b, red) = shape_dims(call);
+    let fpc = cpu.dp_flops_per_cycle * if call.elem.single_precision() { 2.0 } else { 1.0 };
+
+    // ------------------------------------------------ efficiency model
+    let eff = match lvl {
+        Level::L3 => {
+            let min_out = out_a.min(out_b).max(1.0);
+            let steps: f64 = {
+                let max_gain: f64 = 1.0 + params.step_gains.iter().sum::<f64>();
+                params.step_gain(red as usize) / max_gain
+            };
+            // Triangular solves/multiplies cannot block as freely as gemm:
+            // the dependency chain along the triangle caps efficiency —
+            // the reason right-looking (gemm/syrk-rich) variants win
+            // (paper Ex. 1.2, Fig. 4.18).
+            let tri = match call.kernel {
+                KernelId::Trsm => params.trsm_eff,
+                KernelId::Trmm => params.trmm_eff,
+                _ => 1.0,
+            };
+            // Internal kc-blocking: beyond ~256 the reduction dimension is
+            // blocked inside the kernel and efficiency stops improving —
+            // this flatness is what bounds useful block sizes (§4.6).
+            params.elem_eff(call.elem)
+                * saturate(min_out, params.half_out)
+                * saturate(red.min(256.0), params.half_k)
+                * steps
+                * tri
+        }
+        Level::Unblocked => {
+            // Unblocked kernels: division/sqrt-bound, weakly size-dependent.
+            let d_eff = params.l3_eff[1];
+            let rel = params.elem_eff(call.elem) / d_eff;
+            params.unblocked_eff * rel * saturate(out_a.min(out_b.max(1.0)), 48.0)
+        }
+        Level::L1 | Level::L2 => {
+            // Compute-bound floor only; these are bandwidth-bound below.
+            0.5 * params.elem_eff(call.elem)
+        }
+    };
+
+    // ------------------------------------------------ threading model
+    let cores = match lvl {
+        Level::L3 | Level::L2 | Level::L1 => {
+            params.cores_used(split_dim(call), machine.threads.min(cpu.cores))
+        }
+        Level::Unblocked => 1,
+    };
+    let par_eff = params.parallel_eff(cores);
+
+    let compute_cycles = if flops > 0.0 {
+        flops / (fpc * eff.max(1e-6) * cores as f64 * par_eff)
+    } else {
+        0.0
+    };
+
+    // ------------------------------------------------ bandwidth model
+    // Spread factor for strided vector access (increments).
+    let inc_spread = params
+        .inc_factor(call.incx.max(1))
+        .max(params.inc_factor(call.incy.max(1)));
+    let bw_frac = match lvl {
+        Level::L1 | Level::L2 => params.l12_bw_frac,
+        _ => 1.0,
+    };
+    let cache_bw = cpu.cache_bytes_per_cycle * bw_frac * (1.0 + 0.4 * (cores as f64 - 1.0)).min(3.0);
+    let warm_cycles = bytes * inc_spread / cache_bw;
+
+    // Cold-miss penalty: bytes absent from the LLC stream from memory;
+    // compute-bound kernels overlap a fraction of it with prefetch.
+    let overlap = match lvl {
+        Level::L3 => params.cache_overlap,
+        Level::Unblocked => params.cache_overlap * 0.5,
+        // Hardware prefetch hides some of the stream even for bandwidth-
+        // bound kernels (Table 2.2: dgemv cold ≈ +80 % for vOpenBLAS).
+        Level::L1 | Level::L2 => 0.3,
+    };
+    // Blocked L3 kernels miss in scattered tile-sized bursts that defeat
+    // the streaming prefetchers, so *small* demand-miss sets see only a
+    // fraction of peak bandwidth (this is what makes Fig. 3.8's cold
+    // penalties as large as they are). Very large miss sets are dominated
+    // by long sequential streams (e.g. trailing-matrix updates) that the
+    // prefetchers handle near peak; L1/L2 kernels always stream.
+    let demand_bw = match lvl {
+        Level::L3 | Level::Unblocked => {
+            0.4 + 0.55 * (miss_bytes / (miss_bytes + 4e6))
+        }
+        Level::L1 | Level::L2 => 1.0,
+    };
+    let miss_cycles = miss_bytes * (1.0 - overlap) / (cpu.mem_bytes_per_cycle * demand_bw);
+
+    let mut cycles = compute_cycles.max(warm_cycles) + miss_cycles;
+
+    // ------------------------------------------------ argument effects
+    let mut factor = params.flag_factor(call) * params.alpha_factor(call.alpha);
+    for ld in [call.lda, call.ldb, call.ldc] {
+        if ld > 0 {
+            factor *= 1.0 + (params.ld_factor(ld) - 1.0) * 0.5;
+        }
+    }
+    for d in call.sizes() {
+        if d > 0 {
+            factor *= params.sawtooth(d);
+        }
+    }
+    cycles *= factor;
+
+    // ------------------------------------------------ fixed overheads
+    // BLAS 1/2 routines have proportionally heavier per-call overhead
+    // (argument checking, dispatch) relative to their tiny workloads.
+    let overhead_mult = match lvl {
+        Level::L2 => 5.0,
+        Level::L1 => 3.0,
+        _ => 1.0,
+    };
+    let mut overhead_ns = params.call_overhead_ns * overhead_mult;
+    if machine.threads > 1 && cores > 1 {
+        overhead_ns += params.parallel_overhead_us * 1e3 * (cores as f64 - 1.0).sqrt();
+    }
+    // Tiny-vector-kernel multi-threaded dispatch bug (§4.5.3.2).
+    if machine.threads > 1
+        && matches!(lvl, Level::L1)
+        && flops < 10_000.0
+        && params.tiny_kernel_mt_overhead_us > 0.0
+    {
+        overhead_ns += params.tiny_kernel_mt_overhead_us * 1e3;
+    }
+    // The unblocked Sylvester solver calls dlasy2 per 2x2 sub-block, each
+    // performing a length-4 dswap; with the buggy multi-threaded dispatch
+    // every one of those pays the ~200x overhead (§4.5.3.2).
+    if machine.threads > 1
+        && call.kernel == KernelId::TrsylUnb
+        && params.tiny_kernel_mt_overhead_us > 0.0
+    {
+        let dswaps = (call.m as f64 / 2.0) * (call.n as f64 / 2.0);
+        overhead_ns += params.tiny_kernel_mt_overhead_us * 1e3 * dswaps / 4.0;
+    }
+
+    cycles / (cpu.freq_ghz * 1e9) + overhead_ns * 1e-9
+}
+
+/// Full stochastic execution: applies cache state, noise, performance
+/// levels, turbo frequency and pinning, advances the virtual clock.
+pub fn execute(
+    machine: &Machine,
+    params: &LibParams,
+    state: &mut MachineState,
+    call: &Call,
+) -> CallTiming {
+    // Cache interaction: known operand regions hit/miss the LLC tracker;
+    // calls with untracked operands ("ad-hoc" allocations) stream fully.
+    let touch: TouchResult = if call.operands.is_empty() {
+        TouchResult { total_bytes: call.bytes() as usize, miss_bytes: call.bytes() as usize }
+    } else {
+        state.cache.touch(&call.operands)
+    };
+
+    let mut secs = base_seconds(machine, params, call, touch.miss_bytes as f64);
+
+    // First-call library initialization (Table 2.1).
+    if !state.initialized {
+        state.initialized = true;
+        secs += params.init_overhead_ms * 1e-3;
+    }
+
+    // Long-term performance level (Fig. 2.3).
+    secs *= state.level_factor(&machine.cpu);
+
+    // Thread pinning (Fig. 2.4): unpinned multi-threaded runs lose
+    // locality, ~7.5 % at 2 threads growing to ~28 % at 8.
+    if !machine.pinned && machine.threads > 1 {
+        let t = machine.threads.min(machine.cpu.cores) as f64;
+        let penalty = 0.28 * (t - 1.0) / 7.0;
+        secs *= 1.0 + penalty;
+        secs *= state.rng.lognormal_factor(0.02);
+    }
+
+    // System noise (Fig. 2.1): small on dedicated nodes, shrinking with
+    // problem size; enormous with desktop background load.
+    let flops = call.flops().max(1.0);
+    let sigma = if machine.background_noise {
+        0.25 + 1.5 * state.rng.f64().powi(4)
+    } else {
+        0.0015 + 0.012 * (-flops / 4e6).exp()
+    };
+    secs *= state.rng.lognormal_factor(sigma);
+
+    // Turbo frequency: scale by actual/base frequency ratio.
+    let freq = state.frequency_ghz(&machine.cpu, machine.turbo);
+    secs *= machine.cpu.freq_ghz / freq;
+
+    // Advance virtual time + thermal state.
+    let load = machine.threads.min(machine.cpu.cores) as f64 / machine.cpu.cores as f64;
+    state.advance(secs, load, &machine.cpu);
+    state.calls += 1;
+
+    CallTiming {
+        seconds: secs,
+        cycles: secs * freq * 1e9,
+        llc_misses: (touch.miss_bytes / machine.cpu.llc().line) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::cpu::CpuId;
+    use crate::machine::elem::Elem;
+    use crate::machine::kernels::{Flags, Region, Trans, Uplo};
+    use crate::machine::library::Library;
+
+    fn machine(cpu: CpuId, lib: Library, threads: usize) -> Machine {
+        Machine {
+            cpu: CpuSpec::get(cpu),
+            lib,
+            threads,
+            pinned: true,
+            turbo: false,
+            background_noise: false,
+        }
+    }
+
+    fn gemm(n: usize) -> Call {
+        let mut c = Call::new(KernelId::Gemm, Elem::D);
+        (c.m, c.n, c.k) = (n, n, n);
+        c.flags.trans_a = Some(Trans::No);
+        c.flags.trans_b = Some(Trans::No);
+        (c.lda, c.ldb, c.ldc) = (n, n, n);
+        c
+    }
+
+    #[test]
+    fn large_dgemm_efficiency_matches_paper() {
+        // §2.2.2: dgemm plateaus ~19.3/20.8 = 92.8 % on 1-thread SNB+OpenBLAS.
+        let m = machine(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let p = m.lib.params();
+        let c = gemm(1500);
+        let secs = base_seconds(&m, &p, &c, 0.0);
+        let gflops = c.flops() / secs / 1e9;
+        let eff = gflops / m.cpu.peak_gflops(1, false);
+        assert!((0.86..0.95).contains(&eff), "eff={eff}");
+    }
+
+    #[test]
+    fn small_dgemm_is_much_less_efficient() {
+        let m = machine(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let p = m.lib.params();
+        let small = gemm(32);
+        let secs = base_seconds(&m, &p, &small, 0.0);
+        let eff = small.flops() / secs / 1e9 / m.cpu.peak_gflops(1, false);
+        assert!(eff < 0.5, "eff={eff}");
+    }
+
+    #[test]
+    fn reference_blas_is_roughly_40x_slower() {
+        let fast = machine(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let slow = machine(CpuId::SandyBridge, Library::Reference, 1);
+        let c = gemm(200);
+        let t_fast = base_seconds(&fast, &fast.lib.params(), &c, 0.0);
+        let t_slow = base_seconds(&slow, &slow.lib.params(), &c, 0.0);
+        let ratio = t_slow / t_fast;
+        assert!((25.0..60.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn multithreading_speeds_up_large_gemm() {
+        let m1 = machine(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+        let m12 = machine(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 12);
+        let c = gemm(3000);
+        let t1 = base_seconds(&m1, &m1.lib.params(), &c, 0.0);
+        let t12 = base_seconds(&m12, &m12.lib.params(), &c, 0.0);
+        let speedup = t1 / t12;
+        assert!((8.0..12.0).contains(&speedup), "speedup={speedup}");
+    }
+
+    #[test]
+    fn small_gemm_does_not_scale_with_threads() {
+        // A 48x48 gemm only has work for ~2 cores (granule 32), so the
+        // 12-thread speedup must stay far below 12x (paper §4.4.2).
+        let m12 = machine(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 12);
+        let c = gemm(48);
+        let m1 = machine(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+        let t12 = base_seconds(&m12, &m12.lib.params(), &c, 0.0);
+        let t1 = base_seconds(&m1, &m1.lib.params(), &c, 0.0);
+        let speedup = t1 / t12;
+        assert!(speedup < 3.0, "speedup={speedup}");
+    }
+
+    #[test]
+    fn alpha_zero_is_nearly_free() {
+        let m = machine(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let p = m.lib.params();
+        let mut c = gemm(512);
+        let t_full = base_seconds(&m, &p, &c, 0.0);
+        c.alpha = Scalar::Zero;
+        let t_zero = base_seconds(&m, &p, &c, 0.0);
+        assert!(t_zero < t_full / 50.0);
+    }
+
+    #[test]
+    fn warm_vs_cold_dgemv_overhead_is_80_percent_class() {
+        // Table 2.2: out-of-cache dgemv ~+80 % for OpenBLAS on SNB.
+        let m = machine(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let p = m.lib.params();
+        let mut c = Call::new(KernelId::Gemv, Elem::D);
+        (c.m, c.n) = (1000, 1000);
+        c.incx = 1;
+        c.incy = 1;
+        let warm = base_seconds(&m, &p, &c, 0.0);
+        let cold = base_seconds(&m, &p, &c, c.bytes());
+        let ratio = cold / warm;
+        assert!((1.5..2.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn execute_is_deterministic_per_seed() {
+        let m = machine(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let p = m.lib.params();
+        let c = gemm(256);
+        let mut s1 = MachineState::new(&m.cpu, 42);
+        let mut s2 = MachineState::new(&m.cpu, 42);
+        for _ in 0..20 {
+            let a = execute(&m, &p, &mut s1, &c);
+            let b = execute(&m, &p, &mut s2, &c);
+            assert_eq!(a.seconds, b.seconds);
+        }
+    }
+
+    #[test]
+    fn first_call_pays_init_overhead() {
+        let m = machine(CpuId::SandyBridge, Library::Mkl, 1);
+        let p = m.lib.params();
+        let c = gemm(200);
+        let mut s = MachineState::new(&m.cpu, 7);
+        let first = execute(&m, &p, &mut s, &c);
+        let second = execute(&m, &p, &mut s, &c);
+        // Table 2.1: MKL first dgemm 8.14 ms vs 0.86 ms.
+        assert!(first.seconds > 5.0 * second.seconds);
+    }
+
+    #[test]
+    fn repeated_calls_get_warmer() {
+        let m = machine(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let p = m.lib.params();
+        let mut c = gemm(512);
+        c.operands = vec![
+            Region::new(1, 0, 0, 512, 512, Elem::D),
+            Region::new(2, 0, 0, 512, 512, Elem::D),
+            Region::new(3, 0, 0, 512, 512, Elem::D),
+        ];
+        let mut s = MachineState::new(&m.cpu, 9);
+        let first = execute(&m, &p, &mut s, &c);
+        let second = execute(&m, &p, &mut s, &c);
+        assert!(second.llc_misses < first.llc_misses / 10);
+    }
+
+    #[test]
+    fn unpinned_multithreaded_is_slower() {
+        let mut mp = machine(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 8);
+        let c = gemm(2000);
+        let p = mp.lib.params();
+        let mut sp = MachineState::new(&mp.cpu, 3);
+        sp.initialized = true;
+        let pinned: f64 = (0..10)
+            .map(|_| execute(&mp, &p, &mut sp, &c).seconds)
+            .sum();
+        mp.pinned = false;
+        let mut su = MachineState::new(&mp.cpu, 3);
+        su.initialized = true;
+        let unpinned: f64 = (0..10)
+            .map(|_| execute(&mp, &p, &mut su, &c).seconds)
+            .sum();
+        let slowdown = unpinned / pinned;
+        assert!((1.1..1.5).contains(&slowdown), "slowdown={slowdown}");
+    }
+}

@@ -1,0 +1,191 @@
+//! dlapm CLI: the framework launcher.
+//!
+//! ```text
+//! dlapm figures --all [--scale quick|full] [--out-dir out] [--seed N]
+//! dlapm generate --cpu haswell --lib openblas --threads 1 --out models.json
+//! dlapm predict  --models models.json --op potrf --n 2104 --b 128
+//! dlapm select   --cpu haswell --lib openblas --op trtri --n 2104 --b 128
+//! dlapm contract --spec "abc=ai,ibc" --n 64
+//! dlapm sampler  < script.txt
+//! dlapm list
+//! ```
+
+use dlapm::figures::{self, Ctx, Scale};
+use dlapm::machine::{CpuId, CpuSpec, Elem, Library, Machine};
+use dlapm::report::Report;
+use dlapm::util::cli::Args;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "figures" => figures_cmd(&args),
+        "generate" => generate_cmd(&args),
+        "predict" => predict_cmd(&args),
+        "select" => select_cmd(&args),
+        "contract" => contract_cmd(&args),
+        "sampler" => sampler_cmd(&args),
+        "list" => list_cmd(),
+        _ => {
+            println!("{}", HELP);
+        }
+    }
+}
+
+const HELP: &str = "\
+dlapm — performance modeling and prediction for dense linear algebra
+(reproduction of Peise 2017 on a three-layer Rust + JAX/Pallas stack)
+
+subcommands:
+  figures [ids... | --all] [--scale quick|full] [--out-dir out] [--seed N]
+  generate --cpu <id> --lib <name> [--threads N] [--out file.json]
+  predict  --models file.json --op <potrf|trtri|...> --n N --b B
+  select   --cpu <id> --lib <name> --op <potrf|trtri|trsyl> --n N --b B
+  contract --spec \"abc=ai,ibc\" --n N [--small 8]
+  sampler  (reads a Sampler script from stdin)
+  list     (available figure ids / cpus / libraries)
+";
+
+fn machine_from(args: &Args) -> Machine {
+    let cpu = CpuSpec::parse(args.get_or("cpu", "haswell")).expect("unknown --cpu");
+    let lib = Library::parse(args.get_or("lib", "openblas")).expect("unknown --lib");
+    let threads = args.get_usize("threads", 1);
+    Machine::standard(cpu, lib, threads)
+}
+
+fn figures_cmd(args: &Args) {
+    let out_dir = args.get_or("out-dir", "out");
+    let report = Report::new(Path::new(out_dir), args.flag("quiet"));
+    let scale = if args.get_or("scale", "quick") == "full" { Scale::Full } else { Scale::Quick };
+    let ctx = Ctx { report: &report, scale, seed: args.get_u64("seed", 0x5EED) };
+    let ids: Vec<String> = args.positional[1..].to_vec();
+    let all = args.flag("all") || ids.is_empty();
+    let ran = figures::run(&ids, all, &ctx);
+    eprintln!("[dlapm] {ran} figure driver(s) complete; outputs in {out_dir}/");
+}
+
+fn generate_cmd(args: &Args) {
+    let machine = machine_from(args);
+    let out = args.get_or("out", "models.json");
+    let mut store = dlapm::modeling::ModelStore::new(&machine.label());
+    let algs = default_algs("all");
+    let refs: Vec<&dyn dlapm::predict::BlockedAlg> = algs.iter().map(|a| a.as_ref()).collect();
+    let n = dlapm::predict::measurement::coverage::ensure_models(
+        &machine,
+        &mut store,
+        &refs,
+        args.get_usize("max-n", 4152),
+        args.get_usize("max-b", 536),
+        args.get_u64("seed", 0x5EED),
+    );
+    store.save(Path::new(out)).expect("saving model store");
+    println!(
+        "generated {n} models for {} (measurement cost {:.1} virtual s) -> {out}",
+        machine.label(),
+        store.total_gen_cost()
+    );
+}
+
+fn default_algs(op: &str) -> Vec<Box<dyn dlapm::predict::BlockedAlg>> {
+    use dlapm::predict::algorithms::lapack::{LapackAlg, LapackOp};
+    use dlapm::predict::algorithms::potrf::Potrf;
+    use dlapm::predict::algorithms::trsyl::TrsylAlg;
+    use dlapm::predict::algorithms::trtri::Trtri;
+    let mut v: Vec<Box<dyn dlapm::predict::BlockedAlg>> = Vec::new();
+    if op == "potrf" || op == "all" {
+        v.extend(Potrf::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
+    }
+    if op == "trtri" || op == "all" {
+        v.extend(Trtri::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
+    }
+    if op == "trsyl" {
+        v.extend(TrsylAlg::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
+    }
+    if op == "all" {
+        for o in [LapackOp::Lauum, LapackOp::Sygst, LapackOp::Getrf, LapackOp::Geqrf] {
+            v.push(Box::new(LapackAlg::new(o, Elem::D)));
+        }
+    }
+    v
+}
+
+fn predict_cmd(args: &Args) {
+    let store = dlapm::modeling::ModelStore::load(Path::new(
+        args.get("models").expect("--models required"),
+    ))
+    .expect("loading model store");
+    let algs = default_algs(args.get_or("op", "potrf"));
+    let (n, b) = (args.get_usize("n", 2104), args.get_usize("b", 128));
+    for alg in &algs {
+        let pred = dlapm::predict::predict_calls(&store, &alg.calls(n, b));
+        println!(
+            "{:<24} t_med={:>10.4} ms  (skipped {} unmodeled calls)",
+            alg.name(),
+            pred.time.med * 1e3,
+            pred.unmodeled_calls
+        );
+    }
+}
+
+fn select_cmd(args: &Args) {
+    let machine = machine_from(args);
+    let algs = default_algs(args.get_or("op", "potrf"));
+    let refs: Vec<&dyn dlapm::predict::BlockedAlg> = algs.iter().map(|a| a.as_ref()).collect();
+    let mut store = dlapm::modeling::ModelStore::new(&machine.label());
+    let (n, b) = (args.get_usize("n", 2104), args.get_usize("b", 128));
+    dlapm::predict::measurement::coverage::ensure_models(
+        &machine, &mut store, &refs, n.max(520), 536, args.get_u64("seed", 0x5EED),
+    );
+    let ranked = dlapm::predict::selection::rank_algorithms(&store, &refs, n, b);
+    println!("predicted ranking for n={n}, b={b} on {}:", machine.label());
+    for (i, r) in ranked.iter().enumerate() {
+        println!("  {:>2}. {:<24} {:>10.4} ms", i + 1, r.name, r.predicted.med * 1e3);
+    }
+}
+
+fn contract_cmd(args: &Args) {
+    let spec = args.get_or("spec", "abc=ai,ibc").to_string();
+    let n = args.get_usize("n", 64);
+    let small = args.get_usize("small", 8);
+    let mut con = dlapm::tensor::Contraction::parse(&spec).expect("bad --spec");
+    let dims: Vec<(char, usize)> = con
+        .dims
+        .keys()
+        .map(|&i| (i, if matches!(i, 'i' | 'j' | 'k') { small } else { n }))
+        .collect();
+    con = con.with_dims(&dims);
+    let machine = machine_from(args);
+    let algs = dlapm::tensor::generate(&con);
+    let ranked = dlapm::tensor::micro::rank(&machine, &con, &algs, Elem::D, args.get_u64("seed", 7));
+    println!("{} algorithms for {spec}; micro-benchmark ranking:", algs.len());
+    for (i, p) in ranked.iter().take(10).enumerate() {
+        println!("  {:>2}. {:<24} {:>10.4} ms  ({} kernel runs)", i + 1, p.alg_name, p.seconds * 1e3, p.kernel_runs);
+    }
+}
+
+fn sampler_cmd(args: &Args) {
+    let machine = machine_from(args);
+    let mut sampler = dlapm::sampler::Sampler::new(machine.session(args.get_u64("seed", 0x5EED)));
+    let mut script = String::new();
+    use std::io::Read;
+    std::io::stdin().read_to_string(&mut script).expect("reading stdin");
+    match sampler.run_script(&script) {
+        Ok(lines) => {
+            for l in lines {
+                println!("{l}");
+            }
+        }
+        Err(e) => eprintln!("sampler error: {e}"),
+    }
+}
+
+fn list_cmd() {
+    println!("figure ids:");
+    for (id, desc, _) in figures::registry() {
+        println!("  {id:<10} {desc}");
+    }
+    println!("\ncpus: harpertown sandybridge ivybridge haswell broadwell");
+    println!("libraries: openblas openblas-0.2.16 blis mkl reference");
+    let _ = CpuId::Haswell;
+}

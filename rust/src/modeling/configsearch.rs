@@ -1,0 +1,297 @@
+//! Generator-configuration trade-off study (paper §3.3, Figs. 3.12-3.13,
+//! Tables 3.1-3.3): sweep generator configurations, score each model's
+//! error against exhaustively measured ground truth and its generation
+//! cost, then prune by accuracy and cost toward a default configuration.
+
+use crate::machine::kernels::Call;
+use crate::machine::Machine;
+use crate::sampler::experiment::Experiment;
+use crate::util::stats::Stat;
+
+use super::generator::{generate_model, instantiate_call, ErrMeasure, GenConfig};
+use super::grid::{Domain, GridKind};
+
+/// Ground truth: minimum runtime measured on a dense multiple-of-`step`
+/// grid over the domain.
+pub struct GroundTruth {
+    pub points: Vec<Vec<usize>>,
+    pub min_seconds: Vec<f64>,
+    pub reps: usize,
+}
+
+pub fn ground_truth(
+    machine: &Machine,
+    template: &Call,
+    domain: &Domain,
+    step: usize,
+    reps: usize,
+    seed: u64,
+) -> GroundTruth {
+    let mut points = Vec::new();
+    let mut cursor = domain.lo.clone();
+    'outer: loop {
+        points.push(cursor.clone());
+        for d in (0..domain.dims()).rev() {
+            cursor[d] += step;
+            if cursor[d] <= domain.hi[d] {
+                continue 'outer;
+            }
+            cursor[d] = domain.lo[d].div_ceil(step) * step;
+            if d == 0 {
+                break 'outer;
+            }
+        }
+    }
+    // Align points to multiples of step from lo upward.
+    let calls: Vec<Call> = points.iter().map(|p| instantiate_call(template, p, 5000)).collect();
+    let exp = Experiment { reps, shuffle: true, warm_double_run: true, seed };
+    let report = exp.run(machine, &calls);
+    GroundTruth {
+        points,
+        min_seconds: report.per_call.iter().map(|s| s.min).collect(),
+        reps,
+    }
+}
+
+/// Score of one configuration.
+#[derive(Clone, Debug)]
+pub struct ConfigScore {
+    pub cfg: GenConfig,
+    /// Average relative error of the predicted minimum vs ground truth
+    /// (the paper's "model error", §3.3.2).
+    pub model_error: f64,
+    /// Virtual seconds of measurement ("model cost").
+    pub model_cost: f64,
+    pub pieces: usize,
+}
+
+pub fn evaluate_config(
+    machine: &Machine,
+    cfg: &GenConfig,
+    template: &Call,
+    domain: &Domain,
+    truth: &GroundTruth,
+    seed: u64,
+) -> ConfigScore {
+    let (model, stats) = generate_model(machine, cfg, template, domain, seed);
+    let mut err_sum = 0.0;
+    for (p, &y) in truth.points.iter().zip(&truth.min_seconds) {
+        let est = model.estimate(p).min;
+        err_sum += ((est - y) / y).abs();
+    }
+    ConfigScore {
+        cfg: cfg.clone(),
+        model_error: err_sum / truth.points.len() as f64,
+        model_cost: model.gen_cost,
+        pieces: stats.pieces,
+    }
+}
+
+/// The parameter grid of the sweep (a configurable subset of Table 3.1).
+#[derive(Clone, Debug)]
+pub struct SweepSpace {
+    pub overfit: Vec<usize>,
+    pub oversampling: Vec<usize>,
+    pub grids: Vec<GridKind>,
+    pub reps: Vec<usize>,
+    pub ref_stats: Vec<Stat>,
+    pub err_measures: Vec<ErrMeasure>,
+    pub err_bounds: Vec<f64>,
+    pub min_widths: Vec<usize>,
+}
+
+impl SweepSpace {
+    /// Full Table 3.1 space (2880 configurations).
+    pub fn full() -> SweepSpace {
+        SweepSpace {
+            overfit: vec![0, 1, 2],
+            oversampling: (1..=10).collect(),
+            grids: vec![GridKind::Cartesian, GridKind::Chebyshev],
+            reps: vec![5, 10, 15],
+            ref_stats: vec![Stat::Min, Stat::Med],
+            err_measures: vec![ErrMeasure::P90, ErrMeasure::Max],
+            err_bounds: vec![0.01, 0.02],
+            min_widths: vec![32, 64],
+        }
+    }
+
+    /// Reduced space for fast figure regeneration (same structure, 128
+    /// configurations).
+    pub fn reduced() -> SweepSpace {
+        SweepSpace {
+            overfit: vec![0, 2],
+            oversampling: vec![2, 6],
+            grids: vec![GridKind::Cartesian, GridKind::Chebyshev],
+            reps: vec![5, 10],
+            ref_stats: vec![Stat::Min, Stat::Med],
+            err_measures: vec![ErrMeasure::P90, ErrMeasure::Max],
+            err_bounds: vec![0.01, 0.02],
+            min_widths: vec![32],
+        }
+    }
+
+    pub fn enumerate(&self) -> Vec<GenConfig> {
+        let mut out = Vec::new();
+        for &overfit in &self.overfit {
+            for &oversampling in &self.oversampling {
+                for &grid in &self.grids {
+                    for &reps in &self.reps {
+                        for &ref_stat in &self.ref_stats {
+                            for &err_measure in &self.err_measures {
+                                for &err_bound in &self.err_bounds {
+                                    for &min_width in &self.min_widths {
+                                        out.push(GenConfig {
+                                            overfit,
+                                            oversampling,
+                                            grid,
+                                            reps,
+                                            ref_stat,
+                                            err_measure,
+                                            err_bound,
+                                            min_width,
+                                            ..GenConfig::default()
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Result of the paper's two-step pruning (§3.3.2): accuracy within 1.5x of
+/// best per setup, then cheapest quartile.
+pub struct PruneResult {
+    pub all: Vec<ConfigScore>,
+    pub after_accuracy: Vec<usize>,
+    pub after_cost: Vec<usize>,
+    /// Majority-vote default configuration over the survivors.
+    pub default_cfg: GenConfig,
+}
+
+pub fn prune(scores: Vec<ConfigScore>) -> PruneResult {
+    let best_err = scores
+        .iter()
+        .map(|s| s.model_error)
+        .fold(f64::INFINITY, f64::min);
+    let after_accuracy: Vec<usize> = scores
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.model_error <= 1.5 * best_err)
+        .map(|(i, _)| i)
+        .collect();
+    // First quartile of generation cost among accuracy survivors.
+    let mut costs: Vec<f64> = after_accuracy.iter().map(|&i| scores[i].model_cost).collect();
+    costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q1 = costs[(costs.len().saturating_sub(1)) / 4];
+    let after_cost: Vec<usize> = after_accuracy
+        .iter()
+        .copied()
+        .filter(|&i| scores[i].model_cost <= q1)
+        .collect();
+
+    // Majority vote per parameter among survivors.
+    let survivors: Vec<&ConfigScore> = after_cost.iter().map(|&i| &scores[i]).collect();
+    let vote = |f: &dyn Fn(&GenConfig) -> String| -> String {
+        let mut counts: std::collections::HashMap<String, usize> = Default::default();
+        for s in &survivors {
+            *counts.entry(f(&s.cfg)).or_default() += 1;
+        }
+        counts
+            .into_iter()
+            .max_by_key(|(_, c)| *c)
+            .map(|(k, _)| k)
+            .unwrap_or_default()
+    };
+    let mut default_cfg = GenConfig::default();
+    if !survivors.is_empty() {
+        default_cfg.overfit = vote(&|c: &GenConfig| c.overfit.to_string()).parse().unwrap();
+        default_cfg.oversampling = vote(&|c: &GenConfig| c.oversampling.to_string()).parse().unwrap();
+        default_cfg.grid = if vote(&|c: &GenConfig| c.grid.name().into()) == "cartesian" {
+            GridKind::Cartesian
+        } else {
+            GridKind::Chebyshev
+        };
+        default_cfg.reps = vote(&|c: &GenConfig| c.reps.to_string()).parse().unwrap();
+        default_cfg.ref_stat =
+            Stat::parse(&vote(&|c: &GenConfig| c.ref_stat.name().into())).unwrap();
+        default_cfg.err_bound = vote(&|c: &GenConfig| c.err_bound.to_string()).parse().unwrap();
+        default_cfg.min_width = vote(&|c: &GenConfig| c.min_width.to_string()).parse().unwrap();
+    }
+    PruneResult { all: scores, after_accuracy, after_cost, default_cfg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::kernels::{Diag, Flags, KernelId, Side, Trans, Uplo};
+    use crate::machine::{CpuId, Elem, Library};
+
+    fn trsm_template() -> Call {
+        let mut c = Call::new(KernelId::Trsm, Elem::D);
+        c.flags = Flags {
+            side: Some(Side::Left),
+            uplo: Some(Uplo::Lower),
+            trans_a: Some(Trans::No),
+            diag: Some(Diag::NonUnit),
+            trans_b: None,
+        };
+        c
+    }
+
+    fn machine() -> Machine {
+        Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1)
+    }
+
+    #[test]
+    fn ground_truth_covers_grid() {
+        let domain = Domain::new(vec![24, 24], vec![152, 280]);
+        let gt = ground_truth(&machine(), &trsm_template(), &domain, 64, 3, 7);
+        assert!(gt.points.len() >= 6);
+        assert!(gt.min_seconds.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn sweep_space_sizes() {
+        assert_eq!(SweepSpace::full().enumerate().len(), 2880);
+        assert_eq!(SweepSpace::reduced().enumerate().len(), 128);
+    }
+
+    #[test]
+    fn accurate_config_beats_sloppy_config() {
+        let domain = Domain::new(vec![24, 24], vec![280, 536]);
+        let m = machine();
+        let gt = ground_truth(&m, &trsm_template(), &domain, 64, 5, 11);
+        let sloppy = GenConfig {
+            oversampling: 1,
+            reps: 5,
+            err_bound: 0.05,
+            min_width: 512,
+            ..Default::default()
+        };
+        let careful = GenConfig { oversampling: 5, reps: 10, ..Default::default() };
+        let s1 = evaluate_config(&m, &sloppy, &trsm_template(), &domain, &gt, 3);
+        let s2 = evaluate_config(&m, &careful, &trsm_template(), &domain, &gt, 3);
+        assert!(s2.model_error <= s1.model_error * 1.2, "{} vs {}", s2.model_error, s1.model_error);
+        assert!(s2.model_cost >= s1.model_cost);
+    }
+
+    #[test]
+    fn prune_keeps_accurate_cheap_configs() {
+        let mk = |err: f64, cost: f64| ConfigScore {
+            cfg: GenConfig::default(),
+            model_error: err,
+            model_cost: cost,
+            pieces: 1,
+        };
+        let scores = vec![mk(0.01, 10.0), mk(0.011, 1.0), mk(0.1, 0.5), mk(0.012, 2.0)];
+        let res = prune(scores);
+        assert_eq!(res.after_accuracy, vec![0, 1, 3]);
+        assert!(res.after_cost.contains(&1));
+        assert!(!res.after_cost.contains(&0));
+    }
+}

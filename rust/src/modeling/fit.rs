@@ -1,0 +1,200 @@
+//! Relative least-squares polynomial fitting (paper §3.2.4).
+//!
+//! Minimizes Σ((y_i - p(x_i))/y_i)² over polynomial coefficients via the
+//! normal equations (XᵀX)β = Xᵀ1 with X[i,j] = m_j(x_i)/y_i — exactly the
+//! paper's formulation. Two interchangeable backends:
+//!
+//! * [`rust_fit`] — in-process Gauss-Jordan solve (mirrors the L2 graph);
+//! * `runtime::FitEngine` — the AOT-compiled JAX/Pallas artifact via PJRT.
+//!
+//! Both consume the same scaled design matrix built by [`design_matrix`].
+
+use super::monomials::eval_monomial;
+
+/// Build the scaled design matrix X (row-major, n x m) for points already
+/// mapped into the fit's scaled coordinates.
+pub fn design_matrix(pts: &[Vec<f64>], ys: &[f64], exps: &[Vec<u8>]) -> Vec<f64> {
+    let (n, m) = (pts.len(), exps.len());
+    let mut x = vec![0.0; n * m];
+    for (i, (p, &y)) in pts.iter().zip(ys).enumerate() {
+        debug_assert!(y > 0.0, "nonpositive measurement {y}");
+        for (j, e) in exps.iter().enumerate() {
+            x[i * m + j] = eval_monomial(e, p) / y;
+        }
+    }
+    x
+}
+
+/// Solve min ‖1 − Xβ‖² for X row-major (n x m). Pure-Rust backend.
+pub fn rust_fit(x: &[f64], n: usize, m: usize) -> Vec<f64> {
+    // G = XᵀX, b = Xᵀ1.
+    let mut g = vec![0.0; m * m];
+    let mut b = vec![0.0; m];
+    for i in 0..n {
+        let row = &x[i * m..(i + 1) * m];
+        for j in 0..m {
+            b[j] += row[j];
+            for l in j..m {
+                g[j * m + l] += row[j] * row[l];
+            }
+        }
+    }
+    for j in 0..m {
+        for l in 0..j {
+            g[j * m + l] = g[l * m + j];
+        }
+    }
+    spd_solve(&mut g, &mut b, m);
+    b
+}
+
+/// In-place unpivoted Gauss-Jordan solve of the (ridged) SPD system —
+/// the same algorithm the L2 JAX graph lowers (python/compile/model.py).
+pub fn spd_solve(g: &mut [f64], b: &mut [f64], m: usize) {
+    // Relative ridge for rank-deficient systems (padded columns).
+    let trace: f64 = (0..m).map(|j| g[j * m + j]).sum();
+    let ridge = 1e-11 * trace / m as f64;
+    for j in 0..m {
+        g[j * m + j] += ridge;
+    }
+    for k in 0..m {
+        let pivot = g[k * m + k];
+        let pivot = if pivot.abs() < 1e-300 { 1e-300 } else { pivot };
+        // Normalize row k.
+        for l in 0..m {
+            g[k * m + l] /= pivot;
+        }
+        b[k] /= pivot;
+        // Eliminate column k from all other rows.
+        for i in 0..m {
+            if i == k {
+                continue;
+            }
+            let f = g[i * m + k];
+            if f == 0.0 {
+                continue;
+            }
+            for l in 0..m {
+                g[i * m + l] -= f * g[k * m + l];
+            }
+            b[i] -= f * b[k];
+        }
+    }
+}
+
+/// Point-wise absolute relative errors |y_i − p(x_i)|/y_i of a fit.
+pub fn relative_errors(
+    pts: &[Vec<f64>],
+    ys: &[f64],
+    exps: &[Vec<u8>],
+    beta: &[f64],
+) -> Vec<f64> {
+    pts.iter()
+        .zip(ys)
+        .map(|(p, &y)| {
+            let pred: f64 = exps
+                .iter()
+                .zip(beta)
+                .map(|(e, &c)| c * eval_monomial(e, p))
+                .sum();
+            ((y - pred) / y).abs()
+        })
+        .collect()
+}
+
+/// Evaluate a fitted polynomial at a scaled point.
+pub fn eval_poly(exps: &[Vec<u8>], beta: &[f64], x: &[f64]) -> f64 {
+    exps.iter()
+        .zip(beta)
+        .map(|(e, &c)| c * eval_monomial(e, x))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cubic_exps() -> Vec<Vec<u8>> {
+        (0..4u8).map(|e| vec![e]).collect()
+    }
+
+    #[test]
+    fn recovers_exact_cubic() {
+        let exps = cubic_exps();
+        // Strictly positive generating polynomial (runtimes are positive).
+        let truth = [1.0, 0.5, 2.0, 3.0];
+        let pts: Vec<Vec<f64>> = (1..=20).map(|i| vec![i as f64 / 20.0]).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| eval_poly(&exps, &truth, p)).collect();
+        let x = design_matrix(&pts, &ys, &exps);
+        let beta = rust_fit(&x, pts.len(), exps.len());
+        // The tiny stabilizing ridge bounds coefficient recovery around
+        // ~1e-6 on this conditioning; the *relative fit error* is what the
+        // paper's pipeline consumes.
+        for (b, t) in beta.iter().zip(truth) {
+            assert!((b - t).abs() < 1e-4, "{beta:?}");
+        }
+        let errs = relative_errors(&pts, &ys, &exps, &beta);
+        assert!(errs.iter().all(|&e| e < 1e-6), "{errs:?}");
+    }
+
+    #[test]
+    fn relative_weighting_prioritizes_small_values() {
+        // Two clusters: small values with +5% noise would dominate an
+        // absolute-LSQ fit's relative error; relative LSQ keeps both ~equal.
+        let exps = vec![vec![0u8], vec![1u8]];
+        let pts: Vec<Vec<f64>> = (1..=40).map(|i| vec![i as f64 / 40.0]).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| 0.01 + p[0] * 10.0).collect();
+        let x = design_matrix(&pts, &ys, &exps);
+        let beta = rust_fit(&x, pts.len(), exps.len());
+        let errs = relative_errors(&pts, &ys, &exps, &beta);
+        assert!(errs.iter().all(|&e| e < 1e-6), "{errs:?}");
+    }
+
+    #[test]
+    fn bivariate_trsm_style_fit() {
+        // y = m²n cost surface with mild size-dependent efficiency.
+        let exps: Vec<Vec<u8>> = (0..3u8)
+            .flat_map(|i| (0..2u8).map(move |j| vec![i, j]))
+            .collect();
+        let mut rng = Rng::new(5);
+        let pts: Vec<Vec<f64>> = (0..60)
+            .map(|_| vec![rng.range_f64(0.05, 1.0), rng.range_f64(0.05, 1.0)])
+            .collect();
+        let ys: Vec<f64> = pts
+            .iter()
+            .map(|p| (p[0] * p[0] * p[1] + 0.01) * (1.0 + 0.1 * p[0]))
+            .collect();
+        let x = design_matrix(&pts, &ys, &exps);
+        let beta = rust_fit(&x, pts.len(), exps.len());
+        let errs = relative_errors(&pts, &ys, &exps, &beta);
+        let avg = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(avg < 0.02, "avg={avg}");
+    }
+
+    #[test]
+    fn zero_columns_get_zero_coefficients() {
+        let exps = vec![vec![0u8], vec![1u8], vec![7u8]]; // x^7 ~ 0 on small x... use literal zero col
+        let pts: Vec<Vec<f64>> = (1..=10).map(|i| vec![i as f64 / 10.0]).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| 1.0 + p[0]).collect();
+        let mut x = design_matrix(&pts, &ys, &exps);
+        // Zero out the third column entirely (simulates padding).
+        for i in 0..pts.len() {
+            x[i * 3 + 2] = 0.0;
+        }
+        let beta = rust_fit(&x, pts.len(), 3);
+        assert!(beta[2].abs() < 1e-6, "{beta:?}");
+        assert!((beta[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spd_solve_matches_manual_solution() {
+        // g = [[4,2],[2,3]], b = [10, 9] -> x = [12/8? compute: solve.
+        let mut g = vec![4.0, 2.0, 2.0, 3.0];
+        let mut b = vec![10.0, 9.0];
+        spd_solve(&mut g, &mut b, 2);
+        // 4x+2y=10, 2x+3y=9 -> x=1.5, y=2.
+        assert!((b[0] - 1.5).abs() < 1e-9);
+        assert!((b[1] - 2.0).abs() < 1e-9);
+    }
+}

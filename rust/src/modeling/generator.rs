@@ -1,0 +1,416 @@
+//! Automated model generation by adaptive refinement (paper §3.2.5, §3.3).
+//!
+//! For one case (a template [`Call`]) and size domain, the generator
+//! samples the kernel on a grid, fits a relative-LSQ polynomial per
+//! summary statistic, and recursively splits the domain until the error
+//! measure of the *reference statistic* falls below the target bound or
+//! the domain is narrower than the minimum width.
+
+use std::collections::HashMap;
+
+use crate::machine::kernels::{Call, Region, Side};
+use crate::machine::{Machine, Session};
+use crate::sampler::experiment::Experiment;
+use crate::util::stats::{percentile, Stat, Summary};
+
+use super::fit::{design_matrix, relative_errors, rust_fit};
+use super::grid::{sample_grid, Domain, GridKind};
+use super::model::{case_key, PerfModel, Piece};
+use super::monomials::{complexity_exponents_for, exponent_table};
+
+/// Error measure over the per-point relative errors (paper §3.3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrMeasure {
+    Max,
+    P90,
+    Avg,
+}
+
+impl ErrMeasure {
+    pub fn compute(self, errs: &[f64]) -> f64 {
+        match self {
+            ErrMeasure::Max => errs.iter().cloned().fold(0.0, f64::max),
+            ErrMeasure::P90 => percentile(errs, 90.0),
+            ErrMeasure::Avg => errs.iter().sum::<f64>() / errs.len().max(1) as f64,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrMeasure::Max => "max",
+            ErrMeasure::P90 => "p90",
+            ErrMeasure::Avg => "avg",
+        }
+    }
+}
+
+/// The eight generator configuration parameters (paper §3.3.1, Table 3.1).
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    pub overfit: usize,
+    pub oversampling: usize,
+    pub grid: GridKind,
+    pub reps: usize,
+    pub ref_stat: Stat,
+    pub err_measure: ErrMeasure,
+    pub err_bound: f64,
+    pub min_width: usize,
+    /// Safety cap on pieces (the polyeval artifact holds 64 per dispatch).
+    pub max_pieces: usize,
+    /// Fixed leading dimension used in measurement calls (§3.1.7: a large
+    /// multiple of 8 that is not a multiple of 256).
+    pub fixed_ld: usize,
+}
+
+impl Default for GenConfig {
+    /// The paper's selected default: line (10) of Table 3.3 — overfit 2,
+    /// oversampling 4, Chebyshev, 10 repetitions, minimum reference
+    /// statistic, maximum error measure, 1 % bound, width 32.
+    fn default() -> GenConfig {
+        GenConfig {
+            overfit: 2,
+            oversampling: 4,
+            grid: GridKind::Chebyshev,
+            reps: 10,
+            ref_stat: Stat::Min,
+            err_measure: ErrMeasure::Max,
+            err_bound: 0.01,
+            min_width: 32,
+            max_pieces: 320,
+            fixed_ld: 5000,
+        }
+    }
+}
+
+impl GenConfig {
+    /// §3.3.3 adjustments: dgemm (3 size dims) drops overfitting and widens
+    /// the minimum width; multi-threaded setups widen further.
+    pub fn adjusted_for(template: &Call, threads: usize) -> GenConfig {
+        let mut cfg = GenConfig::default();
+        let dims = crate::machine::kernels::size_dims(template.kernel);
+        if dims >= 3 {
+            cfg.overfit = 0;
+            cfg.min_width = 64;
+        }
+        if threads > 1 {
+            cfg.min_width = if dims >= 3 { 256 } else { 64 };
+        }
+        cfg
+    }
+}
+
+/// Generation result diagnostics.
+#[derive(Clone, Debug)]
+pub struct GenStats {
+    pub pieces: usize,
+    pub measured_points: usize,
+    pub refinements: usize,
+    /// Virtual seconds of kernel execution spent on measurements.
+    pub cost_seconds: f64,
+}
+
+/// Generate a model for `template`'s case over `domain` on `machine`.
+pub fn generate_model(
+    machine: &Machine,
+    cfg: &GenConfig,
+    template: &Call,
+    domain: &Domain,
+    seed: u64,
+) -> (PerfModel, GenStats) {
+    let base = complexity_exponents_for(template);
+    assert_eq!(
+        base.len(),
+        domain.dims(),
+        "domain dims must match kernel size dims"
+    );
+    let exps = exponent_table(&base, cfg.overfit);
+    // Actual per-dim degree after the cap (mirrors exponent_table).
+    let max_deg: Vec<usize> = (0..base.len())
+        .map(|d| exps.iter().map(|e| e[d] as usize).max().unwrap_or(0))
+        .collect();
+    let ppd: Vec<usize> = max_deg.iter().map(|&dg| dg + 1 + cfg.oversampling).collect();
+    let scale: Vec<f64> = domain.hi.iter().map(|&h| h as f64).collect();
+
+    let mut gen = GenCtx {
+        machine,
+        cfg,
+        template,
+        exps: &exps,
+        ppd: &ppd,
+        scale: &scale,
+        session: machine.session(seed),
+        cache: HashMap::new(),
+        stats: GenStats { pieces: 0, measured_points: 0, refinements: 0, cost_seconds: 0.0 },
+        pieces: Vec::new(),
+    };
+    gen.session.warmup();
+    gen.refine(domain.clone());
+
+    let stats = GenStats { pieces: gen.pieces.len(), ..gen.stats };
+    let pieces = std::mem::take(&mut gen.pieces);
+    let cost = gen.stats.cost_seconds;
+    drop(gen);
+    (
+        PerfModel { case: case_key(template), exps, scale, pieces, gen_cost: cost, ..Default::default() },
+        stats,
+    )
+}
+
+struct FittedNode {
+    domain: Domain,
+    coeffs: [Vec<f64>; 5],
+    err: f64,
+}
+
+struct GenCtx<'a> {
+    #[allow(dead_code)]
+    machine: &'a Machine,
+    cfg: &'a GenConfig,
+    template: &'a Call,
+    exps: &'a [Vec<u8>],
+    ppd: &'a [usize],
+    scale: &'a [f64],
+    session: Session,
+    /// Measurement cache: point -> summary (gives Cartesian grids their
+    /// sample-reuse advantage automatically, §3.2.2).
+    cache: HashMap<Vec<usize>, Summary>,
+    stats: GenStats,
+    pieces: Vec<Piece>,
+}
+
+impl GenCtx<'_> {
+    /// Worst-error-first refinement: fit every frontier domain, repeatedly
+    /// split the one with the largest error measure. This keeps quality
+    /// uniform if the piece cap is reached (a depth-first recursion would
+    /// spend the whole budget on one corner of the domain).
+    fn refine(&mut self, root: Domain) {
+        let first = self.fit_domain(root);
+        let mut frontier: Vec<FittedNode> = vec![first];
+        loop {
+            // Find the worst splittable node above the bound.
+            let worst = frontier
+                .iter()
+                .enumerate()
+                .filter(|(_, nd)| {
+                    nd.err > self.cfg.err_bound
+                        && nd.domain.split(self.cfg.min_width).is_some()
+                })
+                .max_by(|a, b| a.1.err.partial_cmp(&b.1.err).unwrap())
+                .map(|(i, _)| i);
+            let Some(idx) = worst else { break };
+            if frontier.len() + 1 > self.cfg.max_pieces {
+                break;
+            }
+            let node = frontier.swap_remove(idx);
+            let (a, b) = node.domain.split(self.cfg.min_width).unwrap();
+            frontier.push(self.fit_domain(a));
+            frontier.push(self.fit_domain(b));
+        }
+        self.pieces
+            .extend(frontier.into_iter().map(|nd| Piece { domain: nd.domain, coeffs: nd.coeffs }));
+    }
+
+    fn fit_domain(&mut self, domain: Domain) -> FittedNode {
+        self.stats.refinements += 1;
+        let points = sample_grid(&domain, self.cfg.grid, self.ppd);
+        self.measure_missing(&points);
+
+        let pts_scaled: Vec<Vec<f64>> = points
+            .iter()
+            .map(|p| p.iter().zip(self.scale).map(|(&v, &s)| v as f64 / s).collect())
+            .collect();
+        let mut coeffs: [Vec<f64>; 5] = Default::default();
+        let mut ref_errs = Vec::new();
+        for (si, stat) in Stat::ALL.iter().enumerate() {
+            let ys: Vec<f64> = points
+                .iter()
+                .map(|p| self.cache[p].get(*stat).max(1e-12))
+                .collect();
+            let x = design_matrix(&pts_scaled, &ys, self.exps);
+            let beta = rust_fit(&x, points.len(), self.exps.len());
+            if *stat == self.cfg.ref_stat {
+                ref_errs = relative_errors(&pts_scaled, &ys, self.exps, &beta);
+            }
+            coeffs[si] = beta;
+        }
+        let err = self.cfg.err_measure.compute(&ref_errs);
+        FittedNode { domain, coeffs, err }
+    }
+
+    fn measure_missing(&mut self, points: &[Vec<usize>]) {
+        let missing: Vec<Vec<usize>> =
+            points.iter().filter(|p| !self.cache.contains_key(*p)).cloned().collect();
+        if missing.is_empty() {
+            return;
+        }
+        let calls: Vec<Call> = missing.iter().map(|p| self.instantiate(p)).collect();
+        let exp = Experiment {
+            reps: self.cfg.reps,
+            shuffle: true,
+            warm_double_run: true,
+            seed: 0xC0FFEE ^ self.stats.refinements as u64,
+        };
+        let report = exp.run_in(&mut self.session, &calls);
+        self.stats.cost_seconds += report.virtual_seconds;
+        self.stats.measured_points += missing.len();
+        for (p, s) in missing.into_iter().zip(report.per_call) {
+            self.cache.insert(p, s);
+        }
+    }
+
+    /// Build the measurement call for a sample point: template + sizes +
+    /// fixed leading dimensions + synthetic warm-able operand regions.
+    fn instantiate(&self, point: &[usize]) -> Call {
+        instantiate_call(self.template, point, self.cfg.fixed_ld)
+    }
+}
+
+/// Public variant of the sample-call construction (used by the config
+/// search and tests).
+pub fn instantiate_call(template: &Call, point: &[usize], fixed_ld: usize) -> Call {
+    let mut call = template.clone();
+    // Map the model-domain point back onto (m, n, k) — the exact inverse
+    // of Call::sizes().
+    call.set_sizes(point);
+    call.lda = fixed_ld;
+    call.ldb = fixed_ld;
+    call.ldc = fixed_ld;
+    synthesize_operands(&mut call);
+    call
+}
+
+/// Attach synthetic operand regions matching a call's semantics: stable
+/// matrix ids per slot so a double-run warm-up leaves them in cache (paper
+/// §3.1.6 in-cache convention). Used by the model generator and by pure
+/// in-/out-of-cache micro-timings.
+pub fn synthesize_operands(call: &mut Call) {
+    call.operands.clear();
+    let elem = call.elem;
+    let side_left = call.flags.side != Some(Side::Right);
+    let trans_a = call.flags.trans_a == Some(crate::machine::kernels::Trans::Yes);
+    for slot in 0..3u8 {
+        let (rows, cols) = crate::sampler::signatures::mat_shape(
+            call.kernel,
+            slot,
+            call.m,
+            call.n,
+            call.k,
+            side_left,
+            trans_a,
+        );
+        if rows > 0 && cols > 0 {
+            call.operands.push(Region::new(0xA110C + slot as u64, 0, 0, rows, cols, elem));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::kernels::{Diag, Flags, KernelId, Trans, Uplo};
+    use crate::machine::{CpuId, Elem, Library};
+
+    fn trsm_template() -> Call {
+        let mut c = Call::new(KernelId::Trsm, Elem::D);
+        c.flags = Flags {
+            side: Some(Side::Left),
+            uplo: Some(Uplo::Lower),
+            trans_a: Some(Trans::No),
+            diag: Some(Diag::NonUnit),
+            trans_b: None,
+        };
+        c
+    }
+
+    fn machine() -> Machine {
+        Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1)
+    }
+
+    fn quick_cfg() -> GenConfig {
+        GenConfig { reps: 5, oversampling: 2, err_bound: 0.02, ..Default::default() }
+    }
+
+    #[test]
+    fn generates_piecewise_model_for_dtrsm() {
+        let domain = Domain::new(vec![24, 24], vec![536, 1048]);
+        let (model, stats) = generate_model(&machine(), &quick_cfg(), &trsm_template(), &domain, 1);
+        assert!(!model.pieces.is_empty());
+        assert!(stats.measured_points > 0);
+        assert!(model.gen_cost > 0.0);
+        // Pieces tile the domain: every multiple-of-8 point is covered.
+        for &m in &[24, 256, 536] {
+            for &n in &[24, 512, 1048] {
+                let est = model.estimate(&[m, n]);
+                assert!(est.med > 0.0, "({m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn model_is_accurate_on_unseen_points() {
+        let domain = Domain::new(vec![24, 24], vec![536, 1048]);
+        let mach = machine();
+        let (model, _) = generate_model(&mach, &GenConfig::default(), &trsm_template(), &domain, 1);
+        // Validate against warm deterministic timings on off-grid points.
+        let mut session = mach.session(99);
+        session.warmup();
+        let mut worst: f64 = 0.0;
+        for &(m, n) in &[(120, 700), (312, 136), (480, 1000), (56, 56), (264, 888)] {
+            let call = instantiate_call(&trsm_template(), &[m, n], 5000);
+            let truth = session.warm_seconds(&call);
+            let est = model.estimate(&[m, n]).min;
+            let err = ((est - truth) / truth).abs();
+            worst = worst.max(err);
+        }
+        assert!(worst < 0.08, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn refinement_terminates_on_min_width() {
+        let cfg = GenConfig {
+            err_bound: 0.0, // unreachable: forces min-width termination
+            min_width: 256,
+            reps: 5,
+            oversampling: 1,
+            ..Default::default()
+        };
+        let domain = Domain::new(vec![24], vec![536]);
+        let mut t = Call::new(KernelId::Potf2, Elem::D);
+        t.flags.uplo = Some(Uplo::Lower);
+        let (model, _) = generate_model(&machine(), &cfg, &t, &domain, 2);
+        assert!(model.pieces.len() <= 4, "pieces={}", model.pieces.len());
+        assert!(!model.pieces.is_empty());
+    }
+
+    #[test]
+    fn pieces_tile_domain_without_gaps() {
+        let domain = Domain::new(vec![24], vec![1048]);
+        let mut t = Call::new(KernelId::Potf2, Elem::D);
+        t.flags.uplo = Some(Uplo::Lower);
+        let (model, _) = generate_model(&machine(), &quick_cfg(), &t, &domain, 3);
+        for n in (24..=1048).step_by(8) {
+            let covered = model.pieces.iter().any(|p| p.domain.contains(&[n]));
+            assert!(covered, "n={n} uncovered");
+        }
+    }
+
+    #[test]
+    fn gemm_config_adjustment_applies() {
+        let g = Call::new(KernelId::Gemm, Elem::D);
+        let cfg = GenConfig::adjusted_for(&g, 1);
+        assert_eq!(cfg.overfit, 0);
+        assert_eq!(cfg.min_width, 64);
+        let cfg_mt = GenConfig::adjusted_for(&g, 12);
+        assert_eq!(cfg_mt.min_width, 256);
+    }
+
+    #[test]
+    fn instantiate_sets_sizes_and_operands() {
+        let c = instantiate_call(&trsm_template(), &[128, 512], 5000);
+        assert_eq!((c.m, c.n), (128, 512));
+        assert_eq!(c.lda, 5000);
+        assert_eq!(c.operands.len(), 2);
+        assert_eq!(c.operands[0].rows, 128); // A is m x m for side=L
+        assert_eq!(c.operands[1].cols, 512);
+    }
+}

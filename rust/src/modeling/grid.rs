@@ -1,0 +1,201 @@
+//! Sampling point distributions (paper §3.2.2): Cartesian and Chebyshev
+//! grids over hyper-rectangular size domains, rounded to multiples of 8 to
+//! dodge vectorization sawtooth artifacts (§3.1.5.1).
+
+/// A hyper-rectangular domain of size arguments (inclusive bounds).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Domain {
+    pub lo: Vec<usize>,
+    pub hi: Vec<usize>,
+}
+
+impl Domain {
+    pub fn new(lo: Vec<usize>, hi: Vec<usize>) -> Domain {
+        assert_eq!(lo.len(), hi.len());
+        assert!(lo.iter().zip(&hi).all(|(l, h)| l <= h), "{lo:?} > {hi:?}");
+        Domain { lo, hi }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.lo.len()
+    }
+
+    pub fn contains(&self, x: &[usize]) -> bool {
+        x.iter()
+            .zip(self.lo.iter().zip(&self.hi))
+            .all(|(&v, (&l, &h))| v >= l && v <= h)
+    }
+
+    /// Split along the dimension with the largest hi/lo ratio at the
+    /// 8-rounded midpoint (paper §3.2.5). Returns None if every dimension
+    /// is already narrower than `min_width`.
+    pub fn split(&self, min_width: usize) -> Option<(Domain, Domain)> {
+        let mut best: Option<(usize, f64)> = None;
+        for d in 0..self.dims() {
+            if self.hi[d] - self.lo[d] < min_width {
+                continue;
+            }
+            let ratio = self.hi[d] as f64 / self.lo[d].max(1) as f64;
+            if best.map(|(_, r)| ratio > r).unwrap_or(true) {
+                best = Some((d, ratio));
+            }
+        }
+        let (dim, _) = best?;
+        // m_s = round((l+u)/2, 8)
+        let mid = round8((self.lo[dim] + self.hi[dim]) / 2);
+        let mid = mid.clamp(self.lo[dim] + 8, self.hi[dim].saturating_sub(8));
+        let mut a = self.clone();
+        let mut b = self.clone();
+        a.hi[dim] = mid;
+        b.lo[dim] = mid;
+        Some((a, b))
+    }
+}
+
+pub fn round8(v: usize) -> usize {
+    ((v + 4) / 8) * 8
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GridKind {
+    Cartesian,
+    Chebyshev,
+}
+
+impl GridKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            GridKind::Cartesian => "cartesian",
+            GridKind::Chebyshev => "chebyshev",
+        }
+    }
+}
+
+/// 1-D node positions in [0, 1] (boundary-including Chebyshev variant,
+/// §3.2.2).
+pub fn nodes_1d(kind: GridKind, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    match kind {
+        GridKind::Cartesian => (0..n).map(|i| i as f64 / (n - 1) as f64).collect(),
+        GridKind::Chebyshev => {
+            // x_i = cos(i/(n-1) π) in [-1,1], mapped to [0,1], ascending.
+            let mut v: Vec<f64> = (0..n)
+                .map(|i| {
+                    let c = (i as f64 / (n - 1) as f64 * std::f64::consts::PI).cos();
+                    (1.0 - c) / 2.0
+                })
+                .collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        }
+    }
+}
+
+/// Full tensor-product sample grid over a domain, with `points_per_dim[d]`
+/// nodes in dimension d, every coordinate rounded to a multiple of 8 (and
+/// deduplicated after rounding).
+pub fn sample_grid(domain: &Domain, kind: GridKind, points_per_dim: &[usize]) -> Vec<Vec<usize>> {
+    assert_eq!(points_per_dim.len(), domain.dims());
+    let axes: Vec<Vec<usize>> = (0..domain.dims())
+        .map(|d| {
+            let mut xs: Vec<usize> = nodes_1d(kind, points_per_dim[d])
+                .into_iter()
+                .map(|t| {
+                    let v = domain.lo[d] as f64 + t * (domain.hi[d] - domain.lo[d]) as f64;
+                    round8(v.round() as usize).clamp(round8(domain.lo[d]), domain.hi[d] / 8 * 8)
+                })
+                .collect();
+            xs.dedup();
+            xs
+        })
+        .collect();
+    // Cartesian product.
+    let mut out: Vec<Vec<usize>> = vec![vec![]];
+    for axis in &axes {
+        let mut next = Vec::with_capacity(out.len() * axis.len());
+        for stem in &out {
+            for &v in axis {
+                let mut p = stem.clone();
+                p.push(v);
+                next.push(p);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_nodes_are_even() {
+        let n = nodes_1d(GridKind::Cartesian, 5);
+        assert_eq!(n, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn chebyshev_nodes_include_boundaries_and_cluster() {
+        let n = nodes_1d(GridKind::Chebyshev, 5);
+        assert!((n[0] - 0.0).abs() < 1e-12);
+        assert!((n[4] - 1.0).abs() < 1e-12);
+        // Denser near boundaries than in the middle.
+        assert!(n[1] - n[0] < n[2] - n[1]);
+    }
+
+    #[test]
+    fn grid_points_are_multiples_of_8_inside_domain() {
+        let d = Domain::new(vec![24, 24], vec![536, 4152]);
+        for kind in [GridKind::Cartesian, GridKind::Chebyshev] {
+            let pts = sample_grid(&d, kind, &[6, 5]);
+            assert!(!pts.is_empty());
+            for p in &pts {
+                assert!(p.iter().all(|v| v % 8 == 0), "{p:?}");
+                assert!(d.contains(p), "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_size_is_product_of_axis_counts() {
+        let d = Domain::new(vec![24], vec![536]);
+        let pts = sample_grid(&d, GridKind::Cartesian, &[6]);
+        assert_eq!(pts.len(), 6);
+    }
+
+    #[test]
+    fn cartesian_children_reuse_parent_points() {
+        // §3.2.2: splitting a Cartesian grid in half reuses all points.
+        let d = Domain::new(vec![0], vec![512]);
+        let parent: std::collections::HashSet<_> =
+            sample_grid(&d, GridKind::Cartesian, &[5]).into_iter().collect();
+        let (a, _) = d.split(8).unwrap();
+        let child = sample_grid(&a, GridKind::Cartesian, &[5]);
+        let reused = child.iter().filter(|p| parent.contains(*p)).count();
+        assert!(reused >= 3, "reused={reused}");
+    }
+
+    #[test]
+    fn split_prefers_relatively_largest_dim() {
+        let d = Domain::new(vec![24, 24], vec![536, 4152]);
+        let (a, b) = d.split(64).unwrap();
+        // n (dim 1) has the larger hi/lo ratio -> split there at ~2088.
+        assert_eq!(a.hi[0], 536);
+        assert_eq!(a.hi[1], 2088);
+        assert_eq!(b.lo[1], 2088);
+    }
+
+    #[test]
+    fn split_stops_below_min_width() {
+        let d = Domain::new(vec![24, 24], vec![56, 56]);
+        assert!(d.split(64).is_none());
+    }
+
+    #[test]
+    fn round8_behaviour() {
+        assert_eq!(round8(2088), 2088);
+        assert_eq!(round8(2085), 2088);
+        assert_eq!(round8(3), 0);
+    }
+}

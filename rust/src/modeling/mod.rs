@@ -1,0 +1,14 @@
+//! Performance modeling (paper Ch. 3): measurement-based piecewise
+//! multivariate polynomial models of kernel runtime, generated once per
+//! hardware/software setup by adaptive refinement.
+
+pub mod configsearch;
+pub mod fit;
+pub mod generator;
+pub mod grid;
+pub mod model;
+pub mod monomials;
+
+pub use generator::{generate_model, ErrMeasure, GenConfig};
+pub use grid::{Domain, GridKind};
+pub use model::{case_key, ModelStore, PerfModel};

@@ -1,0 +1,419 @@
+//! Piecewise-polynomial performance models and the per-setup model store
+//! (paper §3.2.1, Fig. 3.9).
+//!
+//! A [`PerfModel`] covers one *case* — kernel + data type + flag/scalar/
+//! increment combination — over a hyper-rectangular size domain tiled by
+//! [`Piece`]s. Each piece carries one coefficient vector per summary
+//! statistic (min/med/max/mean/std). A [`ModelStore`] holds all models of
+//! one hardware/software setup and serializes to JSON.
+
+use std::collections::HashMap;
+
+use crate::machine::kernels::{Call, Scalar};
+use crate::util::json::Json;
+use crate::util::stats::{Stat, Summary};
+
+use super::fit::eval_poly;
+use super::grid::Domain;
+
+/// One polynomial piece over a sub-domain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Piece {
+    pub domain: Domain,
+    /// Coefficients per statistic, indexed by `Stat::ALL` order.
+    pub coeffs: [Vec<f64>; 5],
+}
+
+/// A piecewise multivariate polynomial runtime model for one case.
+#[derive(Clone, Debug, Default)]
+pub struct PerfModel {
+    pub case: String,
+    /// Monomial exponent table (M x dims).
+    pub exps: Vec<Vec<u8>>,
+    /// Per-dimension scaling divisor applied before monomial evaluation.
+    pub scale: Vec<f64>,
+    pub pieces: Vec<Piece>,
+    /// Virtual seconds of measurements spent generating this model (the
+    /// paper's "model cost", §3.3.2).
+    pub gen_cost: f64,
+    /// Lazily cached domain hull (§Perf: estimate() is the prediction hot
+    /// path and must not rescan pieces per call).
+    pub hull_cache: std::sync::OnceLock<Domain>,
+}
+
+impl PartialEq for PerfModel {
+    fn eq(&self, other: &Self) -> bool {
+        self.case == other.case
+            && self.exps == other.exps
+            && self.scale == other.scale
+            && self.pieces == other.pieces
+            && self.gen_cost == other.gen_cost
+    }
+}
+
+impl PerfModel {
+    pub fn dims(&self) -> usize {
+        self.scale.len()
+    }
+
+    /// Bounding box of all pieces (computed once, cached).
+    pub fn domain_hull(&self) -> &Domain {
+        self.hull_cache.get_or_init(|| {
+            let d = self.dims();
+            let mut lo = vec![usize::MAX; d];
+            let mut hi = vec![0usize; d];
+            for p in &self.pieces {
+                for i in 0..d {
+                    lo[i] = lo[i].min(p.domain.lo[i]);
+                    hi[i] = hi[i].max(p.domain.hi[i]);
+                }
+            }
+            Domain::new(lo, hi)
+        })
+    }
+
+    /// Index of the piece containing `sizes` (clamped into the hull).
+    pub fn piece_index(&self, sizes: &[usize]) -> usize {
+        let hull = self.domain_hull();
+        let clamped: Vec<usize> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v.clamp(hull.lo[i], hull.hi[i]))
+            .collect();
+        // Boundary points belong to both neighbours; first match wins.
+        self.pieces
+            .iter()
+            .position(|p| p.domain.contains(&clamped))
+            .unwrap_or(0)
+    }
+
+    /// Scaled coordinates of a size point.
+    pub fn scaled(&self, sizes: &[usize]) -> Vec<f64> {
+        sizes
+            .iter()
+            .zip(&self.scale)
+            .map(|(&v, &s)| v as f64 / s)
+            .collect()
+    }
+
+    /// Runtime estimate (seconds) for a size point: all five statistics.
+    ///
+    /// Hot path of every prediction sweep (§Perf): clamping, piece lookup
+    /// and monomial evaluation run in a single pass with no allocation
+    /// beyond the scaled point.
+    pub fn estimate(&self, sizes: &[usize]) -> Summary {
+        // Zero-size operations execute no kernel body (Table 4.1).
+        if sizes.iter().any(|&v| v == 0) {
+            return Summary::constant(0.0);
+        }
+        let d = self.dims();
+        let hull = self.domain_hull();
+        let mut clamped = [0usize; 4];
+        debug_assert!(d <= 4);
+        for i in 0..d {
+            clamped[i] = sizes[i].clamp(hull.lo[i], hull.hi[i]);
+        }
+        let clamped = &clamped[..d];
+        let piece = self
+            .pieces
+            .iter()
+            .find(|p| p.domain.contains(clamped))
+            .unwrap_or(&self.pieces[0]);
+        let x = self.scaled(clamped);
+        let mut out = Summary::constant(0.0);
+        for (si, stat) in Stat::ALL.iter().enumerate() {
+            let v = eval_poly(&self.exps, &piece.coeffs[si], &x);
+            // Polynomials can dip negative at domain edges; runtimes can't.
+            out.set(*stat, v.max(if *stat == Stat::Std { 0.0 } else { 1e-12 }));
+        }
+        out
+    }
+
+    // ------------------------------------------------------------- JSON
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("case", Json::Str(self.case.clone())),
+            (
+                "exps",
+                Json::Arr(
+                    self.exps
+                        .iter()
+                        .map(|e| Json::arr_usize(&e.iter().map(|&v| v as usize).collect::<Vec<_>>()))
+                        .collect(),
+                ),
+            ),
+            ("scale", Json::arr_f64(&self.scale)),
+            ("gen_cost", Json::Num(self.gen_cost)),
+            (
+                "pieces",
+                Json::Arr(
+                    self.pieces
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("lo", Json::arr_usize(&p.domain.lo)),
+                                ("hi", Json::arr_usize(&p.domain.hi)),
+                                (
+                                    "coeffs",
+                                    Json::Arr(
+                                        p.coeffs.iter().map(|c| Json::arr_f64(c)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<PerfModel> {
+        let arr_usize = |j: &Json| -> anyhow::Result<Vec<usize>> {
+            Ok(j.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("expected array"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect())
+        };
+        let arr_f64 = |j: &Json| -> anyhow::Result<Vec<f64>> {
+            Ok(j.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("expected array"))?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect())
+        };
+        let exps = j
+            .req("exps")?
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| Ok(arr_usize(e)?.into_iter().map(|v| v as u8).collect()))
+            .collect::<anyhow::Result<Vec<Vec<u8>>>>()?;
+        let mut pieces = Vec::new();
+        for pj in j.req("pieces")?.as_arr().unwrap() {
+            let lo = arr_usize(pj.req("lo")?)?;
+            let hi = arr_usize(pj.req("hi")?)?;
+            let cj = pj.req("coeffs")?.as_arr().unwrap();
+            anyhow::ensure!(cj.len() == 5, "expected 5 stat coefficient sets");
+            let coeffs = [
+                arr_f64(&cj[0])?,
+                arr_f64(&cj[1])?,
+                arr_f64(&cj[2])?,
+                arr_f64(&cj[3])?,
+                arr_f64(&cj[4])?,
+            ];
+            pieces.push(Piece { domain: Domain::new(lo, hi), coeffs });
+        }
+        Ok(PerfModel {
+            case: j.req("case")?.as_str().unwrap_or("").to_string(),
+            exps,
+            scale: arr_f64(j.req("scale")?)?,
+            pieces,
+            gen_cost: j.req("gen_cost")?.as_f64().unwrap_or(0.0),
+            hull_cache: std::sync::OnceLock::new(),
+        })
+    }
+}
+
+/// Case key of a call: kernel + type prefix + flags + scalar class +
+/// increment class (paper §3.2.1's "discrete cases").
+pub fn case_key(call: &Call) -> String {
+    let flags = call.flags.code();
+    let alpha = match call.alpha {
+        Scalar::MinusOne => "m1",
+        Scalar::Zero => "0",
+        Scalar::One => "1",
+        Scalar::Other => "x",
+    };
+    let inc = if call.incx.max(call.incy) > 1 { "_iL" } else { "" };
+    let flags = if flags.is_empty() { String::new() } else { format!("_{flags}") };
+    format!(
+        "{}{}{}_a{}{}",
+        call.elem.prefix(),
+        crate::machine::kernels::name(call.kernel),
+        flags,
+        alpha,
+        inc
+    )
+}
+
+/// All models of one hardware/software setup.
+#[derive(Clone, Debug, Default)]
+pub struct ModelStore {
+    pub machine_label: String,
+    pub models: HashMap<String, PerfModel>,
+}
+
+impl ModelStore {
+    pub fn new(machine_label: &str) -> ModelStore {
+        ModelStore { machine_label: machine_label.to_string(), models: HashMap::new() }
+    }
+
+    pub fn insert(&mut self, model: PerfModel) {
+        self.models.insert(model.case.clone(), model);
+    }
+
+    pub fn get(&self, case: &str) -> Option<&PerfModel> {
+        self.models.get(case)
+    }
+
+    /// Estimate a call's runtime summary; `None` if no model covers its
+    /// case.
+    pub fn estimate_call(&self, call: &Call) -> Option<Summary> {
+        if call.sizes().iter().any(|&v| v == 0) {
+            return Some(Summary::constant(0.0));
+        }
+        self.models.get(&case_key(call)).map(|m| m.estimate(&call.sizes()))
+    }
+
+    /// Total virtual measurement cost of all models.
+    pub fn total_gen_cost(&self) -> f64 {
+        self.models.values().map(|m| m.gen_cost).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut models: Vec<&PerfModel> = self.models.values().collect();
+        models.sort_by(|a, b| a.case.cmp(&b.case));
+        Json::obj(vec![
+            ("machine", Json::Str(self.machine_label.clone())),
+            ("models", Json::Arr(models.iter().map(|m| m.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelStore> {
+        let mut store = ModelStore::new(j.req("machine")?.as_str().unwrap_or(""));
+        for mj in j.req("models")?.as_arr().unwrap() {
+            store.insert(PerfModel::from_json(mj)?);
+        }
+        Ok(store)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().render())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ModelStore> {
+        let text = std::fs::read_to_string(path)?;
+        ModelStore::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::kernels::{Diag, Flags, KernelId, Side, Trans, Uplo};
+    use crate::machine::Elem;
+
+    fn linear_model() -> PerfModel {
+        // Two 1-D pieces: y = 1 + x on [8, 248], y = 2x on [248, 504].
+        PerfModel {
+            case: "dpotf2_L_a1".into(),
+            exps: vec![vec![0], vec![1]],
+            scale: vec![504.0],
+            pieces: vec![
+                Piece {
+                    domain: Domain::new(vec![8], vec![248]),
+                    coeffs: [
+                        vec![1.0, 1.0],
+                        vec![1.0, 1.0],
+                        vec![1.0, 1.0],
+                        vec![1.0, 1.0],
+                        vec![0.0, 0.0],
+                    ],
+                },
+                Piece {
+                    domain: Domain::new(vec![248], vec![504]),
+                    coeffs: [
+                        vec![0.0, 2.0],
+                        vec![0.0, 2.0],
+                        vec![0.0, 2.0],
+                        vec![0.0, 2.0],
+                        vec![0.0, 0.0],
+                    ],
+                },
+            ],
+            gen_cost: 1.5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn estimate_picks_correct_piece() {
+        let m = linear_model();
+        let lo = m.estimate(&[104]); // x = 104/504
+        assert!((lo.med - (1.0 + 104.0 / 504.0)).abs() < 1e-12);
+        let hi = m.estimate(&[504]);
+        assert!((hi.med - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimate_clamps_outside_domain() {
+        let m = linear_model();
+        let big = m.estimate(&[100_000]);
+        assert!((big.med - 2.0).abs() < 1e-12); // clamped to hi = 504
+        let small = m.estimate(&[1]);
+        assert!((small.med - (1.0 + 8.0 / 504.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_size_estimates_zero() {
+        let m = linear_model();
+        assert_eq!(m.estimate(&[0]).med, 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = linear_model();
+        let j = m.to_json();
+        let back = PerfModel::from_json(&j).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn store_roundtrip_via_file() {
+        let mut store = ModelStore::new("haswell/openblas/1t");
+        store.insert(linear_model());
+        let dir = std::env::temp_dir().join("dlapm_test_store");
+        let path = dir.join("models.json");
+        store.save(&path).unwrap();
+        let loaded = ModelStore::load(&path).unwrap();
+        assert_eq!(loaded.machine_label, store.machine_label);
+        assert_eq!(loaded.models.len(), 1);
+        assert_eq!(loaded.get("dpotf2_L_a1").unwrap(), store.get("dpotf2_L_a1").unwrap());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn case_key_encodes_flags_and_alpha() {
+        let mut c = Call::new(KernelId::Trsm, Elem::D);
+        c.flags = Flags {
+            side: Some(Side::Right),
+            uplo: Some(Uplo::Lower),
+            trans_a: Some(Trans::Yes),
+            diag: Some(Diag::NonUnit),
+            trans_b: None,
+        };
+        c.alpha = Scalar::MinusOne;
+        assert_eq!(case_key(&c), "dtrsm_RLTN_am1");
+        c.alpha = Scalar::One;
+        c.incx = 5000;
+        assert_eq!(case_key(&c), "dtrsm_RLTN_a1_iL");
+    }
+
+    #[test]
+    fn estimate_call_uses_case_key() {
+        let mut store = ModelStore::new("x");
+        store.insert(PerfModel { case: "dpotf2_L_a1".into(), ..linear_model() });
+        let mut call = Call::new(KernelId::Potf2, Elem::D);
+        call.flags.uplo = Some(Uplo::Lower);
+        call.n = 104;
+        let est = store.estimate_call(&call).unwrap();
+        assert!(est.med > 1.0);
+        call.flags.uplo = Some(Uplo::Upper); // no model for this case
+        assert!(store.estimate_call(&call).is_none());
+    }
+}

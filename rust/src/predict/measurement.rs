@@ -1,0 +1,114 @@
+//! Reference ("empirical") algorithm executions on the virtual testbed —
+//! what the paper's predictions are validated against (§4.2).
+
+use crate::machine::Machine;
+use crate::util::stats::Summary;
+
+use super::algorithms::BlockedAlg;
+
+/// Measured algorithm runtime over `reps` whole-algorithm executions
+/// (paper: 10 repetitions via the Sampler).
+pub fn measure_algorithm(
+    machine: &Machine,
+    alg: &dyn BlockedAlg,
+    n: usize,
+    b: usize,
+    reps: usize,
+    seed: u64,
+) -> Summary {
+    let calls = alg.calls(n, b);
+    let mut session = machine.session(seed);
+    session.warmup();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        times.push(session.execute_all(&calls));
+    }
+    Summary::from_samples(&times)
+}
+
+/// Model-generation helper: ensure a store covers all cases an algorithm
+/// set needs, generating missing models with per-kernel domains.
+pub mod coverage {
+    use crate::machine::kernels::{size_dims, Call};
+    use crate::machine::Machine;
+    use crate::modeling::generator::GenConfig;
+    use crate::modeling::{case_key, generate_model, Domain, ModelStore};
+    use crate::predict::algorithms::{distinct_cases, BlockedAlg};
+
+    /// Standard model domain for a kernel (paper Ch. 4 prelude: problem
+    /// sizes to 4152, block sizes 24-536).
+    pub fn default_domain(template: &Call, max_n: usize, max_b: usize) -> Domain {
+        use crate::machine::kernels::KernelId::*;
+        let dims = size_dims(template.kernel);
+        match (dims, template.kernel) {
+            (1, _) => Domain::new(vec![24], vec![max_b]),
+            // Panel factorizations: tall x block.
+            (_, Getf2 | Geqr2 | Larft) => Domain::new(vec![24, 24], vec![max_n, max_b]),
+            (_, TrsylUnb) => Domain::new(vec![24, 24], vec![max_b, max_b]),
+            (2, _) => Domain::new(vec![24, 24], vec![max_n, max_n]),
+            (_, Gemm | Larfb) => Domain::new(vec![24, 24, 24], vec![max_n, max_n, max_n]),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Generate every model the algorithms need at (n, b) combinations up
+    /// to (max_n, max_b). Existing cases in `store` are kept.
+    pub fn ensure_models(
+        machine: &Machine,
+        store: &mut ModelStore,
+        algs: &[&dyn BlockedAlg],
+        max_n: usize,
+        max_b: usize,
+        seed: u64,
+    ) -> usize {
+        // Collect distinct cases over a probe call sequence (sizes chosen
+        // to expose every case incl. last-block remainders).
+        let mut templates: Vec<Call> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for alg in algs {
+            for (n, b) in [(max_n.min(520), max_b.min(104)), (296, 72)] {
+                for t in distinct_cases(&alg.calls(n, b)) {
+                    if seen.insert(case_key(&t)) {
+                        templates.push(t);
+                    }
+                }
+            }
+        }
+        let mut generated = 0;
+        for t in templates {
+            if store.get(&case_key(&t)).is_some() {
+                continue;
+            }
+            let domain = default_domain(&t, max_n, max_b);
+            let cfg = GenConfig::adjusted_for(&t, machine.threads);
+            let (model, _) = generate_model(machine, &cfg, &t, &domain, seed ^ 0xD0);
+            store.insert(model);
+            generated += 1;
+        }
+        generated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::{CpuId, Elem, Library};
+    use crate::predict::algorithms::potrf::Potrf;
+
+    #[test]
+    fn measurement_is_positive_and_ordered() {
+        let m = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let s = measure_algorithm(&m, &alg, 512, 128, 5, 1);
+        assert!(s.min > 0.0 && s.min <= s.med && s.med <= s.max);
+    }
+
+    #[test]
+    fn larger_problems_take_longer() {
+        let m = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let small = measure_algorithm(&m, &alg, 256, 128, 3, 1);
+        let large = measure_algorithm(&m, &alg, 1024, 128, 3, 1);
+        assert!(large.med > 10.0 * small.med);
+    }
+}

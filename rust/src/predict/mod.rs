@@ -1,0 +1,13 @@
+//! Model-based predictions for blocked algorithms (paper Ch. 4):
+//! runtime/performance/efficiency prediction, accuracy quantification,
+//! algorithm selection and block-size optimization.
+
+pub mod accuracy;
+pub mod algorithms;
+pub mod blocksize;
+pub mod measurement;
+pub mod predictor;
+pub mod selection;
+
+pub use algorithms::BlockedAlg;
+pub use predictor::{efficiency, performance, predict_calls, Prediction};

@@ -1,0 +1,143 @@
+//! Model-based runtime/performance/efficiency prediction for blocked
+//! algorithms (paper §4.1, eqs. 4.1-4.6).
+
+use crate::machine::kernels::Call;
+use crate::machine::Machine;
+use crate::modeling::ModelStore;
+use crate::util::stats::Summary;
+
+/// A full prediction with its summary statistics.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// Runtime statistics in seconds (eq. 4.2-4.3).
+    pub time: Summary,
+    /// Number of calls with no covering model (skipped — the dgeqrf
+    /// story of §4.4.1).
+    pub unmodeled_calls: usize,
+    pub total_calls: usize,
+}
+
+/// Predict an algorithm execution: sum per-call estimates (eq. 4.1); the
+/// standard deviation combines in quadrature assuming uncorrelated
+/// estimates (eq. 4.3).
+pub fn predict_calls(store: &ModelStore, calls: &[Call]) -> Prediction {
+    let mut time = Summary::constant(0.0);
+    let mut var = 0.0;
+    let mut unmodeled = 0;
+    for call in calls {
+        if !call.modeled() {
+            unmodeled += 1;
+            continue;
+        }
+        match store.estimate_call(call) {
+            Some(est) => {
+                time.min += est.min;
+                time.med += est.med;
+                time.max += est.max;
+                time.mean += est.mean;
+                var += est.std * est.std;
+            }
+            None => unmodeled += 1,
+        }
+    }
+    time.std = var.sqrt();
+    Prediction { time, unmodeled_calls: unmodeled, total_calls: calls.len() }
+}
+
+/// Performance prediction in GFLOPs/s from a runtime prediction and the
+/// operation's minimal cost (eqs. 4.4-4.5).
+pub fn performance(time: &Summary, op_flops: f64) -> Summary {
+    let g = 1e-9 * op_flops;
+    let mean = if time.mean > 0.0 {
+        g / time.mean * (1.0 + (time.std * time.std) / (time.mean * time.mean))
+    } else {
+        0.0
+    };
+    let std = if time.mean > 0.0 { g * time.std / (time.mean * time.mean) } else { 0.0 };
+    Summary {
+        // Note the min/max swap: fastest run = highest performance.
+        min: if time.max > 0.0 { g / time.max } else { 0.0 },
+        med: if time.med > 0.0 { g / time.med } else { 0.0 },
+        max: if time.min > 0.0 { g / time.min } else { 0.0 },
+        mean,
+        std,
+    }
+}
+
+/// Efficiency prediction relative to the machine's peak (eq. 4.6).
+pub fn efficiency(perf: &Summary, machine: &Machine, elem: crate::machine::Elem) -> Summary {
+    let peak = machine.peak_gflops(elem);
+    perf.map(|v| v / peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::{CpuId, Elem, Library};
+    use crate::modeling::model::{PerfModel, Piece};
+    use crate::modeling::Domain;
+
+    fn const_model(case: &str, secs: f64) -> PerfModel {
+        PerfModel {
+            case: case.into(),
+            exps: vec![vec![0]],
+            scale: vec![1000.0],
+            pieces: vec![Piece {
+                domain: Domain::new(vec![8], vec![1000]),
+                coeffs: [
+                    vec![secs],
+                    vec![secs],
+                    vec![secs * 1.1],
+                    vec![secs * 1.02],
+                    vec![secs * 0.05],
+                ],
+            }],
+            gen_cost: 0.0,
+            ..Default::default()
+        }
+    }
+
+    fn potf2_call(n: usize) -> Call {
+        let mut c = Call::new(crate::machine::KernelId::Potf2, Elem::D);
+        c.flags.uplo = Some(crate::machine::Uplo::Lower);
+        c.n = n;
+        c
+    }
+
+    #[test]
+    fn prediction_sums_estimates() {
+        let mut store = ModelStore::new("t");
+        store.insert(const_model("dpotf2_L_a1", 0.010));
+        let calls = vec![potf2_call(100), potf2_call(200), potf2_call(300)];
+        let p = predict_calls(&store, &calls);
+        assert!((p.time.med - 0.030).abs() < 1e-12);
+        // Std combines in quadrature: sqrt(3) x per-call std.
+        assert!((p.time.std - 0.0005 * 3f64.sqrt() * 3.0 / 3.0).abs() < 1e-9);
+        assert_eq!(p.unmodeled_calls, 0);
+    }
+
+    #[test]
+    fn unmodeled_calls_are_skipped_and_counted() {
+        let store = ModelStore::new("t");
+        let p = predict_calls(&store, &[potf2_call(100)]);
+        assert_eq!(p.unmodeled_calls, 1);
+        assert_eq!(p.time.med, 0.0);
+    }
+
+    #[test]
+    fn performance_inverts_time_with_min_max_swap() {
+        let t = Summary { min: 1.0, med: 2.0, max: 4.0, mean: 2.0, std: 0.0 };
+        let perf = performance(&t, 8e9);
+        assert!((perf.max - 8.0).abs() < 1e-12); // min time -> max perf
+        assert!((perf.min - 2.0).abs() < 1e-12);
+        assert!((perf.med - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_is_fraction_of_peak() {
+        let m = Machine::standard(CpuId::SandyBridge, Library::Mkl, 1);
+        let perf = Summary::constant(10.4);
+        let eff = efficiency(&perf, &m, Elem::D);
+        assert!((eff.med - 0.5).abs() < 1e-12); // 10.4 / 20.8
+    }
+}

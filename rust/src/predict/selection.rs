@@ -1,0 +1,147 @@
+//! Algorithm selection (paper §4.5): rank mathematically-equivalent
+//! blocked algorithms by predicted runtime without executing any of them.
+
+use crate::machine::Machine;
+use crate::modeling::ModelStore;
+use crate::util::stats::Summary;
+
+use super::algorithms::BlockedAlg;
+use super::measurement::measure_algorithm;
+use super::predictor::predict_calls;
+
+/// One algorithm's predicted and (optionally) measured runtime.
+#[derive(Clone, Debug)]
+pub struct RankedAlg {
+    pub name: String,
+    pub predicted: Summary,
+    pub measured: Option<Summary>,
+}
+
+/// Rank algorithms by predicted median runtime (ascending: fastest first).
+pub fn rank_algorithms(
+    store: &ModelStore,
+    algs: &[&dyn BlockedAlg],
+    n: usize,
+    b: usize,
+) -> Vec<RankedAlg> {
+    let mut out: Vec<RankedAlg> = algs
+        .iter()
+        .map(|alg| RankedAlg {
+            name: alg.name(),
+            predicted: predict_calls(store, &alg.calls(n, b)).time,
+            measured: None,
+        })
+        .collect();
+    out.sort_by(|a, b| a.predicted.med.partial_cmp(&b.predicted.med).unwrap());
+    out
+}
+
+/// Rank and also measure each algorithm for validation (the expensive path
+/// predictions replace).
+#[allow(clippy::too_many_arguments)]
+pub fn rank_and_validate(
+    machine: &Machine,
+    store: &ModelStore,
+    algs: &[&dyn BlockedAlg],
+    n: usize,
+    b: usize,
+    reps: usize,
+    seed: u64,
+) -> Vec<RankedAlg> {
+    let mut ranked = rank_algorithms(store, algs, n, b);
+    for r in &mut ranked {
+        let alg = algs.iter().find(|a| a.name() == r.name).unwrap();
+        r.measured = Some(measure_algorithm(machine, *alg, n, b, reps, seed));
+    }
+    ranked
+}
+
+/// Did the prediction pick the empirically fastest algorithm (or one
+/// within `tolerance` of it)? The paper's headline claim (§4.5.4).
+pub fn selection_quality(ranked: &[RankedAlg], tolerance: f64) -> Option<f64> {
+    let predicted_best = ranked.first()?;
+    let best_measured = ranked
+        .iter()
+        .filter_map(|r| r.measured.map(|m| m.med))
+        .fold(f64::INFINITY, f64::min);
+    let chosen = predicted_best.measured?.med;
+    let _ = tolerance;
+    Some(chosen / best_measured)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::KernelId;
+    use crate::modeling::model::{PerfModel, Piece};
+    use crate::modeling::Domain;
+    use crate::predict::algorithms::potrf::Potrf;
+    use crate::machine::{CpuId, Elem, Library};
+
+    /// Store with crude hand-made models: constant efficiency per kernel.
+    fn crude_store(machine: &Machine) -> ModelStore {
+        // Build models by sampling warm deterministic timings per kernel
+        // case on a coarse grid — enough for ranking tests.
+        use crate::modeling::generator::{generate_model, GenConfig};
+        use crate::predict::algorithms::{distinct_cases, BlockedAlg};
+        let mut store = ModelStore::new(&machine.label());
+        let algs = Potrf::all(Elem::D);
+        let cfg = GenConfig { reps: 5, oversampling: 2, err_bound: 0.03, ..Default::default() };
+        for alg in &algs {
+            for t in distinct_cases(&alg.calls(520, 104)) {
+                if store.get(&crate::modeling::case_key(&t)).is_some() {
+                    continue;
+                }
+                let domain = crate::predict::measurement::coverage::default_domain(&t, 1352, 536);
+                let cfg = if crate::machine::kernels::size_dims(t.kernel) >= 3 {
+                    GenConfig { overfit: 0, min_width: 64, ..cfg.clone() }
+                } else {
+                    cfg.clone()
+                };
+                let (m, _) = generate_model(machine, &cfg, &t, &domain, 5);
+                store.insert(m);
+            }
+        }
+        store
+    }
+
+    #[test]
+    fn ranking_identifies_variant3_as_fastest_cholesky() {
+        // Paper Fig. 4.12 / Ex. 1.2: variant 3 wins.
+        let machine =
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let store = crude_store(&machine);
+        let algs = Potrf::all(Elem::D);
+        let refs: Vec<&dyn crate::predict::algorithms::BlockedAlg> =
+            algs.iter().map(|a| a as _).collect();
+        let ranked = rank_algorithms(&store, &refs, 1096, 128);
+        assert_eq!(ranked[0].name, "dpotrf_L-var3", "{ranked:?}");
+    }
+
+    #[test]
+    fn validation_confirms_prediction() {
+        let machine =
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let store = crude_store(&machine);
+        let algs = Potrf::all(Elem::D);
+        let refs: Vec<&dyn crate::predict::algorithms::BlockedAlg> =
+            algs.iter().map(|a| a as _).collect();
+        let ranked = rank_and_validate(&machine, &store, &refs, 1096, 128, 3, 7);
+        let q = selection_quality(&ranked, 0.02).unwrap();
+        assert!(q <= 1.05, "selected algorithm within 5% of true best, got {q}");
+        // Prediction error of the winner within the paper's single-thread
+        // ballpark (a few percent).
+        let win = &ranked[0];
+        let re = (win.predicted.med - win.measured.unwrap().med).abs() / win.measured.unwrap().med;
+        assert!(re < 0.10, "re={re}");
+    }
+
+    #[test]
+    fn syrk_case_is_generated_for_ranking() {
+        let machine =
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let store = crude_store(&machine);
+        assert!(store.models.keys().any(|k| k.contains("syrk")), "{:?}", store.models.keys());
+        let _ = KernelId::Syrk;
+    }
+}

@@ -1,0 +1,24 @@
+//! Figure/table output sink: every experiment driver writes a CSV with the
+//! exact numbers plus an ASCII rendition, both under `out/`.
+
+use std::path::{Path, PathBuf};
+
+pub struct Report {
+    pub out_dir: PathBuf,
+    pub quiet: bool,
+}
+
+impl Report {
+    pub fn new(out_dir: &Path, quiet: bool) -> Report {
+        std::fs::create_dir_all(out_dir).ok();
+        Report { out_dir: out_dir.to_path_buf(), quiet }
+    }
+
+    pub fn emit(&self, id: &str, text: &str, csv: &str) {
+        std::fs::write(self.out_dir.join(format!("{id}.txt")), text).ok();
+        std::fs::write(self.out_dir.join(format!("{id}.csv")), csv).ok();
+        if !self.quiet {
+            println!("\n==== {id} ====\n{text}");
+        }
+    }
+}

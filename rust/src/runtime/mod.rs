@@ -1,0 +1,366 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module gives the
+//! prediction/fitting engines their L1/L2 compute without ever touching the
+//! interpreter. HLO *text* is the interchange format (see
+//! /opt/xla-example/README.md: serialized protos from jax >= 0.5 are
+//! rejected by xla_extension 0.5.1).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed artifact manifest (python/compile/aot.py).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: HashMap<String, Entry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+    pub constants: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for e in j.req("entries")?.as_arr().unwrap() {
+            let name = e.req("name")?.as_str().unwrap().to_string();
+            let mut input_shapes = Vec::new();
+            let mut input_dtypes = Vec::new();
+            for inp in e.req("inputs")?.as_arr().unwrap() {
+                input_shapes.push(
+                    inp.req("shape")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .filter_map(|v| v.as_usize())
+                        .collect(),
+                );
+                input_dtypes.push(inp.req("dtype")?.as_str().unwrap_or("").to_string());
+            }
+            let mut constants = HashMap::new();
+            if let Some(c) = e.get("constants").and_then(|c| c.as_obj()) {
+                for (k, v) in c {
+                    if let Some(n) = v.as_usize() {
+                        constants.insert(k.clone(), n);
+                    }
+                }
+            }
+            entries.insert(
+                name.clone(),
+                Entry { name, file: dir.join(e.req("file")?.as_str().unwrap()), input_shapes, input_dtypes, constants },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+/// The PJRT CPU client with compiled executables, one per artifact entry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifact location: `<repo>/artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("DLAPM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(&Self::artifacts_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Runtime { client, manifest, executables: HashMap::new() })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact entry '{name}'"))
+    }
+
+    /// Compile (once) and return the executable for an entry.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let entry = self.entry(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                entry
+                    .file
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(to_anyhow)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute an entry with literal inputs; returns the flattened output
+    /// tuple elements.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs).map_err(to_anyhow)?;
+        let mut out = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        // aot.py lowers with return_tuple=True.
+        let elems = out.decompose_tuple().map_err(to_anyhow)?;
+        Ok(elems)
+    }
+
+    // ------------------------------------------------------- entry points
+
+    /// Relative-LSQ fit via the `fit` artifact: scaled design matrix rows
+    /// (n x m, row-major, n <= N, m <= M; padded with zeros). Returns the
+    /// first `m` coefficients.
+    pub fn fit(&mut self, x: &[f64], n: usize, m: usize) -> Result<Vec<f64>> {
+        let entry = self.entry("fit")?;
+        let (cap_n, cap_m) = (entry.constants["n"], entry.constants["m"]);
+        anyhow::ensure!(n <= cap_n && m <= cap_m, "fit exceeds artifact capacity");
+        let mut padded = vec![0.0f64; cap_n * cap_m];
+        for i in 0..n {
+            padded[i * cap_m..i * cap_m + m].copy_from_slice(&x[i * m..(i + 1) * m]);
+        }
+        let lit = xla::Literal::vec1(&padded)
+            .reshape(&[cap_n as i64, cap_m as i64])
+            .map_err(to_anyhow)?;
+        let out = self.execute("fit", &[lit])?;
+        let beta: Vec<f64> = out[0].to_vec().map_err(to_anyhow)?;
+        Ok(beta[..m].to_vec())
+    }
+
+    /// Batched piecewise polynomial evaluation via the `polyeval` artifact.
+    /// coeffs: p x m row-major; piece_idx: k entries; pts: k x d row-major;
+    /// exps: m x d. Larger batches are chunked internally.
+    pub fn polyeval(
+        &mut self,
+        coeffs: &[f64],
+        p: usize,
+        m: usize,
+        piece_idx: &[i32],
+        pts: &[f64],
+        d: usize,
+        exps: &[i32],
+    ) -> Result<Vec<f64>> {
+        let entry = self.entry("polyeval")?.clone();
+        let (cap_k, cap_p, cap_m, cap_d) = (
+            entry.constants["k"],
+            entry.constants["p"],
+            entry.constants["m"],
+            entry.constants["d"],
+        );
+        anyhow::ensure!(p <= cap_p, "too many pieces for the polyeval artifact ({p} > {cap_p})");
+        anyhow::ensure!(m <= cap_m && d <= cap_d, "monomial table exceeds artifact capacity");
+        let k = piece_idx.len();
+        anyhow::ensure!(pts.len() == k * d, "pts length mismatch");
+
+        // Pad coeffs (p x m -> P x M) and exps (m x d -> M x D); extra
+        // monomials get zero coefficients, extra dims exponent 0.
+        let mut coeffs_p = vec![0.0f64; cap_p * cap_m];
+        for i in 0..p {
+            coeffs_p[i * cap_m..i * cap_m + m].copy_from_slice(&coeffs[i * m..(i + 1) * m]);
+        }
+        let mut exps_p = vec![0i32; cap_m * cap_d];
+        for j in 0..m {
+            exps_p[j * cap_d..j * cap_d + d].copy_from_slice(&exps[j * d..(j + 1) * d]);
+        }
+        let coeffs_lit = xla::Literal::vec1(&coeffs_p)
+            .reshape(&[cap_p as i64, cap_m as i64])
+            .map_err(to_anyhow)?;
+        let exps_lit = xla::Literal::vec1(&exps_p)
+            .reshape(&[cap_m as i64, cap_d as i64])
+            .map_err(to_anyhow)?;
+
+        let mut out = Vec::with_capacity(k);
+        for chunk_start in (0..k).step_by(cap_k) {
+            let chunk = (k - chunk_start).min(cap_k);
+            let mut idx = vec![0i32; cap_k];
+            idx[..chunk].copy_from_slice(&piece_idx[chunk_start..chunk_start + chunk]);
+            // Pad points with 1.0 (any in-domain value; results discarded).
+            let mut pts_p = vec![1.0f64; cap_k * cap_d];
+            for i in 0..chunk {
+                let src = &pts[(chunk_start + i) * d..(chunk_start + i + 1) * d];
+                pts_p[i * cap_d..i * cap_d + d].copy_from_slice(src);
+            }
+            let idx_lit = xla::Literal::vec1(&idx).reshape(&[cap_k as i64]).map_err(to_anyhow)?;
+            let pts_lit = xla::Literal::vec1(&pts_p)
+                .reshape(&[cap_k as i64, cap_d as i64])
+                .map_err(to_anyhow)?;
+            let res = self.execute(
+                "polyeval",
+                &[coeffs_lit.clone(), idx_lit, pts_lit, exps_lit.clone()],
+            )?;
+            let vals: Vec<f64> = res[0].to_vec().map_err(to_anyhow)?;
+            out.extend_from_slice(&vals[..chunk]);
+        }
+        Ok(out)
+    }
+
+    /// Real matmul through the Pallas gemm artifact (f32, fixed size).
+    pub fn gemm(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let entry = self.entry("gemm")?;
+        let n = entry.constants["n"];
+        anyhow::ensure!(a.len() == n * n && b.len() == n * n, "gemm expects {n}x{n}");
+        let a_lit = xla::Literal::vec1(a).reshape(&[n as i64, n as i64]).map_err(to_anyhow)?;
+        let b_lit = xla::Literal::vec1(b).reshape(&[n as i64, n as i64]).map_err(to_anyhow)?;
+        let out = self.execute("gemm", &[a_lit, b_lit])?;
+        out[0].to_vec().map_err(to_anyhow)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// PJRT-backed model evaluation: estimate many calls against one model in
+/// one (or few) dispatches. Mirrors `PerfModel::estimate` for the median
+/// statistic.
+pub fn polyeval_model(
+    rt: &mut Runtime,
+    model: &crate::modeling::PerfModel,
+    stat: crate::util::stats::Stat,
+    points: &[Vec<usize>],
+) -> Result<Vec<f64>> {
+    let m = model.exps.len();
+    let d = model.dims();
+    let p = model.pieces.len();
+    let si = crate::util::stats::Stat::ALL.iter().position(|s| *s == stat).unwrap();
+    let mut coeffs = Vec::with_capacity(p * m);
+    for piece in &model.pieces {
+        coeffs.extend_from_slice(&piece.coeffs[si]);
+    }
+    let mut piece_idx = Vec::with_capacity(points.len());
+    let mut pts = Vec::with_capacity(points.len() * d);
+    for pt in points {
+        piece_idx.push(model.piece_index(pt) as i32);
+        for x in model.scaled(pt) {
+            pts.push(x);
+        }
+    }
+    let exps: Vec<i32> = model
+        .exps
+        .iter()
+        .flat_map(|e| e.iter().map(|&v| v as i32))
+        .collect();
+    rt.polyeval(&coeffs, p, m, &piece_idx, &pts, d, &exps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::load_default().ok()
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let m = Manifest::load(&Runtime::artifacts_dir());
+        if let Ok(m) = m {
+            assert!(m.entries.contains_key("fit"));
+            assert!(m.entries.contains_key("polyeval"));
+            assert!(m.entries.contains_key("gemm"));
+            assert_eq!(m.entries["fit"].input_shapes[0].len(), 2);
+        }
+    }
+
+    #[test]
+    fn pjrt_fit_matches_rust_fit() {
+        let Some(mut rt) = runtime() else { return };
+        // y = 1 + 2x on x in (0,1]: relative design matrix rows [1/y, x/y].
+        let pts: Vec<f64> = (1..=32).map(|i| i as f64 / 32.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|x| 1.0 + 2.0 * x).collect();
+        let mut x = Vec::new();
+        for (p, y) in pts.iter().zip(&ys) {
+            x.push(1.0 / y);
+            x.push(p / y);
+        }
+        let beta_pjrt = rt.fit(&x, 32, 2).unwrap();
+        let beta_rust = crate::modeling::fit::rust_fit(&x, 32, 2);
+        for (a, b) in beta_pjrt.iter().zip(&beta_rust) {
+            assert!((a - b).abs() < 1e-7, "{beta_pjrt:?} vs {beta_rust:?}");
+        }
+        assert!((beta_pjrt[0] - 1.0).abs() < 1e-5);
+        assert!((beta_pjrt[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pjrt_polyeval_matches_scalar_eval() {
+        let Some(mut rt) = runtime() else { return };
+        // Two pieces of a 1-D model: p0(x) = 1 + x, p1(x) = 2x.
+        let coeffs = [1.0, 1.0, 0.0, 2.0];
+        let exps = [0, 1];
+        let piece_idx = [0i32, 0, 1, 1];
+        let pts = [0.25, 0.5, 0.25, 1.0];
+        let got = rt.polyeval(&coeffs, 2, 2, &piece_idx, &pts, 1, &exps).unwrap();
+        let want = [1.25, 1.5, 0.5, 2.0];
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() < 1e-12, "{got:?}");
+        }
+    }
+
+    #[test]
+    fn pjrt_gemm_runs_real_matmul() {
+        let Some(mut rt) = runtime() else { return };
+        let n = rt.entry("gemm").unwrap().constants["n"];
+        let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32) * 0.5).collect();
+        let mut eye = vec![0.0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let c = rt.gemm(&a, &eye).unwrap();
+        for (x, y) in c.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn polyeval_model_agrees_with_estimate() {
+        let Some(mut rt) = runtime() else { return };
+        use crate::modeling::model::{PerfModel, Piece};
+        use crate::modeling::Domain;
+        let model = PerfModel {
+            case: "t".into(),
+            exps: vec![vec![0], vec![1], vec![2]],
+            scale: vec![512.0],
+            pieces: vec![
+                Piece {
+                    domain: Domain::new(vec![8], vec![256]),
+                    coeffs: std::array::from_fn(|_| vec![0.5, 1.0, 2.0]),
+                },
+                Piece {
+                    domain: Domain::new(vec![256], vec![512]),
+                    coeffs: std::array::from_fn(|_| vec![0.1, 3.0, 0.0]),
+                },
+            ],
+            gen_cost: 0.0,
+            ..Default::default()
+        };
+        let points: Vec<Vec<usize>> = vec![vec![64], vec![200], vec![300], vec![512]];
+        let got = polyeval_model(&mut rt, &model, crate::util::stats::Stat::Med, &points).unwrap();
+        for (pt, g) in points.iter().zip(&got) {
+            let want = model.estimate(pt).med;
+            assert!((g - want).abs() / want < 1e-10, "{pt:?}: {g} vs {want}");
+        }
+    }
+}

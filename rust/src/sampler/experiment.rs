@@ -1,0 +1,139 @@
+//! Programmatic measurement workflow (the ELAPS Python framework layer,
+//! paper §2.2.2): run a set of calls with shuffled repetitions and reduce
+//! each call's timings to [`Summary`] statistics.
+//!
+//! Shuffling repetitions across the whole run is the paper's mitigation for
+//! long-term performance levels (§2.1.2.3): each call's repetitions are
+//! spread over the session so summary statistics see both levels.
+
+use crate::machine::kernels::Call;
+use crate::machine::{Machine, Session};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Measurement plan for a set of calls.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub reps: usize,
+    /// Shuffle repetitions across calls (paper default: yes).
+    pub shuffle: bool,
+    /// Execute each measurement twice and keep the second timing — the
+    /// warm-data convention of model generation (§3.1.6).
+    pub warm_double_run: bool,
+    pub seed: u64,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment { reps: 10, shuffle: true, warm_double_run: false, seed: 0x5EED }
+    }
+}
+
+/// Summary timings (seconds) for each call of an experiment.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub per_call: Vec<Summary>,
+    /// Raw per-repetition seconds for each call.
+    pub raw: Vec<Vec<f64>>,
+    /// Virtual seconds the whole experiment consumed — the "cost" the
+    /// paper's predictions avoid.
+    pub virtual_seconds: f64,
+}
+
+impl Experiment {
+    /// Run `calls` on a fresh session of `machine`.
+    pub fn run(&self, machine: &Machine, calls: &[Call]) -> Report {
+        let mut session = machine.session(self.seed);
+        session.warmup();
+        self.run_in(&mut session, calls)
+    }
+
+    /// Run on an existing session (keeps cache/thermal state).
+    pub fn run_in(&self, session: &mut Session, calls: &[Call]) -> Report {
+        let t0 = session.virtual_time();
+        // Build the (call index, repetition) schedule.
+        let mut schedule: Vec<usize> = (0..calls.len())
+            .flat_map(|ci| std::iter::repeat(ci).take(self.reps))
+            .collect();
+        if self.shuffle {
+            let mut rng = Rng::new(self.seed ^ 0xE1AF5u64);
+            rng.shuffle(&mut schedule);
+        }
+        let mut raw: Vec<Vec<f64>> = vec![Vec::with_capacity(self.reps); calls.len()];
+        for ci in schedule {
+            if self.warm_double_run {
+                // First run establishes the cache precondition…
+                session.execute(&calls[ci]);
+            }
+            // …the (second) run is the measurement.
+            let t = session.execute(&calls[ci]);
+            raw[ci].push(t.seconds);
+        }
+        let per_call = raw.iter().map(|r| Summary::from_samples(r)).collect();
+        Report {
+            per_call,
+            raw,
+            virtual_seconds: session.virtual_time() - t0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::kernels::KernelId;
+    use crate::machine::{CpuId, Elem, Library, Machine};
+
+    fn gemm(n: usize) -> Call {
+        let mut c = Call::new(KernelId::Gemm, Elem::D);
+        (c.m, c.n, c.k) = (n, n, n);
+        c
+    }
+
+    fn machine() -> Machine {
+        Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1)
+    }
+
+    #[test]
+    fn report_has_one_summary_per_call() {
+        let exp = Experiment { reps: 7, ..Default::default() };
+        let rep = exp.run(&machine(), &[gemm(100), gemm(200)]);
+        assert_eq!(rep.per_call.len(), 2);
+        assert_eq!(rep.raw[0].len(), 7);
+        assert!(rep.per_call[1].med > rep.per_call[0].med);
+    }
+
+    #[test]
+    fn summaries_are_ordered() {
+        let exp = Experiment::default();
+        let rep = exp.run(&machine(), &[gemm(300)]);
+        let s = rep.per_call[0];
+        assert!(s.min <= s.med && s.med <= s.max);
+        assert!(s.std >= 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let exp = Experiment::default();
+        let a = exp.run(&machine(), &[gemm(128)]);
+        let b = exp.run(&machine(), &[gemm(128)]);
+        assert_eq!(a.per_call[0], b.per_call[0]);
+    }
+
+    #[test]
+    fn virtual_seconds_accumulate() {
+        let exp = Experiment { reps: 5, ..Default::default() };
+        let rep = exp.run(&machine(), &[gemm(400)]);
+        let total: f64 = rep.raw[0].iter().sum();
+        assert!(rep.virtual_seconds >= total * 0.99);
+    }
+
+    #[test]
+    fn noise_shrinks_with_problem_size() {
+        // Fig. 2.1: relative fluctuations fall with size.
+        let exp = Experiment { reps: 30, ..Default::default() };
+        let rep = exp.run(&machine(), &[gemm(64), gemm(1024)]);
+        let rel = |s: &Summary| s.std / s.mean;
+        assert!(rel(&rep.per_call[0]) > rel(&rep.per_call[1]));
+    }
+}

@@ -1,0 +1,347 @@
+//! The Sampler: ELAPS's low-level measurement tool (paper §2.2.1).
+//!
+//! A text protocol drives kernel executions on a virtual testbed
+//! ([`crate::machine::Session`]) and reports per-call cycles plus the
+//! PAPI-style LLC-miss counter:
+//!
+//! ```text
+//! dmalloc A 1000000
+//! set_counters PAPI_L3_TCM
+//! dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+//! go
+//! ```
+//!
+//! Besides the text front-end, [`experiment`] offers the programmatic
+//! repeated-shuffled-measurement workflow the whole framework uses
+//! (§2.1.2.3's mitigation: repetitions of all calls interleaved).
+
+pub mod experiment;
+pub mod signatures;
+
+use std::collections::HashMap;
+
+use crate::machine::kernels::{Call, Diag, Region, Scalar, Side, Trans, Uplo};
+use crate::machine::{Elem, Session};
+use signatures::{mat_shape, signature, Arg};
+
+/// A named buffer created by `dmalloc`.
+#[derive(Clone, Debug)]
+struct Buffer {
+    id: u64,
+    #[allow(dead_code)]
+    len: usize,
+}
+
+/// Result of one sampled call.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub call: Call,
+    pub cycles: f64,
+    pub seconds: f64,
+    pub llc_misses: u64,
+}
+
+/// The Sampler session: parses commands, defers calls until `go`.
+pub struct Sampler {
+    session: Session,
+    buffers: HashMap<String, Buffer>,
+    pending: Vec<Call>,
+    next_id: u64,
+    counters_enabled: bool,
+    /// Kernels whose code has been loaded (first use misses instructions).
+    warm_kernels: std::collections::HashSet<crate::machine::KernelId>,
+    pub samples: Vec<Sample>,
+}
+
+impl Sampler {
+    pub fn new(session: Session) -> Sampler {
+        Sampler {
+            session,
+            buffers: HashMap::new(),
+            pending: Vec::new(),
+            next_id: 1,
+            counters_enabled: false,
+            warm_kernels: std::collections::HashSet::new(),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Feed one input line; returns output lines produced (if any).
+    pub fn feed(&mut self, line: &str) -> anyhow::Result<Vec<String>> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(Vec::new());
+        }
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        match tokens[0] {
+            "dmalloc" | "smalloc" | "cmalloc" | "zmalloc" => {
+                anyhow::ensure!(tokens.len() == 3, "malloc: usage `dmalloc NAME LEN`");
+                let name = tokens[1].to_string();
+                let len: usize = tokens[2].parse()?;
+                let id = self.fresh_id();
+                self.buffers.insert(name, Buffer { id, len });
+                Ok(Vec::new())
+            }
+            "set_counters" => {
+                self.counters_enabled = tokens[1..].contains(&"PAPI_L3_TCM");
+                Ok(Vec::new())
+            }
+            "flush_cache" => {
+                self.session.flush_cache();
+                Ok(Vec::new())
+            }
+            "go" => Ok(self.go()),
+            routine => {
+                let call = self.parse_call(routine, &tokens[1..])?;
+                self.pending.push(call);
+                Ok(Vec::new())
+            }
+        }
+    }
+
+    /// Execute all pending calls; returns one output line per call:
+    /// `<cycles> [<llc_misses>]`.
+    pub fn go(&mut self) -> Vec<String> {
+        let calls = std::mem::take(&mut self.pending);
+        let mut out = Vec::with_capacity(calls.len());
+        for call in calls {
+            // First use of a kernel loads its code: a few hundred extra
+            // line misses (Ex. 2.7: the first daxpy misses 760 lines).
+            let code_misses = if self.warm_kernels.insert(call.kernel) { 740 } else { 0 };
+            let timing = self.session.execute(&call);
+            let misses = timing.llc_misses + code_misses;
+            let cycles = timing.cycles + code_misses as f64 * 20.0;
+            out.push(if self.counters_enabled {
+                format!("{:.0}\t{}", cycles, misses)
+            } else {
+                format!("{:.0}", cycles)
+            });
+            self.samples.push(Sample {
+                call,
+                cycles,
+                seconds: timing.seconds,
+                llc_misses: misses,
+            });
+        }
+        out
+    }
+
+    /// Process a full script, returning all output lines.
+    pub fn run_script(&mut self, script: &str) -> anyhow::Result<Vec<String>> {
+        let mut out = Vec::new();
+        for line in script.lines() {
+            out.extend(self.feed(line)?);
+        }
+        // EOF behaves like `go` (the paper's ctrl+D).
+        out.extend(self.go());
+        Ok(out)
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn parse_call(&mut self, routine: &str, args: &[&str]) -> anyhow::Result<Call> {
+        let elem = Elem::parse(
+            routine
+                .chars()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("empty routine"))?,
+        )
+        .ok_or_else(|| anyhow::anyhow!("unknown type prefix in '{routine}'"))?;
+        let (kernel, sig) = signature(routine)
+            .ok_or_else(|| anyhow::anyhow!("unknown routine '{routine}'"))?;
+        anyhow::ensure!(
+            args.len() == sig.len(),
+            "'{routine}' expects {} arguments, got {}",
+            sig.len(),
+            args.len()
+        );
+
+        let mut call = Call::new(kernel, elem);
+        // matrix slot -> (buffer id, declared ld)
+        let mut mats: [Option<u64>; 3] = [None; 3];
+        for (arg, tok) in sig.iter().zip(args) {
+            match arg {
+                Arg::Side => {
+                    call.flags.side = Some(match *tok {
+                        "L" => Side::Left,
+                        "R" => Side::Right,
+                        t => anyhow::bail!("bad side '{t}'"),
+                    })
+                }
+                Arg::Uplo => {
+                    call.flags.uplo = Some(match *tok {
+                        "L" => Uplo::Lower,
+                        "U" => Uplo::Upper,
+                        t => anyhow::bail!("bad uplo '{t}'"),
+                    })
+                }
+                Arg::TransA => {
+                    call.flags.trans_a = Some(match *tok {
+                        "N" => Trans::No,
+                        "T" | "C" => Trans::Yes,
+                        t => anyhow::bail!("bad trans '{t}'"),
+                    })
+                }
+                Arg::TransB => {
+                    call.flags.trans_b = Some(match *tok {
+                        "N" => Trans::No,
+                        "T" | "C" => Trans::Yes,
+                        t => anyhow::bail!("bad trans '{t}'"),
+                    })
+                }
+                Arg::Diag => {
+                    call.flags.diag = Some(match *tok {
+                        "N" => Diag::NonUnit,
+                        "U" => Diag::Unit,
+                        t => anyhow::bail!("bad diag '{t}'"),
+                    })
+                }
+                Arg::M => call.m = tok.parse()?,
+                Arg::N => call.n = tok.parse()?,
+                Arg::K => call.k = tok.parse()?,
+                Arg::Alpha => call.alpha = Scalar::classify(tok.parse()?),
+                Arg::Beta => call.beta = Scalar::classify(tok.parse()?),
+                Arg::Mat(slot) => mats[*slot as usize] = Some(self.data_id(tok)),
+                Arg::Ld(slot) => match *slot {
+                    0 => call.lda = tok.parse()?,
+                    1 => call.ldb = tok.parse()?,
+                    _ => call.ldc = tok.parse()?,
+                },
+                Arg::Vec(slot) => {
+                    let id = self.data_id(tok);
+                    // Vector length = n elements spread by increment.
+                    call.operands.push(Region::new(id, 0, 0, call.n.max(call.m), 1, elem));
+                    let _ = slot;
+                }
+                Arg::Inc(slot) => match *slot {
+                    0 => call.incx = tok.parse()?,
+                    _ => call.incy = tok.parse()?,
+                },
+                Arg::IgnoredInt => {
+                    let _: i64 = tok.parse()?;
+                }
+                Arg::IgnoredBuf => {}
+            }
+        }
+        // Build matrix operand regions now that dims/flags are known.
+        let side_left = call.flags.side != Some(Side::Right);
+        let trans_a = call.flags.trans_a == Some(Trans::Yes);
+        for (slot, id) in mats.iter().enumerate() {
+            if let Some(id) = id {
+                let (rows, cols) = mat_shape(kernel, slot as u8, call.m, call.n, call.k, side_left, trans_a);
+                if rows > 0 && cols > 0 {
+                    call.operands.push(Region::new(*id, 0, 0, rows, cols, elem));
+                }
+            }
+        }
+        Ok(call)
+    }
+
+    /// Resolve a data token: named buffer or `[len]` ad-hoc allocation.
+    fn data_id(&mut self, tok: &str) -> u64 {
+        if tok.starts_with('[') {
+            // Ad-hoc: allocated and randomized at parse time — hence warm
+            // in cache for its first use (Ex. 2.7's daxpy behaviour). A
+            // fresh id per occurrence; pre-touched below in parse_call
+            // would be ideal, but warmth matters only across repetitions,
+            // which reuse the same parsed call object anyway.
+            self.fresh_id()
+        } else {
+            match self.buffers.get(tok) {
+                Some(b) => b.id,
+                None => {
+                    let id = self.fresh_id();
+                    self.buffers.insert(tok.to_string(), Buffer { id, len: 0 });
+                    id
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::{CpuId, Library, Machine};
+
+    fn sampler() -> Sampler {
+        let m = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, 1);
+        Sampler::new(m.session(42))
+    }
+
+    #[test]
+    fn example_2_7_dgemm_session() {
+        // Paper Ex. 2.7: five dgemms; the first has more misses and is
+        // slower than the rest.
+        let mut s = sampler();
+        let script = "\
+dmalloc A 1000000
+dmalloc B 1000000
+dmalloc C 1000000
+set_counters PAPI_L3_TCM
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+dgemm N N 1000 1000 1000 1 A 1000 B 1000 1 C 1000
+go";
+        let out = s.run_script(script).unwrap();
+        assert_eq!(out.len(), 5);
+        let misses: Vec<u64> = s.samples.iter().map(|x| x.llc_misses).collect();
+        assert!(misses[0] > 10 * misses[1].max(1), "misses={misses:?}");
+        let cyc: Vec<f64> = s.samples.iter().map(|x| x.cycles).collect();
+        assert!(cyc[0] > cyc[2]);
+    }
+
+    #[test]
+    fn adhoc_daxpy_has_code_misses_only_on_first() {
+        let mut s = sampler();
+        s.session_warmup();
+        for _ in 0..5 {
+            s.feed("daxpy 100000 1.5 [100000] 1 [100000] 1").unwrap();
+        }
+        let out = s.go();
+        assert_eq!(out.len(), 5);
+        let m: Vec<u64> = s.samples.iter().map(|x| x.llc_misses).collect();
+        assert!(m[0] >= 740, "first daxpy loads kernel code: {m:?}");
+    }
+
+    #[test]
+    fn named_buffers_are_shared_across_calls() {
+        let mut s = sampler();
+        s.feed("dmalloc A 65536").unwrap();
+        s.feed("dpotf2 L 256 A 256").unwrap();
+        s.feed("dpotf2 L 256 A 256").unwrap();
+        s.go();
+        // Second call on the same buffer hits cache.
+        assert!(s.samples[1].llc_misses < s.samples[0].llc_misses / 2);
+    }
+
+    #[test]
+    fn bad_routine_is_an_error() {
+        let mut s = sampler();
+        assert!(s.feed("dfoo 1 2 3").is_err());
+        assert!(s.feed("dgemm N N 1 2").is_err()); // arity
+    }
+
+    #[test]
+    fn flags_parse_into_call() {
+        let mut s = sampler();
+        s.feed("dtrsm L L N N 256 256 1.0 A 256 B 256").unwrap();
+        let c = &s.pending[0];
+        assert_eq!(c.flags.side, Some(Side::Left));
+        assert_eq!(c.flags.diag, Some(Diag::NonUnit));
+        assert_eq!(c.alpha, Scalar::One);
+        assert_eq!(c.describe(), "dtrsm_LLNN(m=256, n=256)");
+    }
+
+    impl Sampler {
+        fn session_warmup(&mut self) {
+            self.session.warmup();
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! BLAS/LAPACK call-signature table for the Sampler's text protocol
+//! (paper §2.2.1, App. B): maps routine names like `dgemm` to an argument
+//! layout so input lines can be parsed into [`Call`]s.
+
+use crate::machine::kernels::KernelId;
+
+/// One argument slot in a routine signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arg {
+    /// L/R
+    Side,
+    /// L/U
+    Uplo,
+    /// N/T for operand A
+    TransA,
+    /// N/T for operand B
+    TransB,
+    /// N/U
+    Diag,
+    /// size arguments, in order m, n, k
+    M,
+    N,
+    K,
+    /// scalar multipliers
+    Alpha,
+    Beta,
+    /// matrix data argument (named buffer or [len]); index 0..3
+    Mat(u8),
+    /// leading dimension for matrix 0..3
+    Ld(u8),
+    /// vector data argument 0..2
+    Vec(u8),
+    /// increment for vector 0..2
+    Inc(u8),
+    /// integer argument that is parsed and ignored (itype, isgn, k1, k2)
+    IgnoredInt,
+    /// pivot / tau auxiliary buffer name, ignored
+    IgnoredBuf,
+}
+
+/// Signature of a routine: kernel id + ordered argument slots.
+pub fn signature(routine: &str) -> Option<(KernelId, &'static [Arg])> {
+    use Arg::*;
+    use KernelId::*;
+    // Strip the type prefix (s/d/c/z); the caller extracts the Elem.
+    let body = &routine[1..];
+    Some(match body {
+        "gemm" => (
+            Gemm,
+            &[TransA, TransB, M, N, K, Alpha, Mat(0), Ld(0), Mat(1), Ld(1), Beta, Mat(2), Ld(2)][..],
+        ),
+        "symm" => (
+            Symm,
+            &[Side, Uplo, M, N, Alpha, Mat(0), Ld(0), Mat(1), Ld(1), Beta, Mat(2), Ld(2)][..],
+        ),
+        "syrk" | "herk" => (
+            Syrk,
+            &[Uplo, TransA, N, K, Alpha, Mat(0), Ld(0), Beta, Mat(2), Ld(2)][..],
+        ),
+        "syr2k" | "her2k" => (
+            Syr2k,
+            &[Uplo, TransA, N, K, Alpha, Mat(0), Ld(0), Mat(1), Ld(1), Beta, Mat(2), Ld(2)][..],
+        ),
+        "trmm" => (
+            Trmm,
+            &[Side, Uplo, TransA, Diag, M, N, Alpha, Mat(0), Ld(0), Mat(1), Ld(1)][..],
+        ),
+        "trsm" => (
+            Trsm,
+            &[Side, Uplo, TransA, Diag, M, N, Alpha, Mat(0), Ld(0), Mat(1), Ld(1)][..],
+        ),
+        "gemv" => (
+            Gemv,
+            &[TransA, M, N, Alpha, Mat(0), Ld(0), Vec(0), Inc(0), Beta, Vec(1), Inc(1)][..],
+        ),
+        "trsv" => (
+            Trsv,
+            &[Uplo, TransA, Diag, N, Mat(0), Ld(0), Vec(0), Inc(0)][..],
+        ),
+        "ger" => (
+            Ger,
+            &[M, N, Alpha, Vec(0), Inc(0), Vec(1), Inc(1), Mat(0), Ld(0)][..],
+        ),
+        "axpy" => (Axpy, &[N, Alpha, Vec(0), Inc(0), Vec(1), Inc(1)][..]),
+        "dot" => (Dot, &[N, Vec(0), Inc(0), Vec(1), Inc(1)][..]),
+        "copy" => (Copy, &[N, Vec(0), Inc(0), Vec(1), Inc(1)][..]),
+        "swap" => (Swap, &[N, Vec(0), Inc(0), Vec(1), Inc(1)][..]),
+        "scal" => (Scal, &[N, Alpha, Vec(0), Inc(0)][..]),
+        "potf2" => (Potf2, &[Uplo, N, Mat(0), Ld(0)][..]),
+        "trti2" => (Trti2, &[Uplo, Diag, N, Mat(0), Ld(0)][..]),
+        "lauu2" => (Lauu2, &[Uplo, N, Mat(0), Ld(0)][..]),
+        "getf2" => (Getf2, &[M, N, Mat(0), Ld(0), IgnoredBuf][..]),
+        "sygs2" | "hegs2" => (
+            Sygs2,
+            &[IgnoredInt, Uplo, N, Mat(0), Ld(0), Mat(1), Ld(1)][..],
+        ),
+        "geqr2" => (Geqr2, &[M, N, Mat(0), Ld(0), IgnoredBuf, IgnoredBuf][..]),
+        "larft" => (Larft, &[M, N, Mat(0), Ld(0), IgnoredBuf, Mat(1), Ld(1)][..]),
+        "larfb" => (
+            Larfb,
+            &[Side, TransA, M, N, K, Mat(0), Ld(0), Mat(1), Ld(1), Mat(2), Ld(2)][..],
+        ),
+        "laswp" => (Laswp, &[N, Mat(0), Ld(0), IgnoredInt, IgnoredInt, IgnoredBuf][..]),
+        "trsyl" => (
+            TrsylUnb,
+            &[TransA, TransB, IgnoredInt, M, N, Mat(0), Ld(0), Mat(1), Ld(1), Mat(2), Ld(2)][..],
+        ),
+        _ => return None,
+    })
+}
+
+/// Operand shapes (rows, cols per Mat slot; len per Vec slot) implied by a
+/// routine's dimensions and flags — used to build cache regions.
+pub fn mat_shape(kernel: KernelId, slot: u8, m: usize, n: usize, k: usize, side_left: bool, trans_a: bool) -> (usize, usize) {
+    use KernelId::*;
+    match (kernel, slot) {
+        (Gemm, 0) => if trans_a { (k, m) } else { (m, k) },
+        (Gemm, 1) => (k, n), // transB swap ignored: footprint identical
+        (Gemm, 2) => (m, n),
+        (Symm, 0) | (Trmm, 0) | (Trsm, 0) => {
+            let d = if side_left { m } else { n };
+            (d, d)
+        }
+        (Symm, 1) | (Symm, 2) | (Trmm, 1) | (Trsm, 1) => (m, n),
+        (Syrk, 0) | (Syr2k, 0) | (Syr2k, 1) => if trans_a { (k, n) } else { (n, k) },
+        (Syrk, 2) | (Syr2k, 2) => (n, n),
+        (Gemv, 0) | (Ger, 0) => (m, n),
+        (Trsv, 0) => (n, n),
+        (Potf2, 0) | (Trti2, 0) | (Lauu2, 0) | (Sygs2, 0) | (Sygs2, 1) => (n, n),
+        (Getf2, 0) | (Geqr2, 0) | (Laswp, 0) => (m.max(1), n),
+        (Larft, 0) => (m, n),
+        (Larft, 1) => (n, n),
+        (Larfb, 0) => (m, k),
+        (Larfb, 1) => (k, k),
+        (Larfb, 2) => (m, n),
+        (TrsylUnb, 0) => (m, m),
+        (TrsylUnb, 1) => (n, n),
+        (TrsylUnb, 2) => (m, n),
+        _ => (0, 0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_routines_resolve() {
+        for r in ["dgemm", "strsm", "zsyrk", "daxpy", "dpotf2", "dtrsyl"] {
+            assert!(signature(r).is_some(), "{r}");
+        }
+        assert!(signature("dnope").is_none());
+    }
+
+    #[test]
+    fn gemm_signature_arity_matches_blas() {
+        let (_, sig) = signature("dgemm").unwrap();
+        assert_eq!(sig.len(), 13);
+    }
+
+    #[test]
+    fn trsm_operand_shapes_follow_side() {
+        let (a_l, _) = (mat_shape(KernelId::Trsm, 0, 100, 200, 0, true, false), ());
+        assert_eq!(a_l, (100, 100));
+        let a_r = mat_shape(KernelId::Trsm, 0, 100, 200, 0, false, false);
+        assert_eq!(a_r, (200, 200));
+        assert_eq!(mat_shape(KernelId::Trsm, 1, 100, 200, 0, true, false), (100, 200));
+    }
+
+    #[test]
+    fn gemm_a_shape_transposes() {
+        assert_eq!(mat_shape(KernelId::Gemm, 0, 10, 20, 30, true, false), (10, 30));
+        assert_eq!(mat_shape(KernelId::Gemm, 0, 10, 20, 30, true, true), (30, 10));
+    }
+}

@@ -1,0 +1,141 @@
+//! Full contraction-algorithm execution on the virtual testbed — the
+//! expensive reference measurement the micro-benchmarks replace.
+
+use crate::machine::kernels::{Call, Region};
+use crate::machine::{Elem, Machine};
+
+use super::gen::TensorAlg;
+use super::spec::Contraction;
+
+pub const T_A: u64 = 0x7A;
+pub const T_B: u64 = 0x7B;
+pub const T_C: u64 = 0x7C;
+
+/// Kernel call at a specific loop position: attaches operand regions that
+/// model which slice of each (flattened 2-D) tensor the iteration touches.
+pub fn call_at(alg: &TensorAlg, con: &Contraction, elem: Elem, iter: usize) -> Call {
+    let mut call = alg.kernel_call(con, elem);
+    // Flatten each tensor to (leading dim x rest); an iteration's slice is
+    // approximated as a column band whose position advances with the
+    // (loop-order-dependent) iteration index.
+    for (id, idx) in [(T_A, &con.a), (T_B, &con.b), (T_C, &con.c)] {
+        let lead = con.dim(idx[0]);
+        let total = con.elements(idx);
+        let cols_total = (total / lead).max(1);
+        // Fraction of the tensor one kernel call touches.
+        let slice_elems = slice_elems(alg, con, idx);
+        let cols = (slice_elems / lead).clamp(1, cols_total);
+        // How quickly this tensor's slice moves with the loop counter: if
+        // the innermost loop index is in this tensor, each iteration moves
+        // to a fresh slice; otherwise it revisits (loop-invariant operand).
+        let innermost_moves = alg
+            .loops
+            .last()
+            .map(|l| idx.contains(l))
+            .unwrap_or(false);
+        let col0 = if innermost_moves {
+            (iter * cols) % cols_total.max(1)
+        } else {
+            let outer_iters = alg
+                .loops
+                .iter()
+                .rev()
+                .skip(1)
+                .filter(|l| idx.contains(l))
+                .map(|&l| con.dim(l))
+                .product::<usize>()
+                .max(1);
+            ((iter / innermost_extent(alg, con)) % outer_iters) * cols % cols_total.max(1)
+        };
+        let col0 = col0.min(cols_total - cols.min(cols_total));
+        call.operands.push(Region::new(id, 0, col0, lead, cols, elem));
+    }
+    call
+}
+
+fn innermost_extent(alg: &TensorAlg, con: &Contraction) -> usize {
+    alg.loops.last().map(|&l| con.dim(l)).unwrap_or(1).max(1)
+}
+
+/// Elements of `tensor` touched by one kernel invocation.
+fn slice_elems(alg: &TensorAlg, con: &Contraction, tensor: &[char]) -> usize {
+    tensor
+        .iter()
+        .filter(|i| alg.kernel_idx.contains(i))
+        .map(|&i| con.dim(i))
+        .product::<usize>()
+        .max(1)
+}
+
+/// Execute the full algorithm once; returns virtual seconds.
+pub fn execute_full(machine: &Machine, con: &Contraction, alg: &TensorAlg, elem: Elem, seed: u64) -> f64 {
+    let mut session = machine.session(seed);
+    session.warmup();
+    let iters = alg.loop_count(con);
+    let mut total = 0.0;
+    for it in 0..iters {
+        let call = call_at(alg, con, elem, it);
+        total += session.execute(&call).seconds;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::{CpuId, Library};
+    use crate::tensor::gen::{generate, KernelKind};
+
+    fn machine() -> Machine {
+        Machine::standard(CpuId::Harpertown, Library::OpenBlas { fixed_dswap: false }, 1)
+    }
+
+    #[test]
+    fn gemm_algorithms_are_fastest_for_running_example() {
+        // Fig. 1.5a: dgemm-based algorithms are clearly fastest.
+        let con = Contraction::example_abc(96);
+        let algs = generate(&con);
+        let m = machine();
+        let mut best_gemm = f64::INFINITY;
+        let mut best_other = f64::INFINITY;
+        for alg in &algs {
+            let t = execute_full(&m, &con, alg, Elem::D, 3);
+            if alg.kind == KernelKind::Gemm {
+                best_gemm = best_gemm.min(t);
+            } else {
+                best_other = best_other.min(t);
+            }
+        }
+        assert!(best_gemm < best_other, "gemm {best_gemm} vs other {best_other}");
+    }
+
+    #[test]
+    fn axpy_variants_spread_widely() {
+        // Fig. 1.5a: daxpy-based algorithms differ by a large factor
+        // (stride effects), paper reports up to 60x.
+        let con = Contraction::example_abc(48);
+        let algs = generate(&con);
+        let m = machine();
+        let times: Vec<f64> = algs
+            .iter()
+            .filter(|a| a.kind == KernelKind::Axpy)
+            .map(|a| execute_full(&m, &con, a, Elem::D, 5))
+            .collect();
+        let spread = times.iter().cloned().fold(0.0, f64::max)
+            / times.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread > 3.0, "spread={spread}");
+    }
+
+    #[test]
+    fn call_at_regions_stay_in_tensor_bounds() {
+        let con = Contraction::example_abc(32);
+        for alg in generate(&con) {
+            for it in [0, 7, 31] {
+                let call = call_at(&alg, &con, Elem::D, it);
+                for r in &call.operands {
+                    assert!(r.rows > 0 && r.cols > 0, "{}", alg.name());
+                }
+            }
+        }
+    }
+}

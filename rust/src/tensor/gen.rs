@@ -1,0 +1,285 @@
+//! Algorithm generation for BLAS-based tensor contractions (paper §6.1).
+//!
+//! Every algorithm is a nest of **for**-loops with a single BLAS kernel at
+//! its core. The enumeration assigns kernel dimensions to contraction
+//! indices and loops over all remaining indices in every order:
+//!
+//! * gemm:   m ∈ freeA, n ∈ freeB, k ∈ contracted
+//! * gemv-A: matrix slice of A (m ∈ freeA x k ∈ contracted), vector from B
+//! * gemv-B: matrix slice of B (n ∈ freeB x k ∈ contracted), vector from A
+//! * ger:    outer product m ∈ freeA x n ∈ freeB (contracted all looped)
+//! * axpy:   one free index vectorized, everything else looped
+//! * dot:    one contracted index vectorized, everything else looped
+//!
+//! For the paper's example C_abc := A_ai B_ibc this yields exactly 36
+//! algorithms (Ex. 1.4: "a total of 36 alternative algorithms").
+
+use crate::machine::kernels::{Call, KernelId, Scalar, Trans};
+use crate::machine::Elem;
+
+use super::spec::Contraction;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    Gemm,
+    GemvA,
+    GemvB,
+    Ger,
+    /// Axpy over a free index of A or B.
+    Axpy,
+    Dot,
+}
+
+/// One loops-plus-kernel algorithm.
+#[derive(Clone, Debug)]
+pub struct TensorAlg {
+    pub kind: KernelKind,
+    /// Kernel dimension assignment: indices used inside the BLAS call, in
+    /// kernel-argument order (e.g. gemm: [m, n, k]).
+    pub kernel_idx: Vec<char>,
+    /// Loop indices, outermost first.
+    pub loops: Vec<char>,
+}
+
+impl TensorAlg {
+    /// Name like `c-gemm(ab,i)` or `bci-axpy(a)` (loops-kernel, Fig. 1.4).
+    pub fn name(&self) -> String {
+        let loops: String = self.loops.iter().collect();
+        let kernel: String = self.kernel_idx.iter().collect();
+        let kname = match self.kind {
+            KernelKind::Gemm => "gemm",
+            KernelKind::GemvA | KernelKind::GemvB => "gemv",
+            KernelKind::Ger => "ger",
+            KernelKind::Axpy => "axpy",
+            KernelKind::Dot => "dot",
+        };
+        format!("{loops}-{kname}[{kernel}]")
+    }
+
+    /// Total loop iteration count.
+    pub fn loop_count(&self, c: &Contraction) -> usize {
+        self.loops.iter().map(|&i| c.dim(i)).product::<usize>().max(1)
+    }
+
+    /// The (constant-shape) kernel call at the algorithm's core. Operand
+    /// regions/increments reflect the tensor slicing (strided access for
+    /// non-leading indices — the §6.2 locality story).
+    pub fn kernel_call(&self, con: &Contraction, elem: Elem) -> Call {
+        let mut call = Call::new(KernelId::Gemm, elem);
+        call.elem = elem;
+        match self.kind {
+            KernelKind::Gemm => {
+                let (m, n, k) = (self.kernel_idx[0], self.kernel_idx[1], self.kernel_idx[2]);
+                call.kernel = KernelId::Gemm;
+                call.m = con.dim(m);
+                call.n = con.dim(n);
+                call.k = con.dim(k);
+                call.flags.trans_a = Some(if con.stride(&con.a, m) == 1 { Trans::No } else { Trans::Yes });
+                call.flags.trans_b = Some(if con.stride(&con.b, k) == 1 { Trans::No } else { Trans::Yes });
+                call.lda = con.stride(&con.a, if call.flags.trans_a == Some(Trans::No) { k } else { m }).max(con.dim(m));
+                call.ldb = con.stride(&con.b, if call.flags.trans_b == Some(Trans::No) { n } else { k }).max(con.dim(k));
+                call.ldc = con.dim(m);
+            }
+            KernelKind::GemvA | KernelKind::GemvB => {
+                let (v, k) = (self.kernel_idx[0], self.kernel_idx[1]);
+                call.kernel = KernelId::Gemv;
+                call.m = con.dim(v);
+                call.n = con.dim(k);
+                let (tensor, other) = if self.kind == KernelKind::GemvA {
+                    (&con.a, &con.b)
+                } else {
+                    (&con.b, &con.a)
+                };
+                call.flags.trans_a =
+                    Some(if con.stride(tensor, v) == 1 { Trans::No } else { Trans::Yes });
+                call.lda = con.stride(tensor, if call.flags.trans_a == Some(Trans::No) { k } else { v })
+                    .max(1);
+                call.incx = con.stride(other, k);
+                call.incy = con.stride(&con.c, v);
+            }
+            KernelKind::Ger => {
+                let (m, n) = (self.kernel_idx[0], self.kernel_idx[1]);
+                call.kernel = KernelId::Ger;
+                call.m = con.dim(m);
+                call.n = con.dim(n);
+                call.incx = con.stride(&con.a, m);
+                call.incy = con.stride(&con.b, n);
+                call.lda = con.stride(&con.c, n).max(con.dim(m));
+            }
+            KernelKind::Axpy => {
+                let v = self.kernel_idx[0];
+                call.kernel = KernelId::Axpy;
+                call.n = con.dim(v);
+                call.alpha = Scalar::Other;
+                let src = if con.a.contains(&v) { &con.a } else { &con.b };
+                call.incx = con.stride(src, v);
+                call.incy = con.stride(&con.c, v);
+            }
+            KernelKind::Dot => {
+                let k = self.kernel_idx[0];
+                call.kernel = KernelId::Dot;
+                call.n = con.dim(k);
+                call.incx = con.stride(&con.a, k);
+                call.incy = con.stride(&con.b, k);
+            }
+        }
+        call
+    }
+
+    /// FLOPs of one kernel invocation.
+    pub fn kernel_flops(&self, con: &Contraction, elem: Elem) -> f64 {
+        self.kernel_call(con, elem).flops()
+    }
+}
+
+fn permutations(items: &[char]) -> Vec<Vec<char>> {
+    if items.is_empty() {
+        return vec![vec![]];
+    }
+    let mut out = Vec::new();
+    for (i, &x) in items.iter().enumerate() {
+        let mut rest: Vec<char> = items.to_vec();
+        rest.remove(i);
+        for mut tail in permutations(&rest) {
+            let mut v = vec![x];
+            v.append(&mut tail);
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Enumerate all loop-over-BLAS algorithms for a contraction.
+pub fn generate(con: &Contraction) -> Vec<TensorAlg> {
+    let free_a = con.free_a();
+    let free_b = con.free_b();
+    let contracted = con.contracted();
+    let all: Vec<char> = con.dims.keys().copied().collect();
+    let mut out = Vec::new();
+
+    let loops_of = |used: &[char]| -> Vec<char> {
+        all.iter().copied().filter(|i| !used.contains(i)).collect()
+    };
+    let mut push = |kind: KernelKind, kernel_idx: Vec<char>| {
+        let remaining = loops_of(&kernel_idx);
+        for order in permutations(&remaining) {
+            out.push(TensorAlg { kind, kernel_idx: kernel_idx.clone(), loops: order });
+        }
+    };
+
+    // gemm
+    for &m in &free_a {
+        for &n in &free_b {
+            for &k in &contracted {
+                push(KernelKind::Gemm, vec![m, n, k]);
+            }
+        }
+    }
+    // gemv with the matrix from A or B
+    for &m in &free_a {
+        for &k in &contracted {
+            push(KernelKind::GemvA, vec![m, k]);
+        }
+    }
+    for &n in &free_b {
+        for &k in &contracted {
+            push(KernelKind::GemvB, vec![n, k]);
+        }
+    }
+    // ger
+    for &m in &free_a {
+        for &n in &free_b {
+            push(KernelKind::Ger, vec![m, n]);
+        }
+    }
+    // axpy over any free index
+    for &v in free_a.iter().chain(&free_b) {
+        push(KernelKind::Axpy, vec![v]);
+    }
+    // dot over any contracted index
+    for &k in &contracted {
+        push(KernelKind::Dot, vec![k]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_example_has_36_algorithms() {
+        // Paper Ex. 1.4: "a total of 36 alternative algorithms".
+        let con = Contraction::example_abc(100);
+        let algs = generate(&con);
+        assert_eq!(algs.len(), 36);
+        let gemms = algs.iter().filter(|a| a.kind == KernelKind::Gemm).count();
+        assert_eq!(gemms, 2, "two dgemm-based algorithms (Ex. 1.5)");
+        // Unique names.
+        let names: std::collections::HashSet<String> = algs.iter().map(|a| a.name()).collect();
+        assert_eq!(names.len(), 36);
+    }
+
+    #[test]
+    fn vector_contraction_has_no_gemm() {
+        // §1.2.1: "some contractions (e.g. C_a := A_iaj B_ji) cannot be
+        // implemented via dgemm in the first place".
+        let con = Contraction::example_vector(1000, 8);
+        let algs = generate(&con);
+        assert!(algs.iter().all(|a| a.kind != KernelKind::Gemm));
+        assert!(!algs.is_empty());
+        // gemv over the A matrix slices exists.
+        assert!(algs.iter().any(|a| a.kind == KernelKind::GemvA));
+    }
+
+    #[test]
+    fn challenging_contraction_generates_many() {
+        let con = Contraction::example_challenging(100, 8);
+        let algs = generate(&con);
+        assert!(algs.len() > 36, "len={}", algs.len());
+        assert!(algs.iter().any(|a| a.kind == KernelKind::Gemm));
+    }
+
+    #[test]
+    fn kernel_call_shapes_are_constant_per_algorithm() {
+        let con = Contraction::example_abc(64);
+        for alg in generate(&con) {
+            let call = alg.kernel_call(&con, Elem::D);
+            let total = call.flops() * alg.loop_count(&con) as f64;
+            // Kernel x loop iterations covers the whole contraction.
+            let rel = (total - con.flops()).abs() / con.flops();
+            assert!(rel < 1e-9, "{}: rel={rel}", alg.name());
+        }
+    }
+
+    #[test]
+    fn strided_axpy_variants_have_large_increments() {
+        let con = Contraction::example_abc(100);
+        let algs = generate(&con);
+        // axpy over 'b' reads B[i, :, c] with stride 8 and writes
+        // C[a, :, c] with stride 100.
+        let ab = algs
+            .iter()
+            .find(|a| a.kind == KernelKind::Axpy && a.kernel_idx == vec!['b'])
+            .unwrap();
+        let call = ab.kernel_call(&con, Elem::D);
+        assert_eq!(call.incx, 8);
+        assert_eq!(call.incy, 100);
+        // axpy over 'a' writes C[:, b, c] contiguously.
+        let aa = algs
+            .iter()
+            .find(|a| a.kind == KernelKind::Axpy && a.kernel_idx == vec!['a'])
+            .unwrap();
+        let call = aa.kernel_call(&con, Elem::D);
+        assert_eq!(call.incy, 1);
+    }
+
+    #[test]
+    fn loop_orders_are_all_permutations() {
+        let con = Contraction::example_abc(100);
+        let algs = generate(&con);
+        let dot_loops: Vec<&TensorAlg> =
+            algs.iter().filter(|a| a.kind == KernelKind::Dot).collect();
+        assert_eq!(dot_loops.len(), 6); // 3! orders of (a, b, c)
+    }
+}

@@ -1,0 +1,178 @@
+//! Cache-aware micro-benchmarks for contraction algorithms (paper §6.2).
+//!
+//! A contraction algorithm performs its entire computation as `L`
+//! repetitions of one fixed-size kernel call; its runtime is `L x` the
+//! *steady-state* kernel time plus cold-start effects on the first
+//! iterations. The micro-benchmark recreates the steady-state cache
+//! precondition (§6.2.3 "operand access distance": which operands were
+//! touched recently enough to be resident), times a handful of kernel
+//! executions, and extrapolates — orders of magnitude cheaper than running
+//! the algorithm (§6.3.4).
+
+use crate::machine::{Elem, Machine};
+use crate::util::stats::Summary;
+
+use super::exec::call_at;
+use super::gen::TensorAlg;
+use super::spec::Contraction;
+
+/// Prediction result with its own cost (the paper's efficiency argument).
+#[derive(Clone, Debug)]
+pub struct MicroPrediction {
+    pub alg_name: String,
+    /// Predicted total runtime (virtual seconds).
+    pub seconds: f64,
+    /// Virtual seconds the micro-benchmark itself consumed.
+    pub micro_cost: f64,
+    /// Kernel executions performed.
+    pub kernel_runs: usize,
+}
+
+/// Number of cold "first iterations" timed explicitly (§6.2.6).
+const COLD_RUNS: usize = 2;
+/// Steady-state samples (median taken).
+const STEADY_RUNS: usize = 5;
+
+/// Predict the full-algorithm runtime from a few kernel executions.
+pub fn predict(
+    machine: &Machine,
+    con: &Contraction,
+    alg: &TensorAlg,
+    elem: Elem,
+    seed: u64,
+) -> MicroPrediction {
+    let iters = alg.loop_count(con);
+    let mut session = machine.session(seed);
+    session.warmup();
+    let t0 = session.virtual_time();
+
+    // --- First iterations: operands cold (§6.2.6).
+    let mut cold_total = 0.0;
+    let cold_runs = COLD_RUNS.min(iters);
+    for it in 0..cold_runs {
+        cold_total += session.execute(&call_at(alg, con, elem, it)).seconds;
+    }
+
+    // --- Steady state: recreate the cache precondition by replaying the
+    // access pattern of the iterations *preceding* the sampled one
+    // (§6.2.3). The replay itself also warms loop-invariant operands.
+    let mut steady_samples = Vec::new();
+    if iters > cold_runs {
+        let probe = iters / 2;
+        // Replay a window of preceding iterations to set residency.
+        let window = 3.min(probe);
+        for w in (1..=window).rev() {
+            session.execute(&call_at(alg, con, elem, probe - w));
+        }
+        for s in 0..STEADY_RUNS {
+            let it = probe + s;
+            let call = call_at(alg, con, elem, it.min(iters - 1));
+            steady_samples.push(session.execute(&call).seconds);
+        }
+    }
+    let micro_cost = session.virtual_time() - t0;
+
+    let steady = if steady_samples.is_empty() {
+        0.0
+    } else {
+        Summary::from_samples(&steady_samples).med
+    };
+    let seconds = cold_total + steady * (iters.saturating_sub(cold_runs)) as f64;
+    MicroPrediction {
+        alg_name: alg.name(),
+        seconds,
+        micro_cost,
+        kernel_runs: cold_runs + steady_samples.len() + 3.min(iters / 2),
+    }
+}
+
+/// Predict every algorithm and rank ascending by predicted runtime.
+pub fn rank(
+    machine: &Machine,
+    con: &Contraction,
+    algs: &[TensorAlg],
+    elem: Elem,
+    seed: u64,
+) -> Vec<MicroPrediction> {
+    let mut out: Vec<MicroPrediction> = algs
+        .iter()
+        .map(|a| predict(machine, con, a, elem, seed))
+        .collect();
+    out.sort_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::{CpuId, Library};
+    use crate::tensor::exec::execute_full;
+    use crate::tensor::gen::generate;
+
+    fn machine() -> Machine {
+        Machine::standard(CpuId::Harpertown, Library::OpenBlas { fixed_dswap: false }, 1)
+    }
+
+    #[test]
+    fn micro_prediction_tracks_full_execution() {
+        let con = Contraction::example_abc(48);
+        let m = machine();
+        let algs = generate(&con);
+        // Check the two gemm algorithms and a gemv variant closely.
+        for alg in algs.iter().filter(|a| {
+            matches!(
+                a.kind,
+                super::super::gen::KernelKind::Gemm | super::super::gen::KernelKind::GemvA
+            )
+        }) {
+            let pred = predict(&m, &con, alg, Elem::D, 11);
+            let full = execute_full(&m, &con, alg, Elem::D, 13);
+            let re = (pred.seconds - full).abs() / full;
+            assert!(re < 0.30, "{}: pred={} full={} re={re}", alg.name(), pred.seconds, full);
+        }
+    }
+
+    #[test]
+    fn micro_cost_is_orders_of_magnitude_below_execution() {
+        // §6.3.4: predictions cost a tiny fraction of one execution.
+        let con = Contraction::example_abc(64);
+        let m = machine();
+        let algs = generate(&con);
+        let slowest = algs
+            .iter()
+            .find(|a| a.kind == super::super::gen::KernelKind::Dot)
+            .unwrap();
+        let pred = predict(&m, &con, slowest, Elem::D, 3);
+        assert!(
+            pred.micro_cost < pred.seconds / 50.0,
+            "micro {} vs predicted {}",
+            pred.micro_cost,
+            pred.seconds
+        );
+        assert!(pred.kernel_runs < 20);
+    }
+
+    #[test]
+    fn ranking_finds_the_true_fastest_class() {
+        // The predicted-fastest algorithm must be measured within a small
+        // factor of the true fastest (the paper: reliably singles out the
+        // fastest).
+        let con = Contraction::example_abc(48);
+        let m = machine();
+        let algs = generate(&con);
+        let ranked = rank(&m, &con, &algs, Elem::D, 17);
+        let winner = &ranked[0];
+        let full_winner = {
+            let alg = algs.iter().find(|a| a.name() == winner.alg_name).unwrap();
+            execute_full(&m, &con, alg, Elem::D, 23)
+        };
+        let best_full = algs
+            .iter()
+            .map(|a| execute_full(&m, &con, a, Elem::D, 23))
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            full_winner <= best_full * 1.15,
+            "winner {full_winner} vs best {best_full}"
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Micro-benchmark-based predictions for BLAS tensor contractions
+//! (paper Ch. 6).
+//!
+//! * [`spec`]: Einstein-notation contraction specs (`C_abc := A_ai B_ibc`).
+//! * [`gen`]: generation of *all* loop-over-BLAS algorithms for a
+//!   contraction (§6.1) — exactly 36 for the paper's example.
+//! * [`exec`]: full algorithm execution on the virtual testbed (the
+//!   expensive reference the predictions avoid).
+//! * [`micro`]: cache-aware micro-benchmarks (§6.2): run the kernel a
+//!   handful of times under recreated cache conditions (first iterations
+//!   cold, steady state warm by operand access distance) and extrapolate.
+
+pub mod exec;
+pub mod gen;
+pub mod micro;
+pub mod spec;
+
+pub use gen::{generate, KernelKind, TensorAlg};
+pub use spec::Contraction;

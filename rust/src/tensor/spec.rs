@@ -1,0 +1,166 @@
+//! Contraction specifications in Einstein notation (paper §1.2.1).
+
+use std::collections::BTreeMap;
+
+/// A binary tensor contraction `C_<c> := A_<a> B_<b>`. Index storage order
+/// follows the subscript order (first index fastest, column-major style).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Contraction {
+    pub c: Vec<char>,
+    pub a: Vec<char>,
+    pub b: Vec<char>,
+    pub dims: BTreeMap<char, usize>,
+}
+
+impl Contraction {
+    /// Parse `"abc=ai,ibc"` (C indices `=` A indices `,` B indices).
+    pub fn parse(s: &str) -> anyhow::Result<Contraction> {
+        let (c_part, rest) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("expected '=' in contraction '{s}'"))?;
+        let (a_part, b_part) = rest
+            .split_once(',')
+            .ok_or_else(|| anyhow::anyhow!("expected ',' between operands in '{s}'"))?;
+        let take = |p: &str| p.trim().chars().collect::<Vec<char>>();
+        let (c, a, b) = (take(c_part), take(a_part), take(b_part));
+        // Validity: every C index appears in exactly one of A/B; contracted
+        // indices appear in both A and B but not C.
+        for &i in &c {
+            let in_a = a.contains(&i);
+            let in_b = b.contains(&i);
+            anyhow::ensure!(
+                in_a ^ in_b,
+                "output index '{i}' must appear in exactly one operand"
+            );
+        }
+        for &i in &a {
+            if !c.contains(&i) {
+                anyhow::ensure!(b.contains(&i), "index '{i}' is neither free nor contracted");
+            }
+        }
+        let mut dims = BTreeMap::new();
+        for &i in c.iter().chain(&a).chain(&b) {
+            dims.entry(i).or_insert(0usize);
+        }
+        Ok(Contraction { c, a, b, dims })
+    }
+
+    pub fn with_dims(mut self, sizes: &[(char, usize)]) -> Contraction {
+        for &(i, n) in sizes {
+            self.dims.insert(i, n);
+        }
+        self
+    }
+
+    pub fn dim(&self, i: char) -> usize {
+        self.dims[&i]
+    }
+
+    /// Free indices of A (appear in C and A).
+    pub fn free_a(&self) -> Vec<char> {
+        self.a.iter().copied().filter(|i| self.c.contains(i)).collect()
+    }
+
+    /// Free indices of B.
+    pub fn free_b(&self) -> Vec<char> {
+        self.b.iter().copied().filter(|i| self.c.contains(i)).collect()
+    }
+
+    /// Contracted indices (in A and B, not in C).
+    pub fn contracted(&self) -> Vec<char> {
+        self.a
+            .iter()
+            .copied()
+            .filter(|i| self.b.contains(i) && !self.c.contains(i))
+            .collect()
+    }
+
+    /// Minimal FLOP count: 2 x product of all index dimensions.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.dims.values().map(|&v| v as f64).product::<f64>()
+    }
+
+    /// Element count of a tensor given its index list.
+    pub fn elements(&self, idx: &[char]) -> usize {
+        idx.iter().map(|i| self.dim(*i)).product()
+    }
+
+    /// Stride (in elements) of index `i` within tensor `idx` (first index
+    /// fastest).
+    pub fn stride(&self, idx: &[char], i: char) -> usize {
+        let mut s = 1;
+        for &j in idx {
+            if j == i {
+                return s;
+            }
+            s *= self.dim(j);
+        }
+        panic!("index '{i}' not in tensor {idx:?}")
+    }
+
+    /// The paper's running example: C_abc := A_ai B_ibc with A n x 8,
+    /// B 8 x n x n (Ex. 1.5).
+    pub fn example_abc(n: usize) -> Contraction {
+        Contraction::parse("abc=ai,ibc")
+            .unwrap()
+            .with_dims(&[('a', n), ('b', n), ('c', n), ('i', 8)])
+    }
+
+    /// §6.3.2: C_a := A_iaj B_ji (no gemm algorithm exists).
+    pub fn example_vector(n: usize, small: usize) -> Contraction {
+        Contraction::parse("a=iaj,ji")
+            .unwrap()
+            .with_dims(&[('a', n), ('i', small), ('j', small)])
+    }
+
+    /// §6.3.3: C_abc := A_ija B_jbic (the "challenging" contraction).
+    pub fn example_challenging(n: usize, small: usize) -> Contraction {
+        Contraction::parse("abc=ija,jbic")
+            .unwrap()
+            .with_dims(&[('a', n), ('b', n), ('c', n), ('i', small), ('j', small)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_running_example() {
+        let c = Contraction::example_abc(100);
+        assert_eq!(c.free_a(), vec!['a']);
+        assert_eq!(c.free_b(), vec!['b', 'c']);
+        assert_eq!(c.contracted(), vec!['i']);
+        assert_eq!(c.flops(), 2.0 * 100.0 * 100.0 * 100.0 * 8.0);
+    }
+
+    #[test]
+    fn strides_follow_storage_order() {
+        let c = Contraction::example_abc(100);
+        assert_eq!(c.stride(&['i', 'b', 'c'], 'i'), 1);
+        assert_eq!(c.stride(&['i', 'b', 'c'], 'b'), 8);
+        assert_eq!(c.stride(&['i', 'b', 'c'], 'c'), 800);
+    }
+
+    #[test]
+    fn double_contraction_parses() {
+        let c = Contraction::example_vector(1000, 8);
+        assert_eq!(c.contracted(), vec!['i', 'j']);
+        assert_eq!(c.free_a(), vec!['a']);
+        assert!(c.free_b().is_empty());
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!(Contraction::parse("ab=ai,ib").is_ok()); // valid: C_ab = A_ai B_ib
+        assert!(Contraction::parse("abz=ai,ib").is_err()); // z nowhere
+        assert!(Contraction::parse("abc").is_err());
+    }
+
+    #[test]
+    fn elements_product() {
+        let c = Contraction::example_abc(10);
+        assert_eq!(c.elements(&['a', 'i']), 80);
+        assert_eq!(c.elements(&['i', 'b', 'c']), 800);
+    }
+}

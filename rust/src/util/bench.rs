@@ -1,0 +1,147 @@
+//! Wall-clock micro-benchmark harness (criterion is not in the offline
+//! registry). Used by `rust/benches/*` (harness = false) and the §Perf pass.
+//!
+//! Methodology mirrors the paper's own measurement hygiene (§2.1): warmup
+//! iterations first (library/cache init), then `reps` timed repetitions,
+//! reported as a [`Summary`] over per-repetition wall times.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub time: Summary,
+    /// Iterations per timed repetition.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (min {}, max {}, {} iters)",
+            self.name,
+            fmt_time(self.time.med),
+            fmt_time(self.time.min),
+            fmt_time(self.time.max),
+            self.iters,
+        )
+    }
+
+    /// Throughput line for item-processing benches.
+    pub fn report_throughput(&self, items: u64, unit: &str) -> String {
+        let per_sec = items as f64 / self.time.med;
+        format!(
+            "{:<44} {:>12}/iter  {:>14.0} {unit}/s",
+            self.name,
+            fmt_time(self.time.med),
+            per_sec
+        )
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Run `f` until it accumulates ~`target_secs` per repetition, then time
+/// `reps` repetitions. A black-box sink prevents the optimizer from
+/// removing the computation.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    bench_config(name, 0.05, 7, &mut f)
+}
+
+pub fn bench_config<T>(
+    name: &str,
+    target_secs: f64,
+    reps: usize,
+    f: &mut impl FnMut() -> T,
+) -> BenchResult {
+    // Warmup + iteration-count calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / one).ceil() as u64).clamp(1, 10_000_000);
+
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        times.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        time: Summary::from_samples(&times),
+        iters,
+    }
+}
+
+/// Entry point used by the `harness = false` bench binaries.
+pub struct BenchSuite {
+    pub results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl BenchSuite {
+    pub fn from_env(suite_name: &str) -> BenchSuite {
+        // `cargo bench -- <filter>` passes the filter as an argument.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        println!("== bench suite: {suite_name} ==");
+        BenchSuite { results: Vec::new(), filter }
+    }
+
+    pub fn add<T>(&mut self, name: &str, f: impl FnMut() -> T) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        let res = bench(name, f);
+        println!("{}", res.report());
+        self.results.push(res);
+    }
+
+    pub fn add_throughput<T>(&mut self, name: &str, items: u64, unit: &str, f: impl FnMut() -> T) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        let res = bench(name, f);
+        println!("{}", res.report_throughput(items, unit));
+        self.results.push(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_config("spin", 0.001, 3, &mut || {
+            (0..1000u64).map(|i| i.wrapping_mul(i)).sum::<u64>()
+        });
+        assert!(r.time.min > 0.0);
+        assert!(r.time.min <= r.time.max);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,14 @@
+//! In-tree engineering substrates.
+//!
+//! The offline crate registry in this environment carries only the `xla`
+//! crate's dependency closure, so the usual ecosystem crates (rand, serde,
+//! clap, criterion, proptest) are unavailable; each has a purpose-sized
+//! replacement here (see DESIGN.md §7).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod plot;
+pub mod prop;
+pub mod rng;
+pub mod stats;

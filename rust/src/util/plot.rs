@@ -1,0 +1,228 @@
+//! ASCII plotting for figure reproduction (terminal + EXPERIMENTS.md).
+//!
+//! The paper's figures are line plots (performance vs problem size, runtime
+//! vs block size, ...) and heat maps (prediction-error over (n, b)). These
+//! renderers are deliberately small; exact data also lands in CSV next to
+//! each plot so the numbers are machine-checkable.
+
+/// Multi-series line plot. `series` = (label, points(x, y)).
+pub fn line_plot(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[(String, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+    if pts.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (xmin, xmax) = min_max(pts.iter().map(|p| p.0));
+    let (ymin0, ymax0) = min_max(pts.iter().map(|p| p.1));
+    let (ymin, ymax) = pad_range(ymin0, ymax0);
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks: &[u8] = b"*o+x#@%&~^";
+    for (si, (_, points)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in points {
+            let cx = scale(x, xmin, xmax, width - 1);
+            let cy = height - 1 - scale(y, ymin, ymax, height - 1);
+            grid[cy][cx] = mark;
+        }
+    }
+    for (row, line) in grid.iter().enumerate() {
+        let yval = ymax - (ymax - ymin) * row as f64 / (height - 1) as f64;
+        out.push_str(&format!(
+            "{:>11} |{}\n",
+            format_sig(yval),
+            String::from_utf8_lossy(line)
+        ));
+    }
+    out.push_str(&format!(
+        "{:>11} +{}\n",
+        "",
+        "-".repeat(width)
+    ));
+    out.push_str(&format!(
+        "{:>11}  {:<20}{:>width$}\n",
+        ylabel,
+        format_sig(xmin),
+        format_sig(xmax),
+        width = width.saturating_sub(20)
+    ));
+    out.push_str(&format!("{:>11}  ({xlabel})\n", ""));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "    {} {label}\n",
+            marks[si % marks.len()] as char
+        ));
+    }
+    out
+}
+
+/// Heat map over a rectangular grid; values mapped to a shade ramp.
+pub fn heat_map(
+    title: &str,
+    xs: &[f64],
+    ys: &[f64],
+    values: &[Vec<f64>], // values[yi][xi]
+    vmax: f64,
+) -> String {
+    let ramp = b" .:-=+*#%@";
+    let mut out = String::new();
+    out.push_str(&format!("## {title} (max shade = {vmax:.3})\n"));
+    for (yi, row) in values.iter().enumerate().rev() {
+        let mut line = String::new();
+        for &v in row {
+            let idx = ((v / vmax).clamp(0.0, 1.0) * (ramp.len() - 1) as f64).round() as usize;
+            line.push(ramp[idx] as char);
+        }
+        out.push_str(&format!("{:>8} |{line}|\n", format_sig(ys[yi])));
+    }
+    out.push_str(&format!(
+        "{:>8}  {} .. {}\n",
+        "",
+        format_sig(xs[0]),
+        format_sig(*xs.last().unwrap())
+    ));
+    out
+}
+
+/// Simple aligned text table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// CSV dump: header row + data rows.
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = headers.join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn min_max(vals: impl Iterator<Item = f64>) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for v in vals {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() {
+        (0.0, 1.0)
+    } else if lo == hi {
+        (lo - 0.5, hi + 0.5)
+    } else {
+        (lo, hi)
+    }
+}
+
+fn pad_range(lo: f64, hi: f64) -> (f64, f64) {
+    let (lo, hi) = if lo == hi { (lo - 0.5, hi + 0.5) } else { (lo, hi) };
+    let pad = (hi - lo) * 0.05;
+    (lo - pad, hi + pad)
+}
+
+fn scale(v: f64, lo: f64, hi: f64, max_idx: usize) -> usize {
+    (((v - lo) / (hi - lo)) * max_idx as f64)
+        .round()
+        .clamp(0.0, max_idx as f64) as usize
+}
+
+fn format_sig(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_plot_renders_all_series_marks() {
+        let s = vec![
+            ("a".to_string(), vec![(0.0, 0.0), (1.0, 1.0)]),
+            ("b".to_string(), vec![(0.0, 1.0), (1.0, 0.0)]),
+        ];
+        let p = line_plot("t", "x", "y", &s, 40, 10);
+        assert!(p.contains('*'));
+        assert!(p.contains('o'));
+        assert!(p.contains("t"));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["name", "val"],
+            &[
+                vec!["dgemm".into(), "1.10".into()],
+                vec!["x".into(), "37.96".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let c = csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(c, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn heat_map_renders() {
+        let h = heat_map(
+            "h",
+            &[1.0, 2.0],
+            &[1.0, 2.0],
+            &[vec![0.0, 0.5], vec![1.0, 2.0]],
+            1.0,
+        );
+        assert!(h.contains('@'));
+    }
+}

@@ -1,0 +1,122 @@
+//! Property-testing harness (proptest is not in the offline registry).
+//!
+//! `proptest-lite`: run a property over many generated cases; on failure,
+//! report the case's seed so the exact input can be replayed with
+//! `Gen::new(seed)`. No shrinking — cases are generated small-biased
+//! instead, which keeps failures readable in practice.
+
+use super::rng::Rng;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    /// Integer in [lo, hi], biased towards small values (~1/3 of draws come
+    /// from the bottom decade of the range).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        if span > 16 && self.rng.chance(0.33) {
+            lo + self.rng.below(span.min(1 + span / 10)) as i64
+        } else {
+            lo + self.rng.below(span) as i64
+        }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// A multiple of `step` in [lo, hi] (paper: sizes are multiples of 8).
+    pub fn multiple_of(&mut self, step: usize, lo: usize, hi: usize) -> usize {
+        let lo_q = lo.div_ceil(step);
+        let hi_q = hi / step;
+        assert!(lo_q <= hi_q, "no multiple of {step} in [{lo},{hi}]");
+        self.usize(lo_q, hi_q) * step
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics with the failing seed.
+pub fn check(name: &str, cases: u32, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    // Derive per-case seeds from the property name so adding properties
+    // elsewhere does not shift this one's cases.
+    let mut root = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    for case in 0..cases {
+        let seed = super::rng::splitmix64(&mut root) ^ case as u64;
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = prop(&mut gen) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: Gen::new({seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for properties: `prop_assert!(gen-condition, "context {x}")`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, |g| {
+            let x = g.int(0, 100);
+            prop_assert!(x >= 0 && x <= 100, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn check_reports_failures() {
+        check("failing", 50, |g| {
+            let x = g.int(0, 100);
+            prop_assert!(x < 95, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn multiple_of_respects_bounds() {
+        check("multiple-of", 200, |g| {
+            let v = g.multiple_of(8, 24, 536);
+            prop_assert!(v % 8 == 0 && (24..=536).contains(&v), "v={v}");
+            Ok(())
+        });
+    }
+}

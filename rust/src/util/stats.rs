@@ -1,0 +1,185 @@
+//! Summary statistics over repeated measurements (paper §2.1.2, §3.2.3).
+//!
+//! The paper's models and predictions carry five statistics everywhere:
+//! minimum, median, maximum, mean and standard deviation. [`Summary`] is
+//! that 5-tuple; it is computed from raw repetition vectors and propagated
+//! through predictions (eqs. 4.2-4.6 live in `predict::predictor`).
+
+/// Which summary statistic a model or error measure refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stat {
+    Min,
+    Med,
+    Max,
+    Mean,
+    Std,
+}
+
+impl Stat {
+    pub const ALL: [Stat; 5] = [Stat::Min, Stat::Med, Stat::Max, Stat::Mean, Stat::Std];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stat::Min => "min",
+            Stat::Med => "med",
+            Stat::Max => "max",
+            Stat::Mean => "mean",
+            Stat::Std => "std",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Stat> {
+        Some(match s {
+            "min" => Stat::Min,
+            "med" | "median" => Stat::Med,
+            "max" => Stat::Max,
+            "mean" | "avg" => Stat::Mean,
+            "std" | "stddev" => Stat::Std,
+            _ => return None,
+        })
+    }
+}
+
+/// min/med/max/mean/std of a set of repetitions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub min: f64,
+    pub med: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "summary of no samples");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let med = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            min: sorted[0],
+            med,
+            max: sorted[n - 1],
+            mean,
+            std: var.sqrt(),
+        }
+    }
+
+    /// A summary where every statistic equals `v` (std = 0).
+    pub fn constant(v: f64) -> Summary {
+        Summary { min: v, med: v, max: v, mean: v, std: 0.0 }
+    }
+
+    pub fn get(&self, stat: Stat) -> f64 {
+        match stat {
+            Stat::Min => self.min,
+            Stat::Med => self.med,
+            Stat::Max => self.max,
+            Stat::Mean => self.mean,
+            Stat::Std => self.std,
+        }
+    }
+
+    pub fn set(&mut self, stat: Stat, v: f64) {
+        match stat {
+            Stat::Min => self.min = v,
+            Stat::Med => self.med = v,
+            Stat::Max => self.max = v,
+            Stat::Mean => self.mean = v,
+            Stat::Std => self.std = v,
+        }
+    }
+
+    /// Element-wise map over the five statistics.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Summary {
+        Summary {
+            min: f(self.min),
+            med: f(self.med),
+            max: f(self.max),
+            mean: f(self.mean),
+            std: f(self.std),
+        }
+    }
+}
+
+/// Percentile (0..=100) with linear interpolation, matching the paper's
+/// "90th percentile" error measure.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let s = Summary::from_samples(&[3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.med, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert!((s.std - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_even_count_median_interpolates() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.med, 2.5);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::from_samples(&[7.5]);
+        assert_eq!(s.min, 7.5);
+        assert_eq!(s.med, 7.5);
+        assert_eq!(s.max, 7.5);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_endpoints_and_middle() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+        assert_eq!(percentile(&xs, 50.0), 30.0);
+        assert_eq!(percentile(&xs, 90.0), 46.0);
+    }
+
+    #[test]
+    fn stat_roundtrip_names() {
+        for s in Stat::ALL {
+            assert_eq!(Stat::parse(s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn get_set_consistency() {
+        let mut s = Summary::constant(1.0);
+        s.set(Stat::Max, 9.0);
+        assert_eq!(s.get(Stat::Max), 9.0);
+        assert_eq!(s.get(Stat::Min), 1.0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Cross-module integration tests: the full generate -> store -> load ->
+//! predict -> validate pipeline, plus the PJRT artifact path.
+
+use dlapm::machine::{CpuId, Elem, Library, Machine};
+use dlapm::modeling::ModelStore;
+use dlapm::predict::algorithms::potrf::Potrf;
+use dlapm::predict::algorithms::BlockedAlg;
+use dlapm::predict::measurement::{coverage, measure_algorithm};
+use dlapm::predict::predictor::predict_calls;
+
+#[test]
+fn pipeline_generate_save_load_predict_validate() {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let mut store = ModelStore::new(&machine.label());
+    let n_gen = coverage::ensure_models(&machine, &mut store, &[&alg], 1352, 536, 42);
+    assert!(n_gen >= 3, "expected >= 3 kernel models, got {n_gen}");
+
+    // Round-trip the store through disk.
+    let dir = std::env::temp_dir().join("dlapm_integration");
+    let path = dir.join("store.json");
+    store.save(&path).unwrap();
+    let loaded = ModelStore::load(&path).unwrap();
+    assert_eq!(loaded.models.len(), store.models.len());
+
+    // Predict from the loaded store and validate.
+    let (n, b) = (1096, 128);
+    let pred = predict_calls(&loaded, &alg.calls(n, b));
+    assert_eq!(pred.unmodeled_calls, 0);
+    let meas = measure_algorithm(&machine, &alg, n, b, 5, 7);
+    let re = (pred.time.med - meas.med).abs() / meas.med;
+    assert!(re < 0.08, "prediction error {re}");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn pjrt_polyeval_matches_store_models() {
+    let Ok(mut rt) = dlapm::runtime::Runtime::load_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let mut store = ModelStore::new(&machine.label());
+    coverage::ensure_models(&machine, &mut store, &[&alg], 1352, 536, 42);
+    for model in store.models.values() {
+        if model.pieces.len() > 64 {
+            continue; // exceeds one dispatch; covered by chunked path
+        }
+        let hull = model.domain_hull();
+        let pts: Vec<Vec<usize>> = (0..9)
+            .map(|i| hull.lo.iter().zip(&hull.hi).map(|(&l, &h)| l + (h - l) * i / 8).collect())
+            .collect();
+        let vals = dlapm::runtime::polyeval_model(&mut rt, model, dlapm::util::stats::Stat::Med, &pts).unwrap();
+        for (p, v) in pts.iter().zip(&vals) {
+            let want = model.estimate(p).med;
+            assert!(((v - want) / want).abs() < 1e-9, "{}: {p:?} {v} vs {want}", model.case);
+        }
+    }
+}
+
+#[test]
+fn sampler_script_drives_virtual_testbed() {
+    let machine = Machine::standard(CpuId::Haswell, Library::Mkl, 1);
+    let mut sampler = dlapm::sampler::Sampler::new(machine.session(1));
+    let out = sampler
+        .run_script("dmalloc A 4000000\ndpotf2 L 512 A 2000\ndpotf2 L 512 A 2000\ngo")
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let c0: f64 = out[0].parse().unwrap();
+    let c1: f64 = out[1].parse().unwrap();
+    assert!(c0 > c1, "first call pays init + cold misses: {c0} vs {c1}");
+}
