@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 gate for the dlapm repo: build, test, and compile the bench
+# binaries. Run from the repository root: ./ci.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo build --benches =="
+cargo build --benches
+
+echo "== ci.sh: all green =="

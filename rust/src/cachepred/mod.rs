@@ -88,14 +88,14 @@ pub fn pure_time(machine: &Machine, call: &Call, warm: bool, seed: u64) -> f64 {
         // Calls without tracked operands would always stream cold.
         crate::modeling::generator::synthesize_operands(&mut call);
     }
-    if warm {
+    let timing = if warm {
         session.execute(&call); // load operands
         session.execute(&call)
     } else {
         session.flush_cache();
         session.execute(&call)
-    }
-    .seconds
+    };
+    timing.seconds
 }
 
 /// Cache-aware estimate: convex combination of warm/cold model estimates

@@ -20,7 +20,7 @@ pub use kernels::{Call, Diag, Flags, KernelId, Region, Scalar, Side, Trans, Uplo
 pub use library::Library;
 pub use timing::{CallTiming, Machine};
 
-use state::MachineState;
+use self::state::MachineState;
 
 impl Machine {
     /// Standard pinned, quiet-machine configuration (the paper's default

@@ -5,7 +5,8 @@
 //! paper's formulation. Two interchangeable backends:
 //!
 //! * [`rust_fit`] — in-process Gauss-Jordan solve (mirrors the L2 graph);
-//! * `runtime::FitEngine` — the AOT-compiled JAX/Pallas artifact via PJRT.
+//! * `runtime::Runtime::fit` — the AOT artifact entry point (portable
+//!   in-process backend; PJRT in an XLA-enabled build).
 //!
 //! Both consume the same scaled design matrix built by [`design_matrix`].
 

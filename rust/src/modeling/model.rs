@@ -11,6 +11,7 @@ use std::collections::HashMap;
 
 use crate::machine::kernels::{Call, Scalar};
 use crate::util::json::Json;
+use crate::util::error::Result;
 use crate::util::stats::{Stat, Summary};
 
 use super::fit::eval_poly;
@@ -167,17 +168,17 @@ impl PerfModel {
         ])
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<PerfModel> {
-        let arr_usize = |j: &Json| -> anyhow::Result<Vec<usize>> {
+    pub fn from_json(j: &Json) -> Result<PerfModel> {
+        let arr_usize = |j: &Json| -> Result<Vec<usize>> {
             Ok(j.as_arr()
-                .ok_or_else(|| anyhow::anyhow!("expected array"))?
+                .ok_or_else(|| crate::err!("expected array"))?
                 .iter()
                 .filter_map(|v| v.as_usize())
                 .collect())
         };
-        let arr_f64 = |j: &Json| -> anyhow::Result<Vec<f64>> {
+        let arr_f64 = |j: &Json| -> Result<Vec<f64>> {
             Ok(j.as_arr()
-                .ok_or_else(|| anyhow::anyhow!("expected array"))?
+                .ok_or_else(|| crate::err!("expected array"))?
                 .iter()
                 .filter_map(|v| v.as_f64())
                 .collect())
@@ -185,16 +186,28 @@ impl PerfModel {
         let exps = j
             .req("exps")?
             .as_arr()
-            .unwrap()
+            .ok_or_else(|| crate::err!("'exps' must be an array"))?
             .iter()
             .map(|e| Ok(arr_usize(e)?.into_iter().map(|v| v as u8).collect()))
-            .collect::<anyhow::Result<Vec<Vec<u8>>>>()?;
+            .collect::<Result<Vec<Vec<u8>>>>()?;
         let mut pieces = Vec::new();
-        for pj in j.req("pieces")?.as_arr().unwrap() {
+        for pj in j
+            .req("pieces")?
+            .as_arr()
+            .ok_or_else(|| crate::err!("'pieces' must be an array"))?
+        {
             let lo = arr_usize(pj.req("lo")?)?;
             let hi = arr_usize(pj.req("hi")?)?;
-            let cj = pj.req("coeffs")?.as_arr().unwrap();
-            anyhow::ensure!(cj.len() == 5, "expected 5 stat coefficient sets");
+            // Validate before Domain::new, whose assertions would panic.
+            crate::ensure!(
+                lo.len() == hi.len() && lo.iter().zip(&hi).all(|(l, h)| l <= h),
+                "invalid piece domain: lo {lo:?} hi {hi:?}"
+            );
+            let cj = pj
+                .req("coeffs")?
+                .as_arr()
+                .ok_or_else(|| crate::err!("'coeffs' must be an array"))?;
+            crate::ensure!(cj.len() == 5, "expected 5 stat coefficient sets");
             let coeffs = [
                 arr_f64(&cj[0])?,
                 arr_f64(&cj[1])?,
@@ -280,15 +293,19 @@ impl ModelStore {
         ])
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<ModelStore> {
+    pub fn from_json(j: &Json) -> Result<ModelStore> {
         let mut store = ModelStore::new(j.req("machine")?.as_str().unwrap_or(""));
-        for mj in j.req("models")?.as_arr().unwrap() {
+        for mj in j
+            .req("models")?
+            .as_arr()
+            .ok_or_else(|| crate::err!("'models' must be an array"))?
+        {
             store.insert(PerfModel::from_json(mj)?);
         }
         Ok(store)
     }
 
-    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -296,7 +313,7 @@ impl ModelStore {
         Ok(())
     }
 
-    pub fn load(path: &std::path::Path) -> anyhow::Result<ModelStore> {
+    pub fn load(path: &std::path::Path) -> Result<ModelStore> {
         let text = std::fs::read_to_string(path)?;
         ModelStore::from_json(&Json::parse(&text)?)
     }
@@ -377,14 +394,27 @@ mod tests {
     fn store_roundtrip_via_file() {
         let mut store = ModelStore::new("haswell/openblas/1t");
         store.insert(linear_model());
-        let dir = std::env::temp_dir().join("dlapm_test_store");
+        // Per-process unique dir so parallel/repeated runs cannot collide.
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let dir = std::env::temp_dir()
+            .join(format!("dlapm_test_store_{}_{nanos}", std::process::id()));
         let path = dir.join("models.json");
+        // Cleanup runs on every exit path, including assertion unwinds.
+        struct Cleanup(std::path::PathBuf);
+        impl Drop for Cleanup {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+        let _cleanup = Cleanup(dir);
         store.save(&path).unwrap();
         let loaded = ModelStore::load(&path).unwrap();
         assert_eq!(loaded.machine_label, store.machine_label);
         assert_eq!(loaded.models.len(), 1);
         assert_eq!(loaded.get("dpotf2_L_a1").unwrap(), store.get("dpotf2_L_a1").unwrap());
-        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

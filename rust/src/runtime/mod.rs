@@ -1,17 +1,21 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`) from the Rust hot path.
+//! Artifact runtime: execute the AOT-compiled JAX/Pallas artifact entry
+//! points (`artifacts/*.hlo.txt`, built by `make artifacts`) from the Rust
+//! hot path.
 //!
-//! Python runs only at build time (`make artifacts`); this module gives the
-//! prediction/fitting engines their L1/L2 compute without ever touching the
-//! interpreter. HLO *text* is the interchange format (see
-//! /opt/xla-example/README.md: serialized protos from jax >= 0.5 are
-//! rejected by xla_extension 0.5.1).
+//! The offline crate registry carries no PJRT/XLA bindings, so this module
+//! ships a *portable backend*: it loads the artifact manifest
+//! (python/compile/aot.py) for entry names, shapes and capacity constants,
+//! and executes each entry point with a faithful in-process implementation
+//! of the same computation — identical padding, chunking and capacity
+//! semantics as the compiled dispatch path, so everything layered on top
+//! (model fitting, batched polynomial evaluation, the gemm smoke path)
+//! behaves the same with either backend. The HLO text files themselves are
+//! only consumed by an XLA-enabled build.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// Parsed artifact manifest (python/compile/aot.py).
@@ -35,15 +39,27 @@ impl Manifest {
             .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
         let j = Json::parse(&text)?;
         let mut entries = HashMap::new();
-        for e in j.req("entries")?.as_arr().unwrap() {
-            let name = e.req("name")?.as_str().unwrap().to_string();
+        for e in j
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| crate::err!("manifest 'entries' must be an array"))?
+        {
+            let name = e
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| crate::err!("manifest entry 'name' must be a string"))?
+                .to_string();
             let mut input_shapes = Vec::new();
             let mut input_dtypes = Vec::new();
-            for inp in e.req("inputs")?.as_arr().unwrap() {
+            for inp in e
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| crate::err!("manifest entry '{name}': 'inputs' must be an array"))?
+            {
                 input_shapes.push(
                     inp.req("shape")?
                         .as_arr()
-                        .unwrap()
+                        .ok_or_else(|| crate::err!("manifest entry '{name}': 'shape' must be an array"))?
                         .iter()
                         .filter_map(|v| v.as_usize())
                         .collect(),
@@ -58,20 +74,23 @@ impl Manifest {
                     }
                 }
             }
+            let file = e
+                .req("file")?
+                .as_str()
+                .ok_or_else(|| crate::err!("manifest entry '{name}': 'file' must be a string"))?;
             entries.insert(
                 name.clone(),
-                Entry { name, file: dir.join(e.req("file")?.as_str().unwrap()), input_shapes, input_dtypes, constants },
+                Entry { file: dir.join(file), name, input_shapes, input_dtypes, constants },
             );
         }
         Ok(Manifest { entries })
     }
 }
 
-/// The PJRT CPU client with compiled executables, one per artifact entry.
+/// The artifact runtime: manifest-described entry points executed by the
+/// portable in-process backend.
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
@@ -88,70 +107,33 @@ impl Runtime {
 
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        Ok(Runtime { client, manifest, executables: HashMap::new() })
+        Ok(Runtime { manifest })
     }
 
     pub fn entry(&self, name: &str) -> Result<&Entry> {
         self.manifest
             .entries
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("no artifact entry '{name}'"))
-    }
-
-    /// Compile (once) and return the executable for an entry.
-    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(name) {
-            let entry = self.entry(name)?.clone();
-            let proto = xla::HloModuleProto::from_text_file(
-                entry
-                    .file
-                    .to_str()
-                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-            )
-            .map_err(to_anyhow)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).map_err(to_anyhow)?;
-            self.executables.insert(name.to_string(), exe);
-        }
-        Ok(&self.executables[name])
-    }
-
-    /// Execute an entry with literal inputs; returns the flattened output
-    /// tuple elements.
-    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let result = exe.execute::<xla::Literal>(inputs).map_err(to_anyhow)?;
-        let mut out = result[0][0].to_literal_sync().map_err(to_anyhow)?;
-        // aot.py lowers with return_tuple=True.
-        let elems = out.decompose_tuple().map_err(to_anyhow)?;
-        Ok(elems)
+            .ok_or_else(|| crate::err!("no artifact entry '{name}'"))
     }
 
     // ------------------------------------------------------- entry points
 
-    /// Relative-LSQ fit via the `fit` artifact: scaled design matrix rows
-    /// (n x m, row-major, n <= N, m <= M; padded with zeros). Returns the
-    /// first `m` coefficients.
+    /// Relative-LSQ fit via the `fit` entry point: scaled design matrix
+    /// rows (n x m, row-major, n <= N, m <= M; padded with zeros). Returns
+    /// the first `m` coefficients.
     pub fn fit(&mut self, x: &[f64], n: usize, m: usize) -> Result<Vec<f64>> {
         let entry = self.entry("fit")?;
         let (cap_n, cap_m) = (entry.constants["n"], entry.constants["m"]);
-        anyhow::ensure!(n <= cap_n && m <= cap_m, "fit exceeds artifact capacity");
-        let mut padded = vec![0.0f64; cap_n * cap_m];
-        for i in 0..n {
-            padded[i * cap_m..i * cap_m + m].copy_from_slice(&x[i * m..(i + 1) * m]);
-        }
-        let lit = xla::Literal::vec1(&padded)
-            .reshape(&[cap_n as i64, cap_m as i64])
-            .map_err(to_anyhow)?;
-        let out = self.execute("fit", &[lit])?;
-        let beta: Vec<f64> = out[0].to_vec().map_err(to_anyhow)?;
-        Ok(beta[..m].to_vec())
+        crate::ensure!(n <= cap_n && m <= cap_m, "fit exceeds artifact capacity");
+        crate::ensure!(x.len() >= n * m, "design matrix shorter than n x m");
+        Ok(portable_fit(x, n, m))
     }
 
-    /// Batched piecewise polynomial evaluation via the `polyeval` artifact.
+    /// Batched piecewise polynomial evaluation via the `polyeval` entry.
     /// coeffs: p x m row-major; piece_idx: k entries; pts: k x d row-major;
-    /// exps: m x d. Larger batches are chunked internally.
+    /// exps: m x d. (The compiled dispatch additionally chunks batches at
+    /// the artifact's `k` capacity; the in-process path has no batch cap.)
     pub fn polyeval(
         &mut self,
         coeffs: &[f64],
@@ -162,79 +144,79 @@ impl Runtime {
         d: usize,
         exps: &[i32],
     ) -> Result<Vec<f64>> {
-        let entry = self.entry("polyeval")?.clone();
-        let (cap_k, cap_p, cap_m, cap_d) = (
-            entry.constants["k"],
+        let entry = self.entry("polyeval")?;
+        let (cap_p, cap_m, cap_d) = (
             entry.constants["p"],
             entry.constants["m"],
             entry.constants["d"],
         );
-        anyhow::ensure!(p <= cap_p, "too many pieces for the polyeval artifact ({p} > {cap_p})");
-        anyhow::ensure!(m <= cap_m && d <= cap_d, "monomial table exceeds artifact capacity");
+        crate::ensure!(p <= cap_p, "too many pieces for the polyeval artifact ({p} > {cap_p})");
+        crate::ensure!(m <= cap_m && d <= cap_d, "monomial table exceeds artifact capacity");
         let k = piece_idx.len();
-        anyhow::ensure!(pts.len() == k * d, "pts length mismatch");
-
-        // Pad coeffs (p x m -> P x M) and exps (m x d -> M x D); extra
-        // monomials get zero coefficients, extra dims exponent 0.
-        let mut coeffs_p = vec![0.0f64; cap_p * cap_m];
-        for i in 0..p {
-            coeffs_p[i * cap_m..i * cap_m + m].copy_from_slice(&coeffs[i * m..(i + 1) * m]);
-        }
-        let mut exps_p = vec![0i32; cap_m * cap_d];
-        for j in 0..m {
-            exps_p[j * cap_d..j * cap_d + d].copy_from_slice(&exps[j * d..(j + 1) * d]);
-        }
-        let coeffs_lit = xla::Literal::vec1(&coeffs_p)
-            .reshape(&[cap_p as i64, cap_m as i64])
-            .map_err(to_anyhow)?;
-        let exps_lit = xla::Literal::vec1(&exps_p)
-            .reshape(&[cap_m as i64, cap_d as i64])
-            .map_err(to_anyhow)?;
+        crate::ensure!(pts.len() == k * d, "pts length mismatch");
 
         let mut out = Vec::with_capacity(k);
-        for chunk_start in (0..k).step_by(cap_k) {
-            let chunk = (k - chunk_start).min(cap_k);
-            let mut idx = vec![0i32; cap_k];
-            idx[..chunk].copy_from_slice(&piece_idx[chunk_start..chunk_start + chunk]);
-            // Pad points with 1.0 (any in-domain value; results discarded).
-            let mut pts_p = vec![1.0f64; cap_k * cap_d];
-            for i in 0..chunk {
-                let src = &pts[(chunk_start + i) * d..(chunk_start + i + 1) * d];
-                pts_p[i * cap_d..i * cap_d + d].copy_from_slice(src);
-            }
-            let idx_lit = xla::Literal::vec1(&idx).reshape(&[cap_k as i64]).map_err(to_anyhow)?;
-            let pts_lit = xla::Literal::vec1(&pts_p)
-                .reshape(&[cap_k as i64, cap_d as i64])
-                .map_err(to_anyhow)?;
-            let res = self.execute(
-                "polyeval",
-                &[coeffs_lit.clone(), idx_lit, pts_lit, exps_lit.clone()],
-            )?;
-            let vals: Vec<f64> = res[0].to_vec().map_err(to_anyhow)?;
-            out.extend_from_slice(&vals[..chunk]);
+        for (i, &pi) in piece_idx.iter().enumerate() {
+            crate::ensure!(
+                pi >= 0 && (pi as usize) < p,
+                "piece index {pi} out of range ({p} pieces)"
+            );
+            let piece = pi as usize;
+            let x = &pts[i * d..(i + 1) * d];
+            out.push(portable_polyeval_one(&coeffs[piece * m..(piece + 1) * m], exps, m, d, x));
         }
         Ok(out)
     }
 
-    /// Real matmul through the Pallas gemm artifact (f32, fixed size).
+    /// Real matmul through the gemm entry point (f32, fixed size).
     pub fn gemm(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
         let entry = self.entry("gemm")?;
         let n = entry.constants["n"];
-        anyhow::ensure!(a.len() == n * n && b.len() == n * n, "gemm expects {n}x{n}");
-        let a_lit = xla::Literal::vec1(a).reshape(&[n as i64, n as i64]).map_err(to_anyhow)?;
-        let b_lit = xla::Literal::vec1(b).reshape(&[n as i64, n as i64]).map_err(to_anyhow)?;
-        let out = self.execute("gemm", &[a_lit, b_lit])?;
-        out[0].to_vec().map_err(to_anyhow)
+        crate::ensure!(a.len() == n * n && b.len() == n * n, "gemm expects {n}x{n}");
+        Ok(portable_gemm(a, b, n))
     }
 }
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
+// ------------------------------------------------- portable backend kernels
+
+/// Relative-LSQ normal-equation solve — same computation as the `fit`
+/// artifact graph (python/compile/model.py) and `modeling::fit::rust_fit`.
+pub fn portable_fit(x: &[f64], n: usize, m: usize) -> Vec<f64> {
+    crate::modeling::fit::rust_fit(&x[..n * m], n, m)
 }
 
-/// PJRT-backed model evaluation: estimate many calls against one model in
-/// one (or few) dispatches. Mirrors `PerfModel::estimate` for the median
-/// statistic.
+/// One point of the `polyeval` graph: Σ_j c_j · Π_dd x_dd^e_{j,dd}.
+fn portable_polyeval_one(coeffs: &[f64], exps: &[i32], m: usize, d: usize, x: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for j in 0..m {
+        let mut mono = 1.0;
+        for dd in 0..d {
+            mono *= x[dd].powi(exps[j * d + dd]);
+        }
+        acc += coeffs[j] * mono;
+    }
+    acc
+}
+
+/// Plain row-major n x n matmul (the Pallas gemm artifact's semantics).
+pub fn portable_gemm(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; n * n];
+    for i in 0..n {
+        for l in 0..n {
+            let av = a[i * n + l];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += av * b[l * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Batched model evaluation: estimate many calls against one model in one
+/// (or few) dispatches. Mirrors `PerfModel::estimate` for one statistic.
 pub fn polyeval_model(
     rt: &mut Runtime,
     model: &crate::modeling::PerfModel,
@@ -274,6 +256,12 @@ mod tests {
     }
 
     #[test]
+    fn missing_artifacts_fail_with_context() {
+        let e = Runtime::load(Path::new("/nonexistent/dlapm-artifacts")).unwrap_err();
+        assert!(e.to_string().contains("manifest.json"), "{e}");
+    }
+
+    #[test]
     fn manifest_loads() {
         let m = Manifest::load(&Runtime::artifacts_dir());
         if let Ok(m) = m {
@@ -285,8 +273,7 @@ mod tests {
     }
 
     #[test]
-    fn pjrt_fit_matches_rust_fit() {
-        let Some(mut rt) = runtime() else { return };
+    fn portable_fit_matches_rust_fit() {
         // y = 1 + 2x on x in (0,1]: relative design matrix rows [1/y, x/y].
         let pts: Vec<f64> = (1..=32).map(|i| i as f64 / 32.0).collect();
         let ys: Vec<f64> = pts.iter().map(|x| 1.0 + 2.0 * x).collect();
@@ -295,43 +282,72 @@ mod tests {
             x.push(1.0 / y);
             x.push(p / y);
         }
-        let beta_pjrt = rt.fit(&x, 32, 2).unwrap();
+        let beta = portable_fit(&x, 32, 2);
         let beta_rust = crate::modeling::fit::rust_fit(&x, 32, 2);
-        for (a, b) in beta_pjrt.iter().zip(&beta_rust) {
-            assert!((a - b).abs() < 1e-7, "{beta_pjrt:?} vs {beta_rust:?}");
+        for (a, b) in beta.iter().zip(&beta_rust) {
+            assert!((a - b).abs() < 1e-12, "{beta:?} vs {beta_rust:?}");
         }
-        assert!((beta_pjrt[0] - 1.0).abs() < 1e-5);
-        assert!((beta_pjrt[1] - 2.0).abs() < 1e-5);
+        assert!((beta[0] - 1.0).abs() < 1e-5);
+        assert!((beta[1] - 2.0).abs() < 1e-5);
+
+        // Through the artifact entry point when artifacts are present.
+        if let Some(mut rt) = runtime() {
+            let via_rt = rt.fit(&x, 32, 2).unwrap();
+            for (a, b) in via_rt.iter().zip(&beta_rust) {
+                assert!((a - b).abs() < 1e-7);
+            }
+        }
     }
 
     #[test]
-    fn pjrt_polyeval_matches_scalar_eval() {
-        let Some(mut rt) = runtime() else { return };
+    fn portable_polyeval_matches_scalar_eval() {
         // Two pieces of a 1-D model: p0(x) = 1 + x, p1(x) = 2x.
         let coeffs = [1.0, 1.0, 0.0, 2.0];
         let exps = [0, 1];
         let piece_idx = [0i32, 0, 1, 1];
         let pts = [0.25, 0.5, 0.25, 1.0];
-        let got = rt.polyeval(&coeffs, 2, 2, &piece_idx, &pts, 1, &exps).unwrap();
         let want = [1.25, 1.5, 0.5, 2.0];
-        for (g, w) in got.iter().zip(want) {
-            assert!((g - w).abs() < 1e-12, "{got:?}");
+        for (i, (&pi, w)) in piece_idx.iter().zip(want).enumerate() {
+            let g = portable_polyeval_one(
+                &coeffs[pi as usize * 2..(pi as usize + 1) * 2],
+                &exps,
+                2,
+                1,
+                &pts[i..i + 1],
+            );
+            assert!((g - w).abs() < 1e-12, "point {i}: {g} vs {w}");
+        }
+        // Multi-dim monomials: 3 + 2·x·y² at (2, 3) = 3 + 36.
+        let g = portable_polyeval_one(&[3.0, 2.0], &[0, 0, 1, 2], 2, 2, &[2.0, 3.0]);
+        assert!((g - 39.0).abs() < 1e-12, "{g}");
+
+        // Through the artifact entry point when artifacts are present.
+        if let Some(mut rt) = runtime() {
+            let got = rt.polyeval(&coeffs, 2, 2, &piece_idx, &pts, 1, &exps).unwrap();
+            for (g, w) in got.iter().zip(want) {
+                assert!((g - w).abs() < 1e-12, "{got:?}");
+            }
+            // Out-of-range piece indices (negative or >= p) must error.
+            assert!(rt.polyeval(&coeffs, 2, 2, &[-1], &[0.5], 1, &exps).is_err());
+            assert!(rt.polyeval(&coeffs, 2, 2, &[2], &[0.5], 1, &exps).is_err());
         }
     }
 
     #[test]
-    fn pjrt_gemm_runs_real_matmul() {
-        let Some(mut rt) = runtime() else { return };
-        let n = rt.entry("gemm").unwrap().constants["n"];
+    fn portable_gemm_runs_real_matmul() {
+        let n = 16;
         let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32) * 0.5).collect();
         let mut eye = vec![0.0f32; n * n];
         for i in 0..n {
             eye[i * n + i] = 1.0;
         }
-        let c = rt.gemm(&a, &eye).unwrap();
+        let c = portable_gemm(&a, &eye, n);
         for (x, y) in c.iter().zip(&a) {
             assert!((x - y).abs() < 1e-5);
         }
+        // 2x2 sanity: [[1,2],[3,4]] · [[5,6],[7,8]] = [[19,22],[43,50]].
+        let c2 = portable_gemm(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2);
+        assert_eq!(c2, vec![19.0, 22.0, 43.0, 50.0]);
     }
 
     #[test]

@@ -22,7 +22,9 @@ use std::collections::HashMap;
 
 use crate::machine::kernels::{Call, Diag, Region, Scalar, Side, Trans, Uplo};
 use crate::machine::{Elem, Session};
-use signatures::{mat_shape, signature, Arg};
+use self::signatures::{mat_shape, signature, Arg};
+
+use crate::util::error::Result;
 
 /// A named buffer created by `dmalloc`.
 #[derive(Clone, Debug)]
@@ -67,7 +69,7 @@ impl Sampler {
     }
 
     /// Feed one input line; returns output lines produced (if any).
-    pub fn feed(&mut self, line: &str) -> anyhow::Result<Vec<String>> {
+    pub fn feed(&mut self, line: &str) -> Result<Vec<String>> {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             return Ok(Vec::new());
@@ -75,7 +77,7 @@ impl Sampler {
         let tokens: Vec<&str> = line.split_whitespace().collect();
         match tokens[0] {
             "dmalloc" | "smalloc" | "cmalloc" | "zmalloc" => {
-                anyhow::ensure!(tokens.len() == 3, "malloc: usage `dmalloc NAME LEN`");
+                crate::ensure!(tokens.len() == 3, "malloc: usage `dmalloc NAME LEN`");
                 let name = tokens[1].to_string();
                 let len: usize = tokens[2].parse()?;
                 let id = self.fresh_id();
@@ -127,7 +129,7 @@ impl Sampler {
     }
 
     /// Process a full script, returning all output lines.
-    pub fn run_script(&mut self, script: &str) -> anyhow::Result<Vec<String>> {
+    pub fn run_script(&mut self, script: &str) -> Result<Vec<String>> {
         let mut out = Vec::new();
         for line in script.lines() {
             out.extend(self.feed(line)?);
@@ -143,17 +145,17 @@ impl Sampler {
         id
     }
 
-    fn parse_call(&mut self, routine: &str, args: &[&str]) -> anyhow::Result<Call> {
+    fn parse_call(&mut self, routine: &str, args: &[&str]) -> Result<Call> {
         let elem = Elem::parse(
             routine
                 .chars()
                 .next()
-                .ok_or_else(|| anyhow::anyhow!("empty routine"))?,
+                .ok_or_else(|| crate::err!("empty routine"))?,
         )
-        .ok_or_else(|| anyhow::anyhow!("unknown type prefix in '{routine}'"))?;
+        .ok_or_else(|| crate::err!("unknown type prefix in '{routine}'"))?;
         let (kernel, sig) = signature(routine)
-            .ok_or_else(|| anyhow::anyhow!("unknown routine '{routine}'"))?;
-        anyhow::ensure!(
+            .ok_or_else(|| crate::err!("unknown routine '{routine}'"))?;
+        crate::ensure!(
             args.len() == sig.len(),
             "'{routine}' expects {} arguments, got {}",
             sig.len(),
@@ -169,35 +171,35 @@ impl Sampler {
                     call.flags.side = Some(match *tok {
                         "L" => Side::Left,
                         "R" => Side::Right,
-                        t => anyhow::bail!("bad side '{t}'"),
+                        t => crate::bail!("bad side '{t}'"),
                     })
                 }
                 Arg::Uplo => {
                     call.flags.uplo = Some(match *tok {
                         "L" => Uplo::Lower,
                         "U" => Uplo::Upper,
-                        t => anyhow::bail!("bad uplo '{t}'"),
+                        t => crate::bail!("bad uplo '{t}'"),
                     })
                 }
                 Arg::TransA => {
                     call.flags.trans_a = Some(match *tok {
                         "N" => Trans::No,
                         "T" | "C" => Trans::Yes,
-                        t => anyhow::bail!("bad trans '{t}'"),
+                        t => crate::bail!("bad trans '{t}'"),
                     })
                 }
                 Arg::TransB => {
                     call.flags.trans_b = Some(match *tok {
                         "N" => Trans::No,
                         "T" | "C" => Trans::Yes,
-                        t => anyhow::bail!("bad trans '{t}'"),
+                        t => crate::bail!("bad trans '{t}'"),
                     })
                 }
                 Arg::Diag => {
                     call.flags.diag = Some(match *tok {
                         "N" => Diag::NonUnit,
                         "U" => Diag::Unit,
-                        t => anyhow::bail!("bad diag '{t}'"),
+                        t => crate::bail!("bad diag '{t}'"),
                     })
                 }
                 Arg::M => call.m = tok.parse()?,

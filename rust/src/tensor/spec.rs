@@ -2,6 +2,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::error::Result;
+
 /// A binary tensor contraction `C_<c> := A_<a> B_<b>`. Index storage order
 /// follows the subscript order (first index fastest, column-major style).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -14,13 +16,13 @@ pub struct Contraction {
 
 impl Contraction {
     /// Parse `"abc=ai,ibc"` (C indices `=` A indices `,` B indices).
-    pub fn parse(s: &str) -> anyhow::Result<Contraction> {
+    pub fn parse(s: &str) -> Result<Contraction> {
         let (c_part, rest) = s
             .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("expected '=' in contraction '{s}'"))?;
+            .ok_or_else(|| crate::err!("expected '=' in contraction '{s}'"))?;
         let (a_part, b_part) = rest
             .split_once(',')
-            .ok_or_else(|| anyhow::anyhow!("expected ',' between operands in '{s}'"))?;
+            .ok_or_else(|| crate::err!("expected ',' between operands in '{s}'"))?;
         let take = |p: &str| p.trim().chars().collect::<Vec<char>>();
         let (c, a, b) = (take(c_part), take(a_part), take(b_part));
         // Validity: every C index appears in exactly one of A/B; contracted
@@ -28,14 +30,14 @@ impl Contraction {
         for &i in &c {
             let in_a = a.contains(&i);
             let in_b = b.contains(&i);
-            anyhow::ensure!(
+            crate::ensure!(
                 in_a ^ in_b,
                 "output index '{i}' must appear in exactly one operand"
             );
         }
         for &i in &a {
             if !c.contains(&i) {
-                anyhow::ensure!(b.contains(&i), "index '{i}' is neither free nor contracted");
+                crate::ensure!(b.contains(&i), "index '{i}' is neither free nor contracted");
             }
         }
         let mut dims = BTreeMap::new();

@@ -1,0 +1,238 @@
+//! Crate-local error handling (the usual ecosystem error crates are not
+//! in the offline registry).
+//!
+//! A deliberately small error layer with the surface the crate uses:
+//!
+//! * [`Error`] — a message plus an optional chained source;
+//! * [`Result`] — `Result<T, Error>` alias;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, wrapping the underlying error one level deeper;
+//! * the [`err!`](crate::err), [`bail!`](crate::bail) and
+//!   [`ensure!`](crate::ensure) macros for formatted construction.
+//!
+//! `Display` renders the full context chain outermost-first, separated by
+//! `": "` — e.g. `reading artifacts/manifest.json: No such file or
+//! directory` — so a top-level `{e}` shows the whole story.
+
+use std::fmt;
+
+/// A chain of error messages; the head is the most recent context.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct a leaf error from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), source: None }
+    }
+
+    /// Wrap this error with one more layer of context.
+    pub fn context(self, msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message, without the source chain.
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the chain outermost-first (self included).
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        std::iter::successors(Some(self), |e| e.source.as_deref())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_ref().map(|e| e.as_ref() as _)
+    }
+}
+
+// `?` conversions for the foreign error types the crate actually meets.
+// (A blanket `impl<E: std::error::Error> From<E>` would collide with the
+// reflexive `From<Error>`, so each is spelled out.)
+macro_rules! impl_from {
+    ($($ty:ty),* $(,)?) => {$(
+        impl From<$ty> for Error {
+            fn from(e: $ty) -> Error {
+                Error::msg(e.to_string())
+            }
+        }
+    )*};
+}
+
+impl_from!(
+    std::io::Error,
+    std::str::Utf8Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::fmt::Error,
+);
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// `.context(..)` extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<C: Into<String>>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<C: Into<String>>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: Into<String>>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `err!("...{}", x)` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...{}", x)` — return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "...{}", x)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_missing() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn construction_and_display() {
+        let e = Error::msg("plain failure");
+        assert_eq!(e.to_string(), "plain failure");
+        let e = crate::err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = Error::msg("inner").context("middle").context("outer");
+        assert_eq!(e.to_string(), "outer: middle: inner");
+        assert_eq!(e.message(), "outer");
+        let msgs: Vec<&str> = e.chain().map(|x| x.message()).collect();
+        assert_eq!(msgs, vec!["outer", "middle", "inner"]);
+    }
+
+    #[test]
+    fn result_context_wraps_foreign_errors() {
+        let r: Result<(), std::io::Error> = Err(io_missing());
+        let e = r.context("reading store.json").unwrap_err();
+        assert_eq!(e.to_string(), "reading store.json: no such file");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, std::io::Error> = Ok(7);
+        let v = ok
+            .with_context(|| -> String { panic!("must not be evaluated") })
+            .unwrap();
+        assert_eq!(v, 7);
+        let r: Result<(), std::io::Error> = Err(io_missing());
+        let e = r.with_context(|| format!("attempt {}", 3)).unwrap_err();
+        assert!(e.to_string().starts_with("attempt 3: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing key").unwrap_err().to_string(), "missing key");
+        assert_eq!(Some(1u8).context("unused").unwrap(), 1);
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("x").is_err());
+
+        fn utf8(b: &[u8]) -> Result<String> {
+            Ok(std::str::from_utf8(b)?.to_string())
+        }
+        assert!(utf8(&[0xff, 0xfe]).is_err());
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn check(v: i32) -> Result<i32> {
+            crate::ensure!(v >= 0, "negative value {v}");
+            if v > 100 {
+                crate::bail!("too large: {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(check(5).unwrap(), 5);
+        assert_eq!(check(-1).unwrap_err().to_string(), "negative value -1");
+        assert_eq!(check(101).unwrap_err().to_string(), "too large: 101");
+    }
+
+    #[test]
+    fn std_error_source_chain() {
+        let e = Error::msg("root").context("top");
+        let dyn_err: &dyn std::error::Error = &e;
+        assert_eq!(dyn_err.source().unwrap().to_string(), "root");
+    }
+}

@@ -7,6 +7,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+use crate::util::error::Result;
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
@@ -56,9 +58,9 @@ impl Json {
         self.as_obj().and_then(|o| o.get(key))
     }
     /// `obj.get(key)` that errors with the key name — for manifest parsing.
-    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+    pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing JSON key '{key}'"))
+            .ok_or_else(|| crate::err!("missing JSON key '{key}'"))
     }
 
     // -------------------------------------------------------- constructors
@@ -137,12 +139,12 @@ impl Json {
     }
 
     // ------------------------------------------------------------ parsing
-    pub fn parse(text: &str) -> anyhow::Result<Json> {
+    pub fn parse(text: &str) -> Result<Json> {
         let bytes = text.as_bytes();
         let mut pos = 0usize;
         let v = parse_value(bytes, &mut pos)?;
         skip_ws(bytes, &mut pos);
-        anyhow::ensure!(pos == bytes.len(), "trailing characters at byte {pos}");
+        crate::ensure!(pos == bytes.len(), "trailing characters at byte {pos}");
         Ok(v)
     }
 }
@@ -153,9 +155,9 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
     skip_ws(b, pos);
-    anyhow::ensure!(*pos < b.len(), "unexpected end of JSON");
+    crate::ensure!(*pos < b.len(), "unexpected end of JSON");
     match b[*pos] {
         b'{' => parse_obj(b, pos),
         b'[' => parse_arr(b, pos),
@@ -167,8 +169,8 @@ fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
     }
 }
 
-fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> anyhow::Result<Json> {
-    anyhow::ensure!(
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    crate::ensure!(
         b[*pos..].starts_with(lit.as_bytes()),
         "invalid literal at byte {pos}"
     );
@@ -176,7 +178,7 @@ fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> anyhow::Result<Js
     Ok(v)
 }
 
-fn parse_num(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
     let start = *pos;
     while *pos < b.len()
         && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
@@ -185,12 +187,12 @@ fn parse_num(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
     }
     let s = std::str::from_utf8(&b[start..*pos])?;
     Ok(Json::Num(s.parse::<f64>().map_err(|e| {
-        anyhow::anyhow!("bad number '{s}' at byte {start}: {e}")
+        crate::err!("bad number '{s}' at byte {start}: {e}")
     })?))
 }
 
-fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
-    anyhow::ensure!(
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    crate::ensure!(
         *pos < b.len() && b[*pos] == b'"',
         "expected string at byte {pos}"
     );
@@ -204,7 +206,7 @@ fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
             }
             b'\\' => {
                 *pos += 1;
-                anyhow::ensure!(*pos < b.len(), "bad escape at end");
+                crate::ensure!(*pos < b.len(), "bad escape at end");
                 match b[*pos] {
                     b'"' => s.push('"'),
                     b'\\' => s.push('\\'),
@@ -215,13 +217,13 @@ fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
                     b'b' => s.push('\u{8}'),
                     b'f' => s.push('\u{c}'),
                     b'u' => {
-                        anyhow::ensure!(*pos + 4 < b.len(), "bad \\u escape");
+                        crate::ensure!(*pos + 4 < b.len(), "bad \\u escape");
                         let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
                         let code = u32::from_str_radix(hex, 16)?;
                         s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                         *pos += 4;
                     }
-                    c => anyhow::bail!("unknown escape '\\{}'", c as char),
+                    c => crate::bail!("unknown escape '\\{}'", c as char),
                 }
                 *pos += 1;
             }
@@ -234,7 +236,7 @@ fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
             }
         }
     }
-    anyhow::bail!("unterminated string")
+    crate::bail!("unterminated string")
 }
 
 fn utf8_len(first: u8) -> usize {
@@ -246,7 +248,7 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
-fn parse_arr(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
     *pos += 1; // '['
     let mut arr = Vec::new();
     skip_ws(b, pos);
@@ -257,19 +259,19 @@ fn parse_arr(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
     loop {
         arr.push(parse_value(b, pos)?);
         skip_ws(b, pos);
-        anyhow::ensure!(*pos < b.len(), "unterminated array");
+        crate::ensure!(*pos < b.len(), "unterminated array");
         match b[*pos] {
             b',' => *pos += 1,
             b']' => {
                 *pos += 1;
                 return Ok(Json::Arr(arr));
             }
-            c => anyhow::bail!("expected ',' or ']' got '{}'", c as char),
+            c => crate::bail!("expected ',' or ']' got '{}'", c as char),
         }
     }
 }
 
-fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
     *pos += 1; // '{'
     let mut map = BTreeMap::new();
     skip_ws(b, pos);
@@ -281,19 +283,19 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
         skip_ws(b, pos);
         let key = parse_string(b, pos)?;
         skip_ws(b, pos);
-        anyhow::ensure!(*pos < b.len() && b[*pos] == b':', "expected ':'");
+        crate::ensure!(*pos < b.len() && b[*pos] == b':', "expected ':'");
         *pos += 1;
         let val = parse_value(b, pos)?;
         map.insert(key, val);
         skip_ws(b, pos);
-        anyhow::ensure!(*pos < b.len(), "unterminated object");
+        crate::ensure!(*pos < b.len(), "unterminated object");
         match b[*pos] {
             b',' => *pos += 1,
             b'}' => {
                 *pos += 1;
                 return Ok(Json::Obj(map));
             }
-            c => anyhow::bail!("expected ',' or '}}' got '{}'", c as char),
+            c => crate::bail!("expected ',' or '}}' got '{}'", c as char),
         }
     }
 }

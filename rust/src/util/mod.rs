@@ -1,12 +1,13 @@
 //! In-tree engineering substrates.
 //!
-//! The offline crate registry in this environment carries only the `xla`
-//! crate's dependency closure, so the usual ecosystem crates (rand, serde,
-//! clap, criterion, proptest) are unavailable; each has a purpose-sized
-//! replacement here (see DESIGN.md §7).
+//! The offline crate registry in this environment is empty, so the usual
+//! ecosystem crates (rand, serde, clap, criterion, proptest, and the
+//! common error-handling crates) are unavailable; each has a
+//! purpose-sized replacement here (see DESIGN.md §7).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod plot;
 pub mod prop;

@@ -1,0 +1,34 @@
+//! CLI smoke tests: exercise the `dlapm` binary end-to-end so `main.rs`
+//! is covered by `cargo test`.
+
+use std::process::Command;
+
+fn dlapm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_dlapm"))
+}
+
+#[test]
+fn help_exits_successfully() {
+    let out = dlapm().arg("help").output().expect("spawning dlapm");
+    assert!(out.status.success(), "exit: {:?}", out.status);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("subcommands:"), "{text}");
+    assert!(text.contains("figures"), "{text}");
+}
+
+#[test]
+fn no_arguments_prints_help() {
+    let out = dlapm().output().expect("spawning dlapm");
+    assert!(out.status.success(), "exit: {:?}", out.status);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("subcommands:"));
+}
+
+#[test]
+fn list_exits_successfully_and_names_figures() {
+    let out = dlapm().arg("list").output().expect("spawning dlapm");
+    assert!(out.status.success(), "exit: {:?}", out.status);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("figure ids:"), "{text}");
+    assert!(text.contains("fig4_12"), "{text}");
+    assert!(text.contains("haswell"), "{text}");
+}

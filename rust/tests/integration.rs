@@ -8,6 +8,35 @@ use dlapm::predict::algorithms::BlockedAlg;
 use dlapm::predict::measurement::{coverage, measure_algorithm};
 use dlapm::predict::predictor::predict_calls;
 
+/// Per-process unique scratch directory, removed on every exit path
+/// (including assertion-failure unwinds) via `Drop`.
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let dir = std::env::temp_dir().join(format!(
+            "dlapm_{tag}_{}_{nanos}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
 #[test]
 fn pipeline_generate_save_load_predict_validate() {
     let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
@@ -17,8 +46,8 @@ fn pipeline_generate_save_load_predict_validate() {
     assert!(n_gen >= 3, "expected >= 3 kernel models, got {n_gen}");
 
     // Round-trip the store through disk.
-    let dir = std::env::temp_dir().join("dlapm_integration");
-    let path = dir.join("store.json");
+    let dir = TempDir::new("integration");
+    let path = dir.path().join("store.json");
     store.save(&path).unwrap();
     let loaded = ModelStore::load(&path).unwrap();
     assert_eq!(loaded.models.len(), store.models.len());
@@ -30,7 +59,54 @@ fn pipeline_generate_save_load_predict_validate() {
     let meas = measure_algorithm(&machine, &alg, n, b, 5, 7);
     let re = (pred.time.med - meas.med).abs() / meas.med;
     assert!(re < 0.08, "prediction error {re}");
-    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn store_save_load_error_paths() {
+    let dir = TempDir::new("store_errors");
+
+    // Missing file: load must fail, not panic.
+    let missing = dir.path().join("does_not_exist.json");
+    let e = ModelStore::load(&missing);
+    assert!(e.is_err());
+
+    // Malformed JSON: parse error surfaces as Err.
+    let bad = dir.path().join("bad.json");
+    std::fs::write(&bad, "{ not json at all").unwrap();
+    assert!(ModelStore::load(&bad).is_err());
+
+    // Valid JSON but wrong shape: missing required keys.
+    let wrong = dir.path().join("wrong.json");
+    std::fs::write(&wrong, r#"{"machine": "x"}"#).unwrap();
+    let err = ModelStore::load(&wrong).unwrap_err();
+    assert!(err.to_string().contains("models"), "{err}");
+
+    // Wrong-typed values must surface as Err, not panic.
+    let typed = dir.path().join("typed.json");
+    std::fs::write(&typed, r#"{"machine": "x", "models": 5}"#).unwrap();
+    let err = ModelStore::load(&typed).unwrap_err();
+    assert!(err.to_string().contains("array"), "{err}");
+
+    // A model piece with lo > hi must surface as Err, not panic.
+    let dom = dir.path().join("domain.json");
+    std::fs::write(
+        &dom,
+        r#"{"machine": "x", "models": [{"case": "c", "exps": [[0]], "scale": [1],
+            "gen_cost": 0,
+            "pieces": [{"lo": [100], "hi": [8],
+                        "coeffs": [[1],[1],[1],[1],[0]]}]}]}"#,
+    )
+    .unwrap();
+    let err = ModelStore::load(&dom).unwrap_err();
+    assert!(err.to_string().contains("domain"), "{err}");
+
+    // Round trip through a nested path (save creates parent dirs).
+    let nested = dir.path().join("a/b/store.json");
+    let store = ModelStore::new("testbed/label/1t");
+    store.save(&nested).unwrap();
+    let loaded = ModelStore::load(&nested).unwrap();
+    assert_eq!(loaded.machine_label, "testbed/label/1t");
+    assert!(loaded.models.is_empty());
 }
 
 #[test]
