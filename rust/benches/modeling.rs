@@ -1,10 +1,16 @@
-//! Bench: model generation (Table 3.2 "model cost" analogue) and the
-//! relative-LSQ fit backends (Rust vs PJRT artifact).
-use dlapm::machine::{CpuId, Elem, Library, Machine};
+//! Bench: model generation (Table 3.2 "model cost" analogue), the
+//! relative-LSQ fit backends (Rust vs PJRT artifact), and the parallel
+//! engine's sequential-vs-parallel generation comparison.
+use std::sync::Arc;
+
+use dlapm::engine::{available_parallelism, Engine};
 use dlapm::machine::{Call, KernelId, Uplo};
+use dlapm::machine::{CpuId, Elem, Library, Machine};
 use dlapm::modeling::fit::{design_matrix, rust_fit};
-use dlapm::modeling::generator::{generate_model, GenConfig};
-use dlapm::modeling::Domain;
+use dlapm::modeling::generator::{generate_model, generate_model_with, GenConfig};
+use dlapm::modeling::{Domain, ModelStore};
+use dlapm::predict::algorithms::potrf::Potrf;
+use dlapm::predict::measurement::coverage;
 use dlapm::util::bench::BenchSuite;
 use dlapm::util::rng::Rng;
 
@@ -18,6 +24,51 @@ fn main() {
         generate_model(&machine, &GenConfig { reps: 5, ..Default::default() }, &potf2, &domain, 1).1.pieces
     });
 
+    // Split-level parallelism within one 2-D case: sequential vs all-core
+    // engine on the same deterministic workload.
+    let mut trsm = Call::new(KernelId::Trsm, Elem::D);
+    trsm.flags.side = Some(dlapm::machine::Side::Left);
+    trsm.flags.uplo = Some(Uplo::Lower);
+    trsm.flags.trans_a = Some(dlapm::machine::Trans::No);
+    trsm.flags.diag = Some(dlapm::machine::Diag::NonUnit);
+    let trsm_domain = Domain::new(vec![24, 24], vec![536, 1048]);
+    let gen_cfg = GenConfig { reps: 5, oversampling: 2, ..Default::default() };
+    let seq_engine = Engine::sequential();
+    let par_engine = Engine::new(available_parallelism());
+    suite.add("generate_case/dtrsm-2D-jobs1", || {
+        generate_model_with(&seq_engine, &machine, &gen_cfg, &trsm, &trsm_domain, 1)
+            .unwrap()
+            .1
+            .pieces
+    });
+    suite.add(
+        &format!("generate_case/dtrsm-2D-jobs{}", par_engine.jobs()),
+        || {
+            generate_model_with(&par_engine, &machine, &gen_cfg, &trsm, &trsm_domain, 1)
+                .unwrap()
+                .1
+                .pieces
+        },
+    );
+
+    // Case-level parallelism: the `gen --all` path over every case the
+    // potrf variants need (the multi-case workload of the CLI).
+    let algs = Potrf::all(Elem::D);
+    let e1 = Arc::new(Engine::new(1));
+    let en = Arc::new(Engine::new(available_parallelism()));
+    suite.add("gen_all/potrf-jobs1", || {
+        let refs: Vec<&dyn dlapm::predict::BlockedAlg> =
+            algs.iter().map(|a| a as &dyn dlapm::predict::BlockedAlg).collect();
+        let mut store = ModelStore::new("bench");
+        coverage::ensure_models_with(&e1, &machine, &mut store, &refs, 536, 104, 1).unwrap()
+    });
+    suite.add(&format!("gen_all/potrf-jobs{}", en.jobs()), || {
+        let refs: Vec<&dyn dlapm::predict::BlockedAlg> =
+            algs.iter().map(|a| a as &dyn dlapm::predict::BlockedAlg).collect();
+        let mut store = ModelStore::new("bench");
+        coverage::ensure_models_with(&en, &machine, &mut store, &refs, 536, 104, 1).unwrap()
+    });
+
     // Fit backends on a 128x12 system.
     let mut rng = Rng::new(3);
     let exps: Vec<Vec<u8>> = (0..4u8).flat_map(|i| (0..3u8).map(move |j| vec![i, j])).collect();
@@ -28,4 +79,5 @@ fn main() {
     if let Ok(mut rt) = dlapm::runtime::Runtime::load_default() {
         suite.add("fit/pjrt-128x12", || rt.fit(&x, 128, 12).unwrap()[0]);
     }
+    suite.finish();
 }

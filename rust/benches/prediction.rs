@@ -1,12 +1,14 @@
 //! Bench: the prediction hot path (paper headline — predictions are
 //! orders of magnitude faster than measurement). Covers Fig 4.12/4.14
-//! selection sweeps and the scalar vs PJRT polyeval backends.
+//! selection sweeps, cold-vs-warm estimate-cache prediction, batched
+//! model evaluation, and the scalar vs PJRT polyeval backends.
+use dlapm::engine::ModelCache;
 use dlapm::machine::{CpuId, Elem, Library, Machine};
 use dlapm::modeling::ModelStore;
 use dlapm::predict::algorithms::potrf::Potrf;
 use dlapm::predict::algorithms::BlockedAlg;
 use dlapm::predict::measurement::coverage;
-use dlapm::predict::predictor::predict_calls;
+use dlapm::predict::predictor::{predict_calls, predict_calls_cached};
 use dlapm::util::bench::BenchSuite;
 
 fn main() {
@@ -20,11 +22,34 @@ fn main() {
     suite.add_throughput("predict_calls/potrf-n2008", calls.len() as u64, "calls", || {
         predict_calls(&store, &calls).time.med
     });
+    // Cold cache: a fresh ModelCache per iteration (every call misses).
+    suite.add_throughput("predict_cached/cold", calls.len() as u64, "calls", || {
+        let cache = ModelCache::new();
+        predict_calls_cached(&store, &calls, &cache).time.med
+    });
+    // Warm cache: one shared cache across iterations (every call hits
+    // after the first pass — the memoized batched-prediction regime).
+    let warm = ModelCache::new();
+    predict_calls_cached(&store, &calls, &warm);
+    suite.add_throughput("predict_cached/warm", calls.len() as u64, "calls", || {
+        predict_calls_cached(&store, &calls, &warm).time.med
+    });
     suite.add("call_sequence_gen/potrf-n2008", || alg.calls(2008, 128).len());
     suite.add("blocksize_sweep/65-candidates", || {
         let bs: Vec<usize> = (24..=536).step_by(8).collect();
         dlapm::predict::blocksize::optimize_blocksize(&store, &alg, 2008, &bs).b_pred
     });
+    // Batched evaluation: ordered sweep through one model's domain.
+    if let Some(model) = store.models.values().max_by_key(|m| m.pieces.len()) {
+        let pts: Vec<Vec<usize>> =
+            (24..2048).step_by(2).map(|v| vec![v; model.dims()]).collect();
+        suite.add_throughput("evaluate/per-point", pts.len() as u64, "pts", || {
+            pts.iter().map(|p| model.estimate(p).med).sum::<f64>()
+        });
+        suite.add_throughput("evaluate/batch", pts.len() as u64, "pts", || {
+            model.evaluate_batch(&pts).iter().map(|s| s.med).sum::<f64>()
+        });
+    }
     // PJRT vs scalar backend on one model.
     if let Ok(mut rt) = dlapm::runtime::Runtime::load_default() {
         // Pick a model that fits one 64-piece polyeval dispatch.
@@ -43,4 +68,5 @@ fn main() {
             dlapm::runtime::polyeval_model(&mut rt, &model, dlapm::util::stats::Stat::Med, &pts).unwrap().len()
         });
     }
+    suite.finish();
 }

@@ -19,4 +19,5 @@ fn main() {
     suite.add_throughput("polyeval/full-batch-2048", 2048, "pts", || {
         rt.polyeval(&coeffs, 4, 24, &idx, &pts, 3, &exps).unwrap().len()
     });
+    suite.finish();
 }

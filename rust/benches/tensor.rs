@@ -15,4 +15,5 @@ fn main() {
     suite.add("micro_predict/one-alg", || micro::predict(&machine, &con, gemm, Elem::D, 3).seconds);
     suite.add("execute_full/one-alg", || execute_full(&machine, &con, gemm, Elem::D, 3));
     suite.add("rank/36-algorithms", || micro::rank(&machine, &con, &algs, Elem::D, 3).len());
+    suite.finish();
 }

@@ -1,0 +1,235 @@
+//! Thread-safe memoization of model estimates for batched prediction.
+//!
+//! Prediction sweeps (block-size optimization, algorithm ranking, tensor
+//! contraction scans) evaluate the same models at the same — or nearly the
+//! same — sizes over and over. [`ModelCache`] memoizes the full
+//! [`Summary`] of an estimate, keyed by the model's case string plus the
+//! argument sizes quantized to a configurable granularity. With the
+//! default granularity of 1 the key is exact and cached predictions are
+//! bit-identical to uncached ones; a coarser granularity trades a bounded
+//! size perturbation for a higher hit rate (the models are piecewise
+//! polynomials, so nearby sizes share pieces and similar values).
+//!
+//! Writes go through an `RwLock<HashMap>`; concurrent lookups only take
+//! the read lock. A racing double-compute of the same key is harmless:
+//! estimates are deterministic, so both writers store the same value.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::util::stats::Summary;
+
+/// Stack-allocated size key: rounded sizes padded with zeros plus the
+/// dimension count. Models carry at most 4 size dimensions (see
+/// `PerfModel::estimate`'s clamp buffer), and all-zero size vectors never
+/// reach the cache (the zero-size fast path answers first), so zero
+/// padding is unambiguous.
+type SizeKey = ([usize; 4], u8);
+
+/// Memoized `(case, rounded sizes) -> Summary` store with hit/miss
+/// counters. Shareable across threads (`&ModelCache` is all that's
+/// needed; wrap in `Arc` to share ownership).
+///
+/// Two-level map so the hot hit path allocates nothing: the case is
+/// looked up by `&str` and the size key lives on the stack; only a miss
+/// pays for the owned `String` entry.
+pub struct ModelCache {
+    granularity: usize,
+    map: RwLock<HashMap<String, HashMap<SizeKey, Summary>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for ModelCache {
+    fn default() -> ModelCache {
+        ModelCache::new()
+    }
+}
+
+impl ModelCache {
+    /// Exact-key cache (granularity 1): memoization only, no rounding.
+    pub fn new() -> ModelCache {
+        ModelCache::with_granularity(1)
+    }
+
+    /// Cache whose keys quantize sizes to multiples of `granularity`
+    /// (nearest multiple; clamped to >= 1).
+    pub fn with_granularity(granularity: usize) -> ModelCache {
+        ModelCache {
+            granularity: granularity.max(1),
+            map: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Quantize sizes to the cache key grid.
+    pub fn round(&self, sizes: &[usize]) -> Vec<usize> {
+        let g = self.granularity;
+        sizes.iter().map(|&v| (v + g / 2) / g * g).collect()
+    }
+
+    /// The stack key for a size vector; `None` if the dimensionality
+    /// exceeds the cache's key shape (then the caller computes uncached).
+    fn size_key(&self, sizes: &[usize]) -> Option<SizeKey> {
+        if sizes.len() > 4 {
+            return None;
+        }
+        let g = self.granularity;
+        let mut padded = [0usize; 4];
+        for (dst, &v) in padded.iter_mut().zip(sizes) {
+            *dst = (v + g / 2) / g * g;
+        }
+        Some((padded, sizes.len() as u8))
+    }
+
+    /// Cached estimate: on a miss, `compute` is called with the *rounded*
+    /// sizes (so the stored value matches its key exactly) and the result
+    /// is stored. A hit performs no allocation.
+    pub fn get_or_insert_with(
+        &self,
+        case: &str,
+        sizes: &[usize],
+        compute: impl FnOnce(&[usize]) -> Summary,
+    ) -> Summary {
+        let Some(key) = self.size_key(sizes) else {
+            let rounded = self.round(sizes);
+            return compute(&rounded);
+        };
+        {
+            let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+            if let Some(hit) = map.get(case).and_then(|inner| inner.get(&key)) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return *hit;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let value = compute(&key.0[..sizes.len()]);
+        self.map
+            .write()
+            .unwrap_or_else(|p| p.into_inner())
+            .entry(case.to_string())
+            .or_default()
+            .insert(key, value);
+        value
+    }
+
+    /// Peek without computing (counts as neither hit nor miss).
+    pub fn peek(&self, case: &str, sizes: &[usize]) -> Option<Summary> {
+        let key = self.size_key(sizes)?;
+        self.map
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(case)
+            .and_then(|inner| inner.get(&key))
+            .copied()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of memoized `(case, sizes)` entries.
+    pub fn len(&self) -> usize {
+        self.map
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .values()
+            .map(|inner| inner.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.map.write().unwrap_or_else(|p| p.into_inner()).clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+    use std::sync::Arc;
+
+    #[test]
+    fn counts_hits_and_misses() {
+        let cache = ModelCache::new();
+        let compute = |s: &[usize]| Summary::constant(s[0] as f64);
+        let a = cache.get_or_insert_with("dgemm", &[128, 128], compute);
+        assert_eq!(a.med, 128.0);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = cache.get_or_insert_with("dgemm", &[128, 128], compute);
+        assert_eq!(b.med, 128.0);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // Different case or sizes miss independently.
+        cache.get_or_insert_with("dtrsm", &[128, 128], compute);
+        cache.get_or_insert_with("dgemm", &[136, 128], compute);
+        assert_eq!((cache.hits(), cache.misses()), (1, 3));
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn granularity_merges_nearby_sizes() {
+        let cache = ModelCache::with_granularity(8);
+        let compute = |s: &[usize]| Summary::constant(s[0] as f64);
+        let a = cache.get_or_insert_with("c", &[126], compute);
+        let b = cache.get_or_insert_with("c", &[129], compute);
+        // Both quantize to 128: one miss, one hit, identical values.
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(a.med, 128.0);
+        assert_eq!(b.med, 128.0);
+    }
+
+    #[test]
+    fn exact_granularity_does_not_perturb_sizes() {
+        let cache = ModelCache::new();
+        assert_eq!(cache.round(&[127, 24, 5000]), vec![127, 24, 5000]);
+    }
+
+    #[test]
+    fn clear_resets_contents_and_counters() {
+        let cache = ModelCache::new();
+        cache.get_or_insert_with("c", &[8], |_| Summary::constant(1.0));
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+    }
+
+    #[test]
+    fn concurrent_access_through_engine_is_consistent() {
+        let cache = Arc::new(ModelCache::new());
+        let engine = Engine::new(4);
+        let tasks: Vec<_> = (0..32usize)
+            .map(|i| {
+                let cache = Arc::clone(&cache);
+                move || {
+                    // 32 tasks over 8 distinct keys: heavy sharing.
+                    let n = (i % 8 + 1) * 8;
+                    cache
+                        .get_or_insert_with("dpotf2_L_a1", &[n], |s| {
+                            Summary::constant(s[0] as f64 * 2.0)
+                        })
+                        .med
+                }
+            })
+            .collect();
+        let out = engine.run(tasks).unwrap();
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, ((i % 8 + 1) * 8) as f64 * 2.0);
+        }
+        assert_eq!(cache.len(), 8);
+        // Every lookup either hit or missed; double-computes may inflate
+        // misses slightly under contention but hits + misses == lookups.
+        assert_eq!(cache.hits() + cache.misses(), 32);
+    }
+}

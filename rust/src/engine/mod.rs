@@ -1,0 +1,28 @@
+//! Parallel execution engine (§Perf: "models are generated automatically
+//! once per platform" — so generate them as fast as the platform allows).
+//!
+//! Two zero-dependency building blocks, both over `std` only:
+//!
+//! * [`pool`] — a work-stealing job pool ([`Engine`]) over `std::thread` +
+//!   `std::sync::mpsc`. Batches of independent jobs (model-generation
+//!   cases, domain-split leaf fits) fan out across worker threads; the
+//!   submitting thread *helps* execute its own batch, so nested
+//!   submissions (a case job fanning out its split fits) cannot deadlock.
+//!   Worker panics are captured and surfaced as
+//!   [`crate::util::error::Error`], never as a crashed thread.
+//! * [`cache`] — a thread-safe [`ModelCache`] memoizing model estimates
+//!   (piece lookup + polynomial evaluation) keyed by case and rounded
+//!   argument sizes, for batched prediction sweeps that revisit the same
+//!   model pieces (cf. arXiv:1409.8602's reuse of per-piece predictions).
+//!
+//! Determinism contract: the engine never changes *what* is computed, only
+//! *where*. Every job derives its random streams from its own inputs (see
+//! [`crate::modeling::generator::fit_leaf`]), so a batch's results are
+//! byte-identical for any worker count, including the inline sequential
+//! path of [`Engine::sequential`].
+
+pub mod cache;
+pub mod pool;
+
+pub use cache::ModelCache;
+pub use pool::{available_parallelism, Engine};

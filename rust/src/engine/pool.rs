@@ -1,0 +1,346 @@
+//! A work-stealing job pool over `std::thread` + `std::sync::mpsc`.
+//!
+//! [`Engine::run`] submits a batch of independent jobs and returns their
+//! results in submission order. Jobs are distributed round-robin across
+//! per-worker deques; each worker pops its own deque front-first and
+//! steals from the back of its siblings when idle. The submitting thread
+//! is itself a worker for the duration of the batch (it "helps"), which
+//! gives two properties for free:
+//!
+//! * `Engine::new(1)` spawns no threads at all — the caller drains the
+//!   single deque in FIFO order, i.e. exact sequential execution;
+//! * nested submissions (a job that calls [`Engine::run`] on the same
+//!   engine) cannot deadlock: every thread blocked on a batch actively
+//!   executes queued jobs until its own results are complete.
+//!
+//! A panicking job is caught with `std::panic::catch_unwind` and reported
+//! as a [`crate::util::error::Error`] carrying the job index and payload;
+//! the pool itself and all other jobs of the batch keep running.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::error::{Error, Result};
+
+/// Number of hardware threads, with a safe fallback of 1.
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock that survives a poisoned mutex: jobs run under `catch_unwind`, so
+/// a poison can only come from a panic outside job execution; the queue
+/// data (a deque of not-yet-started jobs) is always consistent.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct Shared {
+    /// One deque per worker slot. Batches push round-robin across all
+    /// slots; owners pop the front, thieves take from the back.
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    /// Round-robin push cursor (shared so nested batches interleave).
+    cursor: AtomicUsize,
+    /// Idle workers park here until new work or shutdown.
+    idle: Mutex<()>,
+    signal: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn push(&self, job: Job) {
+        let slot = self.cursor.fetch_add(1, Ordering::SeqCst) % self.deques.len();
+        lock(&self.deques[slot]).push_back(job);
+    }
+
+    /// Pop for worker `own`: own deque first (FIFO), then steal from the
+    /// back of the others, scanning cyclically for fairness.
+    fn pop_for(&self, own: usize) -> Option<Job> {
+        if let Some(job) = lock(&self.deques[own]).pop_front() {
+            return Some(job);
+        }
+        let n = self.deques.len();
+        for off in 1..n {
+            if let Some(job) = lock(&self.deques[(own + off) % n]).pop_back() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Pop for a non-worker (batch-submitting) thread: front-first over
+    /// all deques, so the single-deque sequential engine runs jobs in
+    /// exact submission order.
+    fn pop_helping(&self) -> Option<Job> {
+        for dq in &self.deques {
+            if let Some(job) = lock(dq).pop_front() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    fn has_work(&self) -> bool {
+        self.deques.iter().any(|dq| !lock(dq).is_empty())
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, own: usize) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Some(job) = shared.pop_for(own) {
+            job();
+            continue;
+        }
+        let guard = lock(&shared.idle);
+        if shared.shutdown.load(Ordering::SeqCst) || shared.has_work() {
+            continue;
+        }
+        // A push can slip in between `has_work` and the wait; the timeout
+        // bounds that stall instead of requiring a lock-coupled queue.
+        let _ = shared.signal.wait_timeout(guard, Duration::from_millis(20));
+    }
+}
+
+/// The job pool. See the module docs for the execution model.
+pub struct Engine {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    jobs: usize,
+}
+
+impl Engine {
+    /// Pool with `jobs` execution slots (clamped to >= 1). The caller
+    /// participates in every batch, so `jobs - 1` threads are spawned.
+    pub fn new(jobs: usize) -> Engine {
+        let jobs = jobs.max(1);
+        let slots = (jobs - 1).max(1);
+        let shared = Arc::new(Shared {
+            deques: (0..slots).map(|_| Mutex::new(VecDeque::new())).collect(),
+            cursor: AtomicUsize::new(0),
+            idle: Mutex::new(()),
+            signal: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..jobs - 1)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dlapm-engine-{i}"))
+                    .spawn(move || worker_loop(sh, i))
+                    .expect("spawning engine worker")
+            })
+            .collect();
+        Engine { shared, workers, jobs }
+    }
+
+    /// Inline single-slot engine: no threads, exact submission order.
+    pub fn sequential() -> Engine {
+        Engine::new(1)
+    }
+
+    /// Configured parallelism (worker threads + the submitting thread).
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Execute a batch of independent jobs, returning their results in
+    /// submission order. If any job panicked, the error of the
+    /// lowest-index failing job is returned (deterministic regardless of
+    /// scheduling); the remaining jobs still run to completion.
+    pub fn run<T, F>(&self, tasks: Vec<F>) -> Result<Vec<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let (tx, rx) = channel::<(usize, std::result::Result<T, String>)>();
+        for (i, task) in tasks.into_iter().enumerate() {
+            let tx = tx.clone();
+            self.shared.push(Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(task)).map_err(|p| panic_message(p.as_ref()));
+                let _ = tx.send((i, r));
+            }));
+        }
+        drop(tx);
+        self.shared.signal.notify_all();
+
+        // Help execute queued jobs (this batch's or a sibling batch's)
+        // while results trickle in.
+        let mut slots: Vec<Option<std::result::Result<T, String>>> = (0..n).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < n {
+            while let Ok((i, r)) = rx.try_recv() {
+                slots[i] = Some(r);
+                received += 1;
+            }
+            if received >= n {
+                break;
+            }
+            if let Some(job) = self.shared.pop_helping() {
+                job();
+                continue;
+            }
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok((i, r)) => {
+                    slots[i] = Some(r);
+                    received += 1;
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(msg)) => {
+                    return Err(Error::msg(format!("engine job {i} panicked: {msg}")))
+                }
+                None => {
+                    return Err(Error::msg(format!(
+                        "engine job {i} was lost before reporting a result"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.signal.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_arrive_in_submission_order() {
+        let engine = Engine::new(4);
+        let tasks: Vec<_> = (0..100usize).map(|i| move || i * i).collect();
+        let out = engine.run(tasks).unwrap();
+        assert_eq!(out, (0..100usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let work = |i: usize| (0..=i as u64).map(|v| v.wrapping_mul(v)).sum::<u64>();
+        let seq = Engine::sequential()
+            .run((0..64usize).map(|i| move || work(i)).collect::<Vec<_>>())
+            .unwrap();
+        for jobs in [2, 3, 8] {
+            let par = Engine::new(jobs)
+                .run((0..64usize).map(|i| move || work(i)).collect::<Vec<_>>())
+                .unwrap();
+            assert_eq!(seq, par, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let engine = Engine::new(3);
+        let out: Vec<usize> = engine.run(Vec::<fn() -> usize>::new()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn zero_jobs_clamps_to_one() {
+        let engine = Engine::new(0);
+        assert_eq!(engine.jobs(), 1);
+        assert_eq!(engine.run(vec![|| 7usize]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn panic_surfaces_as_error_not_crash() {
+        let engine = Engine::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("job exploded on purpose")),
+            Box::new(|| 3),
+        ];
+        let err = engine.run(tasks).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("job 1 panicked"), "{msg}");
+        assert!(msg.contains("exploded on purpose"), "{msg}");
+        // The pool survives a panicked job: the next batch runs normally.
+        let ok = engine
+            .run((0..8usize).map(|i| move || i + 1).collect::<Vec<_>>())
+            .unwrap();
+        assert_eq!(ok, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        let engine = Engine::new(4);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16)
+            .map(|i| -> Box<dyn FnOnce() -> usize + Send> {
+                if i % 5 == 2 {
+                    Box::new(move || panic!("fail {i}"))
+                } else {
+                    Box::new(move || i)
+                }
+            })
+            .collect();
+        let err = engine.run(tasks).unwrap_err();
+        assert!(err.to_string().contains("job 2 panicked"), "{err}");
+    }
+
+    #[test]
+    fn nested_batches_complete() {
+        let engine = Arc::new(Engine::new(3));
+        let tasks: Vec<_> = (0..6usize)
+            .map(|i| {
+                let engine = Arc::clone(&engine);
+                move || {
+                    let inner = engine
+                        .run((0..5usize).map(|j| move || i * 10 + j).collect::<Vec<_>>())
+                        .unwrap();
+                    inner.into_iter().sum::<usize>()
+                }
+            })
+            .collect();
+        let out = engine.run(tasks).unwrap();
+        let want: Vec<usize> = (0..6usize).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn engine_is_reusable_across_many_batches() {
+        let engine = Engine::new(2);
+        for round in 0..20usize {
+            let out = engine
+                .run((0..10usize).map(|i| move || i + round).collect::<Vec<_>>())
+                .unwrap();
+            assert_eq!(out[9], 9 + round);
+        }
+    }
+}

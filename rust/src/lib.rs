@@ -11,6 +11,10 @@
 //! * [`modeling`] — automated piecewise-polynomial performance models
 //!   (Ch. 3), with the relative least-squares fit running either in-process
 //!   or through the AOT-compiled JAX/Pallas artifact via PJRT;
+//! * [`engine`] — the parallel execution engine: a zero-dependency
+//!   work-stealing job pool that fans model generation out across cases
+//!   and domain splits, plus a thread-safe model-estimate cache for
+//!   batched prediction;
 //! * [`predict`] — model-based predictions for blocked algorithms:
 //!   algorithm selection and block-size optimization (Ch. 4);
 //! * [`cachepred`] — cache-aware timing combination (Ch. 5);
@@ -20,6 +24,12 @@
 //! * [`figures`] — drivers regenerating every table and figure of the
 //!   paper's evaluation (see DESIGN.md §6).
 
+// Crate-wide style posture for the clippy `-D warnings` CI gate: indexed
+// loops over parallel fixed-size arrays and wide-but-explicit argument
+// lists are deliberate idiom in this numeric codebase.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+pub mod engine;
 pub mod machine;
 pub mod util;
 pub mod sampler;

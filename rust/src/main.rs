@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! dlapm figures --all [--scale quick|full] [--out-dir out] [--seed N]
-//! dlapm generate --cpu haswell --lib openblas --threads 1 --out models.json
+//! dlapm gen --all --cpu haswell --lib openblas --jobs 8 --out models.json
 //! dlapm predict  --models models.json --op potrf --n 2104 --b 128
 //! dlapm select   --cpu haswell --lib openblas --op trtri --n 2104 --b 128
 //! dlapm contract --spec "abc=ai,ibc" --n 64
@@ -10,18 +10,20 @@
 //! dlapm list
 //! ```
 
+use dlapm::engine::{self, Engine, ModelCache};
 use dlapm::figures::{self, Ctx, Scale};
 use dlapm::machine::{CpuId, CpuSpec, Elem, Library, Machine};
 use dlapm::report::Report;
 use dlapm::util::cli::Args;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "figures" => figures_cmd(&args),
-        "generate" => generate_cmd(&args),
+        "gen" | "generate" => generate_cmd(&args),
         "predict" => predict_cmd(&args),
         "select" => select_cmd(&args),
         "contract" => contract_cmd(&args),
@@ -39,13 +41,22 @@ dlapm — performance modeling and prediction for dense linear algebra
 
 subcommands:
   figures [ids... | --all] [--scale quick|full] [--out-dir out] [--seed N]
-  generate --cpu <id> --lib <name> [--threads N] [--out file.json]
+  gen      [--all] [--op <name>] --cpu <id> --lib <name> [--threads N]
+           [--jobs N] [--out file.json]   (alias: generate)
+           --all generates the full kernel-model registry in one parallel
+           run; --jobs defaults to the available hardware parallelism
   predict  --models file.json --op <potrf|trtri|...> --n N --b B
   select   --cpu <id> --lib <name> --op <potrf|trtri|trsyl> --n N --b B
   contract --spec \"abc=ai,ibc\" --n N [--small 8]
   sampler  (reads a Sampler script from stdin)
   list     (available figure ids / cpus / libraries)
 ";
+
+/// Shared `--jobs N` handling: a parallel engine sized to the flag, or to
+/// the hardware when the flag is absent.
+fn engine_from(args: &Args) -> Arc<Engine> {
+    Arc::new(Engine::new(args.get_usize("jobs", engine::available_parallelism())))
+}
 
 fn machine_from(args: &Args) -> Machine {
     let cpu = CpuSpec::parse(args.get_or("cpu", "haswell")).expect("unknown --cpu");
@@ -67,22 +78,33 @@ fn figures_cmd(args: &Args) {
 
 fn generate_cmd(args: &Args) {
     let machine = machine_from(args);
+    let engine = engine_from(args);
     let out = args.get_or("out", "models.json");
     let mut store = dlapm::modeling::ModelStore::new(&machine.label());
-    let algs = default_algs("all");
+    // `--all` = the full kernel-model registry (every op family incl.
+    // trsyl); otherwise the requested op family, defaulting to the
+    // standard set.
+    let op = if args.flag("all") { "full" } else { args.get_or("op", "all") };
+    let algs = default_algs(op);
     let refs: Vec<&dyn dlapm::predict::BlockedAlg> = algs.iter().map(|a| a.as_ref()).collect();
-    let n = dlapm::predict::measurement::coverage::ensure_models(
+    let n = dlapm::predict::measurement::coverage::ensure_models_with(
+        &engine,
         &machine,
         &mut store,
         &refs,
         args.get_usize("max-n", 4152),
         args.get_usize("max-b", 536),
         args.get_u64("seed", 0x5EED),
-    );
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("model generation failed: {e}");
+        std::process::exit(1);
+    });
     store.save(Path::new(out)).expect("saving model store");
     println!(
-        "generated {n} models for {} (measurement cost {:.1} virtual s) -> {out}",
+        "generated {n} models for {} with {} job(s) (measurement cost {:.1} virtual s) -> {out}",
         machine.label(),
+        engine.jobs(),
         store.total_gen_cost()
     );
 }
@@ -93,16 +115,16 @@ fn default_algs(op: &str) -> Vec<Box<dyn dlapm::predict::BlockedAlg>> {
     use dlapm::predict::algorithms::trsyl::TrsylAlg;
     use dlapm::predict::algorithms::trtri::Trtri;
     let mut v: Vec<Box<dyn dlapm::predict::BlockedAlg>> = Vec::new();
-    if op == "potrf" || op == "all" {
+    if op == "potrf" || op == "all" || op == "full" {
         v.extend(Potrf::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
     }
-    if op == "trtri" || op == "all" {
+    if op == "trtri" || op == "all" || op == "full" {
         v.extend(Trtri::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
     }
-    if op == "trsyl" {
+    if op == "trsyl" || op == "full" {
         v.extend(TrsylAlg::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
     }
-    if op == "all" {
+    if op == "all" || op == "full" {
         for o in [LapackOp::Lauum, LapackOp::Sygst, LapackOp::Getrf, LapackOp::Geqrf] {
             v.push(Box::new(LapackAlg::new(o, Elem::D)));
         }
@@ -117,8 +139,11 @@ fn predict_cmd(args: &Args) {
     .expect("loading model store");
     let algs = default_algs(args.get_or("op", "potrf"));
     let (n, b) = (args.get_usize("n", 2104), args.get_usize("b", 128));
+    // One shared estimate cache across all algorithm variants: they reuse
+    // the same kernel calls, so later variants mostly hit.
+    let cache = ModelCache::new();
     for alg in &algs {
-        let pred = dlapm::predict::predict_calls(&store, &alg.calls(n, b));
+        let pred = dlapm::predict::predictor::predict_calls_cached(&store, &alg.calls(n, b), &cache);
         println!(
             "{:<24} t_med={:>10.4} ms  (skipped {} unmodeled calls)",
             alg.name(),
@@ -126,17 +151,24 @@ fn predict_cmd(args: &Args) {
             pred.unmodeled_calls
         );
     }
+    eprintln!(
+        "[dlapm] estimate cache: {} hits / {} misses",
+        cache.hits(),
+        cache.misses()
+    );
 }
 
 fn select_cmd(args: &Args) {
     let machine = machine_from(args);
+    let engine = engine_from(args);
     let algs = default_algs(args.get_or("op", "potrf"));
     let refs: Vec<&dyn dlapm::predict::BlockedAlg> = algs.iter().map(|a| a.as_ref()).collect();
     let mut store = dlapm::modeling::ModelStore::new(&machine.label());
     let (n, b) = (args.get_usize("n", 2104), args.get_usize("b", 128));
-    dlapm::predict::measurement::coverage::ensure_models(
-        &machine, &mut store, &refs, n.max(520), 536, args.get_u64("seed", 0x5EED),
-    );
+    dlapm::predict::measurement::coverage::ensure_models_with(
+        &engine, &machine, &mut store, &refs, n.max(520), 536, args.get_u64("seed", 0x5EED),
+    )
+    .expect("model generation failed");
     let ranked = dlapm::predict::selection::rank_algorithms(&store, &refs, n, b);
     println!("predicted ranking for n={n}, b={b} on {}:", machine.label());
     for (i, r) in ranked.iter().enumerate() {

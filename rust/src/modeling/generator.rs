@@ -1,17 +1,36 @@
-//! Automated model generation by adaptive refinement (paper §3.2.5, §3.3).
+//! Automated model generation by adaptive refinement (paper §3.2.5, §3.3),
+//! structured for the parallel execution engine.
 //!
-//! For one case (a template [`Call`]) and size domain, the generator
-//! samples the kernel on a grid, fits a relative-LSQ polynomial per
-//! summary statistic, and recursively splits the domain until the error
-//! measure of the *reference statistic* falls below the target bound or
-//! the domain is narrower than the minimum width.
+//! Generation for one case (a template [`Call`]) splits into:
+//!
+//! 1. a pure *planning* step ([`plan_case`]) that derives everything a
+//!    leaf job needs — exponent table, points per dimension, scaling,
+//!    case key — from the template and configuration alone;
+//! 2. independent *leaf jobs* ([`fit_leaf`]): sample the kernel on a grid
+//!    over one sub-domain, fit a relative-LSQ polynomial per summary
+//!    statistic, report the error measure of the reference statistic.
+//!    Every leaf owns a fresh [`crate::machine::Session`] seeded from
+//!    `(base seed, case key, sub-domain)`, so its result is a pure
+//!    function of its inputs — byte-identical regardless of which worker
+//!    runs it or in what order;
+//! 3. a *round-based* refinement driver ([`generate_model_with`]): fit
+//!    the root, then repeatedly split every frontier domain whose error
+//!    exceeds the bound (worst error first under the piece budget) and
+//!    fan the child fits out across the engine in one batch per round.
+//!
+//! The driver's split schedule depends only on the deterministic leaf
+//! results, so `--jobs 1` and `--jobs N` produce byte-identical models;
+//! the engine changes wall-clock time, never output.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
+use crate::engine::Engine;
 use crate::machine::kernels::{Call, Region, Side};
 use crate::machine::{Machine, Session};
 use crate::sampler::experiment::Experiment;
-use crate::util::stats::{percentile, Stat, Summary};
+use crate::util::error::Result;
+use crate::util::rng::splitmix64;
+use crate::util::stats::{percentile, Stat};
 
 use super::fit::{design_matrix, relative_errors, rust_fit};
 use super::grid::{sample_grid, Domain, GridKind};
@@ -109,14 +128,26 @@ pub struct GenStats {
     pub cost_seconds: f64,
 }
 
-/// Generate a model for `template`'s case over `domain` on `machine`.
-pub fn generate_model(
-    machine: &Machine,
-    cfg: &GenConfig,
-    template: &Call,
-    domain: &Domain,
-    seed: u64,
-) -> (PerfModel, GenStats) {
+/// The size-independent planning output for one case: everything a leaf
+/// fit job needs besides the sub-domain itself. Cheap to clone and share
+/// across workers behind an `Arc`.
+#[derive(Clone, Debug)]
+pub struct GenPlan {
+    pub template: Call,
+    pub cfg: GenConfig,
+    pub case: String,
+    /// Monomial exponent table (M x dims).
+    pub exps: Vec<Vec<u8>>,
+    /// Sample points per dimension (degree + 1 + oversampling).
+    pub ppd: Vec<usize>,
+    /// Per-dimension scaling divisor applied before monomial evaluation.
+    pub scale: Vec<f64>,
+    pub base_seed: u64,
+}
+
+/// Pure planning step: derive the per-case fit structure (paper §3.2.3's
+/// model shape) without touching the machine.
+pub fn plan_case(cfg: &GenConfig, template: &Call, domain: &Domain, seed: u64) -> GenPlan {
     let base = complexity_exponents_for(template);
     assert_eq!(
         base.len(),
@@ -130,139 +161,217 @@ pub fn generate_model(
         .collect();
     let ppd: Vec<usize> = max_deg.iter().map(|&dg| dg + 1 + cfg.oversampling).collect();
     let scale: Vec<f64> = domain.hi.iter().map(|&h| h as f64).collect();
+    GenPlan {
+        case: case_key(template),
+        template: template.clone(),
+        cfg: cfg.clone(),
+        exps,
+        ppd,
+        scale,
+        base_seed: seed,
+    }
+}
 
-    let mut gen = GenCtx {
-        machine,
-        cfg,
-        template,
-        exps: &exps,
-        ppd: &ppd,
-        scale: &scale,
-        session: machine.session(seed),
-        cache: HashMap::new(),
-        stats: GenStats { pieces: 0, measured_points: 0, refinements: 0, cost_seconds: 0.0 },
-        pieces: Vec::new(),
+/// One fitted sub-domain: the output of a leaf job.
+#[derive(Clone, Debug)]
+pub struct FittedNode {
+    pub domain: Domain,
+    /// Coefficients per statistic, indexed by `Stat::ALL` order.
+    pub coeffs: [Vec<f64>; 5],
+    /// Error measure of the reference statistic over the sample grid.
+    pub err: f64,
+}
+
+/// Per-leaf measurement accounting, merged into [`GenStats`].
+#[derive(Clone, Copy, Debug)]
+pub struct LeafStats {
+    pub measured_points: usize,
+    pub cost_seconds: f64,
+}
+
+/// Deterministic per-leaf seed: a SplitMix64 hash of the base seed, the
+/// case key and the sub-domain bounds. Scheduling-independent by
+/// construction.
+fn leaf_seed(base: u64, case: &str, domain: &Domain) -> u64 {
+    let mut state = base ^ 0x9E37_79B9_7F4A_7C15;
+    for &b in case.as_bytes() {
+        state ^= b as u64;
+        splitmix64(&mut state);
+    }
+    for (&lo, &hi) in domain.lo.iter().zip(&domain.hi) {
+        state ^= (lo as u64).wrapping_shl(1) ^ (hi as u64).wrapping_shl(33);
+        splitmix64(&mut state);
+    }
+    splitmix64(&mut state)
+}
+
+/// Leaf job: measure and fit one sub-domain. Owns its session (fresh,
+/// seeded from the job identity), so the result is a pure function of
+/// `(machine, plan, domain)` — independent of worker scheduling.
+///
+/// Deliberate tradeoff vs. the old sequential generator: leaves no
+/// longer share a per-case measurement memo (the Cartesian sample-reuse
+/// of §3.2.2), because a shared memo would make each leaf's timings
+/// depend on which sibling measured a point first — breaking the purity
+/// that guarantees `--jobs` parity. Children therefore re-measure any
+/// point their parent's grid also contained. Under the default Chebyshev
+/// grid, parent/child node sets barely overlap, so the extra measurement
+/// cost is small; `GenStats::measured_points`/`gen_cost` report the
+/// actual (slightly higher) cost honestly.
+pub fn fit_leaf(machine: &Machine, plan: &GenPlan, domain: &Domain) -> (FittedNode, LeafStats) {
+    let cfg = &plan.cfg;
+    let points = sample_grid(domain, cfg.grid, &plan.ppd);
+    let calls: Vec<Call> = points
+        .iter()
+        .map(|p| instantiate_call(&plan.template, p, cfg.fixed_ld))
+        .collect();
+    let seed = leaf_seed(plan.base_seed, &plan.case, domain);
+    let mut session: Session = machine.session(seed);
+    session.warmup();
+    let exp = Experiment {
+        reps: cfg.reps,
+        shuffle: true,
+        warm_double_run: true,
+        seed: seed ^ 0xC0FFEE,
     };
-    gen.session.warmup();
-    gen.refine(domain.clone());
+    let report = exp.run_in(&mut session, &calls);
 
-    let stats = GenStats { pieces: gen.pieces.len(), ..gen.stats };
-    let pieces = std::mem::take(&mut gen.pieces);
-    let cost = gen.stats.cost_seconds;
-    drop(gen);
+    let pts_scaled: Vec<Vec<f64>> = points
+        .iter()
+        .map(|p| p.iter().zip(&plan.scale).map(|(&v, &s)| v as f64 / s).collect())
+        .collect();
+    let mut coeffs: [Vec<f64>; 5] = Default::default();
+    let mut ref_errs = Vec::new();
+    for (si, stat) in Stat::ALL.iter().enumerate() {
+        let ys: Vec<f64> = report.per_call.iter().map(|s| s.get(*stat).max(1e-12)).collect();
+        let x = design_matrix(&pts_scaled, &ys, &plan.exps);
+        let beta = rust_fit(&x, points.len(), plan.exps.len());
+        if *stat == cfg.ref_stat {
+            ref_errs = relative_errors(&pts_scaled, &ys, &plan.exps, &beta);
+        }
+        coeffs[si] = beta;
+    }
+    let err = cfg.err_measure.compute(&ref_errs);
     (
-        PerfModel { case: case_key(template), exps, scale, pieces, gen_cost: cost, ..Default::default() },
-        stats,
+        FittedNode { domain: domain.clone(), coeffs, err },
+        LeafStats { measured_points: points.len(), cost_seconds: report.virtual_seconds },
     )
 }
 
-struct FittedNode {
-    domain: Domain,
-    coeffs: [Vec<f64>; 5],
-    err: f64,
-}
-
-struct GenCtx<'a> {
-    #[allow(dead_code)]
-    machine: &'a Machine,
-    cfg: &'a GenConfig,
-    template: &'a Call,
-    exps: &'a [Vec<u8>],
-    ppd: &'a [usize],
-    scale: &'a [f64],
-    session: Session,
-    /// Measurement cache: point -> summary (gives Cartesian grids their
-    /// sample-reuse advantage automatically, §3.2.2).
-    cache: HashMap<Vec<usize>, Summary>,
-    stats: GenStats,
-    pieces: Vec<Piece>,
-}
-
-impl GenCtx<'_> {
-    /// Worst-error-first refinement: fit every frontier domain, repeatedly
-    /// split the one with the largest error measure. This keeps quality
-    /// uniform if the piece cap is reached (a depth-first recursion would
-    /// spend the whole budget on one corner of the domain).
-    fn refine(&mut self, root: Domain) {
-        let first = self.fit_domain(root);
-        let mut frontier: Vec<FittedNode> = vec![first];
-        loop {
-            // Find the worst splittable node above the bound.
-            let worst = frontier
-                .iter()
-                .enumerate()
-                .filter(|(_, nd)| {
-                    nd.err > self.cfg.err_bound
-                        && nd.domain.split(self.cfg.min_width).is_some()
-                })
-                .max_by(|a, b| a.1.err.partial_cmp(&b.1.err).unwrap())
-                .map(|(i, _)| i);
-            let Some(idx) = worst else { break };
-            if frontier.len() + 1 > self.cfg.max_pieces {
-                break;
-            }
-            let node = frontier.swap_remove(idx);
-            let (a, b) = node.domain.split(self.cfg.min_width).unwrap();
-            frontier.push(self.fit_domain(a));
-            frontier.push(self.fit_domain(b));
-        }
-        self.pieces
-            .extend(frontier.into_iter().map(|nd| Piece { domain: nd.domain, coeffs: nd.coeffs }));
+/// Fan one round of leaf fits out across the engine, merging accounting.
+fn run_fits(
+    engine: &Engine,
+    machine: &Arc<Machine>,
+    plan: &Arc<GenPlan>,
+    domains: Vec<Domain>,
+    stats: &mut GenStats,
+) -> Result<Vec<FittedNode>> {
+    stats.refinements += domains.len();
+    let tasks: Vec<_> = domains
+        .into_iter()
+        .map(|d| {
+            let machine = Arc::clone(machine);
+            let plan = Arc::clone(plan);
+            move || fit_leaf(&machine, &plan, &d)
+        })
+        .collect();
+    let results = engine.run(tasks)?;
+    let mut out = Vec::with_capacity(results.len());
+    for (node, leaf) in results {
+        stats.measured_points += leaf.measured_points;
+        stats.cost_seconds += leaf.cost_seconds;
+        out.push(node);
     }
+    Ok(out)
+}
 
-    fn fit_domain(&mut self, domain: Domain) -> FittedNode {
-        self.stats.refinements += 1;
-        let points = sample_grid(&domain, self.cfg.grid, self.ppd);
-        self.measure_missing(&points);
-
-        let pts_scaled: Vec<Vec<f64>> = points
-            .iter()
-            .map(|p| p.iter().zip(self.scale).map(|(&v, &s)| v as f64 / s).collect())
+/// Generate a model for `template`'s case over `domain` on `machine`,
+/// fanning leaf fits out across `engine`.
+///
+/// Worst-error-first refinement in rounds: every round selects the
+/// frontier nodes above the error bound (worst first, capped by the piece
+/// budget), splits each once, and fits all children as one parallel
+/// batch. This keeps quality uniform when the piece cap bites — the same
+/// property the paper's worst-first strategy has — while exposing every
+/// child fit of a round as an independent job.
+pub fn generate_model_with(
+    engine: &Engine,
+    machine: &Machine,
+    cfg: &GenConfig,
+    template: &Call,
+    domain: &Domain,
+    seed: u64,
+) -> Result<(PerfModel, GenStats)> {
+    let plan = Arc::new(plan_case(cfg, template, domain, seed));
+    let machine = Arc::new(machine.clone());
+    let mut stats =
+        GenStats { pieces: 0, measured_points: 0, refinements: 0, cost_seconds: 0.0 };
+    let mut frontier = run_fits(engine, &machine, &plan, vec![domain.clone()], &mut stats)?;
+    loop {
+        // Worst splittable nodes above the bound, within the piece budget
+        // (each split is net +1 piece). Ties break on frontier position,
+        // keeping the schedule fully deterministic.
+        let budget = cfg.max_pieces.saturating_sub(frontier.len());
+        let mut cand: Vec<usize> = (0..frontier.len())
+            .filter(|&i| {
+                frontier[i].err > cfg.err_bound
+                    && frontier[i].domain.split(cfg.min_width).is_some()
+            })
             .collect();
-        let mut coeffs: [Vec<f64>; 5] = Default::default();
-        let mut ref_errs = Vec::new();
-        for (si, stat) in Stat::ALL.iter().enumerate() {
-            let ys: Vec<f64> = points
-                .iter()
-                .map(|p| self.cache[p].get(*stat).max(1e-12))
-                .collect();
-            let x = design_matrix(&pts_scaled, &ys, self.exps);
-            let beta = rust_fit(&x, points.len(), self.exps.len());
-            if *stat == self.cfg.ref_stat {
-                ref_errs = relative_errors(&pts_scaled, &ys, self.exps, &beta);
-            }
-            coeffs[si] = beta;
+        cand.sort_by(|&a, &b| {
+            frontier[b].err.partial_cmp(&frontier[a].err).unwrap().then(a.cmp(&b))
+        });
+        cand.truncate(budget);
+        if cand.is_empty() {
+            break;
         }
-        let err = self.cfg.err_measure.compute(&ref_errs);
-        FittedNode { domain, coeffs, err }
+        let chosen: std::collections::HashSet<usize> = cand.iter().copied().collect();
+        let mut children = Vec::with_capacity(cand.len() * 2);
+        for &i in &cand {
+            let (a, b) = frontier[i].domain.split(cfg.min_width).unwrap();
+            children.push(a);
+            children.push(b);
+        }
+        let fitted = run_fits(engine, &machine, &plan, children, &mut stats)?;
+        let mut next: Vec<FittedNode> = frontier
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| !chosen.contains(i))
+            .map(|(_, nd)| nd)
+            .collect();
+        next.extend(fitted);
+        frontier = next;
     }
+    stats.pieces = frontier.len();
+    let pieces: Vec<Piece> = frontier
+        .into_iter()
+        .map(|nd| Piece { domain: nd.domain, coeffs: nd.coeffs })
+        .collect();
+    let model = PerfModel {
+        case: plan.case.clone(),
+        exps: plan.exps.clone(),
+        scale: plan.scale.clone(),
+        pieces,
+        gen_cost: stats.cost_seconds,
+        ..Default::default()
+    };
+    Ok((model, stats))
+}
 
-    fn measure_missing(&mut self, points: &[Vec<usize>]) {
-        let missing: Vec<Vec<usize>> =
-            points.iter().filter(|p| !self.cache.contains_key(*p)).cloned().collect();
-        if missing.is_empty() {
-            return;
-        }
-        let calls: Vec<Call> = missing.iter().map(|p| self.instantiate(p)).collect();
-        let exp = Experiment {
-            reps: self.cfg.reps,
-            shuffle: true,
-            warm_double_run: true,
-            seed: 0xC0FFEE ^ self.stats.refinements as u64,
-        };
-        let report = exp.run_in(&mut self.session, &calls);
-        self.stats.cost_seconds += report.virtual_seconds;
-        self.stats.measured_points += missing.len();
-        for (p, s) in missing.into_iter().zip(report.per_call) {
-            self.cache.insert(p, s);
-        }
-    }
-
-    /// Build the measurement call for a sample point: template + sizes +
-    /// fixed leading dimensions + synthetic warm-able operand regions.
-    fn instantiate(&self, point: &[usize]) -> Call {
-        instantiate_call(self.template, point, self.cfg.fixed_ld)
-    }
+/// Sequential wrapper around [`generate_model_with`] (the historical
+/// entry point: inline execution, no worker threads). A panic inside a
+/// leaf fit is re-raised here with its original message attached — the
+/// engine converts it to an error, this wrapper restores the historical
+/// panicking behavior.
+pub fn generate_model(
+    machine: &Machine,
+    cfg: &GenConfig,
+    template: &Call,
+    domain: &Domain,
+    seed: u64,
+) -> (PerfModel, GenStats) {
+    generate_model_with(&Engine::sequential(), machine, cfg, template, domain, seed)
+        .unwrap_or_else(|e| panic!("model generation failed: {e}"))
 }
 
 /// Public variant of the sample-call construction (used by the config
@@ -392,6 +501,43 @@ mod tests {
             let covered = model.pieces.iter().any(|p| p.domain.contains(&[n]));
             assert!(covered, "n={n} uncovered");
         }
+    }
+
+    #[test]
+    fn parallel_generation_is_deterministic_across_job_counts() {
+        let domain = Domain::new(vec![24, 24], vec![536, 1048]);
+        let mach = machine();
+        let cfg = quick_cfg();
+        let (seq, seq_stats) = generate_model_with(
+            &Engine::sequential(),
+            &mach,
+            &cfg,
+            &trsm_template(),
+            &domain,
+            9,
+        )
+        .unwrap();
+        for jobs in [2, 4] {
+            let eng = Engine::new(jobs);
+            let (par, par_stats) =
+                generate_model_with(&eng, &mach, &cfg, &trsm_template(), &domain, 9).unwrap();
+            assert_eq!(seq, par, "jobs={jobs}");
+            // Byte-for-byte identical serialization, and identical cost
+            // accounting (the sums commute because each leaf's numbers
+            // are merged in submission order).
+            assert_eq!(seq.to_json().render(), par.to_json().render(), "jobs={jobs}");
+            assert_eq!(seq_stats.measured_points, par_stats.measured_points);
+        }
+    }
+
+    #[test]
+    fn leaf_seed_depends_on_case_and_domain() {
+        let d1 = Domain::new(vec![24], vec![536]);
+        let d2 = Domain::new(vec![24], vec![528]);
+        assert_ne!(leaf_seed(1, "dtrsm_LLNN_a1", &d1), leaf_seed(1, "dtrsm_LLNN_a1", &d2));
+        assert_ne!(leaf_seed(1, "dtrsm_LLNN_a1", &d1), leaf_seed(1, "dpotf2_L_a1", &d1));
+        assert_ne!(leaf_seed(1, "dtrsm_LLNN_a1", &d1), leaf_seed(2, "dtrsm_LLNN_a1", &d1));
+        assert_eq!(leaf_seed(7, "x", &d1), leaf_seed(7, "x", &d1));
     }
 
     #[test]

@@ -9,6 +9,6 @@ pub mod grid;
 pub mod model;
 pub mod monomials;
 
-pub use generator::{generate_model, ErrMeasure, GenConfig};
+pub use generator::{generate_model, generate_model_with, ErrMeasure, GenConfig, GenPlan};
 pub use grid::{Domain, GridKind};
 pub use model::{case_key, ModelStore, PerfModel};

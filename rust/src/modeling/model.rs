@@ -118,14 +118,62 @@ impl PerfModel {
         let piece = self
             .pieces
             .iter()
-            .find(|p| p.domain.contains(clamped))
-            .unwrap_or(&self.pieces[0]);
+            .position(|p| p.domain.contains(clamped))
+            .unwrap_or(0);
+        self.eval_in_piece(piece, clamped)
+    }
+
+    /// Evaluate all five statistic polynomials of one piece at an
+    /// already-clamped point.
+    fn eval_in_piece(&self, piece: usize, clamped: &[usize]) -> Summary {
+        let coeffs = &self.pieces[piece].coeffs;
         let x = self.scaled(clamped);
         let mut out = Summary::constant(0.0);
         for (si, stat) in Stat::ALL.iter().enumerate() {
-            let v = eval_poly(&self.exps, &piece.coeffs[si], &x);
+            let v = eval_poly(&self.exps, &coeffs[si], &x);
             // Polynomials can dip negative at domain edges; runtimes can't.
             out.set(*stat, v.max(if *stat == Stat::Std { 0.0 } else { 1e-12 }));
+        }
+        out
+    }
+
+    /// Batched estimates for a sweep of size points.
+    ///
+    /// Cache-aware piece lookup (§Perf): sweeps walk domains in order, so
+    /// consecutive points usually land in the same piece — each point is
+    /// first checked against the previously matched piece before falling
+    /// back to the linear scan. Results are identical to calling
+    /// [`PerfModel::estimate`] per point.
+    pub fn evaluate_batch(&self, points: &[Vec<usize>]) -> Vec<Summary> {
+        let d = self.dims();
+        let hull = self.domain_hull();
+        let mut out = Vec::with_capacity(points.len());
+        let mut last: Option<usize> = None;
+        for sizes in points {
+            if sizes.iter().any(|&v| v == 0) {
+                out.push(Summary::constant(0.0));
+                continue;
+            }
+            let mut clamped = [0usize; 4];
+            debug_assert!(d <= 4);
+            for i in 0..d {
+                clamped[i] = sizes[i].clamp(hull.lo[i], hull.hi[i]);
+            }
+            let clamped = &clamped[..d];
+            // The shortcut applies only strictly inside the last piece:
+            // there the containing piece is unique, so reusing it cannot
+            // disagree with estimate()'s first-match rule on boundary
+            // points shared by two neighbours.
+            let piece = match last {
+                Some(p) if strictly_inside(&self.pieces[p].domain, clamped) => p,
+                _ => self
+                    .pieces
+                    .iter()
+                    .position(|p| p.domain.contains(clamped))
+                    .unwrap_or(0),
+            };
+            last = Some(piece);
+            out.push(self.eval_in_piece(piece, clamped));
         }
         out
     }
@@ -226,6 +274,14 @@ impl PerfModel {
             hull_cache: std::sync::OnceLock::new(),
         })
     }
+}
+
+/// Strict interior test for the batched piece-lookup shortcut: a point
+/// strictly inside a piece is contained by that piece alone.
+fn strictly_inside(d: &Domain, x: &[usize]) -> bool {
+    x.iter()
+        .zip(d.lo.iter().zip(&d.hi))
+        .all(|(&v, (&l, &h))| v > l && v < h)
 }
 
 /// Case key of a call: kernel + type prefix + flags + scalar class +
@@ -380,6 +436,24 @@ mod tests {
     fn zero_size_estimates_zero() {
         let m = linear_model();
         assert_eq!(m.estimate(&[0]).med, 0.0);
+    }
+
+    #[test]
+    fn evaluate_batch_matches_per_point_estimates() {
+        let m = linear_model();
+        // Sweep crossing both pieces, out-of-domain points, a zero, and a
+        // shared-boundary point (248) revisited right after a higher
+        // piece matched — the first-match rule must still win there.
+        let points: Vec<Vec<usize>> = [1usize, 8, 104, 248, 250, 400, 248, 504, 0, 100_000, 16]
+            .iter()
+            .map(|&v| vec![v])
+            .collect();
+        let batch = m.evaluate_batch(&points);
+        assert_eq!(batch.len(), points.len());
+        for (p, got) in points.iter().zip(&batch) {
+            let want = m.estimate(p);
+            assert_eq!(*got, want, "point {p:?}");
+        }
     }
 
     #[test]

@@ -29,11 +29,15 @@ pub fn measure_algorithm(
 /// Model-generation helper: ensure a store covers all cases an algorithm
 /// set needs, generating missing models with per-kernel domains.
 pub mod coverage {
+    use std::sync::Arc;
+
+    use crate::engine::Engine;
     use crate::machine::kernels::{size_dims, Call};
     use crate::machine::Machine;
-    use crate::modeling::generator::GenConfig;
-    use crate::modeling::{case_key, generate_model, Domain, ModelStore};
+    use crate::modeling::generator::{generate_model_with, GenConfig};
+    use crate::modeling::{case_key, Domain, ModelStore};
     use crate::predict::algorithms::{distinct_cases, BlockedAlg};
+    use crate::util::error::Result;
 
     /// Standard model domain for a kernel (paper Ch. 4 prelude: problem
     /// sizes to 4152, block sizes 24-536).
@@ -52,7 +56,8 @@ pub mod coverage {
     }
 
     /// Generate every model the algorithms need at (n, b) combinations up
-    /// to (max_n, max_b). Existing cases in `store` are kept.
+    /// to (max_n, max_b). Existing cases in `store` are kept. Sequential
+    /// wrapper around [`ensure_models_with`].
     pub fn ensure_models(
         machine: &Machine,
         store: &mut ModelStore,
@@ -61,6 +66,26 @@ pub mod coverage {
         max_b: usize,
         seed: u64,
     ) -> usize {
+        ensure_models_with(&Arc::new(Engine::sequential()), machine, store, algs, max_n, max_b, seed)
+            .unwrap_or_else(|e| panic!("model generation failed: {e}"))
+    }
+
+    /// Parallel coverage: fan the missing cases out across `engine` as
+    /// one batch of case jobs; each case job in turn fans its domain-split
+    /// leaf fits out on the *same* engine (nested submission is safe — the
+    /// pool's submitting threads help execute). Models are inserted in
+    /// deterministic template order, and every leaf derives its seeds from
+    /// `(seed, case, sub-domain)`, so the resulting store is byte-identical
+    /// for any worker count.
+    pub fn ensure_models_with(
+        engine: &Arc<Engine>,
+        machine: &Machine,
+        store: &mut ModelStore,
+        algs: &[&dyn BlockedAlg],
+        max_n: usize,
+        max_b: usize,
+        seed: u64,
+    ) -> Result<usize> {
         // Collect distinct cases over a probe call sequence (sizes chosen
         // to expose every case incl. last-block remainders).
         let mut templates: Vec<Call> = Vec::new();
@@ -74,18 +99,27 @@ pub mod coverage {
                 }
             }
         }
+        templates.retain(|t| store.get(&case_key(t)).is_none());
+        let tasks: Vec<_> = templates
+            .into_iter()
+            .map(|t| {
+                let engine = Arc::clone(engine);
+                let machine = machine.clone();
+                move || {
+                    let domain = default_domain(&t, max_n, max_b);
+                    let cfg = GenConfig::adjusted_for(&t, machine.threads);
+                    generate_model_with(&engine, &machine, &cfg, &t, &domain, seed ^ 0xD0)
+                }
+            })
+            .collect();
+        let results = engine.run(tasks)?;
         let mut generated = 0;
-        for t in templates {
-            if store.get(&case_key(&t)).is_some() {
-                continue;
-            }
-            let domain = default_domain(&t, max_n, max_b);
-            let cfg = GenConfig::adjusted_for(&t, machine.threads);
-            let (model, _) = generate_model(machine, &cfg, &t, &domain, seed ^ 0xD0);
+        for r in results {
+            let (model, _) = r?;
             store.insert(model);
             generated += 1;
         }
-        generated
+        Ok(generated)
     }
 }
 

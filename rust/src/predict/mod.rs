@@ -10,4 +10,4 @@ pub mod predictor;
 pub mod selection;
 
 pub use algorithms::BlockedAlg;
-pub use predictor::{efficiency, performance, predict_calls, Prediction};
+pub use predictor::{efficiency, performance, predict_calls, predict_calls_cached, Prediction};

@@ -1,9 +1,10 @@
 //! Model-based runtime/performance/efficiency prediction for blocked
 //! algorithms (paper §4.1, eqs. 4.1-4.6).
 
+use crate::engine::ModelCache;
 use crate::machine::kernels::Call;
 use crate::machine::Machine;
-use crate::modeling::ModelStore;
+use crate::modeling::{case_key, ModelStore};
 use crate::util::stats::Summary;
 
 /// A full prediction with its summary statistics.
@@ -21,6 +22,20 @@ pub struct Prediction {
 /// standard deviation combines in quadrature assuming uncorrelated
 /// estimates (eq. 4.3).
 pub fn predict_calls(store: &ModelStore, calls: &[Call]) -> Prediction {
+    predict_calls_impl(store, calls, None)
+}
+
+/// [`predict_calls`] with a shared [`ModelCache`]: each per-call estimate
+/// is memoized under `(case key, rounded sizes)`, so repeated sweeps over
+/// the same call shapes (block-size scans, algorithm rankings) skip the
+/// piece lookup and polynomial evaluation entirely. With the cache's
+/// default exact granularity the result is bit-identical to the uncached
+/// path.
+pub fn predict_calls_cached(store: &ModelStore, calls: &[Call], cache: &ModelCache) -> Prediction {
+    predict_calls_impl(store, calls, Some(cache))
+}
+
+fn predict_calls_impl(store: &ModelStore, calls: &[Call], cache: Option<&ModelCache>) -> Prediction {
     let mut time = Summary::constant(0.0);
     let mut var = 0.0;
     let mut unmodeled = 0;
@@ -29,7 +44,22 @@ pub fn predict_calls(store: &ModelStore, calls: &[Call]) -> Prediction {
             unmodeled += 1;
             continue;
         }
-        match store.estimate_call(call) {
+        let est = match cache {
+            None => store.estimate_call(call),
+            Some(cache) => {
+                let sizes = call.sizes();
+                if sizes.iter().any(|&v| v == 0) {
+                    // Zero-size calls are free; don't pollute the cache.
+                    Some(Summary::constant(0.0))
+                } else {
+                    let case = case_key(call);
+                    store.get(&case).map(|model| {
+                        cache.get_or_insert_with(&case, &sizes, |rounded| model.estimate(rounded))
+                    })
+                }
+            }
+        };
+        match est {
             Some(est) => {
                 time.min += est.min;
                 time.med += est.med;
@@ -114,6 +144,25 @@ mod tests {
         // Std combines in quadrature: sqrt(3) x per-call std.
         assert!((p.time.std - 0.0005 * 3f64.sqrt() * 3.0 / 3.0).abs() < 1e-9);
         assert_eq!(p.unmodeled_calls, 0);
+    }
+
+    #[test]
+    fn cached_prediction_matches_uncached_and_counts_hits() {
+        let mut store = ModelStore::new("t");
+        store.insert(const_model("dpotf2_L_a1", 0.010));
+        let calls = vec![potf2_call(100), potf2_call(200), potf2_call(100), potf2_call(100)];
+        let plain = predict_calls(&store, &calls);
+        let cache = ModelCache::new();
+        let cached = predict_calls_cached(&store, &calls, &cache);
+        assert_eq!(plain.time, cached.time);
+        assert_eq!(plain.unmodeled_calls, cached.unmodeled_calls);
+        // Two distinct sizes -> 2 misses; the repeats hit.
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 2);
+        // A warm second sweep hits on every modeled call.
+        let again = predict_calls_cached(&store, &calls, &cache);
+        assert_eq!(plain.time, again.time);
+        assert_eq!(cache.hits(), 6);
     }
 
     #[test]

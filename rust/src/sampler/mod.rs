@@ -79,6 +79,14 @@ impl Sampler {
             "dmalloc" | "smalloc" | "cmalloc" | "zmalloc" => {
                 crate::ensure!(tokens.len() == 3, "malloc: usage `dmalloc NAME LEN`");
                 let name = tokens[1].to_string();
+                // Redefinition would silently shadow the old buffer id:
+                // calls parsed before the second dmalloc would keep the
+                // stale id while later ones get a new one — the cache
+                // tracker would treat them as distinct buffers. Reject it.
+                crate::ensure!(
+                    !self.buffers.contains_key(&name),
+                    "malloc: buffer '{name}' is already defined"
+                );
                 let len: usize = tokens[2].parse()?;
                 let id = self.fresh_id();
                 self.buffers.insert(name, Buffer { id, len });
@@ -328,6 +336,18 @@ go";
         let mut s = sampler();
         assert!(s.feed("dfoo 1 2 3").is_err());
         assert!(s.feed("dgemm N N 1 2").is_err()); // arity
+    }
+
+    #[test]
+    fn dmalloc_redefinition_is_rejected() {
+        let mut s = sampler();
+        s.feed("dmalloc A 65536").unwrap();
+        let err = s.feed("dmalloc A 1024").unwrap_err();
+        assert!(err.to_string().contains("already defined"), "{err}");
+        // Other names still allocate, and the original binding survives.
+        s.feed("dmalloc B 1024").unwrap();
+        s.feed("dpotf2 L 256 A 256").unwrap();
+        assert_eq!(s.pending.len(), 1);
     }
 
     #[test]

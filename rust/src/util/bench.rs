@@ -89,6 +89,7 @@ pub fn bench_config<T>(
 
 /// Entry point used by the `harness = false` bench binaries.
 pub struct BenchSuite {
+    pub name: String,
     pub results: Vec<BenchResult>,
     filter: Option<String>,
 }
@@ -98,7 +99,7 @@ impl BenchSuite {
         // `cargo bench -- <filter>` passes the filter as an argument.
         let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
         println!("== bench suite: {suite_name} ==");
-        BenchSuite { results: Vec::new(), filter }
+        BenchSuite { name: suite_name.to_string(), results: Vec::new(), filter }
     }
 
     pub fn add<T>(&mut self, name: &str, f: impl FnMut() -> T) {
@@ -122,6 +123,46 @@ impl BenchSuite {
         println!("{}", res.report_throughput(items, unit));
         self.results.push(res);
     }
+
+    /// JSON record of the whole suite (seconds per iteration, per result).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("suite", Json::Str(self.name.clone())),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("sec_per_iter_med", Json::Num(r.time.med)),
+                                ("sec_per_iter_min", Json::Num(r.time.min)),
+                                ("sec_per_iter_max", Json::Num(r.time.max)),
+                                ("iters", Json::Num(r.iters as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// End-of-suite hook: when `DLAPM_BENCH_JSON` names a directory, write
+    /// the results there as `BENCH_<suite>.json` (the perf-trajectory
+    /// record later PRs compare against; see `ci.sh --bench`).
+    pub fn finish(&self) {
+        let Ok(dir) = std::env::var("DLAPM_BENCH_JSON") else {
+            return;
+        };
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.name));
+        let _ = std::fs::create_dir_all(&dir);
+        match std::fs::write(&path, self.to_json().render()) {
+            Ok(()) => eprintln!("[bench] wrote {}", path.display()),
+            Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +176,24 @@ mod tests {
         });
         assert!(r.time.min > 0.0);
         assert!(r.time.min <= r.time.max);
+    }
+
+    #[test]
+    fn suite_json_has_one_entry_per_result() {
+        let suite = BenchSuite {
+            name: "unit".to_string(),
+            results: vec![BenchResult {
+                name: "spin".to_string(),
+                time: Summary::constant(0.5),
+                iters: 3,
+            }],
+            filter: None,
+        };
+        let j = suite.to_json();
+        assert_eq!(j.req("suite").unwrap().as_str(), Some("unit"));
+        let rs = j.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].req("sec_per_iter_med").unwrap().as_f64(), Some(0.5));
     }
 
     #[test]

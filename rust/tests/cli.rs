@@ -32,3 +32,49 @@ fn list_exits_successfully_and_names_figures() {
     assert!(text.contains("fig4_12"), "{text}");
     assert!(text.contains("haswell"), "{text}");
 }
+
+#[test]
+fn help_documents_gen_and_jobs() {
+    let out = dlapm().arg("help").output().expect("spawning dlapm");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("gen"), "{text}");
+    assert!(text.contains("--jobs"), "{text}");
+    assert!(text.contains("--all"), "{text}");
+}
+
+/// End-to-end `--jobs` parity through the real binary: `gen --jobs 1`
+/// and `gen --jobs 4` write byte-identical model stores.
+#[test]
+fn gen_jobs_parity_byte_for_byte() {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!("dlapm_cli_gen_{}_{nanos}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    struct Cleanup(std::path::PathBuf);
+    impl Drop for Cleanup {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+    let _cleanup = Cleanup(dir.clone());
+
+    let gen = |jobs: &str, file: &str| {
+        let path = dir.join(file);
+        let out = dlapm()
+            .args([
+                "gen", "--op", "potrf", "--cpu", "sandybridge", "--lib", "openblas",
+                "--max-n", "536", "--max-b", "104", "--seed", "5", "--jobs", jobs, "--out",
+            ])
+            .arg(&path)
+            .output()
+            .expect("spawning dlapm gen");
+        assert!(out.status.success(), "gen --jobs {jobs}: {:?}", out.status);
+        std::fs::read(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+    };
+    let a = gen("1", "jobs1.json");
+    let b = gen("4", "jobs4.json");
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "gen --jobs 1 and --jobs 4 must write identical stores");
+}

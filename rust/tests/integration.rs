@@ -1,12 +1,16 @@
 //! Cross-module integration tests: the full generate -> store -> load ->
-//! predict -> validate pipeline, plus the PJRT artifact path.
+//! predict -> validate pipeline, engine parity, plus the PJRT artifact
+//! path.
 
+use std::sync::Arc;
+
+use dlapm::engine::{Engine, ModelCache};
 use dlapm::machine::{CpuId, Elem, Library, Machine};
 use dlapm::modeling::ModelStore;
 use dlapm::predict::algorithms::potrf::Potrf;
 use dlapm::predict::algorithms::BlockedAlg;
 use dlapm::predict::measurement::{coverage, measure_algorithm};
-use dlapm::predict::predictor::predict_calls;
+use dlapm::predict::predictor::{predict_calls, predict_calls_cached};
 
 /// Per-process unique scratch directory, removed on every exit path
 /// (including assertion-failure unwinds) via `Drop`.
@@ -59,6 +63,42 @@ fn pipeline_generate_save_load_predict_validate() {
     let meas = measure_algorithm(&machine, &alg, n, b, 5, 7);
     let re = (pred.time.med - meas.med).abs() / meas.med;
     assert!(re < 0.08, "prediction error {re}");
+}
+
+/// The acceptance criterion of ISSUE 2: a 1-job and an N-job `gen` run
+/// produce byte-identical serialized model stores, and cached prediction
+/// over the generated store is bit-identical to uncached.
+#[test]
+fn jobs_parity_one_vs_many_threads_byte_identical() {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+
+    let mut store1 = ModelStore::new(&machine.label());
+    let e1 = Arc::new(Engine::new(1));
+    let n1 = coverage::ensure_models_with(&e1, &machine, &mut store1, &[&alg], 536, 104, 42)
+        .unwrap();
+
+    let mut store4 = ModelStore::new(&machine.label());
+    let e4 = Arc::new(Engine::new(4));
+    let n4 = coverage::ensure_models_with(&e4, &machine, &mut store4, &[&alg], 536, 104, 42)
+        .unwrap();
+
+    assert_eq!(n1, n4);
+    assert!(n1 >= 3, "expected >= 3 kernel models, got {n1}");
+    assert_eq!(
+        store1.to_json().render(),
+        store4.to_json().render(),
+        "1-job and 4-job generation must serialize byte-identically"
+    );
+
+    // Cached prediction over the parallel-generated store matches the
+    // plain path exactly (default exact-granularity cache).
+    let calls = alg.calls(520, 104);
+    let plain = predict_calls(&store4, &calls);
+    let cache = ModelCache::new();
+    let cached = predict_calls_cached(&store4, &calls, &cache);
+    assert_eq!(plain.time, cached.time);
+    assert!(cache.hits() + cache.misses() > 0);
 }
 
 #[test]
