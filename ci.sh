@@ -56,10 +56,26 @@ cargo test -q
 echo "== cargo build --benches =="
 cargo build --benches
 
+echo "== contract --rank determinism smoke (--jobs 1 vs --jobs 4) =="
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --n 32 --rank --jobs 1 \
+    > "$SMOKE_DIR/rank_jobs1.txt"
+cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --n 32 --rank --jobs 4 \
+    > "$SMOKE_DIR/rank_jobs4.txt"
+if cmp -s "$SMOKE_DIR/rank_jobs1.txt" "$SMOKE_DIR/rank_jobs4.txt"; then
+    echo "contract --rank output is byte-identical across job counts"
+else
+    echo "ERROR: contract --rank differs between --jobs 1 and --jobs 4:" >&2
+    diff "$SMOKE_DIR/rank_jobs1.txt" "$SMOKE_DIR/rank_jobs4.txt" >&2 || true
+    exit 1
+fi
+
 if [ "$BENCH" -eq 1 ]; then
     echo "== bench suites (recording BENCH_<suite>.json) =="
     DLAPM_BENCH_JSON="$ROOT" cargo bench --bench modeling
     DLAPM_BENCH_JSON="$ROOT" cargo bench --bench prediction
+    DLAPM_BENCH_JSON="$ROOT" cargo bench --bench tensor
 fi
 
 echo "== ci.sh: all green =="

@@ -1,8 +1,13 @@
 //! Bench: tensor-contraction micro-benchmark prediction vs full execution
-//! (§6.3.4 efficiency study).
+//! (§6.3.4 efficiency study), plus the unified selection core's scaling
+//! axes: cold vs memoized micro-benchmarks and jobs-1 vs jobs-N ranking.
+use std::sync::Arc;
+
+use dlapm::engine::Engine;
 use dlapm::machine::{CpuId, Elem, Library, Machine};
 use dlapm::tensor::exec::execute_full;
-use dlapm::tensor::{generate, micro, Contraction};
+use dlapm::tensor::micro::{self, MicroMemo};
+use dlapm::tensor::{generate, Contraction};
 use dlapm::util::bench::BenchSuite;
 
 fn main() {
@@ -11,9 +16,29 @@ fn main() {
     let con = Contraction::example_abc(48);
     let algs = generate(&con);
     suite.add("generate/abc=ai,ibc", || generate(&con).len());
+
     let gemm = algs.iter().find(|a| a.name().contains("gemm")).unwrap();
-    suite.add("micro_predict/one-alg", || micro::predict(&machine, &con, gemm, Elem::D, 3).seconds);
+    suite.add("micro_predict/one-alg-cold", || {
+        micro::predict(&machine, &con, gemm, Elem::D, 3).seconds
+    });
+    // Warm memo: after the first call every iteration is a pure lookup.
+    let warm = Arc::new(MicroMemo::new());
+    micro::predict_with(&machine, &con, gemm, Elem::D, 3, &warm);
+    suite.add("micro_predict/one-alg-memoized", || {
+        micro::predict_with(&machine, &con, gemm, Elem::D, 3, &warm).seconds
+    });
     suite.add("execute_full/one-alg", || execute_full(&machine, &con, gemm, Elem::D, 3));
-    suite.add("rank/36-algorithms", || micro::rank(&machine, &con, &algs, Elem::D, 3).len());
+
+    suite.add("rank/36-seq-unmemoized", || micro::rank(&machine, &con, &algs, Elem::D, 3).len());
+    let e1 = Arc::new(Engine::new(1));
+    suite.add("rank/36-jobs1-memoized", || {
+        let memo = Arc::new(MicroMemo::new());
+        micro::rank_with(&e1, &machine, &con, &algs, Elem::D, 3, &memo).unwrap().len()
+    });
+    let en = Arc::new(Engine::new(4));
+    suite.add("rank/36-jobs4-memoized", || {
+        let memo = Arc::new(MicroMemo::new());
+        micro::rank_with(&en, &machine, &con, &algs, Elem::D, 3, &memo).unwrap().len()
+    });
     suite.finish();
 }

@@ -1,0 +1,181 @@
+//! Generic string-keyed memoization — the [`ModelCache`] idea
+//! (memoize a deterministic computation under a scheduling-independent
+//! key, tolerate racing double-computes) generalized over the value type,
+//! so other subsystems can reuse it: the tensor micro-benchmark memo keys
+//! steady-state kernel timings by `(kernel call signature, cache
+//! precondition)` the same way prediction keys model estimates by
+//! `(case, sizes)`.
+//!
+//! [`ModelCache`]: crate::engine::ModelCache
+//!
+//! Contract: `compute` must be a pure function of the key (derive any RNG
+//! seeds from the key, never from the calling thread or submission
+//! order). Under that contract a racing double-compute stores the same
+//! value, so memoized results are byte-identical for any worker count.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::util::rng::splitmix64;
+
+/// Thread-safe `key -> V` memo with hit/miss counters. Share by
+/// reference across threads (`Arc<Memo<V>>` for owned sharing).
+pub struct Memo<V: Copy> {
+    map: RwLock<HashMap<String, V>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<V: Copy> Default for Memo<V> {
+    fn default() -> Memo<V> {
+        Memo::new()
+    }
+}
+
+impl<V: Copy> Memo<V> {
+    pub fn new() -> Memo<V> {
+        Memo {
+            map: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Memoized lookup: on a miss, `compute` runs and its result is
+    /// stored. Concurrent misses on the same key may both compute; both
+    /// store the same value (see the module contract), so the winner is
+    /// irrelevant.
+    pub fn get_or_insert_with(&self, key: &str, compute: impl FnOnce() -> V) -> V {
+        {
+            let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+            if let Some(hit) = map.get(key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return *hit;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let value = compute();
+        self.map
+            .write()
+            .unwrap_or_else(|p| p.into_inner())
+            .entry(key.to_string())
+            .or_insert(value);
+        value
+    }
+
+    /// Peek without computing (counts as neither hit nor miss).
+    pub fn peek(&self, key: &str) -> Option<V> {
+        self.map.read().unwrap_or_else(|p| p.into_inner()).get(key).copied()
+    }
+
+    /// Fold over the stored values in sorted-key order. Sorting makes
+    /// floating-point aggregates (total cost, total runs) independent of
+    /// hash-map iteration order, hence byte-identical across runs.
+    pub fn fold_sorted<A>(&self, init: A, mut f: impl FnMut(A, &str, &V) -> A) -> A {
+        let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+        let mut keys: Vec<&String> = map.keys().collect();
+        keys.sort();
+        let mut acc = init;
+        for k in keys {
+            acc = f(acc, k, &map[k]);
+        }
+        acc
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct memoized keys. Unlike `misses()`, this is
+    /// deterministic under parallel execution (racing double-computes
+    /// inflate the miss counter but store one entry).
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.map.write().unwrap_or_else(|p| p.into_inner()).clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Deterministic seed derived from a base seed and a memo key: a
+/// SplitMix64 hash, mirroring `modeling::generator`'s leaf seeds. Using
+/// the *key* (not the caller's identity) guarantees that whichever job
+/// computes a shared entry first produces the same value.
+pub fn key_seed(base: u64, key: &str) -> u64 {
+    let mut state = base ^ 0x9E37_79B9_7F4A_7C15;
+    for &b in key.as_bytes() {
+        state ^= b as u64;
+        splitmix64(&mut state);
+    }
+    splitmix64(&mut state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+    use std::sync::Arc;
+
+    #[test]
+    fn memoizes_and_counts() {
+        let memo: Memo<f64> = Memo::new();
+        assert_eq!(memo.get_or_insert_with("a", || 1.5), 1.5);
+        assert_eq!(memo.get_or_insert_with("a", || unreachable!()), 1.5);
+        assert_eq!((memo.hits(), memo.misses(), memo.len()), (1, 1, 1));
+        assert_eq!(memo.peek("a"), Some(1.5));
+        assert_eq!(memo.peek("b"), None);
+        memo.clear();
+        assert!(memo.is_empty());
+        assert_eq!((memo.hits(), memo.misses()), (0, 0));
+    }
+
+    #[test]
+    fn fold_sorted_is_key_ordered() {
+        let memo: Memo<u32> = Memo::new();
+        for (k, v) in [("c", 3u32), ("a", 1), ("b", 2)] {
+            memo.get_or_insert_with(k, || v);
+        }
+        let order = memo.fold_sorted(String::new(), |mut s, k, v| {
+            s.push_str(&format!("{k}{v}"));
+            s
+        });
+        assert_eq!(order, "a1b2c3");
+    }
+
+    #[test]
+    fn key_seed_depends_only_on_base_and_key() {
+        assert_eq!(key_seed(7, "x"), key_seed(7, "x"));
+        assert_ne!(key_seed(7, "x"), key_seed(8, "x"));
+        assert_ne!(key_seed(7, "x"), key_seed(7, "y"));
+    }
+
+    #[test]
+    fn concurrent_misses_store_one_entry() {
+        let memo: Arc<Memo<usize>> = Arc::new(Memo::new());
+        let engine = Engine::new(4);
+        let tasks: Vec<_> = (0..32usize)
+            .map(|i| {
+                let memo = Arc::clone(&memo);
+                move || memo.get_or_insert_with(&format!("k{}", i % 4), || i % 4)
+            })
+            .collect();
+        let out = engine.run(tasks).unwrap();
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i % 4);
+        }
+        assert_eq!(memo.len(), 4);
+        assert_eq!(memo.hits() + memo.misses(), 32);
+    }
+}

@@ -14,6 +14,10 @@
 //!   (piece lookup + polynomial evaluation) keyed by case and rounded
 //!   argument sizes, for batched prediction sweeps that revisit the same
 //!   model pieces (cf. arXiv:1409.8602's reuse of per-piece predictions).
+//! * [`memo`] — the same memoization discipline generalized over the
+//!   value type ([`Memo`]): string-keyed, hit/miss-counted, safe under
+//!   racing double-computes. The tensor micro-benchmark memo
+//!   ([`crate::tensor::micro::MicroMemo`]) builds on it.
 //!
 //! Determinism contract: the engine never changes *what* is computed, only
 //! *where*. Every job derives its random streams from its own inputs (see
@@ -22,7 +26,9 @@
 //! path of [`Engine::sequential`].
 
 pub mod cache;
+pub mod memo;
 pub mod pool;
 
 pub use cache::ModelCache;
+pub use memo::{key_seed, Memo};
 pub use pool::{available_parallelism, Engine};

@@ -17,6 +17,9 @@
 //!   batched prediction;
 //! * [`predict`] — model-based predictions for blocked algorithms:
 //!   algorithm selection and block-size optimization (Ch. 4);
+//! * [`select`] — the scenario-agnostic selection core: one ranking /
+//!   validation / winner-tolerance pipeline shared by blocked algorithms
+//!   and tensor contractions via the [`select::Candidate`] trait;
 //! * [`cachepred`] — cache-aware timing combination (Ch. 5);
 //! * [`tensor`] — micro-benchmark-based predictions for BLAS-based tensor
 //!   contractions (Ch. 6);
@@ -35,6 +38,7 @@ pub mod util;
 pub mod sampler;
 pub mod modeling;
 pub mod predict;
+pub mod select;
 pub mod runtime;
 pub mod tensor;
 pub mod cachepred;

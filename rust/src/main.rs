@@ -4,8 +4,9 @@
 //! dlapm figures --all [--scale quick|full] [--out-dir out] [--seed N]
 //! dlapm gen --all --cpu haswell --lib openblas --jobs 8 --out models.json
 //! dlapm predict  --models models.json --op potrf --n 2104 --b 128
-//! dlapm select   --cpu haswell --lib openblas --op trtri --n 2104 --b 128
+//! dlapm select   --cpu haswell --lib openblas --op trtri --n 2104 --b 128 [--validate]
 //! dlapm contract --spec "abc=ai,ibc" --n 64
+//! dlapm contract --spec "abc=ai,ibc" --n 48,64,96 --rank [--validate] [--jobs 4]
 //! dlapm sampler  < script.txt
 //! dlapm list
 //! ```
@@ -47,7 +48,15 @@ subcommands:
            run; --jobs defaults to the available hardware parallelism
   predict  --models file.json --op <potrf|trtri|...> --n N --b B
   select   --cpu <id> --lib <name> --op <potrf|trtri|trsyl> --n N --b B
-  contract --spec \"abc=ai,ibc\" --n N [--small 8]
+           [--validate] [--reps 5] [--jobs N] [--csv file.csv]
+           ranks through the unified selection core (shared with contract)
+  contract --spec \"abc=ai,ibc\" --n N [--small 8] [--csv file.csv]
+           --rank       full ranking via the engine-parallel, memoized
+                        selection core (byte-identical for any --jobs)
+           --validate   also execute each algorithm (expensive reference)
+           --n A,B,C    sweep mode: rank every size, reusing one
+                        micro-benchmark memo across the sweep
+           (--sweep A,B,C is an alias for --rank --n A,B,C)
   sampler  (reads a Sampler script from stdin)
   list     (available figure ids / cpus / libraries)
 ";
@@ -86,7 +95,7 @@ fn generate_cmd(args: &Args) {
     // standard set.
     let op = if args.flag("all") { "full" } else { args.get_or("op", "all") };
     let algs = default_algs(op);
-    let refs: Vec<&dyn dlapm::predict::BlockedAlg> = algs.iter().map(|a| a.as_ref()).collect();
+    let refs = alg_refs(&algs);
     let n = dlapm::predict::measurement::coverage::ensure_models_with(
         &engine,
         &machine,
@@ -109,27 +118,37 @@ fn generate_cmd(args: &Args) {
     );
 }
 
-fn default_algs(op: &str) -> Vec<Box<dyn dlapm::predict::BlockedAlg>> {
+/// Algorithm registry for an op family. `Arc`'d so the same objects can
+/// feed both borrowed call-sites (`gen`, `predict`) and the `'static`
+/// selection-core candidates (`select`).
+fn default_algs(op: &str) -> Vec<Arc<dyn dlapm::predict::BlockedAlg + Send + Sync>> {
     use dlapm::predict::algorithms::lapack::{LapackAlg, LapackOp};
     use dlapm::predict::algorithms::potrf::Potrf;
     use dlapm::predict::algorithms::trsyl::TrsylAlg;
     use dlapm::predict::algorithms::trtri::Trtri;
-    let mut v: Vec<Box<dyn dlapm::predict::BlockedAlg>> = Vec::new();
+    let mut v: Vec<Arc<dyn dlapm::predict::BlockedAlg + Send + Sync>> = Vec::new();
     if op == "potrf" || op == "all" || op == "full" {
-        v.extend(Potrf::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
+        v.extend(Potrf::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
     }
     if op == "trtri" || op == "all" || op == "full" {
-        v.extend(Trtri::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
+        v.extend(Trtri::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
     }
     if op == "trsyl" || op == "full" {
-        v.extend(TrsylAlg::all(Elem::D).into_iter().map(|a| Box::new(a) as _));
+        v.extend(TrsylAlg::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
     }
     if op == "all" || op == "full" {
         for o in [LapackOp::Lauum, LapackOp::Sygst, LapackOp::Getrf, LapackOp::Geqrf] {
-            v.push(Box::new(LapackAlg::new(o, Elem::D)));
+            v.push(Arc::new(LapackAlg::new(o, Elem::D)));
         }
     }
     v
+}
+
+/// Borrowed views of the Arc'd registry (auto-trait-dropping coercion).
+fn alg_refs(
+    algs: &[Arc<dyn dlapm::predict::BlockedAlg + Send + Sync>],
+) -> Vec<&dyn dlapm::predict::BlockedAlg> {
+    algs.iter().map(|a| &**a as &dyn dlapm::predict::BlockedAlg).collect()
 }
 
 fn predict_cmd(args: &Args) {
@@ -159,41 +178,172 @@ fn predict_cmd(args: &Args) {
 }
 
 fn select_cmd(args: &Args) {
+    use dlapm::select::{BlockedCandidate, Candidate, ValidateCfg};
     let machine = machine_from(args);
     let engine = engine_from(args);
     let algs = default_algs(args.get_or("op", "potrf"));
-    let refs: Vec<&dyn dlapm::predict::BlockedAlg> = algs.iter().map(|a| a.as_ref()).collect();
+    let refs = alg_refs(&algs);
     let mut store = dlapm::modeling::ModelStore::new(&machine.label());
     let (n, b) = (args.get_usize("n", 2104), args.get_usize("b", 128));
     dlapm::predict::measurement::coverage::ensure_models_with(
         &engine, &machine, &mut store, &refs, n.max(520), 536, args.get_u64("seed", 0x5EED),
     )
     .expect("model generation failed");
-    let ranked = dlapm::predict::selection::rank_algorithms(&store, &refs, n, b);
+    // One model store + one estimate cache shared by every candidate:
+    // the variants reuse the same kernel calls, so later candidates hit.
+    let store = Arc::new(store);
+    let cache = Arc::new(ModelCache::new());
+    let validate = args.flag("validate");
+    let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
+        .iter()
+        .map(|alg| {
+            Arc::new(BlockedCandidate {
+                store: Arc::clone(&store),
+                cache: Arc::clone(&cache),
+                alg: Arc::clone(alg),
+                n,
+                b,
+                validate: validate.then(|| ValidateCfg {
+                    machine: machine.clone(),
+                    reps: args.get_usize("reps", 5),
+                    seed: args.get_u64("seed", 0x5EED),
+                }),
+            }) as _
+        })
+        .collect();
+    let ranked =
+        dlapm::select::rank_candidates_par(&engine, &cands).expect("selection ranking failed");
     println!("predicted ranking for n={n}, b={b} on {}:", machine.label());
-    for (i, r) in ranked.iter().enumerate() {
-        println!("  {:>2}. {:<24} {:>10.4} ms", i + 1, r.name, r.predicted.med * 1e3);
+    let (text, csv) = dlapm::report::selection_table(&ranked);
+    print!("{text}");
+    if let Some(q) = dlapm::select::selection_quality(&ranked) {
+        println!("  selection quality: {q:.4} (selected / true fastest measured)");
     }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, &csv).expect("writing --csv file");
+    }
+    eprintln!("[dlapm] estimate cache: {} hits / {} misses", cache.hits(), cache.misses());
 }
 
 fn contract_cmd(args: &Args) {
+    use dlapm::select::{Candidate, TensorCandidate};
+    use dlapm::tensor::micro;
     let spec = args.get_or("spec", "abc=ai,ibc").to_string();
-    let n = args.get_usize("n", 64);
     let small = args.get_usize("small", 8);
-    let mut con = dlapm::tensor::Contraction::parse(&spec).expect("bad --spec");
-    let dims: Vec<(char, usize)> = con
-        .dims
-        .keys()
-        .map(|&i| (i, if matches!(i, 'i' | 'j' | 'k') { small } else { n }))
-        .collect();
-    con = con.with_dims(&dims);
     let machine = machine_from(args);
-    let algs = dlapm::tensor::generate(&con);
-    let ranked = dlapm::tensor::micro::rank(&machine, &con, &algs, Elem::D, args.get_u64("seed", 7));
-    println!("{} algorithms for {spec}; micro-benchmark ranking:", algs.len());
-    for (i, p) in ranked.iter().take(10).enumerate() {
-        println!("  {:>2}. {:<24} {:>10.4} ms  ({} kernel runs)", i + 1, p.alg_name, p.seconds * 1e3, p.kernel_runs);
+    let seed = args.get_u64("seed", 7);
+    // `--n` accepts a comma-separated size list (sweep mode); `--sweep
+    // A,B,C` is an alias implying `--rank`.
+    let size_list = args.get("sweep").or_else(|| args.get("n")).unwrap_or("64").to_string();
+    let sizes: Vec<usize> = size_list
+        .split(',')
+        .map(|s| {
+            s.trim().parse().unwrap_or_else(|_| panic!("--n expects integer size(s), got '{s}'"))
+        })
+        .collect();
+    let base = dlapm::tensor::Contraction::parse(&spec).expect("bad --spec");
+    let sized = |n: usize| {
+        let dims: Vec<(char, usize)> = base
+            .dims
+            .keys()
+            .map(|&i| (i, if matches!(i, 'i' | 'j' | 'k') { small } else { n }))
+            .collect();
+        base.clone().with_dims(&dims)
+    };
+
+    // --validate/--sweep/--csv/--jobs only make sense for the selection
+    // core, so any of them implies --rank (the legacy quick view would
+    // silently drop them otherwise).
+    let rank_mode = args.flag("rank")
+        || args.flag("validate")
+        || args.get("sweep").is_some()
+        || args.get("csv").is_some()
+        || args.get("jobs").is_some()
+        || sizes.len() > 1;
+    if !rank_mode {
+        // Legacy quick view: sequential unmemoized top-10.
+        let con = sized(sizes[0]);
+        let algs = dlapm::tensor::generate(&con);
+        let ranked = micro::rank(&machine, &con, &algs, Elem::D, seed);
+        println!("{} algorithms for {spec}; micro-benchmark ranking:", algs.len());
+        for (i, p) in ranked.iter().take(10).enumerate() {
+            println!(
+                "  {:>2}. {:<24} {:>10.4} ms  ({} kernel runs)",
+                i + 1,
+                p.alg_name,
+                p.seconds * 1e3,
+                p.kernel_runs
+            );
+        }
+        return;
     }
+
+    // Unified selection core: engine-parallel, memoized ranking. One
+    // memo serves the entire sweep. Everything printed to stdout is a
+    // deterministic function of (spec, sizes, seed) — byte-identical for
+    // any --jobs value (hit/miss counters, which depend on scheduling,
+    // go to stderr).
+    let engine = engine_from(args);
+    let memo = Arc::new(dlapm::tensor::MicroMemo::new());
+    let validate = args.flag("validate");
+    let reps = args.get_usize("reps", 3);
+    let mut prev_cost = 0.0;
+    let mut prev_runs = 0usize;
+    let mut all_csv = String::new();
+    for &n in &sizes {
+        let con = sized(n);
+        let algs = dlapm::tensor::generate(&con);
+        let n_algs = algs.len();
+        let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
+            .into_iter()
+            .map(|alg| {
+                Arc::new(TensorCandidate {
+                    machine: machine.clone(),
+                    con: con.clone(),
+                    alg,
+                    elem: Elem::D,
+                    seed,
+                    memo: Arc::clone(&memo),
+                    validate_reps: if validate { reps } else { 0 },
+                }) as _
+            })
+            .collect();
+        let ranked = dlapm::select::rank_candidates_par(&engine, &cands)
+            .expect("contraction ranking failed");
+        println!(
+            "ranking {n_algs} algorithms for {spec} with n={n} (small={small}) on {}:",
+            machine.label()
+        );
+        let (text, csv) = dlapm::report::selection_table(&ranked);
+        print!("{text}");
+        all_csv.push_str(&format!("# n={n}\n{csv}"));
+        let (total_cost, total_runs) = micro::memo_totals(&memo);
+        let (new_cost, new_runs) = (total_cost - prev_cost, total_runs - prev_runs);
+        let fastest = ranked[0].predicted.time.med;
+        println!(
+            "  micro-benchmarks for n={n}: {:.6} ms over {} kernel runs = {:.4} x fastest \
+             predicted ({:.6} ms)",
+            new_cost * 1e3,
+            new_runs,
+            new_cost / fastest,
+            fastest * 1e3
+        );
+        if let Some(q) = dlapm::select::selection_quality(&ranked) {
+            println!("  selection quality: {q:.4} (selected / true fastest measured)");
+        }
+        (prev_cost, prev_runs) = (total_cost, total_runs);
+    }
+    let (total_cost, total_runs) = micro::memo_totals(&memo);
+    println!(
+        "total micro-benchmark cost: {:.6} ms over {} kernel runs in {} unique benchmark(s)",
+        total_cost * 1e3,
+        total_runs,
+        memo.len()
+    );
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, &all_csv).expect("writing --csv file");
+    }
+    eprintln!("[dlapm] micro memo: {} hits / {} misses", memo.hits(), memo.misses());
 }
 
 fn sampler_cmd(args: &Args) {

@@ -1,7 +1,50 @@
 //! Figure/table output sink: every experiment driver writes a CSV with the
-//! exact numbers plus an ASCII rendition, both under `out/`.
+//! exact numbers plus an ASCII rendition, both under `out/`. Also home of
+//! the shared selection-ranking table used by the `select` and
+//! `contract --rank` CLI paths.
 
 use std::path::{Path, PathBuf};
+
+use crate::select::Ranked;
+
+/// Shared ranking report for the unified selection core: one text table
+/// and one CSV, identical for both scenarios (blocked algorithms and
+/// tensor contractions). All values printed are deterministic functions
+/// of the ranking, so the rendered table is byte-identical for any
+/// `--jobs` value.
+pub fn selection_table(ranked: &[Ranked]) -> (String, String) {
+    let mut text = String::new();
+    let mut csv = String::from("rank,name,pred_med_s,meas_med_s,pred_cost_s,pred_work\n");
+    for (i, r) in ranked.iter().enumerate() {
+        text.push_str(&format!(
+            "  {:>2}. {:<26} {:>12.6} ms",
+            i + 1,
+            r.name,
+            r.predicted.time.med * 1e3
+        ));
+        if r.predicted.cost > 0.0 {
+            text.push_str(&format!(
+                "  (micro {:>10.6} ms, {} kernel runs)",
+                r.predicted.cost * 1e3,
+                r.predicted.work
+            ));
+        }
+        if let Some(m) = r.measured {
+            text.push_str(&format!("  [measured {:>12.6} ms]", m.med * 1e3));
+        }
+        text.push('\n');
+        csv.push_str(&format!(
+            "{},{},{:.9e},{},{:.9e},{}\n",
+            i + 1,
+            r.name,
+            r.predicted.time.med,
+            r.measured.map(|m| format!("{:.9e}", m.med)).unwrap_or_default(),
+            r.predicted.cost,
+            r.predicted.work
+        ));
+    }
+    (text, csv)
+}
 
 pub struct Report {
     pub out_dir: PathBuf,
@@ -20,5 +63,47 @@ impl Report {
         if !self.quiet {
             println!("\n==== {id} ====\n{text}");
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::CandidatePrediction;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn selection_table_renders_both_scenarios() {
+        let rows = vec![
+            Ranked {
+                index: 1,
+                name: "model-based".into(),
+                predicted: CandidatePrediction {
+                    time: Summary::constant(0.002),
+                    cost: 0.0,
+                    work: 12,
+                },
+                measured: None,
+            },
+            Ranked {
+                index: 0,
+                name: "micro-based".into(),
+                predicted: CandidatePrediction {
+                    time: Summary::constant(0.004),
+                    cost: 0.0001,
+                    work: 10,
+                },
+                measured: Some(Summary::constant(0.0041)),
+            },
+        ];
+        let (text, csv) = selection_table(&rows);
+        assert!(text.contains("model-based"));
+        assert!(text.contains("micro"), "{text}");
+        assert!(text.contains("measured"), "{text}");
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("rank,name,"));
+        // The cost-free model-based row has no micro annotation.
+        let model_line = text.lines().next().unwrap();
+        assert!(!model_line.contains("micro"), "{model_line}");
     }
 }

@@ -1,0 +1,183 @@
+//! The two scenarios' [`Candidate`] implementations: model-based blocked
+//! algorithms (Ch. 4) and micro-benchmark-based tensor contraction
+//! algorithms (Ch. 6), both feeding the same ranking core.
+
+use std::sync::Arc;
+
+use crate::engine::{key_seed, ModelCache};
+use crate::machine::{Elem, Machine};
+use crate::modeling::ModelStore;
+use crate::predict::algorithms::BlockedAlg;
+use crate::predict::measurement::measure_algorithm;
+use crate::predict::predictor::predict_calls_cached;
+use crate::tensor::exec::execute_full;
+use crate::tensor::micro::{self, MicroMemo};
+use crate::tensor::{Contraction, TensorAlg};
+use crate::util::stats::Summary;
+
+use super::{Candidate, CandidatePrediction};
+
+/// Validation configuration shared by both scenarios: the virtual
+/// machine to execute on, repetitions, and the base seed.
+#[derive(Clone)]
+pub struct ValidateCfg {
+    pub machine: Machine,
+    pub reps: usize,
+    pub seed: u64,
+}
+
+/// Shared blocked-scenario prediction pipeline: used by the owning
+/// [`BlockedCandidate`] below and by `predict::selection`'s borrowed
+/// adapter, so cost/work attribution cannot diverge between the two.
+pub(crate) fn blocked_prediction(
+    store: &ModelStore,
+    cache: &ModelCache,
+    alg: &dyn BlockedAlg,
+    n: usize,
+    b: usize,
+) -> CandidatePrediction {
+    // Model evaluation consumes no virtual testbed time — the models
+    // were paid for once at generation (store.total_gen_cost()).
+    let p = predict_calls_cached(store, &alg.calls(n, b), cache);
+    CandidatePrediction { time: p.time, cost: 0.0, work: p.total_calls }
+}
+
+/// Model-based blocked-algorithm candidate: prediction through the
+/// shared [`ModelCache`]-backed pipeline ([`predict_calls_cached`]),
+/// validation by executing the call sequence on the virtual testbed.
+pub struct BlockedCandidate {
+    pub store: Arc<ModelStore>,
+    /// One cache shared across all candidates of a ranking: variants of
+    /// an operation reuse the same kernel calls, so later candidates
+    /// mostly hit.
+    pub cache: Arc<ModelCache>,
+    pub alg: Arc<dyn BlockedAlg + Send + Sync>,
+    pub n: usize,
+    pub b: usize,
+    /// `None` disables [`Candidate::measure`].
+    pub validate: Option<ValidateCfg>,
+}
+
+impl Candidate for BlockedCandidate {
+    fn name(&self) -> String {
+        self.alg.name()
+    }
+
+    fn predict(&self) -> CandidatePrediction {
+        blocked_prediction(&self.store, &self.cache, self.alg.as_ref(), self.n, self.b)
+    }
+
+    fn measure(&self) -> Option<Summary> {
+        let cfg = self.validate.as_ref()?;
+        Some(measure_algorithm(&cfg.machine, self.alg.as_ref(), self.n, self.b, cfg.reps, cfg.seed))
+    }
+}
+
+/// Micro-benchmark-based tensor-contraction candidate: prediction via
+/// the memoized cache-aware micro-benchmark, validation by one or more
+/// full algorithm executions. All random streams derive from
+/// `(seed, identity)`, so candidates are scheduling-independent.
+pub struct TensorCandidate {
+    pub machine: Machine,
+    pub con: Contraction,
+    pub alg: TensorAlg,
+    pub elem: Elem,
+    pub seed: u64,
+    /// Shared steady-state kernel-timing memo (share across a ranking
+    /// and across sweep sizes).
+    pub memo: Arc<MicroMemo>,
+    /// Full-execution repetitions for validation; 0 disables it.
+    pub validate_reps: usize,
+}
+
+impl Candidate for TensorCandidate {
+    fn name(&self) -> String {
+        self.alg.name()
+    }
+
+    fn predict(&self) -> CandidatePrediction {
+        let p =
+            micro::predict_with(&self.machine, &self.con, &self.alg, self.elem, self.seed, &self.memo);
+        CandidatePrediction {
+            time: Summary::constant(p.seconds),
+            cost: p.micro_cost,
+            work: p.kernel_runs,
+        }
+    }
+
+    fn measure(&self) -> Option<Summary> {
+        if self.validate_reps == 0 {
+            return None;
+        }
+        // Per-candidate deterministic seeds, decorrelated from the
+        // prediction streams by a fixed tweak.
+        let base = key_seed(self.seed ^ 0x5A5A_5A5A, &self.alg.name());
+        let times: Vec<f64> = (0..self.validate_reps)
+            .map(|r| execute_full(&self.machine, &self.con, &self.alg, self.elem, base ^ r as u64))
+            .collect();
+        Some(Summary::from_samples(&times))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+    use crate::machine::{CpuId, Library};
+    use crate::select::{rank_candidates_par, selection_quality, Candidate};
+    use crate::tensor::generate;
+
+    fn machine() -> Machine {
+        Machine::standard(CpuId::Harpertown, Library::OpenBlas { fixed_dswap: false }, 1)
+    }
+
+    #[test]
+    fn tensor_candidates_rank_and_validate_through_the_core() {
+        let con = Contraction::example_abc(32);
+        let m = machine();
+        let memo = Arc::new(MicroMemo::new());
+        let cands: Vec<Arc<dyn Candidate + Send + Sync>> = generate(&con)
+            .into_iter()
+            .map(|alg| {
+                Arc::new(TensorCandidate {
+                    machine: m.clone(),
+                    con: con.clone(),
+                    alg,
+                    elem: Elem::D,
+                    seed: 11,
+                    memo: Arc::clone(&memo),
+                    validate_reps: 1,
+                }) as _
+            })
+            .collect();
+        let engine = Arc::new(Engine::new(3));
+        let ranked = rank_candidates_par(&engine, &cands).unwrap();
+        assert_eq!(ranked.len(), 36);
+        assert!(memo.len() < 36, "shared benchmarks: {}", memo.len());
+        // The selected algorithm is within a small factor of the true
+        // fastest (the paper's selection headline, tensor scenario).
+        let q = selection_quality(&ranked).unwrap();
+        assert!(q <= 1.25, "quality {q}");
+    }
+
+    #[test]
+    fn tensor_candidate_measure_is_deterministic() {
+        let con = Contraction::example_abc(24);
+        let m = machine();
+        let alg = generate(&con).remove(0);
+        let mk = || TensorCandidate {
+            machine: m.clone(),
+            con: con.clone(),
+            alg: alg.clone(),
+            elem: Elem::D,
+            seed: 3,
+            memo: Arc::new(MicroMemo::new()),
+            validate_reps: 2,
+        };
+        let a = mk().measure().unwrap();
+        let b = mk().measure().unwrap();
+        assert_eq!(a.med.to_bits(), b.med.to_bits());
+        let none = TensorCandidate { validate_reps: 0, ..mk() };
+        assert!(none.measure().is_none());
+    }
+}

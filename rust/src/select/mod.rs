@@ -1,0 +1,264 @@
+//! Scenario-agnostic algorithm selection core.
+//!
+//! The paper ranks mathematically-equivalent algorithm alternatives by
+//! predicted runtime in two scenarios with the same shape but previously
+//! separate plumbing:
+//!
+//! * blocked algorithms (Ch. 4): predictions from piecewise-polynomial
+//!   performance models via the [`crate::engine::ModelCache`]-backed
+//!   pipeline, validated by executing the call sequence;
+//! * BLAS-based tensor contractions (Ch. 6): predictions from cache-aware
+//!   micro-benchmarks (memoized in a
+//!   [`crate::tensor::micro::MicroMemo`]), validated by full algorithm
+//!   execution.
+//!
+//! Both are [`Candidate`]s here (see [`candidates`]); ranking, optional
+//! validation, winner-tolerance checks and report formatting are shared.
+//! Ranking fans out one job per candidate on the [`Engine`]
+//! ([`rank_candidates_par`]); every candidate's prediction derives its
+//! random streams from its own identity, so rankings are byte-identical
+//! for any `--jobs` value. Sorting uses `f64::total_cmp` (a NaN
+//! prediction ranks last instead of panicking) with the candidate name as
+//! a deterministic tiebreak, and validation is paired back to candidates
+//! by index, not by name search.
+
+pub mod candidates;
+
+pub use candidates::{BlockedCandidate, TensorCandidate, ValidateCfg};
+
+use std::sync::Arc;
+
+use crate::engine::Engine;
+use crate::util::error::Result;
+use crate::util::stats::Summary;
+
+/// A prediction together with what producing it cost — the currency of
+/// the paper's efficiency argument (predicting all candidates must be
+/// cheaper than running one).
+#[derive(Clone, Debug)]
+pub struct CandidatePrediction {
+    /// Predicted runtime statistics (seconds).
+    pub time: Summary,
+    /// Seconds the prediction itself consumed. Model-based estimates are
+    /// (virtually) free; micro-benchmark predictions report the cost of
+    /// their (possibly shared) benchmark.
+    pub cost: f64,
+    /// Prediction work units: kernel executions for micro-benchmarks,
+    /// kernel-call estimates for model-based predictions.
+    pub work: usize,
+}
+
+/// One selectable algorithm alternative. Implementations capture their
+/// whole prediction context (models + cache, or machine + memo), so the
+/// core needs no scenario knowledge.
+pub trait Candidate {
+    /// Display name (unique within one ranking).
+    fn name(&self) -> String;
+    /// Compute the (cheap) prediction.
+    fn predict(&self) -> CandidatePrediction;
+    /// Expensive reference measurement, `None` when the candidate does
+    /// not support validation.
+    fn measure(&self) -> Option<Summary>;
+}
+
+/// One ranked candidate: prediction plus optional validation, tagged
+/// with the candidate's index in the input slice.
+#[derive(Clone, Debug)]
+pub struct Ranked {
+    /// Index into the candidate slice the ranking was built from.
+    pub index: usize,
+    pub name: String,
+    pub predicted: CandidatePrediction,
+    pub measured: Option<Summary>,
+}
+
+/// The one ranking order rule, shared by every ranking surface (the
+/// core's [`rank_candidates`], the tensor module's direct
+/// `micro::rank[_with]`): ascending predicted time under NaN-total
+/// `f64::total_cmp`, ties broken by name for determinism.
+pub fn rank_order(a_time: f64, a_name: &str, b_time: f64, b_name: &str) -> std::cmp::Ordering {
+    a_time.total_cmp(&b_time).then_with(|| a_name.cmp(b_name))
+}
+
+fn assemble(rows: Vec<(String, CandidatePrediction, Option<Summary>)>) -> Vec<Ranked> {
+    let mut out: Vec<Ranked> = rows
+        .into_iter()
+        .enumerate()
+        .map(|(index, (name, predicted, measured))| Ranked { index, name, predicted, measured })
+        .collect();
+    out.sort_by(|a, b| rank_order(a.predicted.time.med, &a.name, b.predicted.time.med, &b.name));
+    out
+}
+
+/// Rank candidates by predicted median runtime, ascending. Each
+/// candidate's [`Candidate::measure`] decides whether it is validated
+/// (the expensive reference the predictions replace) — unconfigured
+/// candidates return `None` at no cost. Sequential; works on borrowed
+/// candidates.
+pub fn rank_candidates(cands: &[&dyn Candidate]) -> Vec<Ranked> {
+    assemble(cands.iter().map(|c| (c.name(), c.predict(), c.measure())).collect())
+}
+
+/// [`rank_candidates`] with one engine job per candidate: prediction and
+/// (candidate-configured) validation of candidate `i` run as job `i`,
+/// results are paired by index and sorted once. Byte-identical to the
+/// sequential path for any worker count, provided candidates derive
+/// their random streams from their own identity (see the scenario
+/// implementations).
+pub fn rank_candidates_par(
+    engine: &Arc<Engine>,
+    cands: &[Arc<dyn Candidate + Send + Sync>],
+) -> Result<Vec<Ranked>> {
+    let tasks: Vec<_> = cands
+        .iter()
+        .map(|c| {
+            let c = Arc::clone(c);
+            move || (c.name(), c.predict(), c.measure())
+        })
+        .collect();
+    Ok(assemble(engine.run(tasks)?))
+}
+
+/// Scalar core of the winner check, shared with the scenario adapters
+/// (e.g. `predict::selection` over its own `RankedAlg` rows): ratio of
+/// the chosen candidate's measured median to the best measured median.
+pub fn measured_quality(
+    chosen: Option<f64>,
+    measured: impl IntoIterator<Item = f64>,
+) -> Option<f64> {
+    let best = measured.into_iter().fold(f64::INFINITY, f64::min);
+    chosen.map(|c| c / best)
+}
+
+/// Ratio of the predicted winner's measured runtime to the true fastest
+/// measured runtime (1.0 = the prediction picked the empirically fastest
+/// candidate; the paper's §4.5.4 headline). `None` without validation.
+pub fn selection_quality(ranked: &[Ranked]) -> Option<f64> {
+    measured_quality(
+        ranked.first().and_then(|r| r.measured.map(|m| m.med)),
+        ranked.iter().filter_map(|r| r.measured.map(|m| m.med)),
+    )
+}
+
+/// Winner-tolerance check: did the prediction pick the empirically
+/// fastest candidate, or one within `tolerance` (relative) of it?
+pub fn winner_within(ranked: &[Ranked], tolerance: f64) -> Option<bool> {
+    selection_quality(ranked).map(|q| q <= 1.0 + tolerance)
+}
+
+/// Total prediction cost across a ranking, summed in rank order.
+/// Note: candidates sharing a memoized benchmark each report its cost;
+/// for a deduplicated total use the memo's own accounting (e.g.
+/// [`crate::tensor::micro::memo_totals`]).
+pub fn total_prediction_cost(ranked: &[Ranked]) -> f64 {
+    ranked.iter().map(|r| r.predicted.cost).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fake {
+        name: &'static str,
+        med: f64,
+        measured: Option<f64>,
+    }
+
+    impl Candidate for Fake {
+        fn name(&self) -> String {
+            self.name.to_string()
+        }
+        fn predict(&self) -> CandidatePrediction {
+            CandidatePrediction { time: Summary::constant(self.med), cost: 0.01, work: 1 }
+        }
+        fn measure(&self) -> Option<Summary> {
+            self.measured.map(Summary::constant)
+        }
+    }
+
+    fn refs(v: &[Fake]) -> Vec<&dyn Candidate> {
+        v.iter().map(|f| f as &dyn Candidate).collect()
+    }
+
+    #[test]
+    fn ranking_sorts_ascending_with_name_tiebreak() {
+        let cands = vec![
+            Fake { name: "b", med: 2.0, measured: None },
+            Fake { name: "a", med: 2.0, measured: None },
+            Fake { name: "c", med: 1.0, measured: None },
+        ];
+        let ranked = rank_candidates(&refs(&cands));
+        let names: Vec<&str> = ranked.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, ["c", "a", "b"]);
+        // Index points back into the input slice.
+        assert_eq!(ranked[0].index, 2);
+    }
+
+    #[test]
+    fn nan_prediction_ranks_last_without_panicking() {
+        let cands = vec![
+            Fake { name: "nan", med: f64::NAN, measured: None },
+            Fake { name: "ok", med: 1.0, measured: None },
+        ];
+        let ranked = rank_candidates(&refs(&cands));
+        assert_eq!(ranked[0].name, "ok");
+        assert_eq!(ranked[1].name, "nan");
+    }
+
+    #[test]
+    fn validation_pairs_by_index_and_scores_quality() {
+        // Prediction picks "fast" (med 1.0); measurement says "slow" was
+        // actually 10% faster -> quality 1/0.9.
+        let cands = vec![
+            Fake { name: "fast", med: 1.0, measured: Some(1.0) },
+            Fake { name: "slow", med: 2.0, measured: Some(0.9) },
+        ];
+        let ranked = rank_candidates(&refs(&cands));
+        assert_eq!(ranked[0].name, "fast");
+        assert_eq!(ranked[0].measured.unwrap().med, 1.0);
+        assert_eq!(ranked[1].measured.unwrap().med, 0.9);
+        let q = selection_quality(&ranked).unwrap();
+        assert!((q - 1.0 / 0.9).abs() < 1e-12);
+        assert_eq!(winner_within(&ranked, 0.05), Some(false));
+        assert_eq!(winner_within(&ranked, 0.15), Some(true));
+    }
+
+    #[test]
+    fn unvalidated_candidates_yield_no_quality() {
+        // Validation is the candidate's decision: measure() -> None.
+        let cands = vec![Fake { name: "a", med: 1.0, measured: None }];
+        let ranked = rank_candidates(&refs(&cands));
+        assert!(ranked[0].measured.is_none());
+        assert!(selection_quality(&ranked).is_none());
+        assert!((total_prediction_cost(&ranked) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_ranking_matches_sequential() {
+        let cands: Vec<Fake> = (0..20)
+            .map(|i| Fake {
+                name: Box::leak(format!("c{i:02}").into_boxed_str()),
+                med: ((i * 7) % 13) as f64,
+                measured: Some(i as f64),
+            })
+            .collect();
+        let seq = rank_candidates(&refs(&cands));
+        let arcs: Vec<Arc<dyn Candidate + Send + Sync>> = (0..20)
+            .map(|i| {
+                Arc::new(Fake {
+                    name: Box::leak(format!("c{i:02}").into_boxed_str()),
+                    med: ((i * 7) % 13) as f64,
+                    measured: Some(i as f64),
+                }) as _
+            })
+            .collect();
+        let par = rank_candidates_par(&Arc::new(Engine::new(4)), &arcs).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.predicted.time.med, b.predicted.time.med);
+            assert_eq!(a.measured.map(|m| m.med), b.measured.map(|m| m.med));
+        }
+    }
+}

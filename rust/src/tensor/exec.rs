@@ -11,44 +11,95 @@ pub const T_A: u64 = 0x7A;
 pub const T_B: u64 = 0x7B;
 pub const T_C: u64 = 0x7C;
 
+/// How the slice of one tensor that a kernel call touches moves with the
+/// loop counter — the determinants of the §6.2.3 "operand access
+/// distance" cache precondition. Two algorithms whose kernel calls and
+/// per-tensor slice motions coincide recreate identical steady-state
+/// cache conditions, which is what the micro-benchmark memo keys on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SliceMotion {
+    /// Leading dimension of the flattened (lead x cols_total) tensor.
+    pub lead: usize,
+    /// Column count of the slice one kernel call touches.
+    pub cols: usize,
+    /// Total columns of the flattened tensor.
+    pub cols_total: usize,
+    /// True if the innermost loop index is in this tensor: each iteration
+    /// moves to a fresh slice; otherwise the operand is loop-invariant
+    /// over the innermost loop (revisited).
+    pub innermost_moves: bool,
+    /// Iterations of the non-innermost loops that move this tensor.
+    pub outer_iters: usize,
+    /// Trip count of the innermost loop.
+    pub innermost_extent: usize,
+}
+
+/// Slice-motion geometry of `idx` (one of the contraction's tensors)
+/// under algorithm `alg`.
+pub fn slice_motion(alg: &TensorAlg, con: &Contraction, idx: &[char]) -> SliceMotion {
+    let lead = con.dim(idx[0]);
+    let total = con.elements(idx);
+    let cols_total = (total / lead).max(1);
+    // Fraction of the tensor one kernel call touches.
+    let cols = (slice_elems(alg, con, idx) / lead).clamp(1, cols_total);
+    let innermost_moves = alg.loops.last().map(|l| idx.contains(l)).unwrap_or(false);
+    let outer_iters = alg
+        .loops
+        .iter()
+        .rev()
+        .skip(1)
+        .filter(|l| idx.contains(l))
+        .map(|&l| con.dim(l))
+        .product::<usize>()
+        .max(1);
+    SliceMotion {
+        lead,
+        cols,
+        cols_total,
+        innermost_moves,
+        outer_iters,
+        innermost_extent: innermost_extent(alg, con),
+    }
+}
+
+/// The three tensors' slice motions under `alg`, in (A, B, C) order.
+/// Motion is loop-invariant: compute it once per `(alg, con)` and drive
+/// iteration-level calls through [`call_at_with`].
+pub fn slice_motions(alg: &TensorAlg, con: &Contraction) -> [SliceMotion; 3] {
+    [
+        slice_motion(alg, con, &con.a),
+        slice_motion(alg, con, &con.b),
+        slice_motion(alg, con, &con.c),
+    ]
+}
+
 /// Kernel call at a specific loop position: attaches operand regions that
 /// model which slice of each (flattened 2-D) tensor the iteration touches.
 pub fn call_at(alg: &TensorAlg, con: &Contraction, elem: Elem, iter: usize) -> Call {
+    call_at_with(&slice_motions(alg, con), alg, con, elem, iter)
+}
+
+/// [`call_at`] with precomputed [`slice_motions`] — the hot-loop variant
+/// (full executions issue one call per loop iteration, up to n^3).
+pub fn call_at_with(
+    motions: &[SliceMotion; 3],
+    alg: &TensorAlg,
+    con: &Contraction,
+    elem: Elem,
+    iter: usize,
+) -> Call {
     let mut call = alg.kernel_call(con, elem);
     // Flatten each tensor to (leading dim x rest); an iteration's slice is
     // approximated as a column band whose position advances with the
     // (loop-order-dependent) iteration index.
-    for (id, idx) in [(T_A, &con.a), (T_B, &con.b), (T_C, &con.c)] {
-        let lead = con.dim(idx[0]);
-        let total = con.elements(idx);
-        let cols_total = (total / lead).max(1);
-        // Fraction of the tensor one kernel call touches.
-        let slice_elems = slice_elems(alg, con, idx);
-        let cols = (slice_elems / lead).clamp(1, cols_total);
-        // How quickly this tensor's slice moves with the loop counter: if
-        // the innermost loop index is in this tensor, each iteration moves
-        // to a fresh slice; otherwise it revisits (loop-invariant operand).
-        let innermost_moves = alg
-            .loops
-            .last()
-            .map(|l| idx.contains(l))
-            .unwrap_or(false);
-        let col0 = if innermost_moves {
-            (iter * cols) % cols_total.max(1)
+    for (id, m) in [T_A, T_B, T_C].into_iter().zip(motions) {
+        let col0 = if m.innermost_moves {
+            (iter * m.cols) % m.cols_total.max(1)
         } else {
-            let outer_iters = alg
-                .loops
-                .iter()
-                .rev()
-                .skip(1)
-                .filter(|l| idx.contains(l))
-                .map(|&l| con.dim(l))
-                .product::<usize>()
-                .max(1);
-            ((iter / innermost_extent(alg, con)) % outer_iters) * cols % cols_total.max(1)
+            ((iter / m.innermost_extent) % m.outer_iters) * m.cols % m.cols_total.max(1)
         };
-        let col0 = col0.min(cols_total - cols.min(cols_total));
-        call.operands.push(Region::new(id, 0, col0, lead, cols, elem));
+        let col0 = col0.min(m.cols_total - m.cols.min(m.cols_total));
+        call.operands.push(Region::new(id, 0, col0, m.lead, m.cols, elem));
     }
     call
 }
@@ -72,9 +123,10 @@ pub fn execute_full(machine: &Machine, con: &Contraction, alg: &TensorAlg, elem:
     let mut session = machine.session(seed);
     session.warmup();
     let iters = alg.loop_count(con);
+    let motions = slice_motions(alg, con);
     let mut total = 0.0;
     for it in 0..iters {
-        let call = call_at(alg, con, elem, it);
+        let call = call_at_with(&motions, alg, con, elem, it);
         total += session.execute(&call).seconds;
     }
     total

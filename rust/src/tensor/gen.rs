@@ -275,6 +275,35 @@ mod tests {
     }
 
     #[test]
+    fn names_and_loop_counts_on_the_running_example() {
+        // Paper Ex. 1.4 / Fig. 1.4: 36 algorithms named
+        // "<loops>-<kernel>[<kernel indices>]".
+        let con = Contraction::example_abc(64);
+        let algs = generate(&con);
+        assert_eq!(algs.len(), 36);
+        for a in &algs {
+            let name = a.name();
+            let (loops, rest) = name.split_once('-').unwrap();
+            assert_eq!(loops.len(), a.loops.len(), "{name}");
+            assert!(rest.ends_with(']'), "{name}");
+            // Loop count = product of the looped dimensions (min 1).
+            let expect = a.loops.iter().map(|&i| con.dim(i)).product::<usize>().max(1);
+            assert_eq!(a.loop_count(&con), expect, "{name}");
+        }
+        // The two dgemm algorithms each loop over one free index of B.
+        for g in algs.iter().filter(|a| a.kind == KernelKind::Gemm) {
+            assert_eq!(g.loop_count(&con), 64);
+            assert_eq!(g.kernel_idx.len(), 3);
+        }
+        assert!(algs.iter().any(|a| a.name() == "c-gemm[abi]"));
+        assert!(algs.iter().any(|a| a.name() == "b-gemm[aci]"));
+        // ddot algorithms loop over all three free indices: 64^3.
+        for d in algs.iter().filter(|a| a.kind == KernelKind::Dot) {
+            assert_eq!(d.loop_count(&con), 64 * 64 * 64);
+        }
+    }
+
+    #[test]
     fn loop_orders_are_all_permutations() {
         let con = Contraction::example_abc(100);
         let algs = generate(&con);

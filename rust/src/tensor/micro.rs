@@ -8,11 +8,30 @@
 //! touched recently enough to be resident), times a handful of kernel
 //! executions, and extrapolates — orders of magnitude cheaper than running
 //! the algorithm (§6.3.4).
+//!
+//! Two layers of scaling on top of the raw benchmark:
+//!
+//! * **Memoization** ([`MicroMemo`]): many of a contraction's algorithms
+//!   share their kernel call *and* their steady-state cache precondition
+//!   (e.g. loop orders that only permute outer loops). The memo keys the
+//!   measured [`MicroTiming`] by [`precondition_key`] — kernel signature
+//!   plus per-operand [`SliceMotion`] — so each distinct benchmark is paid
+//!   for once per ranking (or once per *sweep*, when the memo is reused).
+//! * **Engine fan-out** ([`rank_with`]): the per-algorithm predictions run
+//!   as jobs on the [`Engine`]. Every memoized benchmark owns a fresh
+//!   [`Session`](crate::machine::Session) seeded from `(seed, memo key)`
+//!   via [`key_seed`] — a pure function of the job identity, never of
+//!   worker scheduling — so `--jobs 1` and `--jobs N` rankings are
+//!   byte-identical (the `generator.rs` leaf-seed discipline).
 
+use std::sync::Arc;
+
+use crate::engine::{key_seed, Engine, Memo};
 use crate::machine::{Elem, Machine};
+use crate::util::error::Result;
 use crate::util::stats::Summary;
 
-use super::exec::call_at;
+use super::exec::{call_at_with, slice_motion, slice_motions};
 use super::gen::TensorAlg;
 use super::spec::Contraction;
 
@@ -22,26 +41,93 @@ pub struct MicroPrediction {
     pub alg_name: String,
     /// Predicted total runtime (virtual seconds).
     pub seconds: f64,
-    /// Virtual seconds the micro-benchmark itself consumed.
+    /// Virtual seconds the micro-benchmark itself consumed. Under a
+    /// [`MicroMemo`] this is the cost of the (possibly shared) benchmark,
+    /// attributed identically to every algorithm that shares it; sum
+    /// unique costs via [`memo_totals`] instead of over predictions.
     pub micro_cost: f64,
-    /// Kernel executions performed.
+    /// Kernel executions performed by the (possibly shared) benchmark.
     pub kernel_runs: usize,
 }
+
+/// The measured core of a micro-benchmark, independent of the loop count
+/// it is extrapolated to. This is what [`MicroMemo`] stores: algorithms
+/// sharing a `(kernel signature, cache precondition)` share the timing.
+#[derive(Clone, Copy, Debug)]
+pub struct MicroTiming {
+    /// Sum of the explicitly timed cold first iterations (§6.2.6).
+    pub cold_total: f64,
+    pub cold_runs: usize,
+    /// Median steady-state kernel time.
+    pub steady: f64,
+    /// Kernel executions the benchmark performed (cold + replay + steady).
+    pub kernel_runs: usize,
+    /// Virtual seconds the benchmark consumed.
+    pub cost: f64,
+}
+
+/// Steady-state kernel-timing memo keyed by [`precondition_key`]. Reuse
+/// one memo across a ranking — or across a whole size sweep — so shared
+/// kernel+precondition benchmarks are paid for once.
+pub type MicroMemo = Memo<MicroTiming>;
 
 /// Number of cold "first iterations" timed explicitly (§6.2.6).
 const COLD_RUNS: usize = 2;
 /// Steady-state samples (median taken).
 const STEADY_RUNS: usize = 5;
+/// Preceding iterations replayed to recreate the steady-state cache
+/// precondition (§6.2.3).
+const REPLAY_WINDOW: usize = 3;
 
-/// Predict the full-algorithm runtime from a few kernel executions.
-pub fn predict(
+/// Memo key: the machine label, the kernel call signature (kernel,
+/// element type, flags, sizes, leading dimensions, increments, scalar
+/// classes) plus, per operand tensor, its [`SliceMotion`] under this
+/// algorithm, plus the loop count. Algorithms with equal keys recreate
+/// identical cache preconditions around identical kernel calls on the
+/// same machine, so one benchmark serves them all — and a memo shared
+/// across machine configurations cannot alias their timings.
+pub fn precondition_key(machine: &Machine, con: &Contraction, alg: &TensorAlg, elem: Elem) -> String {
+    let call = alg.kernel_call(con, elem);
+    let mut key = format!(
+        "{}|{}|ld{},{},{}|inc{},{}|alpha{:?}|beta{:?}|L{}",
+        machine.label(),
+        call.describe(),
+        call.lda,
+        call.ldb,
+        call.ldc,
+        call.incx,
+        call.incy,
+        call.alpha,
+        call.beta,
+        alg.loop_count(con),
+    );
+    for (tag, idx) in [('A', &con.a), ('B', &con.b), ('C', &con.c)] {
+        let m = slice_motion(alg, con, idx);
+        key.push_str(&format!(
+            "|{tag}:{}x{}/{}{}o{}i{}",
+            m.lead,
+            m.cols,
+            m.cols_total,
+            if m.innermost_moves { "m" } else { "s" },
+            m.outer_iters,
+            m.innermost_extent,
+        ));
+    }
+    key
+}
+
+/// Run the micro-benchmark on a fresh session: time the cold first
+/// iterations, replay a window of preceding iterations to set residency,
+/// then sample the steady state.
+pub fn micro_timing(
     machine: &Machine,
     con: &Contraction,
     alg: &TensorAlg,
     elem: Elem,
     seed: u64,
-) -> MicroPrediction {
+) -> MicroTiming {
     let iters = alg.loop_count(con);
+    let motions = slice_motions(alg, con);
     let mut session = machine.session(seed);
     session.warmup();
     let t0 = session.virtual_time();
@@ -50,43 +136,97 @@ pub fn predict(
     let mut cold_total = 0.0;
     let cold_runs = COLD_RUNS.min(iters);
     for it in 0..cold_runs {
-        cold_total += session.execute(&call_at(alg, con, elem, it)).seconds;
+        cold_total += session.execute(&call_at_with(&motions, alg, con, elem, it)).seconds;
     }
 
     // --- Steady state: recreate the cache precondition by replaying the
     // access pattern of the iterations *preceding* the sampled one
     // (§6.2.3). The replay itself also warms loop-invariant operands.
     let mut steady_samples = Vec::new();
+    let mut window = 0;
     if iters > cold_runs {
         let probe = iters / 2;
-        // Replay a window of preceding iterations to set residency.
-        let window = 3.min(probe);
+        window = REPLAY_WINDOW.min(probe);
         for w in (1..=window).rev() {
-            session.execute(&call_at(alg, con, elem, probe - w));
+            session.execute(&call_at_with(&motions, alg, con, elem, probe - w));
         }
         for s in 0..STEADY_RUNS {
             let it = probe + s;
-            let call = call_at(alg, con, elem, it.min(iters - 1));
+            let call = call_at_with(&motions, alg, con, elem, it.min(iters - 1));
             steady_samples.push(session.execute(&call).seconds);
         }
     }
-    let micro_cost = session.virtual_time() - t0;
+    let cost = session.virtual_time() - t0;
 
     let steady = if steady_samples.is_empty() {
         0.0
     } else {
         Summary::from_samples(&steady_samples).med
     };
-    let seconds = cold_total + steady * (iters.saturating_sub(cold_runs)) as f64;
-    MicroPrediction {
-        alg_name: alg.name(),
-        seconds,
-        micro_cost,
-        kernel_runs: cold_runs + steady_samples.len() + 3.min(iters / 2),
+    MicroTiming {
+        cold_total,
+        cold_runs,
+        steady,
+        kernel_runs: cold_runs + window + steady_samples.len(),
+        cost,
     }
 }
 
-/// Predict every algorithm and rank ascending by predicted runtime.
+/// Extrapolate a measured timing to the algorithm's full loop count
+/// (cold first iterations explicit, steady state times the rest).
+pub fn extrapolate(timing: &MicroTiming, iters: usize) -> f64 {
+    timing.cold_total + timing.steady * iters.saturating_sub(timing.cold_runs) as f64
+}
+
+fn prediction_from(alg: &TensorAlg, con: &Contraction, timing: &MicroTiming) -> MicroPrediction {
+    MicroPrediction {
+        alg_name: alg.name(),
+        seconds: extrapolate(timing, alg.loop_count(con)),
+        micro_cost: timing.cost,
+        kernel_runs: timing.kernel_runs,
+    }
+}
+
+/// Predict the full-algorithm runtime from a few kernel executions
+/// (unmemoized: the session is seeded directly from `seed`).
+pub fn predict(
+    machine: &Machine,
+    con: &Contraction,
+    alg: &TensorAlg,
+    elem: Elem,
+    seed: u64,
+) -> MicroPrediction {
+    prediction_from(alg, con, &micro_timing(machine, con, alg, elem, seed))
+}
+
+/// Memoized prediction: the benchmark for this algorithm's
+/// `(kernel signature, cache precondition)` runs at most once per memo.
+/// The benchmark session is seeded from `(seed, key)` — not from the
+/// algorithm — so whichever algorithm (on whichever worker) computes a
+/// shared entry first stores the identical value.
+pub fn predict_with(
+    machine: &Machine,
+    con: &Contraction,
+    alg: &TensorAlg,
+    elem: Elem,
+    seed: u64,
+    memo: &MicroMemo,
+) -> MicroPrediction {
+    let key = precondition_key(machine, con, alg, elem);
+    let timing = memo
+        .get_or_insert_with(&key, || micro_timing(machine, con, alg, elem, key_seed(seed, &key)));
+    prediction_from(alg, con, &timing)
+}
+
+/// Deterministic ordering via the selection core's one sort rule
+/// ([`crate::select::rank_order`]): ascending predicted runtime
+/// (NaN-total), ties broken by algorithm name.
+fn sort_predictions(out: &mut [MicroPrediction]) {
+    out.sort_by(|a, b| crate::select::rank_order(a.seconds, &a.alg_name, b.seconds, &b.alg_name));
+}
+
+/// Predict every algorithm and rank ascending by predicted runtime
+/// (sequential, unmemoized).
 pub fn rank(
     machine: &Machine,
     con: &Contraction,
@@ -94,12 +234,45 @@ pub fn rank(
     elem: Elem,
     seed: u64,
 ) -> Vec<MicroPrediction> {
-    let mut out: Vec<MicroPrediction> = algs
-        .iter()
-        .map(|a| predict(machine, con, a, elem, seed))
-        .collect();
-    out.sort_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap());
+    let mut out: Vec<MicroPrediction> =
+        algs.iter().map(|a| predict(machine, con, a, elem, seed)).collect();
+    sort_predictions(&mut out);
     out
+}
+
+/// Engine-parallel, memoized ranking: one job per algorithm, fanned out
+/// on `engine`; shared benchmarks are memoized in `memo` (reuse one memo
+/// across a sweep to amortize further). Byte-identical for any job
+/// count.
+pub fn rank_with(
+    engine: &Arc<Engine>,
+    machine: &Machine,
+    con: &Contraction,
+    algs: &[TensorAlg],
+    elem: Elem,
+    seed: u64,
+    memo: &Arc<MicroMemo>,
+) -> Result<Vec<MicroPrediction>> {
+    let tasks: Vec<_> = algs
+        .iter()
+        .map(|alg| {
+            let (machine, con, alg) = (machine.clone(), con.clone(), alg.clone());
+            let memo = Arc::clone(memo);
+            move || predict_with(&machine, &con, &alg, elem, seed, &memo)
+        })
+        .collect();
+    let mut out = engine.run(tasks)?;
+    sort_predictions(&mut out);
+    Ok(out)
+}
+
+/// Deterministic totals over a memo's unique benchmarks: (total virtual
+/// seconds spent micro-benchmarking, total kernel executions). Summed in
+/// sorted-key order so the floating-point result is reproducible.
+pub fn memo_totals(memo: &MicroMemo) -> (f64, usize) {
+    memo.fold_sorted((0.0, 0usize), |(cost, runs), _, t| {
+        (cost + t.cost, runs + t.kernel_runs)
+    })
 }
 
 #[cfg(test)]
@@ -173,6 +346,73 @@ mod tests {
         assert!(
             full_winner <= best_full * 1.15,
             "winner {full_winner} vs best {best_full}"
+        );
+    }
+
+    #[test]
+    fn memoized_ranking_is_byte_identical_for_any_job_count() {
+        let con = Contraction::example_abc(48);
+        let m = machine();
+        let algs = generate(&con);
+        let run = |jobs: usize| {
+            let engine = Arc::new(Engine::new(jobs));
+            let memo = Arc::new(MicroMemo::new());
+            let ranked = rank_with(&engine, &m, &con, &algs, Elem::D, 17, &memo).unwrap();
+            let totals = memo_totals(&memo);
+            (ranked, memo.len(), totals)
+        };
+        let (r1, len1, tot1) = run(1);
+        let (r4, len4, tot4) = run(4);
+        assert_eq!(r1.len(), r4.len());
+        for (a, b) in r1.iter().zip(&r4) {
+            assert_eq!(a.alg_name, b.alg_name);
+            assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{}", a.alg_name);
+            assert_eq!(a.micro_cost.to_bits(), b.micro_cost.to_bits(), "{}", a.alg_name);
+            assert_eq!(a.kernel_runs, b.kernel_runs);
+        }
+        assert_eq!(len1, len4);
+        assert_eq!(tot1.0.to_bits(), tot4.0.to_bits());
+        assert_eq!(tot1.1, tot4.1);
+    }
+
+    #[test]
+    fn memo_shares_benchmarks_across_algorithms() {
+        // Loop orders that only permute *outer* loops recreate the same
+        // steady-state precondition, so 36 algorithms need fewer than 36
+        // distinct benchmarks.
+        let con = Contraction::example_abc(48);
+        let m = machine();
+        let algs = generate(&con);
+        let memo = Arc::new(MicroMemo::new());
+        let engine = Arc::new(Engine::sequential());
+        let ranked = rank_with(&engine, &m, &con, &algs, Elem::D, 9, &memo).unwrap();
+        assert_eq!(ranked.len(), algs.len());
+        assert!(memo.len() < algs.len(), "memo holds {} of {}", memo.len(), algs.len());
+        assert!(memo.hits() > 0);
+        // The memoized winner class must agree with the unmemoized one:
+        // both rankings put a gemm algorithm first for this contraction.
+        let plain = rank(&m, &con, &algs, Elem::D, 9);
+        assert!(plain[0].alg_name.contains("gemm"), "{}", plain[0].alg_name);
+        assert!(ranked[0].alg_name.contains("gemm"), "{}", ranked[0].alg_name);
+    }
+
+    #[test]
+    fn total_micro_cost_below_fastest_predicted_runtime() {
+        // The paper's headline (§6.3.4): predicting *all* algorithms costs
+        // a fraction of one contraction's runtime. With the memo, the
+        // total benchmark cost stays strictly below the predicted runtime
+        // of even the fastest-ranked algorithm of the running example.
+        let con = Contraction::example_abc(96);
+        let m = machine();
+        let algs = generate(&con);
+        let memo = Arc::new(MicroMemo::new());
+        let engine = Arc::new(Engine::sequential());
+        let ranked = rank_with(&engine, &m, &con, &algs, Elem::D, 7, &memo).unwrap();
+        let (total_cost, _) = memo_totals(&memo);
+        assert!(
+            total_cost < ranked[0].seconds,
+            "micro total {total_cost} vs fastest predicted {}",
+            ranked[0].seconds
         );
     }
 }

@@ -9,6 +9,11 @@
 //! * [`micro`]: cache-aware micro-benchmarks (§6.2): run the kernel a
 //!   handful of times under recreated cache conditions (first iterations
 //!   cold, steady state warm by operand access distance) and extrapolate.
+//!   Benchmarks are memoized by `(kernel signature, cache precondition)`
+//!   ([`micro::MicroMemo`]) and fan out as engine jobs
+//!   ([`micro::rank_with`]); ranking and validation against full
+//!   executions share the [`crate::select`] selection core with the
+//!   blocked-algorithm scenario.
 
 pub mod exec;
 pub mod gen;
@@ -16,4 +21,5 @@ pub mod micro;
 pub mod spec;
 
 pub use gen::{generate, KernelKind, TensorAlg};
+pub use micro::{MicroMemo, MicroPrediction};
 pub use spec::Contraction;

@@ -25,6 +25,15 @@ impl Contraction {
             .ok_or_else(|| crate::err!("expected ',' between operands in '{s}'"))?;
         let take = |p: &str| p.trim().chars().collect::<Vec<char>>();
         let (c, a, b) = (take(c_part), take(a_part), take(b_part));
+        // No repeated index within one tensor (no implicit traces).
+        for (tensor, idx) in [("C", &c), ("A", &a), ("B", &b)] {
+            for (pos, &i) in idx.iter().enumerate() {
+                crate::ensure!(
+                    !idx[..pos].contains(&i),
+                    "index '{i}' repeated within tensor {tensor} in '{s}'"
+                );
+            }
+        }
         // Validity: every C index appears in exactly one of A/B; contracted
         // indices appear in both A and B but not C.
         for &i in &c {
@@ -38,6 +47,11 @@ impl Contraction {
         for &i in &a {
             if !c.contains(&i) {
                 crate::ensure!(b.contains(&i), "index '{i}' is neither free nor contracted");
+            }
+        }
+        for &i in &b {
+            if !c.contains(&i) {
+                crate::ensure!(a.contains(&i), "index '{i}' is neither free nor contracted");
             }
         }
         let mut dims = BTreeMap::new();
@@ -157,6 +171,44 @@ mod tests {
         assert!(Contraction::parse("ab=ai,ib").is_ok()); // valid: C_ab = A_ai B_ib
         assert!(Contraction::parse("abz=ai,ib").is_err()); // z nowhere
         assert!(Contraction::parse("abc").is_err());
+    }
+
+    #[test]
+    fn parse_error_messages_name_the_defect() {
+        // Missing '='.
+        let e = Contraction::parse("abc,ai,ibc").unwrap_err();
+        assert!(e.to_string().contains("'='"), "{e}");
+        // Missing ',' between operands.
+        let e = Contraction::parse("abc=aiibc").unwrap_err();
+        assert!(e.to_string().contains("','"), "{e}");
+        // Output index in both operands (neither free nor contracted
+        // cleanly): 'a' appears in A and B and C.
+        let e = Contraction::parse("ab=ai,ab").unwrap_err();
+        assert!(e.to_string().contains("exactly one operand"), "{e}");
+        // Operand index that is neither free (in C) nor contracted (in
+        // the other operand) — on either side.
+        let e = Contraction::parse("ab=aik,ib").unwrap_err();
+        assert!(e.to_string().contains("neither free nor contracted"), "{e}");
+        let e = Contraction::parse("ab=ai,ibq").unwrap_err();
+        assert!(e.to_string().contains("neither free nor contracted"), "{e}");
+    }
+
+    #[test]
+    fn repeated_index_within_a_tensor_is_rejected() {
+        for (spec, tensor) in [
+            ("aab=ai,ibc", "C"),
+            ("abc=aii,ibc", "A"),
+            ("abc=ai,iibc", "B"),
+        ] {
+            let e = Contraction::parse(spec).unwrap_err();
+            let msg = e.to_string();
+            assert!(
+                msg.contains("repeated within tensor") && msg.contains(tensor),
+                "{spec}: {msg}"
+            );
+        }
+        // The running example stays valid.
+        assert!(Contraction::parse("abc=ai,ibc").is_ok());
     }
 
     #[test]

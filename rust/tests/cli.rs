@@ -42,6 +42,77 @@ fn help_documents_gen_and_jobs() {
     assert!(text.contains("--all"), "{text}");
 }
 
+/// Acceptance criterion of ISSUE 3: `contract --rank` stdout is
+/// byte-identical for any `--jobs` value, and the reported total
+/// micro-benchmark cost stays strictly below the predicted runtime of
+/// the fastest-ranked algorithm on the paper's running example.
+#[test]
+fn contract_rank_jobs_parity_and_micro_cost_headline() {
+    let rank = |jobs: &str| {
+        let out = dlapm()
+            .args([
+                "contract", "--spec", "abc=ai,ibc", "--n", "96", "--seed", "7", "--rank",
+                "--jobs", jobs,
+            ])
+            .output()
+            .expect("spawning dlapm contract");
+        assert!(out.status.success(), "contract --jobs {jobs}: {:?}", out.status);
+        out.stdout
+    };
+    let a = rank("1");
+    let b = rank("4");
+    assert!(!a.is_empty());
+    assert_eq!(
+        String::from_utf8_lossy(&a),
+        String::from_utf8_lossy(&b),
+        "contract --rank must print identical rankings for --jobs 1 and --jobs 4"
+    );
+
+    let text = String::from_utf8_lossy(&a);
+    assert!(text.contains("total micro-benchmark cost"), "{text}");
+    // Parse "... = F x fastest predicted ..." and check F < 1 (the
+    // §6.3.4 efficiency headline, enforced end-to-end).
+    let frac_line = text
+        .lines()
+        .find(|l| l.contains("x fastest predicted"))
+        .unwrap_or_else(|| panic!("no micro-cost ratio line in:\n{text}"));
+    let frac: f64 = frac_line
+        .rsplit('=')
+        .next()
+        .and_then(|rhs| rhs.trim().split_whitespace().next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("unparsable ratio line: {frac_line}"));
+    assert!(
+        frac > 0.0 && frac < 1.0,
+        "total micro cost must be a strict fraction of the fastest predicted runtime: {frac_line}"
+    );
+}
+
+/// Sweep mode: multiple `--n` sizes share one memo; each size reports
+/// its ranking, the cumulative footer appears once, and `--csv` records
+/// one per-size block per ranking.
+#[test]
+fn contract_sweep_ranks_every_size() {
+    let csv_path = std::env::temp_dir().join(format!("dlapm_sweep_{}.csv", std::process::id()));
+    let out = dlapm()
+        .args([
+            "contract", "--spec", "abc=ai,ibc", "--sweep", "24,32", "--seed", "7", "--jobs", "2",
+            "--csv",
+        ])
+        .arg(&csv_path)
+        .output()
+        .expect("spawning dlapm contract --sweep");
+    assert!(out.status.success(), "{:?}", out.status);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("with n=24"), "{text}");
+    assert!(text.contains("with n=32"), "{text}");
+    assert_eq!(text.matches("total micro-benchmark cost").count(), 1, "{text}");
+    let csv = std::fs::read_to_string(&csv_path).expect("--csv file written");
+    let _ = std::fs::remove_file(&csv_path);
+    assert!(csv.starts_with("# n=24\nrank,name,"), "{csv}");
+    assert!(csv.contains("# n=32\n"), "{csv}");
+}
+
 /// End-to-end `--jobs` parity through the real binary: `gen --jobs 1`
 /// and `gen --jobs 4` write byte-identical model stores.
 #[test]

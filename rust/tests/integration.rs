@@ -101,6 +101,73 @@ fn jobs_parity_one_vs_many_threads_byte_identical() {
     assert!(cache.hits() + cache.misses() > 0);
 }
 
+/// ISSUE 3: both scenarios — model-based blocked algorithms and
+/// micro-benchmark-based tensor contractions — rank through the one
+/// selection core, on the same engine, with validation paired by index.
+#[test]
+fn unified_selection_core_serves_both_scenarios() {
+    use dlapm::select::{
+        rank_candidates_par, selection_quality, winner_within, BlockedCandidate, Candidate,
+        TensorCandidate, ValidateCfg,
+    };
+    let engine = Arc::new(Engine::new(3));
+
+    // --- Blocked scenario (Ch. 4): Cholesky variants via models.
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let algs = Potrf::all(Elem::D);
+    let mut store = ModelStore::new(&machine.label());
+    let refs: Vec<&dyn BlockedAlg> = algs.iter().map(|a| a as _).collect();
+    coverage::ensure_models_with(&engine, &machine, &mut store, &refs, 536, 104, 42).unwrap();
+    let store = Arc::new(store);
+    let cache = Arc::new(ModelCache::new());
+    let blocked: Vec<Arc<dyn Candidate + Send + Sync>> = algs
+        .iter()
+        .map(|a| {
+            Arc::new(BlockedCandidate {
+                store: Arc::clone(&store),
+                cache: Arc::clone(&cache),
+                alg: Arc::new(a.clone()),
+                n: 520,
+                b: 104,
+                validate: Some(ValidateCfg { machine: machine.clone(), reps: 3, seed: 7 }),
+            }) as _
+        })
+        .collect();
+    let ranked = rank_candidates_par(&engine, &blocked).unwrap();
+    assert_eq!(ranked.len(), algs.len());
+    assert!(ranked.iter().all(|r| r.measured.is_some()));
+    let q = selection_quality(&ranked).unwrap();
+    assert!(q <= 1.10, "blocked selection quality {q}");
+    assert!(cache.hits() > 0, "variants must share the estimate cache");
+
+    // --- Tensor scenario (Ch. 6): the same core + engine, micro-based.
+    let harper = Machine::standard(CpuId::Harpertown, Library::OpenBlas { fixed_dswap: false }, 1);
+    let con = dlapm::tensor::Contraction::example_abc(32);
+    let memo = Arc::new(dlapm::tensor::MicroMemo::new());
+    let tensor: Vec<Arc<dyn Candidate + Send + Sync>> = dlapm::tensor::generate(&con)
+        .into_iter()
+        .map(|alg| {
+            Arc::new(TensorCandidate {
+                machine: harper.clone(),
+                con: con.clone(),
+                alg,
+                elem: Elem::D,
+                seed: 11,
+                memo: Arc::clone(&memo),
+                validate_reps: 1,
+            }) as _
+        })
+        .collect();
+    let ranked = rank_candidates_par(&engine, &tensor).unwrap();
+    assert_eq!(ranked.len(), 36);
+    assert!(winner_within(&ranked, 0.25).unwrap(), "q={:?}", selection_quality(&ranked));
+    assert!(memo.len() < 36, "algorithms must share micro-benchmarks: {}", memo.len());
+    // Both rankings render through the one report path.
+    let (text, csv) = dlapm::report::selection_table(&ranked);
+    assert_eq!(text.lines().count(), 36);
+    assert_eq!(csv.lines().count(), 37);
+}
+
 #[test]
 fn store_save_load_error_paths() {
     let dir = TempDir::new("store_errors");
