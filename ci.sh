@@ -71,6 +71,32 @@ else
     exit 1
 fi
 
+echo "== contract --sweep memo-granularity smoke (default vs --memo-granularity 1) =="
+cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --sweep 24,32 --seed 7 --jobs 2 \
+    > "$SMOKE_DIR/sweep_default.txt"
+cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --sweep 24,32 --seed 7 --jobs 2 \
+    --memo-granularity 1 > "$SMOKE_DIR/sweep_g1.txt"
+if cmp -s "$SMOKE_DIR/sweep_default.txt" "$SMOKE_DIR/sweep_g1.txt"; then
+    echo "contract --sweep --memo-granularity 1 is byte-identical to the default"
+else
+    echo "ERROR: --memo-granularity 1 differs from the no-flag default:" >&2
+    diff "$SMOKE_DIR/sweep_default.txt" "$SMOKE_DIR/sweep_g1.txt" >&2 || true
+    exit 1
+fi
+
+echo "== select --validate determinism smoke (--jobs 1 vs --jobs 4) =="
+cargo run -q --bin dlapm -- select --cpu sandybridge --lib openblas --op potrf \
+    --n 520 --b 104 --validate --reps 2 --seed 5 --jobs 1 > "$SMOKE_DIR/select_jobs1.txt"
+cargo run -q --bin dlapm -- select --cpu sandybridge --lib openblas --op potrf \
+    --n 520 --b 104 --validate --reps 2 --seed 5 --jobs 4 > "$SMOKE_DIR/select_jobs4.txt"
+if cmp -s "$SMOKE_DIR/select_jobs1.txt" "$SMOKE_DIR/select_jobs4.txt"; then
+    echo "select --validate output is byte-identical across job counts"
+else
+    echo "ERROR: select --validate differs between --jobs 1 and --jobs 4:" >&2
+    diff "$SMOKE_DIR/select_jobs1.txt" "$SMOKE_DIR/select_jobs4.txt" >&2 || true
+    exit 1
+fi
+
 if [ "$BENCH" -eq 1 ]; then
     echo "== bench suites (recording BENCH_<suite>.json) =="
     DLAPM_BENCH_JSON="$ROOT" cargo bench --bench modeling

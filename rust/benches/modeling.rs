@@ -69,6 +69,17 @@ fn main() {
         coverage::ensure_models_with(&en, &machine, &mut store, &refs, 536, 104, 1).unwrap()
     });
 
+    // Engine wake latency: a fully idle pool (workers parked on the
+    // condvar) accepts and completes a batch. Before the wake-counter
+    // rewrite every idle worker polled on a 20 ms timeout; now a
+    // submission burst notifies parked workers exactly once.
+    let idle = Engine::new(available_parallelism());
+    idle.run(vec![|| 0usize]).unwrap(); // spawn + park once before timing
+    suite.add("engine/idle-wake-1job", || idle.run(vec![|| 1usize]).unwrap()[0]);
+    suite.add("engine/idle-wake-64fanout", || {
+        idle.run((0..64usize).map(|i| move || i).collect::<Vec<_>>()).unwrap().len()
+    });
+
     // Fit backends on a 128x12 system.
     let mut rng = Rng::new(3);
     let exps: Vec<Vec<u8>> = (0..4u8).flat_map(|i| (0..3u8).map(move |j| vec![i, j])).collect();

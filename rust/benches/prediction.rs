@@ -1,8 +1,12 @@
 //! Bench: the prediction hot path (paper headline — predictions are
 //! orders of magnitude faster than measurement). Covers Fig 4.12/4.14
 //! selection sweeps, cold-vs-warm estimate-cache prediction, batched
-//! model evaluation, and the scalar vs PJRT polyeval backends.
-use dlapm::engine::ModelCache;
+//! model evaluation, block-size sweeps through the selection core
+//! (batched prewarm vs a per-b loop), and the scalar vs PJRT polyeval
+//! backends.
+use std::sync::Arc;
+
+use dlapm::engine::{Engine, ModelCache};
 use dlapm::machine::{CpuId, Elem, Library, Machine};
 use dlapm::modeling::ModelStore;
 use dlapm::predict::algorithms::potrf::Potrf;
@@ -35,9 +39,36 @@ fn main() {
         predict_calls_cached(&store, &calls, &warm).time.med
     });
     suite.add("call_sequence_gen/potrf-n2008", || alg.calls(2008, 128).len());
-    suite.add("blocksize_sweep/65-candidates", || {
-        let bs: Vec<usize> = (24..=536).step_by(8).collect();
-        dlapm::predict::blocksize::optimize_blocksize(&store, &alg, 2008, &bs).b_pred
+    // Block-size sweep, unbatched reference: one predict_calls per b —
+    // every call pays its own piece lookup and polynomial evaluation.
+    let bs: Vec<usize> = dlapm::predict::blocksize::standard_bs();
+    suite.add("blocksize_sweep/65-unbatched-loop", || {
+        bs.iter()
+            .map(|&b| predict_calls(&store, &alg.calls(2008, b)).time.med)
+            .fold(f64::INFINITY, f64::min)
+    });
+    // The selection-core path: ordered evaluate_batch prewarm + cached
+    // candidates ranked via rank_candidates_par (bit-identical results).
+    let store_arc = Arc::new(store.clone());
+    let alg_arc: Arc<dyn BlockedAlg + Send + Sync> = Arc::new(alg);
+    let seq = Arc::new(Engine::sequential());
+    suite.add("blocksize_sweep/65-batched-core", || {
+        let cache = Arc::new(ModelCache::new());
+        dlapm::predict::blocksize::optimize_blocksize_with(&seq, &store_arc, &cache, &alg_arc, 2008, &bs)
+            .unwrap()
+            .0
+            .b_pred
+    });
+    // Warm shared cache across sweep repetitions: the cross-sweep regime
+    // of repeated `figures` runs (every candidate prediction hits).
+    let warm_cache = Arc::new(ModelCache::new());
+    dlapm::predict::blocksize::optimize_blocksize_with(&seq, &store_arc, &warm_cache, &alg_arc, 2008, &bs)
+        .unwrap();
+    suite.add("blocksize_sweep/65-batched-warm", || {
+        dlapm::predict::blocksize::optimize_blocksize_with(&seq, &store_arc, &warm_cache, &alg_arc, 2008, &bs)
+            .unwrap()
+            .0
+            .b_pred
     });
     // Batched evaluation: ordered sweep through one model's domain.
     if let Some(model) = store.models.values().max_by_key(|m| m.pieces.len()) {

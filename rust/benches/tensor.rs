@@ -40,5 +40,25 @@ fn main() {
         let memo = Arc::new(MicroMemo::new());
         micro::rank_with(&en, &machine, &con, &algs, Elem::D, 3, &memo).unwrap().len()
     });
+
+    // Sweep axis: two nearby sizes, cold (fresh exact memo per size) vs
+    // one coarse-granularity memo shared across the sweep — n=30 and
+    // n=32 quantize together at g=8, so the second size's benchmarks are
+    // pure cross-size memo hits.
+    let con30 = Contraction::example_abc(30);
+    let con32 = Contraction::example_abc(32);
+    let algs30 = generate(&con30);
+    let algs32 = generate(&con32);
+    suite.add("sweep/30+32-cold", || {
+        let m1 = Arc::new(MicroMemo::new());
+        let m2 = Arc::new(MicroMemo::new());
+        micro::rank_with(&e1, &machine, &con30, &algs30, Elem::D, 3, &m1).unwrap().len()
+            + micro::rank_with(&e1, &machine, &con32, &algs32, Elem::D, 3, &m2).unwrap().len()
+    });
+    suite.add("sweep/30+32-memo-g8", || {
+        let memo = Arc::new(MicroMemo::with_granularity(8));
+        micro::rank_with(&e1, &machine, &con30, &algs30, Elem::D, 3, &memo).unwrap().len()
+            + micro::rank_with(&e1, &machine, &con32, &algs32, Elem::D, 3, &memo).unwrap().len()
+    });
     suite.finish();
 }

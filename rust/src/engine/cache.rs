@@ -27,6 +27,14 @@ use crate::util::stats::Summary;
 /// padding is unambiguous.
 type SizeKey = ([usize; 4], u8);
 
+/// The one quantization rule every granularity knob shares (this cache,
+/// [`crate::engine::Memo`] key builders via `Contraction::quantized`):
+/// nearest multiple of `g`, clamped to >= 1 so a tiny dimension can never
+/// alias the "zero size = no kernel body" special case.
+pub fn quantize_size(v: usize, g: usize) -> usize {
+    ((v + g / 2) / g * g).max(1)
+}
+
 /// Memoized `(case, rounded sizes) -> Summary` store with hit/miss
 /// counters. Shareable across threads (`&ModelCache` is all that's
 /// needed; wrap in `Arc` to share ownership).
@@ -64,10 +72,17 @@ impl ModelCache {
         }
     }
 
-    /// Quantize sizes to the cache key grid.
+    /// The key-quantization granularity (1 = exact keys). Mirrors
+    /// [`crate::engine::Memo::granularity`].
+    pub fn granularity(&self) -> usize {
+        self.granularity
+    }
+
+    /// Quantize sizes to the cache key grid. Idempotent: rounding an
+    /// already-rounded vector is the identity, so batch-prewarm paths
+    /// may insert pre-rounded points (`predict::blocksize`).
     pub fn round(&self, sizes: &[usize]) -> Vec<usize> {
-        let g = self.granularity;
-        sizes.iter().map(|&v| (v + g / 2) / g * g).collect()
+        sizes.iter().map(|&v| quantize_size(v, self.granularity)).collect()
     }
 
     /// The stack key for a size vector; `None` if the dimensionality
@@ -76,10 +91,9 @@ impl ModelCache {
         if sizes.len() > 4 {
             return None;
         }
-        let g = self.granularity;
         let mut padded = [0usize; 4];
         for (dst, &v) in padded.iter_mut().zip(sizes) {
-            *dst = (v + g / 2) / g * g;
+            *dst = quantize_size(v, self.granularity);
         }
         Some((padded, sizes.len() as u8))
     }
@@ -193,7 +207,16 @@ mod tests {
     #[test]
     fn exact_granularity_does_not_perturb_sizes() {
         let cache = ModelCache::new();
+        assert_eq!(cache.granularity(), 1);
         assert_eq!(cache.round(&[127, 24, 5000]), vec![127, 24, 5000]);
+    }
+
+    #[test]
+    fn rounding_is_idempotent() {
+        let cache = ModelCache::with_granularity(8);
+        assert_eq!(cache.granularity(), 8);
+        let once = cache.round(&[126, 129, 24]);
+        assert_eq!(cache.round(&once), once);
     }
 
     #[test]

@@ -21,7 +21,19 @@ use crate::util::rng::splitmix64;
 
 /// Thread-safe `key -> V` memo with hit/miss counters. Share by
 /// reference across threads (`Arc<Memo<V>>` for owned sharing).
+///
+/// The memo also carries a *granularity* knob, mirroring
+/// [`ModelCache::with_granularity`]: the memo itself keys exact strings,
+/// but key *builders* (e.g. [`crate::tensor::micro::predict_with`]) read
+/// [`Memo::granularity`] and quantize the dimensions they embed in their
+/// keys to multiples of it. Granularity 1 (the default) means exact keys
+/// and bit-identical memoized results; a coarser granularity trades a
+/// bounded dimension perturbation for cross-size key collisions.
+/// Contract for g > 1: on a miss, `compute` must derive its result from
+/// the *quantized* configuration the key describes — never from the
+/// caller's exact one — so racing double-computes still store one value.
 pub struct Memo<V: Copy> {
+    granularity: usize,
     map: RwLock<HashMap<String, V>>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -34,12 +46,25 @@ impl<V: Copy> Default for Memo<V> {
 }
 
 impl<V: Copy> Memo<V> {
+    /// Exact-key memo (granularity 1).
     pub fn new() -> Memo<V> {
+        Memo::with_granularity(1)
+    }
+
+    /// Memo whose key builders quantize embedded dimensions to multiples
+    /// of `granularity` (clamped to >= 1).
+    pub fn with_granularity(granularity: usize) -> Memo<V> {
         Memo {
+            granularity: granularity.max(1),
             map: RwLock::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
+    }
+
+    /// The key-quantization granularity key builders must honour.
+    pub fn granularity(&self) -> usize {
+        self.granularity
     }
 
     /// Memoized lookup: on a miss, `compute` runs and its result is
@@ -67,6 +92,14 @@ impl<V: Copy> Memo<V> {
     /// Peek without computing (counts as neither hit nor miss).
     pub fn peek(&self, key: &str) -> Option<V> {
         self.map.read().unwrap_or_else(|p| p.into_inner()).get(key).copied()
+    }
+
+    /// Is `key` memoized? Counts as neither hit nor miss. Unlike the
+    /// hit/miss counters (which racing double-computes perturb), the key
+    /// *set* after a batch completes is scheduling-independent, so
+    /// reuse statistics built on `contains` are deterministic.
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.read().unwrap_or_else(|p| p.into_inner()).contains_key(key)
     }
 
     /// Fold over the stored values in sorted-key order. Sorting makes
@@ -152,6 +185,22 @@ mod tests {
             s
         });
         assert_eq!(order, "a1b2c3");
+    }
+
+    #[test]
+    fn granularity_is_stored_and_clamped() {
+        assert_eq!(Memo::<f64>::new().granularity(), 1);
+        assert_eq!(Memo::<f64>::with_granularity(8).granularity(), 8);
+        assert_eq!(Memo::<f64>::with_granularity(0).granularity(), 1);
+    }
+
+    #[test]
+    fn contains_reports_without_counting() {
+        let memo: Memo<u8> = Memo::new();
+        assert!(!memo.contains("k"));
+        memo.get_or_insert_with("k", || 1);
+        assert!(memo.contains("k"));
+        assert_eq!((memo.hits(), memo.misses()), (0, 1));
     }
 
     #[test]

@@ -5,11 +5,15 @@
 //!
 //! * [`pool`] — a work-stealing job pool ([`Engine`]) over `std::thread` +
 //!   `std::sync::mpsc`. Batches of independent jobs (model-generation
-//!   cases, domain-split leaf fits) fan out across worker threads; the
-//!   submitting thread *helps* execute its own batch, so nested
-//!   submissions (a case job fanning out its split fits) cannot deadlock.
-//!   Worker panics are captured and surfaced as
-//!   [`crate::util::error::Error`], never as a crashed thread.
+//!   cases, domain-split leaf fits, selection candidates, validation
+//!   repetitions) fan out across worker threads; the submitting thread
+//!   *helps* execute its own batch, so nested submissions (a case job
+//!   fanning out its split fits, a candidate fanning out its measurement
+//!   reps) cannot deadlock. Idle workers park on a condvar wake counter
+//!   and wake exactly once per submission burst — an idle pool burns no
+//!   cycles and pays no poll-timeout latency. Worker panics are captured
+//!   and surfaced as [`crate::util::error::Error`], never as a crashed
+//!   thread.
 //! * [`cache`] — a thread-safe [`ModelCache`] memoizing model estimates
 //!   (piece lookup + polynomial evaluation) keyed by case and rounded
 //!   argument sizes, for batched prediction sweeps that revisit the same

@@ -16,6 +16,13 @@
 //! A panicking job is caught with `std::panic::catch_unwind` and reported
 //! as a [`crate::util::error::Error`] carrying the job index and payload;
 //! the pool itself and all other jobs of the batch keep running.
+//!
+//! Idle workers park on a condvar guarded by a *wake generation counter*:
+//! submitting a batch bumps the generation once and notifies, so a parked
+//! worker wakes exactly once per submission burst — no periodic poll, no
+//! bounded-timeout churn between bursts, and no missed wakeups (a push
+//! that races the park either is seen by the pre-park work check or
+//! advances the generation the parked worker is waiting on).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -47,8 +54,10 @@ struct Shared {
     deques: Vec<Mutex<VecDeque<Job>>>,
     /// Round-robin push cursor (shared so nested batches interleave).
     cursor: AtomicUsize,
-    /// Idle workers park here until new work or shutdown.
-    idle: Mutex<()>,
+    /// Wake generation counter: bumped once per submission burst (and
+    /// once at shutdown). Idle workers park on `signal` until it moves
+    /// past the value they read before parking.
+    wake: Mutex<u64>,
     signal: Condvar,
     shutdown: AtomicBool,
 }
@@ -57,6 +66,15 @@ impl Shared {
     fn push(&self, job: Job) {
         let slot = self.cursor.fetch_add(1, Ordering::SeqCst) % self.deques.len();
         lock(&self.deques[slot]).push_back(job);
+    }
+
+    /// Advance the wake generation and rouse every parked worker — one
+    /// call per submission burst. Jobs are already in the deques by the
+    /// time this runs, so a worker that parks after this bump re-checks
+    /// the deques first and never sleeps on available work.
+    fn wake_all(&self) {
+        *lock(&self.wake) += 1;
+        self.signal.notify_all();
     }
 
     /// Pop for worker `own`: own deque first (FIFO), then steal from the
@@ -100,13 +118,20 @@ fn worker_loop(shared: Arc<Shared>, own: usize) {
             job();
             continue;
         }
-        let guard = lock(&shared.idle);
+        // Park protocol: snapshot the generation under the wake lock,
+        // re-check for work, then wait for the generation to advance.
+        // A submission burst pushes its jobs *before* bumping the
+        // generation, so a push racing this park is either visible to
+        // `has_work` or bumps the generation this wait watches — a
+        // wakeup can be early (spurious work check) but never missed.
+        let guard = lock(&shared.wake);
+        let seen = *guard;
         if shared.shutdown.load(Ordering::SeqCst) || shared.has_work() {
             continue;
         }
-        // A push can slip in between `has_work` and the wait; the timeout
-        // bounds that stall instead of requiring a lock-coupled queue.
-        let _ = shared.signal.wait_timeout(guard, Duration::from_millis(20));
+        let _ = shared
+            .signal
+            .wait_while(guard, |gen| *gen == seen && !shared.shutdown.load(Ordering::SeqCst));
     }
 }
 
@@ -126,7 +151,7 @@ impl Engine {
         let shared = Arc::new(Shared {
             deques: (0..slots).map(|_| Mutex::new(VecDeque::new())).collect(),
             cursor: AtomicUsize::new(0),
-            idle: Mutex::new(()),
+            wake: Mutex::new(0),
             signal: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -152,6 +177,14 @@ impl Engine {
         self.jobs
     }
 
+    /// Current wake generation: advances exactly once per submitted batch
+    /// (and once at shutdown). Parked workers wake only when it moves, so
+    /// `wake_generation() - batches submitted` staying constant is the
+    /// "no idle churn" property the condvar parking provides.
+    pub fn wake_generation(&self) -> u64 {
+        *lock(&self.shared.wake)
+    }
+
     /// Execute a batch of independent jobs, returning their results in
     /// submission order. If any job panicked, the error of the
     /// lowest-index failing job is returned (deterministic regardless of
@@ -174,10 +207,17 @@ impl Engine {
             }));
         }
         drop(tx);
-        self.shared.signal.notify_all();
+        self.shared.wake_all();
 
         // Help execute queued jobs (this batch's or a sibling batch's)
-        // while results trickle in.
+        // while results trickle in. When nothing is poppable, the
+        // remaining jobs are running on other threads — but those jobs
+        // may push *nested* batches (validation reps) after this check,
+        // which only condvar-parked workers are notified about. The
+        // short receive timeout keeps an otherwise-waiting submitter
+        // rejoining the help loop for such late-pushed work; unlike the
+        // old worker idle-wait, this poll only runs while a batch is in
+        // flight — an idle pool stays silent.
         let mut slots: Vec<Option<std::result::Result<T, String>>> = (0..n).map(|_| None).collect();
         let mut received = 0usize;
         while received < n {
@@ -192,7 +232,7 @@ impl Engine {
                 job();
                 continue;
             }
-            match rx.recv_timeout(Duration::from_millis(5)) {
+            match rx.recv_timeout(Duration::from_millis(1)) {
                 Ok((i, r)) => {
                     slots[i] = Some(r);
                     received += 1;
@@ -222,7 +262,9 @@ impl Engine {
 impl Drop for Engine {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.signal.notify_all();
+        // The generation bump covers a worker that read `wake` just
+        // before the shutdown store: its wait predicate re-checks both.
+        self.shared.wake_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -331,6 +373,28 @@ mod tests {
         let out = engine.run(tasks).unwrap();
         let want: Vec<usize> = (0..6usize).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn wake_generation_bumps_once_per_batch() {
+        let engine = Engine::new(3);
+        let g0 = engine.wake_generation();
+        for round in 0..5u64 {
+            engine.run((0..8usize).map(|i| move || i).collect::<Vec<_>>()).unwrap();
+            assert_eq!(engine.wake_generation(), g0 + round + 1);
+        }
+    }
+
+    #[test]
+    fn parked_workers_wake_for_later_bursts() {
+        // After a batch drains, workers park on the condvar (no poll
+        // timeout remains to rescue a missed wakeup) — a later burst must
+        // still complete, from a genuinely idle pool.
+        let engine = Engine::new(4);
+        engine.run((0..16usize).map(|i| move || i).collect::<Vec<_>>()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let out = engine.run((0..16usize).map(|i| move || i * 2).collect::<Vec<_>>()).unwrap();
+        assert_eq!(out, (0..16usize).map(|i| i * 2).collect::<Vec<_>>());
     }
 
     #[test]

@@ -371,19 +371,30 @@ pub fn fig4_18(ctx: &Ctx) {
     ctx.report.emit("fig4_18", &txt, &plot::csv(&["b", "potf2_ms", "trsm_ms", "syrk_ms"], &rows));
 }
 
-/// Figs 4.19/4.20: block-size optimization + yields.
+/// Figs 4.19/4.20: block-size optimization + yields, with every sweep
+/// ranked through the selection core over one shared estimate cache per
+/// machine (the validation grid is a subset of the fine grid, so its
+/// predictions are pure cache hits).
 pub fn fig4_19(ctx: &Ctx) {
+    use crate::engine::{Engine, ModelCache};
+    use std::sync::Arc;
+    let engine = Arc::new(Engine::sequential());
     let mut rows = Vec::new();
     for threads in [1usize, 12] {
         let machine = Machine::standard(CpuId::Haswell, Library::OpenBlas { fixed_dswap: false }, threads);
         let alg = Potrf { variant: 3, elem: Elem::D };
-        let store = store_for(ctx, &machine, &[&alg], max_n(ctx));
+        let store = Arc::new(store_for(ctx, &machine, &[&alg], max_n(ctx)));
+        let alg: Arc<dyn BlockedAlg + Send + Sync> = Arc::new(alg);
+        let cache = Arc::new(ModelCache::new());
         for n in [1000usize, 2000, 3000] {
             let bs: Vec<usize> = (24..=400).step_by(16).collect();
-            let sweep = blocksize::optimize_blocksize(&store, &alg, n, &bs);
+            let (sweep, _) = blocksize::optimize_blocksize_with(&engine, &store, &cache, &alg, n, &bs)
+                .expect("block-size ranking failed");
             let val_bs: Vec<usize> = (24..=400).step_by(48).collect();
-            let val_sweep = blocksize::optimize_blocksize(&store, &alg, n, &val_bs);
-            let y = blocksize::validate_blocksize(&machine, &alg, &val_sweep, 3, ctx.seed);
+            let (val_sweep, _) =
+                blocksize::optimize_blocksize_with(&engine, &store, &cache, &alg, n, &val_bs)
+                    .expect("block-size ranking failed");
+            let y = blocksize::validate_blocksize(&machine, alg.as_ref(), &val_sweep, 3, ctx.seed);
             rows.push(vec![
                 threads.to_string(),
                 n.to_string(),

@@ -1,10 +1,14 @@
 //! Chapter 6 drivers: tensor contraction generation, micro-benchmark
 //! predictions and rankings.
 
+use std::sync::Arc;
+
+use crate::engine::Engine;
 use crate::machine::{CpuId, Elem, Library, Machine};
+use crate::select::{rank_candidates, selection_quality, Candidate, TensorCandidate};
 use crate::tensor::exec::execute_full;
 use crate::tensor::micro;
-use crate::tensor::{generate, Contraction, KernelKind};
+use crate::tensor::{generate, Contraction, KernelKind, MicroMemo};
 use crate::util::plot;
 
 use super::{Ctx, Scale};
@@ -31,7 +35,7 @@ pub fn fig6_1(ctx: &Ctx) {
         best.update(alg.kind, g);
         rows.push(vec![alg.name(), format!("{:?}", alg.kind), format!("{g:.3}")]);
     }
-    rows.sort_by(|a, b| b[2].parse::<f64>().unwrap().partial_cmp(&a[2].parse::<f64>().unwrap()).unwrap());
+    rows.sort_by(|a, b| b[2].parse::<f64>().unwrap().total_cmp(&a[2].parse::<f64>().unwrap()));
     let txt = format!(
         "## Fig 1.5a / §6.1: {} algorithms for C_abc := A_ai B_ibc (n={n}, i=8)\n\
          best per kernel class [GFLOPs/s]: gemm={:.2} gemv={:.2} ger={:.2} axpy={:.2} dot={:.2}\n{}",
@@ -117,6 +121,69 @@ pub fn fig6_3b(ctx: &Ctx) {
 pub fn fig6_3c(ctx: &Ctx) {
     let n = if ctx.scale == Scale::Full { 96 } else { 48 };
     ranking_figure(ctx, "fig6_3c", "§6.3.3: challenging contraction C_abc := A_ija B_jbic", Contraction::example_challenging(n, 8), 3);
+}
+
+/// §6.3.1–6.3.3 through the unified selection core: the running example
+/// plus the `vector` and `challenging` CLI presets, each ranked as
+/// [`TensorCandidate`]s (memoized micro-benchmarks, validated winners)
+/// and rendered with the shared [`crate::report::selection_table`].
+pub fn fig6_5(ctx: &Ctx) {
+    let m = harpertown();
+    let engine = Arc::new(Engine::sequential());
+    let full = ctx.scale == Scale::Full;
+    let presets: [(&str, Contraction); 3] = [
+        ("abc (running example)", Contraction::example_abc(if full { 96 } else { 48 })),
+        ("vector (§6.3.2)", Contraction::example_vector(if full { 1024 } else { 256 }, 8)),
+        ("challenging (§6.3.3)", Contraction::example_challenging(if full { 64 } else { 32 }, 8)),
+    ];
+    let mut text = String::from("## §6.3: scenario presets through the unified selection core\n");
+    let mut all_csv = String::new();
+    for (name, con) in presets {
+        let memo = Arc::new(MicroMemo::new());
+        let cands: Vec<TensorCandidate> = generate(&con)
+            .into_iter()
+            .map(|alg| TensorCandidate {
+                machine: m.clone(),
+                con: con.clone(),
+                alg,
+                elem: Elem::D,
+                seed: ctx.seed,
+                memo: Arc::clone(&memo),
+                engine: Arc::clone(&engine),
+                validate_reps: 0,
+            })
+            .collect();
+        let refs: Vec<&dyn Candidate> = cands.iter().map(|c| c as _).collect();
+        let mut ranked = rank_candidates(&refs);
+        // Validate the predicted top ranks plus the predicted slowest —
+        // full executions are the expensive reference, so only measure
+        // where the figure reads them (like the §6.3.1-3 drivers).
+        let picks: Vec<usize> = [0usize, 1, 2, ranked.len().saturating_sub(1)]
+            .into_iter()
+            .filter(|&i| i < ranked.len())
+            .collect();
+        for i in picks {
+            if ranked[i].measured.is_none() {
+                let mut c = cands[ranked[i].index].clone();
+                c.validate_reps = 1;
+                ranked[i].measured = c.measure();
+            }
+        }
+        let (table, csv) = crate::report::selection_table(&ranked[..ranked.len().min(12)]);
+        let (micro_cost, kernel_runs) = micro::memo_totals(&memo);
+        text.push_str(&format!(
+            "\n### {name}: {} algorithms, {} unique benchmark(s), {:.3} ms / {} kernel runs\n{table}",
+            ranked.len(),
+            memo.len(),
+            micro_cost * 1e3,
+            kernel_runs,
+        ));
+        if let Some(q) = selection_quality(&ranked) {
+            text.push_str(&format!("  selection quality: {q:.4}\n"));
+        }
+        all_csv.push_str(&format!("# preset={name}\n{csv}"));
+    }
+    ctx.report.emit("fig6_5", &text, &all_csv);
 }
 
 /// §6.3.4: efficiency — prediction cost vs execution cost across sizes.

@@ -72,6 +72,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
         ("fig6_3b", "§6.3.2: vector contraction", ch6::fig6_3b),
         ("fig6_3c", "§6.3.3: challenging contraction", ch6::fig6_3c),
         ("fig6_4", "§6.3.4: prediction efficiency", ch6::fig6_4),
+        ("fig6_5", "§6.3: presets through the selection core", ch6::fig6_5),
     ]
 }
 

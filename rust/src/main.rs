@@ -53,10 +53,20 @@ subcommands:
   contract --spec \"abc=ai,ibc\" --n N [--small 8] [--csv file.csv]
            --rank       full ranking via the engine-parallel, memoized
                         selection core (byte-identical for any --jobs)
-           --validate   also execute each algorithm (expensive reference)
+           --validate   also execute each algorithm (expensive reference;
+                        repetitions fan out as nested engine jobs)
            --n A,B,C    sweep mode: rank every size, reusing one
                         micro-benchmark memo across the sweep
            (--sweep A,B,C is an alias for --rank --n A,B,C)
+           --preset vector|challenging
+                        the Sec. 6.3.2 / 6.3.3 scenario presets (set the
+                        spec and imply --rank)
+           --memo-granularity G
+                        quantize micro-benchmark memo keys to multiples
+                        of G for cross-size sweep reuse at a bounded
+                        error; default 1 = exact keys, bit-identical.
+                        At G > 1 an exact reference ranking also runs and
+                        the selection-quality delta is reported
   sampler  (reads a Sampler script from stdin)
   list     (available figure ids / cpus / libraries)
 ";
@@ -203,10 +213,12 @@ fn select_cmd(args: &Args) {
                 alg: Arc::clone(alg),
                 n,
                 b,
+                label: None,
                 validate: validate.then(|| ValidateCfg {
                     machine: machine.clone(),
                     reps: args.get_usize("reps", 5),
                     seed: args.get_u64("seed", 0x5EED),
+                    engine: Arc::clone(&engine),
                 }),
             }) as _
         })
@@ -228,7 +240,23 @@ fn select_cmd(args: &Args) {
 fn contract_cmd(args: &Args) {
     use dlapm::select::{Candidate, TensorCandidate};
     use dlapm::tensor::micro;
-    let spec = args.get_or("spec", "abc=ai,ibc").to_string();
+    // `--preset vector|challenging` selects the paper's §6.3.2/§6.3.3
+    // scenarios (they are ordinary specs; `--small` sizes the contracted
+    // indices exactly as `example_vector`/`example_challenging` do).
+    let preset = args.get("preset").map(|p| p.to_string());
+    if preset.is_some() && args.get("spec").is_some() {
+        eprintln!("--preset sets the contraction spec; drop --spec (or drop --preset)");
+        std::process::exit(2);
+    }
+    let spec = match preset.as_deref() {
+        None => args.get_or("spec", "abc=ai,ibc").to_string(),
+        Some("vector") => "a=iaj,ji".to_string(),
+        Some("challenging") => "abc=ija,jbic".to_string(),
+        Some(other) => {
+            eprintln!("unknown --preset '{other}' (expected vector or challenging)");
+            std::process::exit(2);
+        }
+    };
     let small = args.get_usize("small", 8);
     let machine = machine_from(args);
     let seed = args.get_u64("seed", 7);
@@ -251,14 +279,16 @@ fn contract_cmd(args: &Args) {
         base.clone().with_dims(&dims)
     };
 
-    // --validate/--sweep/--csv/--jobs only make sense for the selection
-    // core, so any of them implies --rank (the legacy quick view would
-    // silently drop them otherwise).
+    // --validate/--sweep/--csv/--jobs/--preset/--memo-granularity only
+    // make sense for the selection core, so any of them implies --rank
+    // (the legacy quick view would silently drop them otherwise).
     let rank_mode = args.flag("rank")
         || args.flag("validate")
         || args.get("sweep").is_some()
         || args.get("csv").is_some()
         || args.get("jobs").is_some()
+        || args.get("memo-granularity").is_some()
+        || preset.is_some()
         || sizes.len() > 1;
     if !rank_mode {
         // Legacy quick view: sequential unmemoized top-10.
@@ -279,12 +309,18 @@ fn contract_cmd(args: &Args) {
     }
 
     // Unified selection core: engine-parallel, memoized ranking. One
-    // memo serves the entire sweep. Everything printed to stdout is a
-    // deterministic function of (spec, sizes, seed) — byte-identical for
-    // any --jobs value (hit/miss counters, which depend on scheduling,
-    // go to stderr).
+    // memo serves the entire sweep; `--memo-granularity` > 1 quantizes
+    // its keys so nearby sweep sizes share benchmarks (and an exact
+    // reference memo measures what that trade costs). Everything printed
+    // to stdout is a deterministic function of (spec, sizes, seed,
+    // granularity) — byte-identical for any --jobs value (hit/miss
+    // counters, which depend on scheduling, go to stderr).
     let engine = engine_from(args);
-    let memo = Arc::new(dlapm::tensor::MicroMemo::new());
+    // Clamped like Memo::with_granularity, so the printed label always
+    // matches the granularity actually in effect.
+    let granularity = args.get_usize("memo-granularity", 1).max(1);
+    let memo = Arc::new(dlapm::tensor::MicroMemo::with_granularity(granularity));
+    let exact_memo = (granularity > 1).then(|| Arc::new(dlapm::tensor::MicroMemo::new()));
     let validate = args.flag("validate");
     let reps = args.get_usize("reps", 3);
     let mut prev_cost = 0.0;
@@ -294,25 +330,38 @@ fn contract_cmd(args: &Args) {
         let con = sized(n);
         let algs = dlapm::tensor::generate(&con);
         let n_algs = algs.len();
-        let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
-            .into_iter()
-            .map(|alg| {
-                Arc::new(TensorCandidate {
-                    machine: machine.clone(),
-                    con: con.clone(),
-                    alg,
-                    elem: Elem::D,
-                    seed,
-                    memo: Arc::clone(&memo),
-                    validate_reps: if validate { reps } else { 0 },
-                }) as _
-            })
-            .collect();
-        let ranked = dlapm::select::rank_candidates_par(&engine, &cands)
+        // Deterministic cross-size reuse statistic (a pure function of
+        // the completed previous sizes — safe for byte-stable stdout,
+        // unlike the racy hit/miss counters).
+        let (reused, distinct) = micro::memo_reuse(&machine, &con, &algs, Elem::D, &memo);
+        let mk_cands = |memo: &Arc<dlapm::tensor::MicroMemo>,
+                        vreps: usize|
+         -> Vec<Arc<dyn Candidate + Send + Sync>> {
+            algs.iter()
+                .map(|alg| {
+                    Arc::new(TensorCandidate {
+                        machine: machine.clone(),
+                        con: con.clone(),
+                        alg: alg.clone(),
+                        elem: Elem::D,
+                        seed,
+                        memo: Arc::clone(memo),
+                        engine: Arc::clone(&engine),
+                        validate_reps: vreps,
+                    }) as _
+                })
+                .collect()
+        };
+        let vreps = if validate { reps } else { 0 };
+        let ranked = dlapm::select::rank_candidates_par(&engine, &mk_cands(&memo, vreps))
             .expect("contraction ranking failed");
         println!(
             "ranking {n_algs} algorithms for {spec} with n={n} (small={small}) on {}:",
             machine.label()
+        );
+        println!(
+            "  memo reuse for n={n}: {reused} of {distinct} distinct benchmark(s) already \
+             memoized (granularity {granularity})"
         );
         let (text, csv) = dlapm::report::selection_table(&ranked);
         print!("{text}");
@@ -331,6 +380,52 @@ fn contract_cmd(args: &Args) {
         if let Some(q) = dlapm::select::selection_quality(&ranked) {
             println!("  selection quality: {q:.4} (selected / true fastest measured)");
         }
+        // The bounded-error trade of coarse keys, measured instead of
+        // assumed: re-rank through an exact-key reference memo and score
+        // the quantized winner against the exact predictions (and, when
+        // validating, compare measured selection qualities directly).
+        if let Some(exact) = &exact_memo {
+            // Prediction-only re-rank: validation seeds derive from
+            // (seed, candidate) alone — memo-independent — so measured
+            // values are copied from the quantized ranking instead of
+            // re-executing every expensive reference run. Both rankings
+            // were built from the same `algs` slice, so `Ranked::index`
+            // pairs them directly (the core's no-name-search rule).
+            let mut ranked_exact = dlapm::select::rank_candidates_par(&engine, &mk_cands(exact, 0))
+                .expect("exact reference ranking failed");
+            if validate {
+                let mut measured_by_index = vec![None; algs.len()];
+                for q in &ranked {
+                    measured_by_index[q.index] = q.measured;
+                }
+                for r in &mut ranked_exact {
+                    r.measured = measured_by_index[r.index];
+                }
+            }
+            let exact_best = ranked_exact[0].predicted.time.med;
+            let winner_under_exact = ranked_exact
+                .iter()
+                .find(|r| r.index == ranked[0].index)
+                .map(|r| r.predicted.time.med)
+                .unwrap_or(f64::NAN);
+            println!(
+                "  selection-quality delta vs exact keys (granularity {granularity}): predicted \
+                 ratio {:.4} (winner '{}' vs exact '{}')",
+                winner_under_exact / exact_best,
+                ranked[0].name,
+                ranked_exact[0].name
+            );
+            if let (Some(qg), Some(qe)) = (
+                dlapm::select::selection_quality(&ranked),
+                dlapm::select::selection_quality(&ranked_exact),
+            ) {
+                println!(
+                    "  measured selection quality: {qg:.4} at granularity {granularity} vs \
+                     {qe:.4} exact (delta {:+.4})",
+                    qg - qe
+                );
+            }
+        }
         (prev_cost, prev_runs) = (total_cost, total_runs);
     }
     let (total_cost, total_runs) = micro::memo_totals(&memo);
@@ -344,6 +439,13 @@ fn contract_cmd(args: &Args) {
         std::fs::write(path, &all_csv).expect("writing --csv file");
     }
     eprintln!("[dlapm] micro memo: {} hits / {} misses", memo.hits(), memo.misses());
+    if let Some(exact) = &exact_memo {
+        eprintln!(
+            "[dlapm] exact reference memo: {} hits / {} misses",
+            exact.hits(),
+            exact.misses()
+        );
+    }
 }
 
 fn sampler_cmd(args: &Args) {

@@ -1,13 +1,28 @@
 //! Block-size optimization (paper §4.6): choose b* minimizing the
 //! predicted runtime, and quantify its *performance yield* against the
 //! empirical optimum (eq. on p. 125).
+//!
+//! Every candidate block size enters the shared selection core as a
+//! [`BlockedCandidate`] over one [`ModelCache`], ranked by
+//! [`rank_candidates_par`] under the core's NaN-total ordering (a NaN
+//! prediction ranks last instead of panicking). Before ranking, the
+//! cache is seeded by *ordered* [`PerfModel::evaluate_batch`] sweeps —
+//! consecutive block sizes land in the same model piece, so the piece
+//! lookup is amortized across the whole [`standard_bs`] range and the
+//! per-candidate predictions are pure cache hits.
+//!
+//! [`PerfModel::evaluate_batch`]: crate::modeling::model::PerfModel::evaluate_batch
 
+use std::sync::Arc;
+
+use crate::engine::{Engine, ModelCache};
 use crate::machine::Machine;
-use crate::modeling::ModelStore;
+use crate::modeling::{case_key, ModelStore};
+use crate::select::{self, BlockedCandidate, Candidate, Ranked};
+use crate::util::error::Result;
 
 use super::algorithms::BlockedAlg;
-use super::measurement::measure_algorithm;
-use super::predictor::predict_calls;
+use super::measurement::measure_algorithm_reps;
 
 /// Sweep result for one (algorithm, n).
 #[derive(Clone, Debug)]
@@ -19,24 +34,114 @@ pub struct BlockSizeSweep {
     pub b_pred: usize,
 }
 
-/// Predict the runtime for every block size in `bs` and pick the best.
+/// Candidate display name for block size `b`, zero-padded so the
+/// selection core's deterministic name tiebreak orders numerically.
+pub fn b_name(b: usize) -> String {
+    format!("b{b:05}")
+}
+
+/// Seed the shared estimate cache for an ordered block-size sweep: the
+/// sweep's kernel calls are grouped by model case and each case's size
+/// points are evaluated in sweep order with one
+/// [`evaluate_batch`](crate::modeling::model::PerfModel::evaluate_batch)
+/// pass. Batched results are identical to per-point estimates, so the
+/// subsequent cached predictions stay bit-identical to uncached ones.
+fn prewarm_sweep(store: &ModelStore, cache: &ModelCache, alg: &dyn BlockedAlg, n: usize, bs: &[usize]) {
+    use std::collections::{BTreeMap, HashSet};
+    // Per case: points in first-encounter (= sweep) order, deduplicated
+    // on their cache-rounded form.
+    let mut per_case: BTreeMap<String, (Vec<Vec<usize>>, HashSet<Vec<usize>>)> = BTreeMap::new();
+    for &b in bs {
+        for call in alg.calls(n, b) {
+            if !call.modeled() {
+                continue;
+            }
+            let sizes = call.sizes();
+            if sizes.iter().any(|&v| v == 0) {
+                continue;
+            }
+            let case = case_key(&call);
+            if store.get(&case).is_none() {
+                continue;
+            }
+            let rounded = cache.round(&sizes);
+            // A warm shared cache (repeated sweeps, subset grids) already
+            // holds most points — don't re-batch what a lookup will hit.
+            if cache.peek(&case, &rounded).is_some() {
+                continue;
+            }
+            let (points, seen) = per_case.entry(case).or_default();
+            if seen.insert(rounded.clone()) {
+                points.push(rounded);
+            }
+        }
+    }
+    for (case, (points, _)) in per_case {
+        let model = store.get(&case).expect("case presence checked during collection");
+        let estimates = model.evaluate_batch(&points);
+        for (p, est) in points.iter().zip(estimates) {
+            cache.get_or_insert_with(&case, p, |_| est);
+        }
+    }
+}
+
+fn sweep_from(n: usize, bs: &[usize], ranked: &[Ranked]) -> BlockSizeSweep {
+    let mut predicted_med = vec![f64::NAN; bs.len()];
+    for r in ranked {
+        predicted_med[r.index] = r.predicted.time.med;
+    }
+    BlockSizeSweep { n, bs: bs.to_vec(), predicted_med, b_pred: bs[ranked[0].index] }
+}
+
+/// Rank every block size in `bs` through the selection core and pick the
+/// predicted-fastest. One engine job per candidate; all candidates share
+/// `cache`, prewarmed by ordered batched evaluation. Deterministic for
+/// any worker count, NaN-safe (NaN predictions rank last under
+/// `f64::total_cmp` with the zero-padded name tiebreak).
+///
+/// Returns the sweep plus the raw ranking rows (feed the latter to
+/// [`crate::report::selection_table`] for the shared report format).
+pub fn optimize_blocksize_with(
+    engine: &Arc<Engine>,
+    store: &Arc<ModelStore>,
+    cache: &Arc<ModelCache>,
+    alg: &Arc<dyn BlockedAlg + Send + Sync>,
+    n: usize,
+    bs: &[usize],
+) -> Result<(BlockSizeSweep, Vec<Ranked>)> {
+    assert!(!bs.is_empty(), "empty block-size sweep");
+    prewarm_sweep(store, cache, alg.as_ref(), n, bs);
+    let cands: Vec<Arc<dyn Candidate + Send + Sync>> = bs
+        .iter()
+        .map(|&b| {
+            Arc::new(BlockedCandidate {
+                store: Arc::clone(store),
+                cache: Arc::clone(cache),
+                alg: Arc::clone(alg),
+                n,
+                b,
+                label: Some(b_name(b)),
+                validate: None,
+            }) as _
+        })
+        .collect();
+    let ranked = select::rank_candidates_par(engine, &cands)?;
+    Ok((sweep_from(n, bs, &ranked), ranked))
+}
+
+/// Convenience sequential wrapper around [`optimize_blocksize_with`]:
+/// fresh cache, inline engine, sweep only.
 pub fn optimize_blocksize(
-    store: &ModelStore,
-    alg: &dyn BlockedAlg,
+    store: &Arc<ModelStore>,
+    alg: &Arc<dyn BlockedAlg + Send + Sync>,
     n: usize,
     bs: &[usize],
 ) -> BlockSizeSweep {
-    let predicted_med: Vec<f64> = bs
-        .iter()
-        .map(|&b| predict_calls(store, &alg.calls(n, b)).time.med)
-        .collect();
-    let best = predicted_med
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap();
-    BlockSizeSweep { n, bs: bs.to_vec(), predicted_med, b_pred: bs[best] }
+    let engine = Arc::new(Engine::sequential());
+    let cache = Arc::new(ModelCache::new());
+    optimize_blocksize_with(&engine, store, &cache, alg, n, bs)
+        .expect("sequential block-size ranking cannot fail")
+        .0
 }
 
 /// The paper's standard block-size range: 24..=536 in steps of 8.
@@ -60,23 +165,36 @@ pub fn validate_blocksize(
     reps: usize,
     seed: u64,
 ) -> YieldResult {
-    let mut best_b = sweep.bs[0];
-    let mut best_t = f64::INFINITY;
-    let mut t_pred = None;
-    for &b in &sweep.bs {
-        let t = measure_algorithm(machine, alg, sweep.n, b, reps, seed).med;
-        if t < best_t {
-            best_t = t;
-            best_b = b;
-        }
-        if b == sweep.b_pred {
-            t_pred = Some(t);
-        }
-    }
+    let measured: Vec<f64> = sweep
+        .bs
+        .iter()
+        .map(|&b| measure_algorithm_reps(machine, alg, sweep.n, b, reps, seed).med)
+        .collect();
+    // Empirical optimum under the core's one sort rule (NaN-total, name
+    // tiebreak), so a pathological measurement cannot panic the yield.
+    let opt = (0..sweep.bs.len())
+        .min_by(|&i, &j| {
+            select::rank_order(
+                measured[i],
+                &b_name(sweep.bs[i]),
+                measured[j],
+                &b_name(sweep.bs[j]),
+            )
+        })
+        .expect("non-empty sweep");
     // If the predicted b was not part of the validation grid, measure it.
-    let t_pred = t_pred
-        .unwrap_or_else(|| measure_algorithm(machine, alg, sweep.n, sweep.b_pred, reps, seed).med);
-    YieldResult { b_pred: sweep.b_pred, b_opt: best_b, yield_frac: best_t / t_pred }
+    let t_pred = sweep
+        .bs
+        .iter()
+        .position(|&b| b == sweep.b_pred)
+        .map(|i| measured[i])
+        .unwrap_or_else(|| {
+            measure_algorithm_reps(machine, alg, sweep.n, sweep.b_pred, reps, seed).med
+        });
+    // Shared quality math: chosen / best, inverted into a yield fraction.
+    let quality = select::measured_quality(Some(t_pred), measured.iter().copied())
+        .expect("chosen measurement present");
+    YieldResult { b_pred: sweep.b_pred, b_opt: sweep.bs[opt], yield_frac: 1.0 / quality }
 }
 
 #[cfg(test)]
@@ -87,6 +205,7 @@ mod tests {
     use crate::modeling::ModelStore;
     use crate::predict::algorithms::potrf::Potrf;
     use crate::predict::algorithms::{distinct_cases, BlockedAlg};
+    use crate::predict::predictor::predict_calls;
 
     fn store_for(machine: &Machine, alg: &Potrf) -> ModelStore {
         use crate::modeling::generate_model;
@@ -104,6 +223,12 @@ mod tests {
         store
     }
 
+    fn arcs(machine: &Machine) -> (Arc<ModelStore>, Arc<dyn BlockedAlg + Send + Sync>) {
+        let alg = Potrf { variant: 3, elem: Elem::D };
+        let store = Arc::new(store_for(machine, &alg));
+        (store, Arc::new(alg))
+    }
+
     #[test]
     fn optimal_blocksize_is_interior_and_yield_high() {
         // Fig. 1.3 / §4.6.1: single-threaded optima are interior (roughly
@@ -111,8 +236,7 @@ mod tests {
         // nearly all of the optimal performance.
         let machine =
             Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
-        let alg = Potrf { variant: 3, elem: Elem::D };
-        let store = store_for(&machine, &alg);
+        let (store, alg) = arcs(&machine);
         let bs: Vec<usize> = (24..=400).step_by(16).collect();
         let sweep = optimize_blocksize(&store, &alg, 2000, &bs);
         assert!(
@@ -123,8 +247,85 @@ mod tests {
         // Validate the yield on a coarse grid (keeps the test fast).
         let coarse: Vec<usize> = (24..=400).step_by(48).collect();
         let sweep_coarse = optimize_blocksize(&store, &alg, 2000, &coarse);
-        let y = validate_blocksize(&machine, &alg, &sweep_coarse, 3, 13);
+        let y = validate_blocksize(&machine, alg.as_ref(), &sweep_coarse, 3, 13);
         assert!(y.yield_frac > 0.90, "yield={}", y.yield_frac);
+    }
+
+    #[test]
+    fn ranked_sweep_matches_direct_predictions_bit_for_bit() {
+        // The selection-core path (batched prewarm + cached candidates)
+        // must reproduce a plain per-b `predict_calls` loop exactly, for
+        // any job count, with rank order consistent with the sweep.
+        let machine =
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let (store, alg) = arcs(&machine);
+        let bs: Vec<usize> = (24..=296).step_by(16).collect();
+        for jobs in [1usize, 4] {
+            let engine = Arc::new(Engine::new(jobs));
+            let cache = Arc::new(ModelCache::new());
+            let (sweep, ranked) =
+                optimize_blocksize_with(&engine, &store, &cache, &alg, 1500, &bs).unwrap();
+            assert_eq!(sweep.predicted_med.len(), bs.len());
+            for (i, &b) in bs.iter().enumerate() {
+                let want = predict_calls(&store, &alg.calls(1500, b)).time.med;
+                assert_eq!(
+                    sweep.predicted_med[i].to_bits(),
+                    want.to_bits(),
+                    "b={b} jobs={jobs}"
+                );
+            }
+            assert_eq!(ranked.len(), bs.len());
+            assert_eq!(sweep.b_pred, bs[ranked[0].index]);
+            assert!(cache.hits() > 0, "candidates must hit the prewarmed cache");
+        }
+    }
+
+    #[test]
+    fn nan_predictions_do_not_panic_and_rank_last() {
+        // Regression for the old `partial_cmp(..).unwrap()` pick: a NaN
+        // prediction must neither panic nor win. NaN is injected at the
+        // ranking layer (model estimates clamp NaN coefficients away, so
+        // a store cannot produce one) and flows through the same
+        // rank-then-`sweep_from` path `optimize_blocksize_with` uses.
+        use crate::select::CandidatePrediction;
+        use crate::util::stats::Summary;
+        struct FakeB {
+            b: usize,
+            med: f64,
+        }
+        impl Candidate for FakeB {
+            fn name(&self) -> String {
+                b_name(self.b)
+            }
+            fn predict(&self) -> CandidatePrediction {
+                CandidatePrediction { time: Summary::constant(self.med), cost: 0.0, work: 1 }
+            }
+            fn measure(&self) -> Option<Summary> {
+                None
+            }
+        }
+        let bs = [32usize, 64, 96];
+        let cands = [
+            FakeB { b: 32, med: f64::NAN },
+            FakeB { b: 64, med: 0.5 },
+            FakeB { b: 96, med: f64::NAN },
+        ];
+        let refs: Vec<&dyn Candidate> = cands.iter().map(|c| c as _).collect();
+        let ranked = select::rank_candidates(&refs);
+        let sweep = sweep_from(2000, &bs, &ranked);
+        assert_eq!(sweep.b_pred, 64, "the finite prediction wins");
+        assert!(sweep.predicted_med[0].is_nan() && sweep.predicted_med[2].is_nan());
+        // NaNs rank last, ordered by the zero-padded name tiebreak.
+        assert_eq!(ranked[1].name, b_name(32));
+        assert_eq!(ranked[2].name, b_name(96));
+        // All-NaN sweeps stay deterministic too: smallest b by name.
+        let all_nan = [
+            FakeB { b: 96, med: f64::NAN },
+            FakeB { b: 32, med: f64::NAN },
+        ];
+        let refs: Vec<&dyn Candidate> = all_nan.iter().map(|c| c as _).collect();
+        let sweep = sweep_from(2000, &[96, 32], &select::rank_candidates(&refs));
+        assert_eq!(sweep.b_pred, 32);
     }
 
     #[test]

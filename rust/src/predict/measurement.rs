@@ -1,13 +1,17 @@
 //! Reference ("empirical") algorithm executions on the virtual testbed —
 //! what the paper's predictions are validated against (§4.2).
 
+use std::sync::Arc;
+
+use crate::engine::{key_seed, Engine};
 use crate::machine::Machine;
+use crate::util::error::Result;
 use crate::util::stats::Summary;
 
 use super::algorithms::BlockedAlg;
 
 /// Measured algorithm runtime over `reps` whole-algorithm executions
-/// (paper: 10 repetitions via the Sampler).
+/// (paper: 10 repetitions via the Sampler), all within one session.
 pub fn measure_algorithm(
     machine: &Machine,
     alg: &dyn BlockedAlg,
@@ -24,6 +28,67 @@ pub fn measure_algorithm(
         times.push(session.execute_all(&calls));
     }
     Summary::from_samples(&times)
+}
+
+/// Session seed of validation repetition `r`: a pure function of
+/// `(seed, algorithm identity, problem)` — never of scheduling — so the
+/// sequential and engine-fanned measurement paths agree bit for bit.
+fn rep_seed(seed: u64, name: &str, n: usize, b: usize, r: usize) -> u64 {
+    key_seed(seed, &format!("validate|{name}|n{n}|b{b}|rep{r}"))
+}
+
+/// One independent validation repetition: a fresh warmed session per rep
+/// (the repetitions are thereby embarrassingly parallel — every rep's
+/// noise and thermal trajectory derives only from its own seed).
+fn measure_rep(machine: &Machine, alg: &dyn BlockedAlg, n: usize, b: usize, seed: u64) -> f64 {
+    let calls = alg.calls(n, b);
+    let mut session = machine.session(seed);
+    session.warmup();
+    session.execute_all(&calls)
+}
+
+/// Validation measurement with per-repetition sessions seeded from
+/// `(seed, candidate, rep)` — the sequential reference for
+/// [`measure_algorithm_reps_with`], bit-identical to it.
+pub fn measure_algorithm_reps(
+    machine: &Machine,
+    alg: &dyn BlockedAlg,
+    n: usize,
+    b: usize,
+    reps: usize,
+    seed: u64,
+) -> Summary {
+    let name = alg.name();
+    let times: Vec<f64> =
+        (0..reps).map(|r| measure_rep(machine, alg, n, b, rep_seed(seed, &name, n, b, r))).collect();
+    Summary::from_samples(&times)
+}
+
+/// [`measure_algorithm_reps`] with the repetitions fanned out as engine
+/// jobs — candidates call this from inside a ranking job, nesting on the
+/// same pool (the submitting job helps, so this cannot deadlock). Results
+/// return in rep order and every rep's session seed is a pure function of
+/// `(seed, candidate, rep)`, so the summary is byte-identical for any
+/// `--jobs` value, including the sequential path above.
+pub fn measure_algorithm_reps_with(
+    engine: &Arc<Engine>,
+    machine: &Machine,
+    alg: &Arc<dyn BlockedAlg + Send + Sync>,
+    n: usize,
+    b: usize,
+    reps: usize,
+    seed: u64,
+) -> Result<Summary> {
+    let name = alg.name();
+    let tasks: Vec<_> = (0..reps)
+        .map(|r| {
+            let machine = machine.clone();
+            let alg = Arc::clone(alg);
+            let seed = rep_seed(seed, &name, n, b, r);
+            move || measure_rep(&machine, alg.as_ref(), n, b, seed)
+        })
+        .collect();
+    Ok(Summary::from_samples(&engine.run(tasks)?))
 }
 
 /// Model-generation helper: ensure a store covers all cases an algorithm
@@ -144,5 +209,23 @@ mod tests {
         let small = measure_algorithm(&m, &alg, 256, 128, 3, 1);
         let large = measure_algorithm(&m, &alg, 1024, 128, 3, 1);
         assert!(large.med > 10.0 * small.med);
+    }
+
+    #[test]
+    fn fanned_out_reps_match_sequential_bit_for_bit() {
+        let m = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let alg: Arc<dyn BlockedAlg + Send + Sync> =
+            Arc::new(Potrf { variant: 2, elem: Elem::D });
+        let seq = measure_algorithm_reps(&m, alg.as_ref(), 512, 104, 5, 9);
+        for jobs in [1usize, 4] {
+            let engine = Arc::new(Engine::new(jobs));
+            let par =
+                measure_algorithm_reps_with(&engine, &m, &alg, 512, 104, 5, 9).unwrap();
+            assert_eq!(seq.med.to_bits(), par.med.to_bits(), "jobs={jobs}");
+            assert_eq!(seq.min.to_bits(), par.min.to_bits(), "jobs={jobs}");
+            assert_eq!(seq.max.to_bits(), par.max.to_bits(), "jobs={jobs}");
+            assert_eq!(seq.mean.to_bits(), par.mean.to_bits(), "jobs={jobs}");
+        }
+        assert!(seq.min > 0.0 && seq.min <= seq.med && seq.med <= seq.max);
     }
 }

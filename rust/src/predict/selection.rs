@@ -15,7 +15,7 @@ use crate::select::{self, Candidate, CandidatePrediction};
 use crate::util::stats::Summary;
 
 use super::algorithms::BlockedAlg;
-use super::measurement::measure_algorithm;
+use super::measurement::measure_algorithm_reps;
 
 /// One algorithm's predicted and (optionally) measured runtime.
 #[derive(Clone, Debug)]
@@ -48,7 +48,10 @@ impl Candidate for Borrowed<'_> {
 
     fn measure(&self) -> Option<Summary> {
         let (machine, reps, seed) = self.validate?;
-        Some(measure_algorithm(machine, self.alg, self.n, self.b, reps, seed))
+        // Same per-rep protocol (fresh session seeded from (seed,
+        // candidate, rep)) as the owning `BlockedCandidate`, so both
+        // ranking paths validate bit-identically.
+        Some(measure_algorithm_reps(machine, self.alg, self.n, self.b, reps, seed))
     }
 }
 

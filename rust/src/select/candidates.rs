@@ -4,11 +4,11 @@
 
 use std::sync::Arc;
 
-use crate::engine::{key_seed, ModelCache};
+use crate::engine::{key_seed, Engine, ModelCache};
 use crate::machine::{Elem, Machine};
 use crate::modeling::ModelStore;
 use crate::predict::algorithms::BlockedAlg;
-use crate::predict::measurement::measure_algorithm;
+use crate::predict::measurement::measure_algorithm_reps_with;
 use crate::predict::predictor::predict_calls_cached;
 use crate::tensor::exec::execute_full;
 use crate::tensor::micro::{self, MicroMemo};
@@ -18,12 +18,17 @@ use crate::util::stats::Summary;
 use super::{Candidate, CandidatePrediction};
 
 /// Validation configuration shared by both scenarios: the virtual
-/// machine to execute on, repetitions, and the base seed.
+/// machine to execute on, repetitions, the base seed, and the engine the
+/// repetitions fan out on as nested jobs (candidates measure from inside
+/// a ranking job; the pool supports nested submission, and every rep's
+/// session seed derives from `(seed, candidate, rep)`, so results are
+/// byte-identical for any worker count).
 #[derive(Clone)]
 pub struct ValidateCfg {
     pub machine: Machine,
     pub reps: usize,
     pub seed: u64,
+    pub engine: Arc<Engine>,
 }
 
 /// Shared blocked-scenario prediction pipeline: used by the owning
@@ -44,7 +49,8 @@ pub(crate) fn blocked_prediction(
 
 /// Model-based blocked-algorithm candidate: prediction through the
 /// shared [`ModelCache`]-backed pipeline ([`predict_calls_cached`]),
-/// validation by executing the call sequence on the virtual testbed.
+/// validation by executing the call sequence on the virtual testbed —
+/// with the repetitions fanned out as nested engine jobs.
 pub struct BlockedCandidate {
     pub store: Arc<ModelStore>,
     /// One cache shared across all candidates of a ranking: variants of
@@ -54,13 +60,16 @@ pub struct BlockedCandidate {
     pub alg: Arc<dyn BlockedAlg + Send + Sync>,
     pub n: usize,
     pub b: usize,
+    /// Display-name override. Block-size sweeps rank many `b` values of
+    /// ONE algorithm, and names must stay unique within a ranking.
+    pub label: Option<String>,
     /// `None` disables [`Candidate::measure`].
     pub validate: Option<ValidateCfg>,
 }
 
 impl Candidate for BlockedCandidate {
     fn name(&self) -> String {
-        self.alg.name()
+        self.label.clone().unwrap_or_else(|| self.alg.name())
     }
 
     fn predict(&self) -> CandidatePrediction {
@@ -69,14 +78,20 @@ impl Candidate for BlockedCandidate {
 
     fn measure(&self) -> Option<Summary> {
         let cfg = self.validate.as_ref()?;
-        Some(measure_algorithm(&cfg.machine, self.alg.as_ref(), self.n, self.b, cfg.reps, cfg.seed))
+        let m = measure_algorithm_reps_with(
+            &cfg.engine, &cfg.machine, &self.alg, self.n, self.b, cfg.reps, cfg.seed,
+        )
+        .expect("validation measurement job failed");
+        Some(m)
     }
 }
 
 /// Micro-benchmark-based tensor-contraction candidate: prediction via
 /// the memoized cache-aware micro-benchmark, validation by one or more
-/// full algorithm executions. All random streams derive from
-/// `(seed, identity)`, so candidates are scheduling-independent.
+/// full algorithm executions fanned out as nested engine jobs. All
+/// random streams derive from `(seed, identity)`, so candidates are
+/// scheduling-independent.
+#[derive(Clone)]
 pub struct TensorCandidate {
     pub machine: Machine,
     pub con: Contraction,
@@ -86,6 +101,8 @@ pub struct TensorCandidate {
     /// Shared steady-state kernel-timing memo (share across a ranking
     /// and across sweep sizes).
     pub memo: Arc<MicroMemo>,
+    /// Engine the validation repetitions fan out on (nested jobs).
+    pub engine: Arc<Engine>,
     /// Full-execution repetitions for validation; 0 disables it.
     pub validate_reps: usize,
 }
@@ -110,11 +127,19 @@ impl Candidate for TensorCandidate {
             return None;
         }
         // Per-candidate deterministic seeds, decorrelated from the
-        // prediction streams by a fixed tweak.
+        // prediction streams by a fixed tweak. Each repetition is an
+        // independent full execution (fresh session per rep), so they fan
+        // out as nested engine jobs; results return in rep order, keeping
+        // the summary byte-identical to a sequential loop.
         let base = key_seed(self.seed ^ 0x5A5A_5A5A, &self.alg.name());
-        let times: Vec<f64> = (0..self.validate_reps)
-            .map(|r| execute_full(&self.machine, &self.con, &self.alg, self.elem, base ^ r as u64))
+        let elem = self.elem;
+        let tasks: Vec<_> = (0..self.validate_reps)
+            .map(|r| {
+                let (machine, con, alg) = (self.machine.clone(), self.con.clone(), self.alg.clone());
+                move || execute_full(&machine, &con, &alg, elem, base ^ r as u64)
+            })
             .collect();
+        let times = self.engine.run(tasks).expect("validation execution job failed");
         Some(Summary::from_samples(&times))
     }
 }
@@ -136,6 +161,7 @@ mod tests {
         let con = Contraction::example_abc(32);
         let m = machine();
         let memo = Arc::new(MicroMemo::new());
+        let engine = Arc::new(Engine::new(3));
         let cands: Vec<Arc<dyn Candidate + Send + Sync>> = generate(&con)
             .into_iter()
             .map(|alg| {
@@ -146,11 +172,11 @@ mod tests {
                     elem: Elem::D,
                     seed: 11,
                     memo: Arc::clone(&memo),
+                    engine: Arc::clone(&engine),
                     validate_reps: 1,
                 }) as _
             })
             .collect();
-        let engine = Arc::new(Engine::new(3));
         let ranked = rank_candidates_par(&engine, &cands).unwrap();
         assert_eq!(ranked.len(), 36);
         assert!(memo.len() < 36, "shared benchmarks: {}", memo.len());
@@ -165,19 +191,21 @@ mod tests {
         let con = Contraction::example_abc(24);
         let m = machine();
         let alg = generate(&con).remove(0);
-        let mk = || TensorCandidate {
+        let mk = |jobs: usize| TensorCandidate {
             machine: m.clone(),
             con: con.clone(),
             alg: alg.clone(),
             elem: Elem::D,
             seed: 3,
             memo: Arc::new(MicroMemo::new()),
+            engine: Arc::new(Engine::new(jobs)),
             validate_reps: 2,
         };
-        let a = mk().measure().unwrap();
-        let b = mk().measure().unwrap();
+        // Fanning the reps out as engine jobs cannot change the summary.
+        let a = mk(1).measure().unwrap();
+        let b = mk(4).measure().unwrap();
         assert_eq!(a.med.to_bits(), b.med.to_bits());
-        let none = TensorCandidate { validate_reps: 0, ..mk() };
+        let none = TensorCandidate { validate_reps: 0, ..mk(1) };
         assert!(none.measure().is_none());
     }
 }

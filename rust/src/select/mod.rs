@@ -14,6 +14,9 @@
 //!
 //! Both are [`Candidate`]s here (see [`candidates`]); ranking, optional
 //! validation, winner-tolerance checks and report formatting are shared.
+//! Block-size optimization (§4.6) is a third client: every candidate `b`
+//! of a sweep is a [`BlockedCandidate`] (labelled per block size) over
+//! one shared cache — see [`crate::predict::blocksize`].
 //! Ranking fans out one job per candidate on the [`Engine`]
 //! ([`rank_candidates_par`]); every candidate's prediction derives its
 //! random streams from its own identity, so rankings are byte-identical

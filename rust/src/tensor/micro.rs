@@ -204,6 +204,16 @@ pub fn predict(
 /// The benchmark session is seeded from `(seed, key)` — not from the
 /// algorithm — so whichever algorithm (on whichever worker) computes a
 /// shared entry first stores the identical value.
+///
+/// The memo's [granularity](crate::engine::Memo::granularity) quantizes
+/// the kernel dimensions embedded in the key: at granularity g > 1 the
+/// key — and, crucially, the benchmark itself — is built from the
+/// [quantized](Contraction::quantized) contraction, so the stored timing
+/// stays a pure function of the key (racing double-computes agree) and
+/// nearby problem sizes of a sweep share one benchmark. Only the final
+/// extrapolation uses the exact loop count, bounding the error to the
+/// steady-state timing's dimension perturbation. Granularity 1 is
+/// bit-identical to exact keying.
 pub fn predict_with(
     machine: &Machine,
     con: &Contraction,
@@ -212,10 +222,44 @@ pub fn predict_with(
     seed: u64,
     memo: &MicroMemo,
 ) -> MicroPrediction {
-    let key = precondition_key(machine, con, alg, elem);
+    let kcon = keying_view(con, memo);
+    let key = precondition_key(machine, &kcon, alg, elem);
     let timing = memo
-        .get_or_insert_with(&key, || micro_timing(machine, con, alg, elem, key_seed(seed, &key)));
+        .get_or_insert_with(&key, || micro_timing(machine, &kcon, alg, elem, key_seed(seed, &key)));
     prediction_from(alg, con, &timing)
+}
+
+/// The contraction a memo's key builders (and, on a miss, the benchmark
+/// itself) must use: borrowed unchanged at granularity 1, quantized
+/// otherwise. One definition so key and benchmark cannot diverge.
+fn keying_view<'a>(con: &'a Contraction, memo: &MicroMemo) -> std::borrow::Cow<'a, Contraction> {
+    let g = memo.granularity();
+    if g <= 1 {
+        std::borrow::Cow::Borrowed(con)
+    } else {
+        std::borrow::Cow::Owned(con.quantized(g))
+    }
+}
+
+/// Deterministic memo-reuse statistic for one ranking: of the `total`
+/// distinct benchmark keys that ranking `algs` for `con` needs under the
+/// memo's granularity, `reused` are already memoized — i.e. paid for by
+/// an earlier ranking sharing this memo (a previous sweep size). Pure
+/// function of the memo's completed contents, so — unlike the racy
+/// hit/miss counters — safe to print on a byte-stable stdout path.
+/// Returns `(reused, total)`.
+pub fn memo_reuse(
+    machine: &Machine,
+    con: &Contraction,
+    algs: &[TensorAlg],
+    elem: Elem,
+    memo: &MicroMemo,
+) -> (usize, usize) {
+    let kcon = keying_view(con, memo);
+    let keys: std::collections::BTreeSet<String> =
+        algs.iter().map(|alg| precondition_key(machine, &kcon, alg, elem)).collect();
+    let reused = keys.iter().filter(|k| memo.contains(k)).count();
+    (reused, keys.len())
 }
 
 /// Deterministic ordering via the selection core's one sort rule
@@ -394,6 +438,91 @@ mod tests {
         let plain = rank(&m, &con, &algs, Elem::D, 9);
         assert!(plain[0].alg_name.contains("gemm"), "{}", plain[0].alg_name);
         assert!(ranked[0].alg_name.contains("gemm"), "{}", ranked[0].alg_name);
+    }
+
+    #[test]
+    fn granularity_one_memo_is_bit_identical_to_exact() {
+        // `Memo::with_granularity(1)` must reproduce the exact-key memo
+        // behavior bit for bit: same keys, same timings, same rankings.
+        let con = Contraction::example_abc(48);
+        let m = machine();
+        let algs = generate(&con);
+        let engine = Arc::new(Engine::sequential());
+        let exact = Arc::new(MicroMemo::new());
+        let g1 = Arc::new(MicroMemo::with_granularity(1));
+        let a = rank_with(&engine, &m, &con, &algs, Elem::D, 17, &exact).unwrap();
+        let b = rank_with(&engine, &m, &con, &algs, Elem::D, 17, &g1).unwrap();
+        assert_eq!(exact.len(), g1.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.alg_name, y.alg_name);
+            assert_eq!(x.seconds.to_bits(), y.seconds.to_bits(), "{}", x.alg_name);
+            assert_eq!(x.micro_cost.to_bits(), y.micro_cost.to_bits(), "{}", x.alg_name);
+        }
+        let ta = memo_totals(&exact);
+        let tb = memo_totals(&g1);
+        assert_eq!(ta.0.to_bits(), tb.0.to_bits());
+        assert_eq!(ta.1, tb.1);
+    }
+
+    #[test]
+    fn coarse_granularity_shares_benchmarks_across_sizes() {
+        // n=30 and n=32 quantize to the same contraction at g=8, so the
+        // second sweep size needs zero new benchmarks — every lookup is a
+        // cross-size hit.
+        let m = machine();
+        let con30 = Contraction::example_abc(30);
+        let con32 = Contraction::example_abc(32);
+        let algs = generate(&con30);
+        let engine = Arc::new(Engine::sequential());
+        let memo = Arc::new(MicroMemo::with_granularity(8));
+
+        let (reused0, total0) = memo_reuse(&m, &con30, &algs, Elem::D, &memo);
+        assert_eq!(reused0, 0);
+        let r30 = rank_with(&engine, &m, &con30, &algs, Elem::D, 7, &memo).unwrap();
+        let after_first = memo.len();
+        assert_eq!(after_first, total0);
+
+        let (reused, total) = memo_reuse(&m, &con32, &algs, Elem::D, &memo);
+        assert_eq!((reused, total), (after_first, after_first), "full cross-size reuse");
+        let hits_before = memo.hits();
+        let r32 = rank_with(&engine, &m, &con32, &algs, Elem::D, 7, &memo).unwrap();
+        assert_eq!(memo.len(), after_first, "no new benchmarks for the second size");
+        assert!(memo.hits() > hits_before, "cross-size hits recorded");
+
+        // Shared timings, per-size loop counts: predictions differ only
+        // through extrapolation, and both sizes rank a gemm first.
+        assert!(r30[0].alg_name.contains("gemm"), "{}", r30[0].alg_name);
+        assert!(r32[0].alg_name.contains("gemm"), "{}", r32[0].alg_name);
+    }
+
+    #[test]
+    fn coarse_granularity_is_byte_identical_for_any_job_count() {
+        // The g > 1 contract: stored timings are pure functions of the
+        // quantized key, so even with cross-size aliasing the ranking is
+        // byte-identical for any --jobs value.
+        let m = machine();
+        let sizes = [30usize, 32];
+        let run = |jobs: usize| {
+            let engine = Arc::new(Engine::new(jobs));
+            let memo = Arc::new(MicroMemo::with_granularity(8));
+            let mut out = Vec::new();
+            for &n in &sizes {
+                let con = Contraction::example_abc(n);
+                let algs = generate(&con);
+                out.push(rank_with(&engine, &m, &con, &algs, Elem::D, 7, &memo).unwrap());
+            }
+            (out, memo.len(), memo_totals(&memo))
+        };
+        let (a, len1, tot1) = run(1);
+        let (b, len4, tot4) = run(4);
+        assert_eq!(len1, len4);
+        assert_eq!(tot1.0.to_bits(), tot4.0.to_bits());
+        for (ra, rb) in a.iter().zip(&b) {
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.alg_name, y.alg_name);
+                assert_eq!(x.seconds.to_bits(), y.seconds.to_bits(), "{}", x.alg_name);
+            }
+        }
     }
 
     #[test]

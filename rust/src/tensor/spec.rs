@@ -114,6 +114,22 @@ impl Contraction {
         panic!("index '{i}' not in tensor {idx:?}")
     }
 
+    /// The contraction with every index dimension quantized to the
+    /// nearest multiple of `g` (clamped to >= 1; the one shared rule,
+    /// [`crate::engine::cache::quantize_size`]) — the cross-size memo
+    /// key view: nearby problem sizes collapse onto one quantized
+    /// contraction, whose micro-benchmark then serves them all with a
+    /// bounded dimension perturbation. `g = 1` is the identity.
+    pub fn quantized(&self, g: usize) -> Contraction {
+        let mut out = self.clone();
+        if g > 1 {
+            for v in out.dims.values_mut() {
+                *v = crate::engine::cache::quantize_size(*v, g);
+            }
+        }
+        out
+    }
+
     /// The paper's running example: C_abc := A_ai B_ibc with A n x 8,
     /// B 8 x n x n (Ex. 1.5).
     pub fn example_abc(n: usize) -> Contraction {
@@ -209,6 +225,20 @@ mod tests {
         }
         // The running example stays valid.
         assert!(Contraction::parse("abc=ai,ibc").is_ok());
+    }
+
+    #[test]
+    fn quantized_rounds_to_nearest_multiple() {
+        let c = Contraction::example_abc(30); // a=b=c=30, i=8
+        let q = c.quantized(8);
+        assert_eq!(q.dim('a'), 32);
+        assert_eq!(q.dim('i'), 8);
+        // Nearby sizes collapse onto the same quantized contraction.
+        assert_eq!(Contraction::example_abc(32).quantized(8), q);
+        // Granularity 1 is the identity; tiny dims never quantize to 0.
+        assert_eq!(c.quantized(1), c);
+        let tiny = Contraction::example_abc(3).quantized(8);
+        assert!(tiny.dims.values().all(|&v| v >= 1), "{tiny:?}");
     }
 
     #[test]

@@ -113,6 +113,133 @@ fn contract_sweep_ranks_every_size() {
     assert!(csv.contains("# n=32\n"), "{csv}");
 }
 
+/// ISSUE 4: the default memo granularity (1 = exact keys) must be
+/// byte-identical to not passing the flag at all — the CI smoke stage's
+/// contract, enforced here end-to-end.
+#[test]
+fn contract_memo_granularity_one_matches_default_byte_for_byte() {
+    let run = |extra: &[&str]| {
+        let mut args = vec![
+            "contract", "--spec", "abc=ai,ibc", "--sweep", "24,32", "--seed", "7", "--jobs", "2",
+        ];
+        args.extend_from_slice(extra);
+        let out = dlapm().args(&args).output().expect("spawning dlapm contract");
+        assert!(out.status.success(), "{:?}", out.status);
+        out.stdout
+    };
+    let default = run(&[]);
+    let explicit = run(&["--memo-granularity", "1"]);
+    assert!(!default.is_empty());
+    assert_eq!(
+        String::from_utf8_lossy(&default),
+        String::from_utf8_lossy(&explicit),
+        "--memo-granularity 1 must be bit-identical to the default"
+    );
+}
+
+/// ISSUE 4: a coarse memo granularity turns a sweep's second size into
+/// cross-size memo reuse (n=30 and n=32 quantize together at g=8), the
+/// selection-quality delta vs exact keys is printed, and stdout stays
+/// byte-identical for any `--jobs` value.
+#[test]
+fn contract_sweep_coarse_granularity_reuses_across_sizes() {
+    let run = |jobs: &str| {
+        let out = dlapm()
+            .args([
+                "contract", "--spec", "abc=ai,ibc", "--sweep", "30,32", "--seed", "7",
+                "--memo-granularity", "8", "--jobs", jobs,
+            ])
+            .output()
+            .expect("spawning dlapm contract");
+        assert!(out.status.success(), "{:?}", out.status);
+        out.stdout
+    };
+    let a = run("1");
+    let b = run("4");
+    assert_eq!(
+        String::from_utf8_lossy(&a),
+        String::from_utf8_lossy(&b),
+        "granularity > 1 must stay byte-identical across job counts"
+    );
+    let text = String::from_utf8_lossy(&a);
+    // First size: nothing to reuse yet. Second size: full reuse.
+    let reuse_of = |n: usize| -> (usize, usize) {
+        let line = text
+            .lines()
+            .find(|l| l.contains(&format!("memo reuse for n={n}:")))
+            .unwrap_or_else(|| panic!("no reuse line for n={n} in:\n{text}"));
+        let rest = line.split(':').nth(1).expect("colon");
+        let mut words = rest.split_whitespace();
+        let reused = words.next().unwrap().parse().unwrap();
+        assert_eq!(words.next(), Some("of"));
+        let total = words.next().unwrap().parse().unwrap();
+        (reused, total)
+    };
+    let (r30, t30) = reuse_of(30);
+    assert_eq!(r30, 0, "first sweep size cannot reuse");
+    let (r32, t32) = reuse_of(32);
+    assert!(r32 > 0, "cross-size reuse expected at n=32: {text}");
+    assert_eq!((r32, t32), (t30, t30), "n=32 must reuse every n=30 benchmark");
+    assert!(
+        text.contains("selection-quality delta vs exact keys (granularity 8)"),
+        "{text}"
+    );
+}
+
+/// ISSUE 4: the §6.3.2/§6.3.3 scenario presets run through the unified
+/// ranking (they imply --rank).
+#[test]
+fn contract_presets_rank_through_the_core() {
+    for (preset, spec) in [("vector", "a=iaj,ji"), ("challenging", "abc=ija,jbic")] {
+        let out = dlapm()
+            .args(["contract", "--preset", preset, "--n", "24", "--seed", "7", "--jobs", "2"])
+            .output()
+            .expect("spawning dlapm contract --preset");
+        assert!(out.status.success(), "--preset {preset}: {:?}", out.status);
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains(&format!("algorithms for {spec} with n=24")), "{text}");
+        assert!(text.contains("total micro-benchmark cost"), "{text}");
+    }
+    let bad = dlapm()
+        .args(["contract", "--preset", "nonsense"])
+        .output()
+        .expect("spawning dlapm contract --preset nonsense");
+    assert!(!bad.status.success(), "unknown preset must fail");
+    // A preset sets the spec; passing both is a conflict, not a silent
+    // override of whichever the user thought would win.
+    let conflict = dlapm()
+        .args(["contract", "--preset", "vector", "--spec", "abc=ai,ibc"])
+        .output()
+        .expect("spawning dlapm contract --preset+--spec");
+    assert!(!conflict.status.success(), "--preset with --spec must fail");
+}
+
+/// ISSUE 4: `select --validate` fans its measurement repetitions out as
+/// nested engine jobs — stdout must stay byte-identical for any --jobs.
+#[test]
+fn select_validate_jobs_parity_byte_for_byte() {
+    let run = |jobs: &str| {
+        let out = dlapm()
+            .args([
+                "select", "--cpu", "sandybridge", "--lib", "openblas", "--op", "potrf", "--n",
+                "520", "--b", "104", "--validate", "--reps", "2", "--seed", "5", "--jobs", jobs,
+            ])
+            .output()
+            .expect("spawning dlapm select");
+        assert!(out.status.success(), "select --jobs {jobs}: {:?}", out.status);
+        out.stdout
+    };
+    let a = run("1");
+    let b = run("4");
+    let text = String::from_utf8_lossy(&a);
+    assert!(text.contains("selection quality"), "{text}");
+    assert_eq!(
+        text,
+        String::from_utf8_lossy(&b),
+        "select --validate must print identical rankings for --jobs 1 and --jobs 4"
+    );
+}
+
 /// End-to-end `--jobs` parity through the real binary: `gen --jobs 1`
 /// and `gen --jobs 4` write byte-identical model stores.
 #[test]

@@ -129,7 +129,13 @@ fn unified_selection_core_serves_both_scenarios() {
                 alg: Arc::new(a.clone()),
                 n: 520,
                 b: 104,
-                validate: Some(ValidateCfg { machine: machine.clone(), reps: 3, seed: 7 }),
+                label: None,
+                validate: Some(ValidateCfg {
+                    machine: machine.clone(),
+                    reps: 3,
+                    seed: 7,
+                    engine: Arc::clone(&engine),
+                }),
             }) as _
         })
         .collect();
@@ -154,6 +160,7 @@ fn unified_selection_core_serves_both_scenarios() {
                 elem: Elem::D,
                 seed: 11,
                 memo: Arc::clone(&memo),
+                engine: Arc::clone(&engine),
                 validate_reps: 1,
             }) as _
         })
