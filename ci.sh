@@ -84,6 +84,37 @@ else
     exit 1
 fi
 
+echo "== warm-start store smoke (contract --sweep twice against one --store) =="
+WARM_DIR="$SMOKE_DIR/warmstore"
+cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --sweep 30,32 --seed 7 --jobs 2 \
+    --store "$WARM_DIR" > "$SMOKE_DIR/warm_cold.txt"
+cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --sweep 30,32 --seed 7 --jobs 2 \
+    --store "$WARM_DIR" > "$SMOKE_DIR/warm_warm.txt"
+# The ranking tables (rows "  1. alg ...") must be byte-identical cold vs
+# warm, and the warm run must pay for zero new micro-benchmarks.
+grep -E '^ +[0-9]+\. ' "$SMOKE_DIR/warm_cold.txt" > "$SMOKE_DIR/warm_cold_rank.txt"
+grep -E '^ +[0-9]+\. ' "$SMOKE_DIR/warm_warm.txt" > "$SMOKE_DIR/warm_warm_rank.txt"
+if ! [ -s "$SMOKE_DIR/warm_cold_rank.txt" ]; then
+    echo "ERROR: no ranking rows in the cold run output" >&2
+    exit 1
+fi
+if cmp -s "$SMOKE_DIR/warm_cold_rank.txt" "$SMOKE_DIR/warm_warm_rank.txt"; then
+    echo "warm restart ranking output is byte-identical to the cold run"
+else
+    echo "ERROR: warm restart ranking differs from the cold run:" >&2
+    diff "$SMOKE_DIR/warm_cold_rank.txt" "$SMOKE_DIR/warm_warm_rank.txt" >&2 || true
+    exit 1
+fi
+for n in 30 32; do
+    if ! grep -q "micro-benchmarks for n=$n: 0.000000 ms over 0 kernel runs" \
+        "$SMOKE_DIR/warm_warm.txt"; then
+        echo "ERROR: warm run ran new micro-benchmarks for n=$n:" >&2
+        grep "micro-benchmarks for n=$n" "$SMOKE_DIR/warm_warm.txt" >&2 || true
+        exit 1
+    fi
+done
+echo "warm restart paid for zero new micro-benchmarks"
+
 echo "== select --validate determinism smoke (--jobs 1 vs --jobs 4) =="
 cargo run -q --bin dlapm -- select --cpu sandybridge --lib openblas --op potrf \
     --n 520 --b 104 --validate --reps 2 --seed 5 --jobs 1 > "$SMOKE_DIR/select_jobs1.txt"

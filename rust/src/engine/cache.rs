@@ -129,6 +129,46 @@ impl ModelCache {
         value
     }
 
+    /// Insert an entry without touching the hit/miss counters — the
+    /// warm-start load path ([`crate::store`]): preloaded entries are
+    /// neither hits nor misses. `sizes` goes through the same key
+    /// quantization as lookups (idempotent on the pre-rounded sizes a
+    /// snapshot stores), so a preloaded entry is found by exactly the
+    /// lookups that would have computed it. Entries beyond the key shape
+    /// are dropped (they were never cacheable to begin with).
+    pub fn preload(&self, case: &str, sizes: &[usize], value: Summary) {
+        let Some(key) = self.size_key(sizes) else { return };
+        self.map
+            .write()
+            .unwrap_or_else(|p| p.into_inner())
+            .entry(case.to_string())
+            .or_default()
+            .insert(key, value);
+    }
+
+    /// Fold over the memoized entries in sorted `(case, rounded sizes)`
+    /// order — deterministic iteration for serialization and statistics,
+    /// mirroring [`crate::engine::Memo::fold_sorted`].
+    pub fn fold_sorted<A>(
+        &self,
+        init: A,
+        mut f: impl FnMut(A, &str, &[usize], &Summary) -> A,
+    ) -> A {
+        let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+        let mut cases: Vec<&String> = map.keys().collect();
+        cases.sort();
+        let mut acc = init;
+        for case in cases {
+            let inner = &map[case];
+            let mut keys: Vec<&SizeKey> = inner.keys().collect();
+            keys.sort();
+            for key in keys {
+                acc = f(acc, case, &key.0[..key.1 as usize], &inner[key]);
+            }
+        }
+        acc
+    }
+
     /// Peek without computing (counts as neither hit nor miss).
     pub fn peek(&self, case: &str, sizes: &[usize]) -> Option<Summary> {
         let key = self.size_key(sizes)?;
@@ -217,6 +257,35 @@ mod tests {
         assert_eq!(cache.granularity(), 8);
         let once = cache.round(&[126, 129, 24]);
         assert_eq!(cache.round(&once), once);
+    }
+
+    #[test]
+    fn preload_feeds_lookups_without_counting() {
+        let cache = ModelCache::with_granularity(8);
+        cache.preload("c", &[128, 64], Summary::constant(3.5));
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+        // A lookup at any size quantizing to the preloaded key hits.
+        let got = cache.get_or_insert_with("c", &[126, 66], |_| unreachable!());
+        assert_eq!(got.med, 3.5);
+        assert_eq!((cache.hits(), cache.misses()), (1, 0));
+        // Oversized keys are silently dropped, like uncacheable lookups.
+        cache.preload("c", &[1, 2, 3, 4, 5], Summary::constant(1.0));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn fold_sorted_orders_by_case_then_sizes() {
+        let cache = ModelCache::new();
+        for (case, sizes) in
+            [("b", vec![16usize]), ("a", vec![8, 8]), ("b", vec![8]), ("a", vec![8, 4])]
+        {
+            cache.get_or_insert_with(case, &sizes, |s| Summary::constant(s[0] as f64));
+        }
+        let order = cache.fold_sorted(String::new(), |mut acc, case, sizes, _| {
+            acc.push_str(&format!("{case}{sizes:?};"));
+            acc
+        });
+        assert_eq!(order, "a[8, 4];a[8, 8];b[8];b[16];");
     }
 
     #[test]

@@ -89,6 +89,18 @@ impl<V: Copy> Memo<V> {
         value
     }
 
+    /// Insert an entry without touching the hit/miss counters — the
+    /// warm-start load path ([`crate::store`]): preloaded entries are
+    /// neither hits nor misses, and the purity contract extends across
+    /// processes (a preloaded value must be what `compute` would have
+    /// produced for the key, which snapshot header validation enforces).
+    pub fn preload(&self, key: &str, value: V) {
+        self.map
+            .write()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(key.to_string(), value);
+    }
+
     /// Peek without computing (counts as neither hit nor miss).
     pub fn peek(&self, key: &str) -> Option<V> {
         self.map.read().unwrap_or_else(|p| p.into_inner()).get(key).copied()
@@ -185,6 +197,16 @@ mod tests {
             s
         });
         assert_eq!(order, "a1b2c3");
+    }
+
+    #[test]
+    fn preload_feeds_lookups_without_counting() {
+        let memo: Memo<f64> = Memo::new();
+        memo.preload("warm", 2.5);
+        assert_eq!((memo.hits(), memo.misses()), (0, 0));
+        assert_eq!(memo.get_or_insert_with("warm", || unreachable!()), 2.5);
+        assert_eq!((memo.hits(), memo.misses()), (1, 0));
+        assert!(memo.contains("warm"));
     }
 
     #[test]

@@ -9,11 +9,12 @@
 //!   repetitions) fan out across worker threads; the submitting thread
 //!   *helps* execute its own batch, so nested submissions (a case job
 //!   fanning out its split fits, a candidate fanning out its measurement
-//!   reps) cannot deadlock. Idle workers park on a condvar wake counter
-//!   and wake exactly once per submission burst — an idle pool burns no
-//!   cycles and pays no poll-timeout latency. Worker panics are captured
-//!   and surfaced as [`crate::util::error::Error`], never as a crashed
-//!   thread.
+//!   reps) cannot deadlock. Idle workers park on a condvar wake counter;
+//!   a submission burst wakes only `min(queued jobs, parked workers)` of
+//!   them (batch-aware fan-out — no thundering herd on tiny batches), so
+//!   an idle pool burns no cycles and pays no poll-timeout latency.
+//!   Worker panics are captured and surfaced as
+//!   [`crate::util::error::Error`], never as a crashed thread.
 //! * [`cache`] — a thread-safe [`ModelCache`] memoizing model estimates
 //!   (piece lookup + polynomial evaluation) keyed by case and rounded
 //!   argument sizes, for batched prediction sweeps that revisit the same

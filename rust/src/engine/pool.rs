@@ -22,7 +22,11 @@
 //! worker wakes exactly once per submission burst — no periodic poll, no
 //! bounded-timeout churn between bursts, and no missed wakeups (a push
 //! that races the park either is seen by the pre-park work check or
-//! advances the generation the parked worker is waiting on).
+//! advances the generation the parked worker is waiting on). The wake
+//! fan-out is *batch-aware*: a burst notifies only `min(queued jobs,
+//! parked workers)` sleepers, so a 1-job burst into a big idle pool wakes
+//! one worker instead of a thundering herd that would mostly find its
+//! deques empty and re-park.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -48,16 +52,26 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
+/// Park/wake bookkeeping, guarded by one mutex so the idle count is
+/// exact at every wake decision.
+struct WakeState {
+    /// Wake generation counter: bumped once per submission burst (and
+    /// once at shutdown). Idle workers park on `signal` until it moves
+    /// past the value they read before parking.
+    generation: u64,
+    /// Workers currently parked (or irrevocably committed to parking:
+    /// the count is incremented under this lock before the wait begins,
+    /// so a submitter holding the lock sees every sleeper).
+    idle: usize,
+}
+
 struct Shared {
     /// One deque per worker slot. Batches push round-robin across all
     /// slots; owners pop the front, thieves take from the back.
     deques: Vec<Mutex<VecDeque<Job>>>,
     /// Round-robin push cursor (shared so nested batches interleave).
     cursor: AtomicUsize,
-    /// Wake generation counter: bumped once per submission burst (and
-    /// once at shutdown). Idle workers park on `signal` until it moves
-    /// past the value they read before parking.
-    wake: Mutex<u64>,
+    wake: Mutex<WakeState>,
     signal: Condvar,
     shutdown: AtomicBool,
 }
@@ -68,12 +82,35 @@ impl Shared {
         lock(&self.deques[slot]).push_back(job);
     }
 
-    /// Advance the wake generation and rouse every parked worker — one
-    /// call per submission burst. Jobs are already in the deques by the
-    /// time this runs, so a worker that parks after this bump re-checks
-    /// the deques first and never sleeps on available work.
+    /// Advance the wake generation and rouse `min(queued, idle)` parked
+    /// workers — one call per submission burst. Batch-aware fan-out: a
+    /// burst of 2 jobs into a 16-worker pool wakes 2 sleepers, not a
+    /// thundering herd of 16 that would mostly find nothing to steal.
+    /// The un-notified workers stay parked even though the generation
+    /// moved (a condvar wait only re-checks on a signal), but they are
+    /// not stranded: any later burst's `notify_one` wakes whichever
+    /// workers are parked, regardless of the generation they snapshot.
+    /// Jobs are already in the deques by the time this runs, so a worker
+    /// that parks after this bump re-checks the deques first and never
+    /// sleeps on available work.
+    fn wake_for(&self, queued: usize) {
+        let mut state = lock(&self.wake);
+        state.generation += 1;
+        let idle = state.idle;
+        drop(state);
+        if queued >= idle {
+            self.signal.notify_all();
+        } else {
+            for _ in 0..queued {
+                self.signal.notify_one();
+            }
+        }
+    }
+
+    /// Advance the wake generation and rouse every parked worker —
+    /// shutdown must reach all of them.
     fn wake_all(&self) {
-        *lock(&self.wake) += 1;
+        lock(&self.wake).generation += 1;
         self.signal.notify_all();
     }
 
@@ -122,16 +159,23 @@ fn worker_loop(shared: Arc<Shared>, own: usize) {
         // re-check for work, then wait for the generation to advance.
         // A submission burst pushes its jobs *before* bumping the
         // generation, so a push racing this park is either visible to
-        // `has_work` or bumps the generation this wait watches — a
-        // wakeup can be early (spurious work check) but never missed.
-        let guard = lock(&shared.wake);
-        let seen = *guard;
+        // `has_work` or bumps the generation this wait watches (and sees
+        // this worker in the idle count, so at least one sleeper is
+        // notified) — a wakeup can be early (spurious work check) but
+        // never missed.
+        let mut guard = lock(&shared.wake);
+        let seen = guard.generation;
         if shared.shutdown.load(Ordering::SeqCst) || shared.has_work() {
             continue;
         }
-        let _ = shared
+        guard.idle += 1;
+        let mut guard = shared
             .signal
-            .wait_while(guard, |gen| *gen == seen && !shared.shutdown.load(Ordering::SeqCst));
+            .wait_while(guard, |st| {
+                st.generation == seen && !shared.shutdown.load(Ordering::SeqCst)
+            })
+            .unwrap_or_else(|p| p.into_inner());
+        guard.idle -= 1;
     }
 }
 
@@ -151,7 +195,7 @@ impl Engine {
         let shared = Arc::new(Shared {
             deques: (0..slots).map(|_| Mutex::new(VecDeque::new())).collect(),
             cursor: AtomicUsize::new(0),
-            wake: Mutex::new(0),
+            wake: Mutex::new(WakeState { generation: 0, idle: 0 }),
             signal: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -182,7 +226,14 @@ impl Engine {
     /// `wake_generation() - batches submitted` staying constant is the
     /// "no idle churn" property the condvar parking provides.
     pub fn wake_generation(&self) -> u64 {
-        *lock(&self.shared.wake)
+        lock(&self.shared.wake).generation
+    }
+
+    /// Number of workers currently parked on the condvar. Instantaneous
+    /// (a worker between jobs is neither idle nor counted), so tests
+    /// should poll for a settled value rather than assert mid-flight.
+    pub fn idle_workers(&self) -> usize {
+        lock(&self.shared.wake).idle
     }
 
     /// Execute a batch of independent jobs, returning their results in
@@ -207,7 +258,10 @@ impl Engine {
             }));
         }
         drop(tx);
-        self.shared.wake_all();
+        // Batch-aware fan-out: rouse at most as many sleepers as there
+        // are queued jobs (the submitter itself helps below, so tiny
+        // batches often complete with zero worker wakeups).
+        self.shared.wake_for(n);
 
         // Help execute queued jobs (this batch's or a sibling batch's)
         // while results trickle in. When nothing is poppable, the
@@ -395,6 +449,61 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(30));
         let out = engine.run((0..16usize).map(|i| move || i * 2).collect::<Vec<_>>()).unwrap();
         assert_eq!(out, (0..16usize).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    /// Poll until the pool's parked-worker count settles at `want`
+    /// (worker parking is asynchronous; a fixed sleep would be flaky).
+    fn wait_for_idle(engine: &Engine, want: usize) {
+        for _ in 0..400 {
+            if engine.idle_workers() == want {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!(
+            "workers never settled: idle={} want={want}",
+            engine.idle_workers()
+        );
+    }
+
+    #[test]
+    fn workers_park_between_batches_and_tiny_bursts_complete() {
+        // 4 slots = 3 worker threads + the helping submitter.
+        let engine = Engine::new(4);
+        wait_for_idle(&engine, 3);
+        // Batch-aware fan-out: a 1-job burst notifies one sleeper (and
+        // the submitter helps), yet every burst from a fully parked pool
+        // must complete — 50 rounds would hang on any missed wakeup.
+        for round in 0..50usize {
+            let out = engine.run(vec![move || round * 2]).unwrap();
+            assert_eq!(out, vec![round * 2]);
+        }
+        // After the bursts drain, the full complement re-parks.
+        wait_for_idle(&engine, 3);
+    }
+
+    #[test]
+    fn oversized_bursts_wake_the_whole_pool_and_drain() {
+        let engine = Engine::new(4);
+        wait_for_idle(&engine, 3);
+        // queued >> idle takes the notify_all path.
+        let out = engine.run((0..64usize).map(|i| move || i + 1).collect::<Vec<_>>()).unwrap();
+        assert_eq!(out, (1..=64).collect::<Vec<_>>());
+        wait_for_idle(&engine, 3);
+        // A mid-sized burst (1 < queued < idle) takes the notify_one
+        // loop; partially-notified pools must not strand later bursts.
+        let out = engine.run((0..2usize).map(|i| move || i).collect::<Vec<_>>()).unwrap();
+        assert_eq!(out, vec![0, 1]);
+        let out = engine.run((0..8usize).map(|i| move || i * 3).collect::<Vec<_>>()).unwrap();
+        assert_eq!(out, (0..8usize).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_engine_reports_no_idle_workers() {
+        let engine = Engine::sequential();
+        assert_eq!(engine.idle_workers(), 0);
+        assert_eq!(engine.run(vec![|| 5usize]).unwrap(), vec![5]);
+        assert_eq!(engine.idle_workers(), 0);
     }
 
     #[test]

@@ -12,16 +12,25 @@ use crate::predict::algorithms::trtri::Trtri;
 use crate::predict::algorithms::BlockedAlg;
 use crate::predict::blocksize;
 use crate::predict::measurement::{coverage, measure_algorithm};
-use crate::predict::predictor::{performance, predict_calls};
+use crate::predict::predictor::{performance, predict_calls, predict_calls_cached};
 use crate::util::plot;
 
 use super::{Ctx, Scale};
 
 /// Build (or load) a model store covering `algs` on `machine`.
+///
+/// With `--store DIR` the store lives in the warm store under a header
+/// validated against `(machine, seed, coverage scope)`; otherwise it is
+/// cached under `out/models/` as before. Either way a store generated
+/// for a smaller domain is never reused for larger problems (its models
+/// clamp at their hull) — the coverage bound is part of the key.
 pub fn store_for(ctx: &Ctx, machine: &Machine, algs: &[&dyn BlockedAlg], max_n: usize) -> ModelStore {
-    // Store files are keyed by coverage size: a store generated for a
-    // smaller domain must not be reused for larger problems (its models
-    // clamp at their hull).
+    if let Some(dir) = &ctx.store_dir {
+        match warm_store_for(dir, ctx, machine, algs, max_n) {
+            Ok(store) => return store,
+            Err(e) => eprintln!("[dlapm] warm store unusable ({e}); regenerating"),
+        }
+    }
     let path = ctx
         .report
         .out_dir
@@ -38,6 +47,42 @@ pub fn store_for(ctx: &Ctx, machine: &Machine, algs: &[&dyn BlockedAlg], max_n: 
         );
     }
     store
+}
+
+fn warm_store_for(
+    dir: &std::path::Path,
+    ctx: &Ctx,
+    machine: &Machine,
+    algs: &[&dyn BlockedAlg],
+    max_n: usize,
+) -> crate::util::error::Result<ModelStore> {
+    use crate::store::WarmStore;
+    let warm = WarmStore::open(dir)?;
+    // The canonical slot builder is the sharing contract: a `select` or
+    // `blocksize --store` run over the same coverage warms this figure's
+    // models, and vice versa.
+    let (slot, key) = crate::store::models_slot(&machine.label(), ctx.seed, max_n, 536);
+    let mut store = warm
+        .load::<ModelStore>(&slot, &key)?
+        .unwrap_or_else(|| ModelStore::new(&machine.label()));
+    let generated = coverage::ensure_models(machine, &mut store, algs, max_n, 536, ctx.seed);
+    if generated > 0 {
+        // A failed save is a persistence problem, not a reason to throw
+        // away (and later regenerate) the models just paid for — warn
+        // and keep the in-memory store.
+        if let Err(e) = warm.save(&slot, &key, &store) {
+            eprintln!("[dlapm] warm store: {e}");
+        }
+        eprintln!(
+            "[dlapm] {}: generated {generated} models (total cost {:.1} virtual s)",
+            machine.label(),
+            store.total_gen_cost()
+        );
+    }
+    for line in warm.take_status() {
+        eprintln!("[dlapm] warm store: {line}");
+    }
+    Ok(store)
 }
 
 fn max_n(ctx: &Ctx) -> usize {
@@ -95,7 +140,11 @@ pub fn fig4_2(ctx: &Ctx) {
     ctx.report.emit("fig4_2", &txt, &plot::csv(&["n", "pred_ms", "meas_ms", "re_med"], &rows));
 }
 
-/// Fig 4.5: median-ARE heat map over (n, b).
+/// Fig 4.5: median-ARE heat map over (n, b). The prediction side of the
+/// grid runs through one [`ModelCache`](crate::engine::ModelCache),
+/// prewarmed by an ordered [`blocksize::prewarm_grid`] pass — the same
+/// batched piece-lookup amortization block-size sweeps use, bit-identical
+/// to per-point `predict_calls`.
 pub fn fig4_5(ctx: &Ctx) {
     let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
     let alg = Potrf { variant: 3, elem: Elem::D };
@@ -103,13 +152,19 @@ pub fn fig4_5(ctx: &Ctx) {
     let ns: Vec<usize> = n_grid(ctx).into_iter().step_by(2).collect();
     let bstep = if ctx.scale == Scale::Full { 24 } else { 64 };
     let bs: Vec<usize> = (24..=536).step_by(bstep).collect();
+    let cache = crate::engine::ModelCache::new();
+    let points: Vec<(usize, usize)> = bs
+        .iter()
+        .flat_map(|&b| ns.iter().map(move |&n| (n, b)))
+        .collect();
+    blocksize::prewarm_grid(&store, &cache, &alg, &points);
     let mut grid = Vec::new();
     let mut rows = Vec::new();
     let mut all = Vec::new();
     for &b in &bs {
         let mut row = Vec::new();
         for &n in &ns {
-            let pred = predict_calls(&store, &alg.calls(n, b)).time.med;
+            let pred = predict_calls_cached(&store, &alg.calls(n, b), &cache).time.med;
             let meas = measure_algorithm(&machine, &alg, n, b, 5, ctx.seed).med;
             let are = ((pred - meas) / meas).abs();
             row.push(are);

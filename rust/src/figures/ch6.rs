@@ -127,19 +127,58 @@ pub fn fig6_3c(ctx: &Ctx) {
 /// plus the `vector` and `challenging` CLI presets, each ranked as
 /// [`TensorCandidate`]s (memoized micro-benchmarks, validated winners)
 /// and rendered with the shared [`crate::report::selection_table`].
+///
+/// With `--store DIR` each preset's micro-benchmark memo is reloaded
+/// from / saved to the warm store (one slot per preset, scale-keyed), so
+/// repeated figure runs pay for zero new benchmarks. A corrupt snapshot
+/// is reported and skipped — figure drivers regenerate rather than die.
 pub fn fig6_5(ctx: &Ctx) {
+    use crate::store::{StoreKey, WarmStore};
     let m = harpertown();
     let engine = Arc::new(Engine::sequential());
     let full = ctx.scale == Scale::Full;
-    let presets: [(&str, Contraction); 3] = [
-        ("abc (running example)", Contraction::example_abc(if full { 96 } else { 48 })),
-        ("vector (§6.3.2)", Contraction::example_vector(if full { 1024 } else { 256 }, 8)),
-        ("challenging (§6.3.3)", Contraction::example_challenging(if full { 64 } else { 32 }, 8)),
+    let presets: [(&str, &str, Contraction); 3] = [
+        ("abc (running example)", "abc", Contraction::example_abc(if full { 96 } else { 48 })),
+        (
+            "vector (§6.3.2)",
+            "vector",
+            Contraction::example_vector(if full { 1024 } else { 256 }, 8),
+        ),
+        (
+            "challenging (§6.3.3)",
+            "challenging",
+            Contraction::example_challenging(if full { 64 } else { 32 }, 8),
+        ),
     ];
+    let warm = ctx.store_dir.as_deref().and_then(|dir| match WarmStore::open(dir) {
+        Ok(w) => Some(w),
+        Err(e) => {
+            eprintln!("[dlapm] warm store unusable ({e}); running cold");
+            None
+        }
+    });
+    let scale_tag = if full { "full" } else { "quick" };
     let mut text = String::from("## §6.3: scenario presets through the unified selection core\n");
     let mut all_csv = String::new();
-    for (name, con) in presets {
-        let memo = Arc::new(MicroMemo::new());
+    for (name, tag, con) in presets {
+        let slot = format!("fig6_5_{tag}_{scale_tag}_micro_g1");
+        let key = StoreKey {
+            machine: m.label(),
+            granularity: 1,
+            seed: ctx.seed,
+            scope: slot.clone(),
+        };
+        let memo = Arc::new(match &warm {
+            Some(w) => match w.load::<MicroMemo>(&slot, &key) {
+                Ok(Some(memo)) => memo,
+                Ok(None) => MicroMemo::new(),
+                Err(e) => {
+                    eprintln!("[dlapm] warm store: {e}; running cold");
+                    MicroMemo::new()
+                }
+            },
+            None => MicroMemo::new(),
+        });
         let cands: Vec<TensorCandidate> = generate(&con)
             .into_iter()
             .map(|alg| TensorCandidate {
@@ -182,6 +221,20 @@ pub fn fig6_5(ctx: &Ctx) {
             text.push_str(&format!("  selection quality: {q:.4}\n"));
         }
         all_csv.push_str(&format!("# preset={name}\n{csv}"));
+        // Persist only when this preset measured something new; a fully
+        // warm rerun skips the identical rewrite.
+        if let Some(w) = &warm {
+            if memo.misses() > 0 {
+                if let Err(e) = w.save(&slot, &key, &*memo) {
+                    eprintln!("[dlapm] warm store: {e}");
+                }
+            }
+        }
+    }
+    if let Some(w) = &warm {
+        for line in w.take_status() {
+            eprintln!("[dlapm] warm store: {line}");
+        }
     }
     ctx.report.emit("fig6_5", &text, &all_csv);
 }

@@ -24,6 +24,10 @@ pub struct Ctx<'a> {
     pub report: &'a Report,
     pub scale: Scale,
     pub seed: u64,
+    /// Warm-start store directory (`--store DIR`): model stores and
+    /// micro-benchmark memos are reloaded from / saved to it, so repeated
+    /// figure runs skip already-paid model generation and benchmarks.
+    pub store_dir: Option<std::path::PathBuf>,
 }
 
 type Driver = fn(&Ctx);

@@ -20,6 +20,9 @@
 //! * [`select`] — the scenario-agnostic selection core: one ranking /
 //!   validation / winner-tolerance pipeline shared by blocked algorithms
 //!   and tensor contractions via the [`select::Candidate`] trait;
+//! * [`store`] — warm-start persistence: a versioned on-disk store
+//!   reloading the model cache, micro-benchmark memo and generated models
+//!   across runs (the "generated once per platform" economics);
 //! * [`cachepred`] — cache-aware timing combination (Ch. 5);
 //! * [`tensor`] — micro-benchmark-based predictions for BLAS-based tensor
 //!   contractions (Ch. 6);
@@ -39,6 +42,7 @@ pub mod sampler;
 pub mod modeling;
 pub mod predict;
 pub mod select;
+pub mod store;
 pub mod runtime;
 pub mod tensor;
 pub mod cachepred;

@@ -1,12 +1,14 @@
 //! dlapm CLI: the framework launcher.
 //!
 //! ```text
-//! dlapm figures --all [--scale quick|full] [--out-dir out] [--seed N]
+//! dlapm figures --all [--scale quick|full] [--out-dir out] [--seed N] [--store DIR]
 //! dlapm gen --all --cpu haswell --lib openblas --jobs 8 --out models.json
 //! dlapm predict  --models models.json --op potrf --n 2104 --b 128
 //! dlapm select   --cpu haswell --lib openblas --op trtri --n 2104 --b 128 [--validate]
+//! dlapm select   --op potrf --n 1000,2000 --b 104,128 [--store DIR]
+//! dlapm blocksize --op potrf --n 2000 [--validate] [--store DIR]
 //! dlapm contract --spec "abc=ai,ibc" --n 64
-//! dlapm contract --spec "abc=ai,ibc" --n 48,64,96 --rank [--validate] [--jobs 4]
+//! dlapm contract --spec "abc=ai,ibc" --n 48,64,96 --rank [--validate] [--jobs 4] [--store DIR]
 //! dlapm sampler  < script.txt
 //! dlapm list
 //! ```
@@ -15,6 +17,7 @@ use dlapm::engine::{self, Engine, ModelCache};
 use dlapm::figures::{self, Ctx, Scale};
 use dlapm::machine::{CpuId, CpuSpec, Elem, Library, Machine};
 use dlapm::report::Report;
+use dlapm::store::{Persist, StoreKey, WarmStore};
 use dlapm::util::cli::Args;
 use std::path::Path;
 use std::sync::Arc;
@@ -27,6 +30,7 @@ fn main() {
         "gen" | "generate" => generate_cmd(&args),
         "predict" => predict_cmd(&args),
         "select" => select_cmd(&args),
+        "blocksize" => blocksize_cmd(&args),
         "contract" => contract_cmd(&args),
         "sampler" => sampler_cmd(&args),
         "list" => list_cmd(),
@@ -42,14 +46,23 @@ dlapm — performance modeling and prediction for dense linear algebra
 
 subcommands:
   figures [ids... | --all] [--scale quick|full] [--out-dir out] [--seed N]
+           [--store DIR]  reuse warm model stores / micro memos across runs
   gen      [--all] [--op <name>] --cpu <id> --lib <name> [--threads N]
            [--jobs N] [--out file.json]   (alias: generate)
            --all generates the full kernel-model registry in one parallel
            run; --jobs defaults to the available hardware parallelism
   predict  --models file.json --op <potrf|trtri|...> --n N --b B
   select   --cpu <id> --lib <name> --op <potrf|trtri|trsyl> --n N --b B
-           [--validate] [--reps 5] [--jobs N] [--csv file.csv]
-           ranks through the unified selection core (shared with contract)
+           [--validate] [--reps 5] [--jobs N] [--csv file.csv] [--store DIR]
+           ranks through the unified selection core (shared with contract);
+           --n A,B --b C,D sweeps the (n, b) grid through one prewarmed
+           estimate cache, one ranking per grid point
+  blocksize --op <potrf|trtri|trsyl> [--alg name] --n A,B,C [--b A,B,C]
+           [--validate] [--reps 3] [--jobs N] [--csv file.csv] [--store DIR]
+           Sec. 4.6 block-size optimization: rank every candidate b
+           through the selection core (default grid 24..=536 step 8) and
+           report b_pred per n; --validate adds the measured optimum
+           b_opt and the performance-yield table
   contract --spec \"abc=ai,ibc\" --n N [--small 8] [--csv file.csv]
            --rank       full ranking via the engine-parallel, memoized
                         selection core (byte-identical for any --jobs)
@@ -67,9 +80,128 @@ subcommands:
                         error; default 1 = exact keys, bit-identical.
                         At G > 1 an exact reference ranking also runs and
                         the selection-quality delta is reported
+           --store DIR  warm-start store: reload the micro-benchmark memo
+                        saved by a previous run with the same machine /
+                        seed / granularity (implies --rank); a warm rerun
+                        pays for zero new benchmarks and prints
+                        byte-identical ranking tables
   sampler  (reads a Sampler script from stdin)
   list     (available figure ids / cpus / libraries)
 ";
+
+/// Comma-separated `--n`/`--b` size lists (`"48,64,96"` or a single
+/// value), shared by `select`, `blocksize` and `contract`.
+fn parse_sizes(list: &str, flag: &str) -> Vec<usize> {
+    list.split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .unwrap_or_else(|_| panic!("--{flag} expects integer size(s), got '{s}'"))
+        })
+        .collect()
+}
+
+/// `--store DIR` handling: an opened warm store, or `None` without the
+/// flag. An unusable directory is fatal (the user asked for persistence).
+fn open_warm(args: &Args) -> Option<WarmStore> {
+    args.get("store").map(|dir| {
+        WarmStore::open(Path::new(dir)).unwrap_or_else(|e| {
+            eprintln!("warm store: {e}");
+            std::process::exit(1);
+        })
+    })
+}
+
+/// Load a slot from the warm store (if any). Mismatched or missing
+/// snapshots return `None` (cold start, recorded in the status log);
+/// corrupt snapshots are fatal with the path in the message — silently
+/// recomputing over a damaged store would hide real state loss.
+fn warm_load<T: Persist>(warm: &Option<WarmStore>, slot: &str, key: &StoreKey) -> Option<T> {
+    let w = warm.as_ref()?;
+    w.load::<T>(slot, key).unwrap_or_else(|e| {
+        eprintln!("warm store: {e}");
+        std::process::exit(1);
+    })
+}
+
+/// Save a slot to the warm store (if any). A failed save is fatal: the
+/// user asked for persistence, and a half-persisted state is worse than
+/// a loud stop (the atomic rename means the previous snapshot survives).
+fn warm_save<T: Persist>(warm: &Option<WarmStore>, slot: &str, key: &StoreKey, value: &T) {
+    if let Some(w) = warm {
+        w.save(slot, key, value).unwrap_or_else(|e| {
+            eprintln!("warm store: {e}");
+            std::process::exit(1);
+        });
+    }
+}
+
+/// Print accumulated warm-store events. Deterministic functions of the
+/// snapshot contents, so stdout stays byte-stable for any `--jobs`.
+fn print_warm_status(warm: &Option<WarmStore>) {
+    if let Some(w) = warm {
+        for line in w.take_status() {
+            println!("warm store: {line}");
+        }
+    }
+}
+
+/// The blocked-prediction warm state shared by `select` and `blocksize`:
+/// a coverage-scoped model store and its estimate cache. The slot names
+/// built here are the cross-command contract — both commands read and
+/// write the same `models_n{N}_b{B}` / `model_cache_n{N}_b{B}` slots, so
+/// warm state transfers between them.
+struct WarmPrediction {
+    store: Arc<dlapm::modeling::ModelStore>,
+    cache: Arc<ModelCache>,
+    cache_slot: String,
+    cache_key: StoreKey,
+}
+
+impl WarmPrediction {
+    /// Load (or cold-start) the model store, ensure coverage for `algs`
+    /// (persisting when generation added models), and load the matching
+    /// estimate cache. Both artifacts are pure functions of
+    /// `(machine, seed, coverage bounds)`, which the snapshot headers
+    /// pin down.
+    fn open(
+        warm: &Option<WarmStore>,
+        engine: &Arc<Engine>,
+        machine: &Machine,
+        algs: &[&dyn dlapm::predict::BlockedAlg],
+        cov_n: usize,
+        cov_b: usize,
+        seed: u64,
+    ) -> WarmPrediction {
+        let (models_slot, models_key) =
+            dlapm::store::models_slot(&machine.label(), seed, cov_n, cov_b);
+        let mut store = warm_load::<dlapm::modeling::ModelStore>(warm, &models_slot, &models_key)
+            .unwrap_or_else(|| dlapm::modeling::ModelStore::new(&machine.label()));
+        let generated = dlapm::predict::measurement::coverage::ensure_models_with(
+            engine, machine, &mut store, algs, cov_n, cov_b, seed,
+        )
+        .expect("model generation failed");
+        if generated > 0 {
+            warm_save(warm, &models_slot, &models_key, &store);
+        }
+        let (cache_slot, cache_key) =
+            dlapm::store::model_cache_slot(&machine.label(), seed, cov_n, cov_b);
+        let cache =
+            Arc::new(warm_load::<ModelCache>(warm, &cache_slot, &cache_key).unwrap_or_default());
+        print_warm_status(warm);
+        WarmPrediction { store: Arc::new(store), cache, cache_slot, cache_key }
+    }
+
+    /// Persist the estimate cache only if this run computed anything new
+    /// (prewarm inserts and ranking misses both bump the miss counter),
+    /// then print the events — a fully warm run skips the rewrite.
+    fn save_cache(&self, warm: &Option<WarmStore>) {
+        if self.cache.misses() > 0 {
+            warm_save(warm, &self.cache_slot, &self.cache_key, self.cache.as_ref());
+        }
+        print_warm_status(warm);
+    }
+}
 
 /// Shared `--jobs N` handling: a parallel engine sized to the flag, or to
 /// the hardware when the flag is absent.
@@ -88,7 +220,12 @@ fn figures_cmd(args: &Args) {
     let out_dir = args.get_or("out-dir", "out");
     let report = Report::new(Path::new(out_dir), args.flag("quiet"));
     let scale = if args.get_or("scale", "quick") == "full" { Scale::Full } else { Scale::Quick };
-    let ctx = Ctx { report: &report, scale, seed: args.get_u64("seed", 0x5EED) };
+    let ctx = Ctx {
+        report: &report,
+        scale,
+        seed: args.get_u64("seed", 0x5EED),
+        store_dir: args.get("store").map(std::path::PathBuf::from),
+    };
     let ids: Vec<String> = args.positional[1..].to_vec();
     let all = args.flag("all") || ids.is_empty();
     let ran = figures::run(&ids, all, &ctx);
@@ -191,48 +328,161 @@ fn select_cmd(args: &Args) {
     use dlapm::select::{BlockedCandidate, Candidate, ValidateCfg};
     let machine = machine_from(args);
     let engine = engine_from(args);
+    let seed = args.get_u64("seed", 0x5EED);
     let algs = default_algs(args.get_or("op", "potrf"));
     let refs = alg_refs(&algs);
-    let mut store = dlapm::modeling::ModelStore::new(&machine.label());
-    let (n, b) = (args.get_usize("n", 2104), args.get_usize("b", 128));
-    dlapm::predict::measurement::coverage::ensure_models_with(
-        &engine, &machine, &mut store, &refs, n.max(520), 536, args.get_u64("seed", 0x5EED),
-    )
-    .expect("model generation failed");
-    // One model store + one estimate cache shared by every candidate:
-    // the variants reuse the same kernel calls, so later candidates hit.
-    let store = Arc::new(store);
-    let cache = Arc::new(ModelCache::new());
-    let validate = args.flag("validate");
-    let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
-        .iter()
-        .map(|alg| {
-            Arc::new(BlockedCandidate {
-                store: Arc::clone(&store),
-                cache: Arc::clone(&cache),
-                alg: Arc::clone(alg),
-                n,
-                b,
-                label: None,
-                validate: validate.then(|| ValidateCfg {
-                    machine: machine.clone(),
-                    reps: args.get_usize("reps", 5),
-                    seed: args.get_u64("seed", 0x5EED),
-                    engine: Arc::clone(&engine),
-                }),
-            }) as _
-        })
-        .collect();
-    let ranked =
-        dlapm::select::rank_candidates_par(&engine, &cands).expect("selection ranking failed");
-    println!("predicted ranking for n={n}, b={b} on {}:", machine.label());
-    let (text, csv) = dlapm::report::selection_table(&ranked);
-    print!("{text}");
-    if let Some(q) = dlapm::select::selection_quality(&ranked) {
-        println!("  selection quality: {q:.4} (selected / true fastest measured)");
+    // `--n A,B --b C,D` sweeps the whole (n, b) grid: one ranking per
+    // grid point, every prediction served by one shared estimate cache
+    // prewarmed with ordered batched sweeps (`blocksize::prewarm_grid`).
+    let ns = parse_sizes(args.get_or("n", "2104"), "n");
+    let bs = parse_sizes(args.get_or("b", "128"), "b");
+    let grid: Vec<(usize, usize)> =
+        ns.iter().flat_map(|&n| bs.iter().map(move |&b| (n, b))).collect();
+    let cov_n = ns.iter().copied().max().unwrap_or(520).max(520);
+    let cov_b = bs.iter().copied().max().unwrap_or(536).max(536);
+
+    // One model store + one estimate cache shared by every candidate and
+    // every grid point: the variants reuse the same kernel calls, so
+    // later candidates (and later grid points) mostly hit.
+    let warm = open_warm(args);
+    let wp = WarmPrediction::open(&warm, &engine, &machine, &refs, cov_n, cov_b, seed);
+    let (store, cache) = (Arc::clone(&wp.store), Arc::clone(&wp.cache));
+    for alg in &refs {
+        dlapm::predict::blocksize::prewarm_grid(&store, &cache, *alg, &grid);
     }
+    let validate = args.flag("validate");
+    let mut all_csv = String::new();
+    for &(n, b) in &grid {
+        let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
+            .iter()
+            .map(|alg| {
+                Arc::new(BlockedCandidate {
+                    store: Arc::clone(&store),
+                    cache: Arc::clone(&cache),
+                    alg: Arc::clone(alg),
+                    n,
+                    b,
+                    label: None,
+                    validate: validate.then(|| ValidateCfg {
+                        machine: machine.clone(),
+                        reps: args.get_usize("reps", 5),
+                        seed,
+                        engine: Arc::clone(&engine),
+                    }),
+                }) as _
+            })
+            .collect();
+        let ranked =
+            dlapm::select::rank_candidates_par(&engine, &cands).expect("selection ranking failed");
+        println!("predicted ranking for n={n}, b={b} on {}:", machine.label());
+        let (text, csv) = dlapm::report::selection_table(&ranked);
+        print!("{text}");
+        if let Some(q) = dlapm::select::selection_quality(&ranked) {
+            println!("  selection quality: {q:.4} (selected / true fastest measured)");
+        }
+        all_csv.push_str(&format!("# n={n} b={b}\n{csv}"));
+    }
+    wp.save_cache(&warm);
     if let Some(path) = args.get("csv") {
-        std::fs::write(path, &csv).expect("writing --csv file");
+        std::fs::write(path, &all_csv).expect("writing --csv file");
+    }
+    eprintln!("[dlapm] estimate cache: {} hits / {} misses", cache.hits(), cache.misses());
+}
+
+/// §4.6 as a CLI surface: rank every candidate block size of one blocked
+/// algorithm through the selection core (`optimize_blocksize_with` over a
+/// shared, prewarmed — and optionally warm-started — estimate cache) and
+/// report the predicted optimum per problem size; `--validate` adds the
+/// measured optimum and the performance-yield table.
+fn blocksize_cmd(args: &Args) {
+    use dlapm::predict::blocksize;
+    let machine = machine_from(args);
+    let engine = engine_from(args);
+    let seed = args.get_u64("seed", 0x5EED);
+    let op = args.get_or("op", "potrf");
+    let algs = default_algs(op);
+    if algs.is_empty() {
+        eprintln!("unknown --op '{op}' (expected potrf, trtri, trsyl, all or full)");
+        std::process::exit(2);
+    }
+    let alg: Arc<dyn dlapm::predict::BlockedAlg + Send + Sync> = match args.get("alg") {
+        None => Arc::clone(&algs[0]),
+        Some(name) => match algs.iter().find(|a| a.name() == name) {
+            Some(a) => Arc::clone(a),
+            None => {
+                let known: Vec<String> = algs.iter().map(|a| a.name()).collect();
+                eprintln!("unknown --alg '{name}' for --op {op} (available: {})", known.join(", "));
+                std::process::exit(2);
+            }
+        },
+    };
+    let ns = parse_sizes(args.get_or("n", "2000"), "n");
+    let bs = args.get("b").map(|l| parse_sizes(l, "b")).unwrap_or_else(blocksize::standard_bs);
+    assert!(!bs.is_empty(), "--b expects at least one block size");
+    let cov_n = ns.iter().copied().max().unwrap_or(520).max(520);
+    let cov_b = bs.iter().copied().max().unwrap_or(536).max(536);
+
+    let warm = open_warm(args);
+    let alg_ref: &dyn dlapm::predict::BlockedAlg = &*alg;
+    let wp = WarmPrediction::open(&warm, &engine, &machine, &[alg_ref], cov_n, cov_b, seed);
+    let (store, cache) = (Arc::clone(&wp.store), Arc::clone(&wp.cache));
+
+    let validate = args.flag("validate");
+    let reps = args.get_usize("reps", 3);
+    let mut yield_rows = Vec::new();
+    let mut all_csv = String::new();
+    for &n in &ns {
+        let (sweep, ranked) =
+            blocksize::optimize_blocksize_with(&engine, &store, &cache, &alg, n, &bs)
+                .expect("block-size ranking failed");
+        println!(
+            "block-size ranking for {} at n={n} on {} ({} candidate block size(s)):",
+            alg.name(),
+            machine.label(),
+            bs.len()
+        );
+        let (text, csv) = dlapm::report::selection_table(&ranked);
+        let shown = ranked.len().min(10);
+        for line in text.lines().take(shown) {
+            println!("{line}");
+        }
+        if ranked.len() > shown {
+            println!("  ... {} more candidate(s); full ranking in --csv", ranked.len() - shown);
+        }
+        println!("  predicted optimal block size for n={n}: b={}", sweep.b_pred);
+        all_csv.push_str(&format!("# n={n}\n{csv}"));
+        if validate {
+            // Measure on a coarse subgrid (full executions are the
+            // expensive reference); the fine sweep's b_pred is scored
+            // against the subgrid's empirical optimum.
+            let vstep = (bs.len() / 8).max(1);
+            let vbs: Vec<usize> = bs.iter().copied().step_by(vstep).collect();
+            let vsweep = blocksize::BlockSizeSweep {
+                n,
+                bs: vbs,
+                predicted_med: Vec::new(),
+                b_pred: sweep.b_pred,
+            };
+            let y = blocksize::validate_blocksize(&machine, alg.as_ref(), &vsweep, reps, seed);
+            yield_rows.push(vec![
+                n.to_string(),
+                y.b_pred.to_string(),
+                y.b_opt.to_string(),
+                format!("{:.1}%", y.yield_frac * 100.0),
+            ]);
+        }
+    }
+    if validate {
+        println!(
+            "block-size yield for {} ({} validation rep(s) per grid point):",
+            alg.name(),
+            reps
+        );
+        print!("{}", dlapm::util::plot::table(&["n", "b_pred", "b_opt", "yield"], &yield_rows));
+    }
+    wp.save_cache(&warm);
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, &all_csv).expect("writing --csv file");
     }
     eprintln!("[dlapm] estimate cache: {} hits / {} misses", cache.hits(), cache.misses());
 }
@@ -263,12 +513,7 @@ fn contract_cmd(args: &Args) {
     // `--n` accepts a comma-separated size list (sweep mode); `--sweep
     // A,B,C` is an alias implying `--rank`.
     let size_list = args.get("sweep").or_else(|| args.get("n")).unwrap_or("64").to_string();
-    let sizes: Vec<usize> = size_list
-        .split(',')
-        .map(|s| {
-            s.trim().parse().unwrap_or_else(|_| panic!("--n expects integer size(s), got '{s}'"))
-        })
-        .collect();
+    let sizes = parse_sizes(&size_list, "n");
     let base = dlapm::tensor::Contraction::parse(&spec).expect("bad --spec");
     let sized = |n: usize| {
         let dims: Vec<(char, usize)> = base
@@ -279,15 +524,16 @@ fn contract_cmd(args: &Args) {
         base.clone().with_dims(&dims)
     };
 
-    // --validate/--sweep/--csv/--jobs/--preset/--memo-granularity only
-    // make sense for the selection core, so any of them implies --rank
-    // (the legacy quick view would silently drop them otherwise).
+    // --validate/--sweep/--csv/--jobs/--preset/--memo-granularity/--store
+    // only make sense for the selection core, so any of them implies
+    // --rank (the legacy quick view would silently drop them otherwise).
     let rank_mode = args.flag("rank")
         || args.flag("validate")
         || args.get("sweep").is_some()
         || args.get("csv").is_some()
         || args.get("jobs").is_some()
         || args.get("memo-granularity").is_some()
+        || args.get("store").is_some()
         || preset.is_some()
         || sizes.len() > 1;
     if !rank_mode {
@@ -319,12 +565,26 @@ fn contract_cmd(args: &Args) {
     // Clamped like Memo::with_granularity, so the printed label always
     // matches the granularity actually in effect.
     let granularity = args.get_usize("memo-granularity", 1).max(1);
-    let memo = Arc::new(dlapm::tensor::MicroMemo::with_granularity(granularity));
-    let exact_memo = (granularity > 1).then(|| Arc::new(dlapm::tensor::MicroMemo::new()));
+    // Warm-start slots, one per granularity: at g > 1 the exact reference
+    // memo shares the g=1 slot, so an exact-keyed sweep and a later
+    // coarse sweep's reference pass feed each other.
+    let warm = open_warm(args);
+    let memo_slot_key = |g: usize| dlapm::store::micro_memo_slot(&machine.label(), seed, g);
+    let load_memo = |g: usize| -> dlapm::tensor::MicroMemo {
+        let (slot, key) = memo_slot_key(g);
+        warm_load::<dlapm::tensor::MicroMemo>(&warm, &slot, &key)
+            .unwrap_or_else(|| dlapm::tensor::MicroMemo::with_granularity(g))
+    };
+    let memo = Arc::new(load_memo(granularity));
+    let exact_memo = (granularity > 1).then(|| Arc::new(load_memo(1)));
+    print_warm_status(&warm);
     let validate = args.flag("validate");
     let reps = args.get_usize("reps", 3);
-    let mut prev_cost = 0.0;
-    let mut prev_runs = 0usize;
+    // A warm-loaded memo starts with paid-for benchmarks; baseline the
+    // per-size "new cost" deltas on them so a warm rerun reports zero new
+    // micro-benchmarks instead of re-claiming the loaded ones.
+    let (mut prev_cost, mut prev_runs) = micro::memo_totals(&memo);
+    let (base_cost, base_runs, base_len) = (prev_cost, prev_runs, memo.len());
     let mut all_csv = String::new();
     for &n in &sizes {
         let con = sized(n);
@@ -429,12 +689,31 @@ fn contract_cmd(args: &Args) {
         (prev_cost, prev_runs) = (total_cost, total_runs);
     }
     let (total_cost, total_runs) = micro::memo_totals(&memo);
+    // This run's cost: warm-loaded benchmarks were paid for by earlier
+    // runs (their cost, runs and entries are part of the baseline, not
+    // of this invocation — a warm rerun reports all-zero new work).
     println!(
-        "total micro-benchmark cost: {:.6} ms over {} kernel runs in {} unique benchmark(s)",
-        total_cost * 1e3,
-        total_runs,
+        "total micro-benchmark cost: {:.6} ms over {} kernel runs in {} new unique benchmark(s) \
+         ({} memoized)",
+        (total_cost - base_cost) * 1e3,
+        total_runs - base_runs,
+        memo.len() - base_len,
         memo.len()
     );
+    // Persist only when this run measured something new — a fully warm
+    // rerun skips the identical rewrite (misses() is 0 exactly when no
+    // benchmark ran).
+    if memo.misses() > 0 {
+        let (slot, key) = memo_slot_key(granularity);
+        warm_save(&warm, &slot, &key, memo.as_ref());
+    }
+    if let Some(exact) = &exact_memo {
+        if exact.misses() > 0 {
+            let (slot, key) = memo_slot_key(1);
+            warm_save(&warm, &slot, &key, exact.as_ref());
+        }
+    }
+    print_warm_status(&warm);
     if let Some(path) = args.get("csv") {
         std::fs::write(path, &all_csv).expect("writing --csv file");
     }

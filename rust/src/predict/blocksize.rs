@@ -40,18 +40,28 @@ pub fn b_name(b: usize) -> String {
     format!("b{b:05}")
 }
 
-/// Seed the shared estimate cache for an ordered block-size sweep: the
+/// Seed the shared estimate cache for an ordered `(n, b)` sweep: the
 /// sweep's kernel calls are grouped by model case and each case's size
 /// points are evaluated in sweep order with one
 /// [`evaluate_batch`](crate::modeling::model::PerfModel::evaluate_batch)
 /// pass. Batched results are identical to per-point estimates, so the
 /// subsequent cached predictions stay bit-identical to uncached ones.
-fn prewarm_sweep(store: &ModelStore, cache: &ModelCache, alg: &dyn BlockedAlg, n: usize, bs: &[usize]) {
+///
+/// Shared by every call-grid sweep: block-size optimization (one `n`,
+/// many `b`), `select` over `(n, b)` grids, and the ch4 accuracy
+/// heat-maps — walk the grid in its natural order so consecutive points
+/// land in the same model piece.
+pub fn prewarm_grid(
+    store: &ModelStore,
+    cache: &ModelCache,
+    alg: &dyn BlockedAlg,
+    points: &[(usize, usize)],
+) {
     use std::collections::{BTreeMap, HashSet};
     // Per case: points in first-encounter (= sweep) order, deduplicated
     // on their cache-rounded form.
     let mut per_case: BTreeMap<String, (Vec<Vec<usize>>, HashSet<Vec<usize>>)> = BTreeMap::new();
-    for &b in bs {
+    for &(n, b) in points {
         for call in alg.calls(n, b) {
             if !call.modeled() {
                 continue;
@@ -110,7 +120,8 @@ pub fn optimize_blocksize_with(
     bs: &[usize],
 ) -> Result<(BlockSizeSweep, Vec<Ranked>)> {
     assert!(!bs.is_empty(), "empty block-size sweep");
-    prewarm_sweep(store, cache, alg.as_ref(), n, bs);
+    let points: Vec<(usize, usize)> = bs.iter().map(|&b| (n, b)).collect();
+    prewarm_grid(store, cache, alg.as_ref(), &points);
     let cands: Vec<Arc<dyn Candidate + Send + Sync>> = bs
         .iter()
         .map(|&b| {
@@ -278,6 +289,33 @@ mod tests {
             assert_eq!(sweep.b_pred, bs[ranked[0].index]);
             assert!(cache.hits() > 0, "candidates must hit the prewarmed cache");
         }
+    }
+
+    #[test]
+    fn grid_prewarm_matches_uncached_predictions_bit_for_bit() {
+        // The generalized (n, b) grid prewarm (select grids, ch4
+        // heat-maps) must stay bit-identical to per-point predictions.
+        let machine =
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let (store, alg) = arcs(&machine);
+        let cache = ModelCache::new();
+        let grid: Vec<(usize, usize)> = [1000usize, 1500]
+            .iter()
+            .flat_map(|&n| (24..=168).step_by(48).map(move |b| (n, b)))
+            .collect();
+        prewarm_grid(&store, &cache, alg.as_ref(), &grid);
+        for &(n, b) in &grid {
+            let warm = crate::predict::predictor::predict_calls_cached(
+                &store,
+                &alg.calls(n, b),
+                &cache,
+            )
+            .time
+            .med;
+            let cold = predict_calls(&store, &alg.calls(n, b)).time.med;
+            assert_eq!(warm.to_bits(), cold.to_bits(), "n={n} b={b}");
+        }
+        assert!(cache.hits() > 0, "grid predictions must hit the prewarmed cache");
     }
 
     #[test]

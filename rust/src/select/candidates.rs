@@ -187,6 +187,51 @@ mod tests {
     }
 
     #[test]
+    fn warm_loaded_memo_reranks_bit_identically_with_zero_new_benchmarks() {
+        // The warm-start contract end-to-end at the candidate layer: a
+        // memo round-tripped through the Persist codec (what the warm
+        // store writes to disk) must reproduce the cold ranking bit for
+        // bit while running zero new micro-benchmarks.
+        use crate::store::Persist;
+        let con = Contraction::example_abc(32);
+        let m = machine();
+        let engine = Arc::new(Engine::sequential());
+        let mk = |memo: &Arc<MicroMemo>| -> Vec<Arc<dyn Candidate + Send + Sync>> {
+            generate(&con)
+                .into_iter()
+                .map(|alg| {
+                    Arc::new(TensorCandidate {
+                        machine: m.clone(),
+                        con: con.clone(),
+                        alg,
+                        elem: Elem::D,
+                        seed: 11,
+                        memo: Arc::clone(memo),
+                        engine: Arc::clone(&engine),
+                        validate_reps: 0,
+                    }) as _
+                })
+                .collect()
+        };
+        let cold_memo = Arc::new(MicroMemo::new());
+        let cold = rank_candidates_par(&engine, &mk(&cold_memo)).unwrap();
+        let warm_memo: MicroMemo =
+            Persist::from_json(&Persist::to_json(&*cold_memo)).expect("codec roundtrip");
+        assert_eq!(warm_memo.len(), cold_memo.len());
+        let warm_memo = Arc::new(warm_memo);
+        let warm = rank_candidates_par(&engine, &mk(&warm_memo)).unwrap();
+        assert_eq!(warm_memo.misses(), 0, "a warm memo must not run new benchmarks");
+        assert_eq!(warm_memo.len(), cold_memo.len(), "no new keys either");
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.name, b.name);
+            let (pa, pb) = (&a.predicted, &b.predicted);
+            assert_eq!(pa.time.med.to_bits(), pb.time.med.to_bits(), "{}", a.name);
+            assert_eq!(pa.cost.to_bits(), pb.cost.to_bits(), "{}", a.name);
+            assert_eq!(a.predicted.work, b.predicted.work);
+        }
+    }
+
+    #[test]
     fn tensor_candidate_measure_is_deterministic() {
         let con = Contraction::example_abc(24);
         let m = machine();

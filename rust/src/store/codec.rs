@@ -1,0 +1,314 @@
+//! [`Persist`] implementations for the three warm artifacts.
+//!
+//! All three serialize in sorted-key order (`BTreeMap` objects, explicit
+//! sorted folds), so snapshots are byte-identical across runs and worker
+//! counts — the same determinism discipline as the stdout paths.
+
+use std::collections::BTreeMap;
+
+use crate::engine::{Memo, ModelCache};
+use crate::modeling::ModelStore;
+use crate::tensor::micro::MicroTiming;
+use crate::tensor::MicroMemo;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::Persist;
+
+// ------------------------------------------------------------- Summary
+fn summary_to_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("min", Json::Num(s.min)),
+        ("med", Json::Num(s.med)),
+        ("max", Json::Num(s.max)),
+        ("mean", Json::Num(s.mean)),
+        ("std", Json::Num(s.std)),
+    ])
+}
+
+fn summary_from_json(j: &Json) -> Result<Summary> {
+    let field = |k: &str| -> Result<f64> {
+        j.req(k)?.as_f64().with_context(|| format!("'{k}' must be a number"))
+    };
+    Ok(Summary {
+        min: field("min")?,
+        med: field("med")?,
+        max: field("max")?,
+        mean: field("mean")?,
+        std: field("std")?,
+    })
+}
+
+/// Strict non-negative-integer decode: a damaged value (null, string,
+/// or a fractional/negative number) is an error, never a silently
+/// truncated or saturated cast — the warm store's "corrupt is loud"
+/// contract.
+fn strict_usize(v: &Json) -> Result<usize> {
+    let n = v.as_f64().context("expected an integer")?;
+    crate::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= usize::MAX as f64,
+        "expected a non-negative integer, got {n}"
+    );
+    Ok(n as usize)
+}
+
+/// [`strict_usize`] for an object field, with the key in the error.
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    strict_usize(j.req(key)?).with_context(|| format!("field '{key}'"))
+}
+
+/// Strict integer-array decode (e.g. a cache entry's `sizes`): one
+/// damaged element would otherwise file the value under a wrong,
+/// shortened cache key.
+fn arr_usize(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr().context("expected array")?.iter().map(strict_usize).collect()
+}
+
+// ---------------------------------------------------------- ModelCache
+/// The blocked scenario's prediction artifacts: memoized `(case, rounded
+/// sizes) -> Summary` estimates. Entries are pure functions of the models
+/// the cache was filled from, so the snapshot is only valid under the
+/// `(machine, seed, coverage scope)` the [`WarmStore`](super::WarmStore)
+/// header pins down.
+impl Persist for ModelCache {
+    fn to_json(&self) -> Json {
+        let cases = self.fold_sorted(BTreeMap::<String, Json>::new(), |mut acc, case, sizes, sum| {
+            let entry = Json::obj(vec![
+                ("sizes", Json::arr_usize(sizes)),
+                ("sum", summary_to_json(sum)),
+            ]);
+            match acc.entry(case.to_string()).or_insert_with(|| Json::Arr(Vec::new())) {
+                Json::Arr(list) => list.push(entry),
+                _ => unreachable!("case slots are always arrays"),
+            }
+            acc
+        });
+        Json::obj(vec![
+            ("granularity", Json::Num(self.granularity() as f64)),
+            ("cases", Json::Obj(cases)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ModelCache> {
+        let cache = ModelCache::with_granularity(req_usize(j, "granularity")?);
+        for (case, entries) in j.req("cases")?.as_obj().context("'cases' must be an object")? {
+            let list =
+                entries.as_arr().with_context(|| format!("case '{case}' must hold an array"))?;
+            for e in list {
+                let sizes = arr_usize(e.req("sizes")?)?;
+                cache.preload(case, &sizes, summary_from_json(e.req("sum")?)?);
+            }
+        }
+        Ok(cache)
+    }
+
+    fn entries(&self) -> usize {
+        self.len()
+    }
+}
+
+// ----------------------------------------------------------- MicroMemo
+fn timing_to_json(t: &MicroTiming) -> Json {
+    Json::obj(vec![
+        ("cold_total", Json::Num(t.cold_total)),
+        ("cold_runs", Json::Num(t.cold_runs as f64)),
+        ("steady", Json::Num(t.steady)),
+        ("kernel_runs", Json::Num(t.kernel_runs as f64)),
+        ("cost", Json::Num(t.cost)),
+    ])
+}
+
+fn timing_from_json(j: &Json) -> Result<MicroTiming> {
+    let num = |k: &str| -> Result<f64> {
+        j.req(k)?.as_f64().with_context(|| format!("'{k}' must be a number"))
+    };
+    Ok(MicroTiming {
+        cold_total: num("cold_total")?,
+        cold_runs: req_usize(j, "cold_runs")?,
+        steady: num("steady")?,
+        kernel_runs: req_usize(j, "kernel_runs")?,
+        cost: num("cost")?,
+    })
+}
+
+/// Measured micro-benchmark timings keyed by
+/// [`precondition_key`](crate::tensor::micro::precondition_key). The keys
+/// already embed the machine label and the quantized kernel signature;
+/// the header additionally pins the seed (benchmark sessions derive from
+/// `key_seed(seed, key)`) and the granularity the key builders honoured.
+impl Persist for Memo<MicroTiming> {
+    fn to_json(&self) -> Json {
+        let entries = self.fold_sorted(BTreeMap::<String, Json>::new(), |mut acc, key, timing| {
+            acc.insert(key.to_string(), timing_to_json(timing));
+            acc
+        });
+        Json::obj(vec![
+            ("granularity", Json::Num(self.granularity() as f64)),
+            ("entries", Json::Obj(entries)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<MicroMemo> {
+        let memo = MicroMemo::with_granularity(req_usize(j, "granularity")?);
+        for (key, tj) in j.req("entries")?.as_obj().context("'entries' must be an object")? {
+            memo.preload(key, timing_from_json(tj).with_context(|| format!("entry '{key}'"))?);
+        }
+        Ok(memo)
+    }
+
+    fn entries(&self) -> usize {
+        self.len()
+    }
+}
+
+// ---------------------------------------------------------- ModelStore
+/// The model store already owns a JSON codec (it is the artifact the
+/// paper persists); `Persist` delegates so the warm store can manage it
+/// under the same versioned-header discipline as the caches.
+impl Persist for ModelStore {
+    fn to_json(&self) -> Json {
+        // Resolves to the inherent codec (inherent methods win over trait
+        // methods in path lookup), not to this impl.
+        ModelStore::to_json(self)
+    }
+
+    fn from_json(j: &Json) -> Result<ModelStore> {
+        ModelStore::from_json(j)
+    }
+
+    fn entries(&self) -> usize {
+        self.models.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_roundtrip_is_bit_exact() {
+        let s = Summary {
+            min: 1.0 / 3.0,
+            med: 2.5e-7,
+            max: 1234.0,
+            mean: 0.1 + 0.2, // a value with no short decimal form
+            std: 3.9e-12,
+        };
+        let text = summary_to_json(&s).render();
+        let back = summary_from_json(&Json::parse(&text).unwrap()).unwrap();
+        for (a, b) in [
+            (s.min, back.min),
+            (s.med, back.med),
+            (s.max, back.max),
+            (s.mean, back.mean),
+            (s.std, back.std),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn model_cache_roundtrip_preserves_entries_and_granularity() {
+        let cache = ModelCache::with_granularity(8);
+        cache.get_or_insert_with("dgemm_a1", &[126, 64, 8], |s| {
+            Summary::constant(s[0] as f64 / 3.0)
+        });
+        cache.get_or_insert_with("dgemm_a1", &[256], |_| Summary::constant(0.25));
+        cache.get_or_insert_with("dtrsm_LLNN_a1", &[512, 96], |_| Summary::constant(1.0 / 7.0));
+        let text = Persist::to_json(&cache).render();
+        let back = <ModelCache as Persist>::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.granularity(), 8);
+        assert_eq!(back.len(), cache.len());
+        assert_eq!(Persist::entries(&back), 3);
+        // Loaded entries are contents-warm but counter-cold.
+        assert_eq!((back.hits(), back.misses()), (0, 0));
+        // Bit-exact values under the original keys (peek is idempotent on
+        // rounded sizes, so the pre-rounded snapshot keys hit exactly).
+        let a = cache.peek("dgemm_a1", &[126, 64, 8]).unwrap();
+        let b = back.peek("dgemm_a1", &[126, 64, 8]).unwrap();
+        assert_eq!(a.med.to_bits(), b.med.to_bits());
+        // And re-serializing the loaded cache reproduces the snapshot.
+        assert_eq!(Persist::to_json(&back).render(), text);
+    }
+
+    #[test]
+    fn micro_memo_roundtrip_preserves_timings() {
+        let memo = MicroMemo::with_granularity(4);
+        let t = MicroTiming {
+            cold_total: 1.0 / 3.0,
+            cold_runs: 2,
+            steady: 5.5e-6,
+            kernel_runs: 10,
+            cost: 7.77e-5,
+        };
+        memo.preload("machine|dgemm|ld8,8,8|A:1x2/3m4i5", t);
+        memo.preload("machine|dger|other \"quoted\" key", MicroTiming { steady: 0.0, ..t });
+        let text = Persist::to_json(&memo).render();
+        let back = <MicroMemo as Persist>::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.granularity(), 4);
+        assert_eq!(back.len(), 2);
+        let got = back.peek("machine|dgemm|ld8,8,8|A:1x2/3m4i5").unwrap();
+        assert_eq!(got, t);
+        assert_eq!(got.cold_total.to_bits(), t.cold_total.to_bits());
+        assert_eq!(Persist::to_json(&back).render(), text);
+    }
+
+    #[test]
+    fn model_store_persist_delegates_to_inherent_codec() {
+        let store = ModelStore::new("haswell/openblas/1t");
+        assert_eq!(Persist::entries(&store), 0);
+        let j = Persist::to_json(&store);
+        assert_eq!(j.get("machine").and_then(|m| m.as_str()), Some("haswell/openblas/1t"));
+        let back = <ModelStore as Persist>::from_json(&j).unwrap();
+        assert_eq!(back.machine_label, store.machine_label);
+    }
+
+    #[test]
+    fn malformed_snapshots_error_instead_of_panicking() {
+        let bad = Json::parse(r#"{"granularity": 1}"#).unwrap();
+        assert!(<MicroMemo as Persist>::from_json(&bad).is_err());
+        assert!(<ModelCache as Persist>::from_json(&bad).is_err());
+        let bad_entry =
+            Json::parse(r#"{"granularity": 1, "entries": {"k": {"steady": 1.0}}}"#).unwrap();
+        let err = <MicroMemo as Persist>::from_json(&bad_entry).unwrap_err();
+        assert!(err.to_string().contains("entry 'k'"), "{err}");
+    }
+
+    #[test]
+    fn damaged_integer_fields_error_instead_of_truncating() {
+        // Fractional or negative counters must not load via saturating
+        // casts (9.5 -> 9, -3 -> 0): corrupt is loud.
+        for (field, value) in [("kernel_runs", "9.5"), ("cold_runs", "-3")] {
+            let text = format!(
+                r#"{{"granularity": 1, "entries": {{"k": {{"cold_total": 0.1,
+                    "cold_runs": 2, "steady": 0.2, "kernel_runs": 9, "cost": 0.3,
+                    "{field}": {value}}}}}}}"#
+            );
+            let j = Json::parse(&text).unwrap();
+            assert!(
+                <MicroMemo as Persist>::from_json(&j).is_err(),
+                "{field}={value} must be rejected"
+            );
+        }
+        let j = Json::parse(r#"{"granularity": 2.7, "entries": {}}"#).unwrap();
+        assert!(<MicroMemo as Persist>::from_json(&j).is_err(), "fractional granularity");
+    }
+
+    #[test]
+    fn damaged_sizes_error_instead_of_loading_under_a_wrong_key() {
+        // A null (or fractional) element in a sizes array must not be
+        // dropped/truncated into a shorter, wrong cache key.
+        for sizes in ["[128, null]", "[128.7, 64]", "[-3]"] {
+            let text = format!(
+                r#"{{"granularity": 1, "cases": {{"c": [{{"sizes": {sizes},
+                    "sum": {{"min":1,"med":1,"max":1,"mean":1,"std":0}}}}]}}}}"#
+            );
+            let j = Json::parse(&text).unwrap();
+            assert!(
+                <ModelCache as Persist>::from_json(&j).is_err(),
+                "sizes {sizes} must be rejected"
+            );
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Warm-start persistence: a versioned on-disk store for the framework's
+//! warm state (the paper's "models are generated automatically once per
+//! platform" economics, applied to *everything* a run pays for once).
+//!
+//! Three layers, all over [`crate::util::json`] (zero dependencies):
+//!
+//! * [`Persist`] — `to_json`/`from_json` serialization, mirroring
+//!   [`PerfModel`](crate::modeling::model::PerfModel)'s hand-rolled
+//!   codecs. Implemented ([`codec`]) by the three warm artifacts:
+//!   [`ModelStore`](crate::modeling::ModelStore) (generated performance
+//!   models), [`ModelCache`](crate::engine::ModelCache) (memoized model
+//!   estimates — the blocked scenario's prediction artifacts) and
+//!   [`MicroMemo`](crate::tensor::MicroMemo) (measured micro-benchmark
+//!   timings, via `MicroTiming` codecs).
+//! * [`WarmStore`] ([`warm`]) — the on-disk manager: one directory per
+//!   machine label, one JSON snapshot per *slot* (artifact), each carrying
+//!   a validated header `(schema_version, machine_label, granularity,
+//!   seed, scope)`. Saves are atomic (write temp + rename); loads of a
+//!   stale or mismatched snapshot silently start cold, while corrupt
+//!   snapshots surface a [`util::error`](crate::util::error) with the
+//!   offending path. Load/save statistics are deterministic functions of
+//!   the snapshot contents, so CLI paths may print them on byte-stable
+//!   stdout.
+//! * CLI integration — `--store DIR` on `contract`, `select`, `blocksize`
+//!   and `figures` loads the relevant slots on startup and saves them on
+//!   completion, so a second invocation starts warm: zero new
+//!   micro-benchmarks (or model generations) for already-seen keys and
+//!   byte-identical ranking output versus the cold run.
+//!
+//! Soundness rests on the same purity contract the engine memos already
+//! enforce: every persisted value is a pure function of its key plus the
+//! header tuple. Micro timings derive their sessions from
+//! `key_seed(seed, key)`; model estimates are pure functions of the
+//! models, which are themselves pure functions of `(machine, seed,
+//! coverage scope)`. Hence validating the header is sufficient for a
+//! reloaded value to be bit-identical to a recomputed one — JSON numbers
+//! round-trip exactly (Rust float formatting is shortest-exact).
+
+pub mod codec;
+pub mod warm;
+
+pub use warm::{
+    micro_memo_slot, model_cache_slot, models_slot, StoreKey, WarmStore, SCHEMA_VERSION,
+};
+
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Serialization contract for warm artifacts, mirroring `PerfModel`'s
+/// `to_json`/`from_json` pair. `from_json(&to_json(x))` must reproduce
+/// `x` bit-for-bit (hit/miss counters excepted — a loaded artifact starts
+/// with cold counters, its *contents* warm).
+pub trait Persist: Sized {
+    fn to_json(&self) -> Json;
+    fn from_json(j: &Json) -> Result<Self>;
+    /// Number of persisted entries, for deterministic load/save stats.
+    fn entries(&self) -> usize;
+}

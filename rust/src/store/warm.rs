@@ -1,0 +1,455 @@
+//! The on-disk warm-store manager: versioned, header-validated JSON
+//! snapshots with atomic write-rename saves and deterministic load/save
+//! statistics.
+//!
+//! Layout under the store directory (one subdirectory per machine label,
+//! one file per `(slot, schema, granularity, seed)`):
+//!
+//! ```text
+//! DIR/<machine label, '/' -> '_'>/<slot>.v<schema>.g<granularity>.s<seed>.json
+//! ```
+//!
+//! The validity tuple `(machine_label, schema_version, granularity,
+//! seed)` is part of the *path*, so differently-keyed snapshots coexist:
+//! alternating seeds (or granularities, or schema upgrades) each warm
+//! their own file instead of clobbering each other's paid-for state.
+//! Every snapshot additionally carries the header `{schema, machine,
+//! granularity, seed, scope, data}`, validated on load as a safety net
+//! for hand-moved files. `scope` is a caller-chosen validity string
+//! (e.g. the model-coverage bounds a cache's values were computed
+//! under); by convention callers bake anything that distinguishes
+//! scopes into the slot name itself (`models_n2104_b536`), keeping
+//! paths unique per configuration. [`WarmStore::load`] distinguishes
+//! three outcomes:
+//!
+//! * missing file, stale schema or mismatched header → `Ok(None)`: the
+//!   caller silently starts cold (recorded in the status log);
+//! * unreadable file, corrupt JSON or malformed data → `Err` carrying the
+//!   snapshot path, so a damaged store is loud, never silently wrong;
+//! * valid snapshot → `Ok(Some(artifact))`, contents bit-identical to
+//!   what was saved.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::Persist;
+
+/// Bump when a [`Persist`] codec changes shape; older snapshots then
+/// silently start cold instead of failing to parse.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// The validity tuple a snapshot must match to be loaded. Everything a
+/// persisted value is a pure function of — besides its own key — must be
+/// pinned here, or a warm run could silently diverge from a cold one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreKey {
+    /// Machine label (e.g. `haswell/openblas/1t`); also the subdirectory.
+    pub machine: String,
+    /// Key-quantization granularity of the persisted artifact.
+    pub granularity: usize,
+    /// Base seed the artifact's measurements derived their sessions from.
+    pub seed: u64,
+    /// Caller-chosen validity scope (e.g. model-coverage bounds).
+    pub scope: String,
+}
+
+/// Warm-store handle for one directory. Load/save events accumulate in a
+/// status log ([`WarmStore::take_status`]) whose lines are deterministic
+/// functions of the snapshot contents — safe to print on the byte-stable
+/// stdout paths.
+pub struct WarmStore {
+    dir: PathBuf,
+    status: Mutex<Vec<String>>,
+}
+
+fn sanitize(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '-') { c } else { '_' })
+        .collect()
+}
+
+/// File stem for a slot under a key: `<slot>.v<schema>.g<g>.s<seed>`.
+/// Also the prefix of every status line, so load/save events name the
+/// exact snapshot they touched.
+fn file_stem(slot: &str, key: &StoreKey) -> String {
+    format!("{slot}.v{SCHEMA_VERSION}.g{}.s{}", key.granularity, key.seed)
+}
+
+// --- Canonical slot builders: the cross-command warm-sharing contract,
+// written once. `select`, `blocksize` and the ch4 figure drivers address
+// model stores and estimate caches through these; `contract` and the
+// fig6_5 driver address micro memos likewise. A slot-name change here
+// changes it for every command at once — the sharing cannot silently
+// sever.
+
+fn scoped_slot(machine: &str, seed: u64, slot: String) -> (String, StoreKey) {
+    let key =
+        StoreKey { machine: machine.to_string(), granularity: 1, seed, scope: slot.clone() };
+    (slot, key)
+}
+
+/// Slot + key for a coverage-bounded generated-model store.
+pub fn models_slot(machine: &str, seed: u64, max_n: usize, max_b: usize) -> (String, StoreKey) {
+    scoped_slot(machine, seed, format!("models_n{max_n}_b{max_b}"))
+}
+
+/// Slot + key for the estimate cache over those models (same coverage
+/// bounds: cached estimates are pure functions of the covered models).
+pub fn model_cache_slot(
+    machine: &str,
+    seed: u64,
+    max_n: usize,
+    max_b: usize,
+) -> (String, StoreKey) {
+    scoped_slot(machine, seed, format!("model_cache_n{max_n}_b{max_b}"))
+}
+
+/// Slot + key for a micro-benchmark memo at a key-quantization
+/// granularity (`contract --memo-granularity`). The `g=1` slot doubles
+/// as the exact-reference memo's home, so exact-keyed sweeps and coarse
+/// sweeps' reference passes feed each other.
+pub fn micro_memo_slot(machine: &str, seed: u64, granularity: usize) -> (String, StoreKey) {
+    let key = StoreKey {
+        machine: machine.to_string(),
+        granularity,
+        seed,
+        scope: "micro".into(),
+    };
+    (format!("micro_memo_g{granularity}"), key)
+}
+
+impl WarmStore {
+    /// Open (creating if needed) a warm store rooted at `dir`.
+    pub fn open(dir: &Path) -> Result<WarmStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating warm store directory {}", dir.display()))?;
+        Ok(WarmStore { dir: dir.to_path_buf(), status: Mutex::new(Vec::new()) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshot path for a slot under `key`'s machine subdirectory. The
+    /// validity tuple is part of the file name (see the module doc), so
+    /// saving under one key can never destroy another key's snapshot.
+    pub fn slot_path(&self, slot: &str, key: &StoreKey) -> PathBuf {
+        self.dir.join(sanitize(&key.machine)).join(format!("{}.json", file_stem(slot, key)))
+    }
+
+    fn record(&self, line: String) {
+        self.status.lock().unwrap_or_else(|p| p.into_inner()).push(line);
+    }
+
+    /// Drain the accumulated status lines (load/save events, in order).
+    pub fn take_status(&self) -> Vec<String> {
+        std::mem::take(&mut *self.status.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    /// Load a slot. `Ok(None)` = cold start (missing, stale or
+    /// mismatched snapshot); `Err` = corrupt snapshot, with the path in
+    /// the error chain.
+    pub fn load<T: Persist>(&self, slot: &str, key: &StoreKey) -> Result<Option<T>> {
+        let path = self.slot_path(slot, key);
+        let stem = file_stem(slot, key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.record(format!("{stem}: cold start (no snapshot)"));
+                return Ok(None);
+            }
+            Err(e) => {
+                return Err(crate::err!("{e}")
+                    .context(format!("reading warm snapshot {}", path.display())))
+            }
+        };
+        let corrupt = || format!("corrupt warm snapshot {}", path.display());
+        let j = Json::parse(&text).with_context(corrupt)?;
+        if let Some(reason) = Self::header_mismatch(&j, key).with_context(corrupt)? {
+            self.record(format!("{stem}: cold start ({reason})"));
+            return Ok(None);
+        }
+        let value = T::from_json(j.req("data").with_context(corrupt)?).with_context(corrupt)?;
+        self.record(format!("{stem}: loaded {} entries", value.entries()));
+        Ok(Some(value))
+    }
+
+    /// Header validation: `Ok(Some(reason))` = well-formed but not ours
+    /// (start cold), `Ok(None)` = match, `Err` = malformed header.
+    fn header_mismatch(j: &Json, key: &StoreKey) -> Result<Option<String>> {
+        let schema = j.req("schema")?.as_usize().context("'schema' must be a number")?;
+        if schema != SCHEMA_VERSION {
+            return Ok(Some(format!(
+                "snapshot schema {schema}, this build writes {SCHEMA_VERSION}"
+            )));
+        }
+        let checks: [(&str, &str, String); 4] = [
+            ("machine", "machine label", key.machine.clone()),
+            ("granularity", "granularity", key.granularity.to_string()),
+            ("seed", "seed", key.seed.to_string()),
+            ("scope", "scope", key.scope.clone()),
+        ];
+        for (field, what, want) in checks {
+            let got =
+                j.req(field)?.as_str().with_context(|| format!("'{field}' must be a string"))?;
+            if got != want {
+                return Ok(Some(format!("snapshot {what} {got}, run uses {want}")));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Save a slot atomically: render next to the target, then rename
+    /// over it, so a crashed or concurrent run can never leave a
+    /// half-written snapshot behind (it leaves the old one).
+    pub fn save<T: Persist>(&self, slot: &str, key: &StoreKey, value: &T) -> Result<()> {
+        let path = self.slot_path(slot, key);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let snapshot = Json::obj(vec![
+            ("schema", Json::Num(SCHEMA_VERSION as f64)),
+            ("machine", Json::Str(key.machine.clone())),
+            ("granularity", Json::Str(key.granularity.to_string())),
+            ("seed", Json::Str(key.seed.to_string())),
+            ("scope", Json::Str(key.scope.clone())),
+            ("data", value.to_json()),
+        ]);
+        let text = snapshot.render();
+        // Refuse to persist what could not be reloaded: a non-finite
+        // value renders as JSON null (the format has no NaN/Inf) and
+        // would turn every later startup into a fatal "corrupt snapshot"
+        // error. The check must run on the *rendered* text — that is
+        // where NaN becomes null. Failing loudly at the source keeps one
+        // bad value from poisoning the slot, and the old snapshot, if
+        // any, survives untouched.
+        Json::parse(&text)
+            .and_then(|j| T::from_json(j.req("data")?).map(|_| ()))
+            .with_context(|| {
+                format!("refusing to save unreloadable snapshot {}", path.display())
+            })?;
+        let stem = file_stem(slot, key);
+        let tmp = path.with_file_name(format!("{stem}.json.tmp{}", std::process::id()));
+        let write = || -> Result<()> {
+            std::fs::write(&tmp, &text)?;
+            std::fs::rename(&tmp, &path)?;
+            Ok(())
+        };
+        write().with_context(|| format!("saving warm snapshot {}", path.display()))?;
+        self.record(format!("{stem}: saved {} entries", value.entries()));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::micro::MicroTiming;
+    use crate::tensor::MicroMemo;
+
+    /// Per-process unique scratch dir, removed on every exit path.
+    struct TempDir(PathBuf);
+
+    impl TempDir {
+        fn new(tag: &str) -> TempDir {
+            let nanos = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0);
+            let dir = std::env::temp_dir()
+                .join(format!("dlapm_{tag}_{}_{nanos}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            TempDir(dir)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn key() -> StoreKey {
+        StoreKey {
+            machine: "haswell/openblas/1t".into(),
+            granularity: 1,
+            seed: 7,
+            scope: "micro".into(),
+        }
+    }
+
+    fn memo_with_entry() -> MicroMemo {
+        let memo = MicroMemo::new();
+        memo.preload(
+            "haswell/openblas/1t|dgemm|L5",
+            MicroTiming {
+                cold_total: 0.25,
+                cold_runs: 2,
+                steady: 1.0 / 3.0,
+                kernel_runs: 9,
+                cost: 0.5,
+            },
+        );
+        memo
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_status_lines() {
+        let dir = TempDir::new("warm_roundtrip");
+        let w = WarmStore::open(&dir.0).unwrap();
+        assert_eq!(
+            w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap().map(|m| m.len()),
+            None
+        );
+        w.save("micro_memo_g1", &key(), &memo_with_entry()).unwrap();
+        let back = w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap().expect("warm");
+        assert_eq!(back.len(), 1);
+        let got = back.peek("haswell/openblas/1t|dgemm|L5").unwrap();
+        assert_eq!(got.steady.to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(
+            w.take_status(),
+            vec![
+                "micro_memo_g1.v1.g1.s7: cold start (no snapshot)".to_string(),
+                "micro_memo_g1.v1.g1.s7: saved 1 entries".to_string(),
+                "micro_memo_g1.v1.g1.s7: loaded 1 entries".to_string(),
+            ]
+        );
+        // The machine label is sanitized into the subdirectory name and
+        // the validity tuple into the file name.
+        assert!(w
+            .slot_path("micro_memo_g1", &key())
+            .ends_with("haswell_openblas_1t/micro_memo_g1.v1.g1.s7.json"));
+        // No temp files survive an atomic save.
+        let machine_dir = dir.0.join("haswell_openblas_1t");
+        let leftovers: Vec<_> = std::fs::read_dir(&machine_dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn differently_keyed_snapshots_coexist_without_clobbering() {
+        // The validity tuple is part of the path: a run under another
+        // seed/granularity/machine starts cold in its own file and can
+        // never destroy previously paid-for state.
+        let dir = TempDir::new("warm_mismatch");
+        let w = WarmStore::open(&dir.0).unwrap();
+        w.save("micro_memo_g1", &key(), &memo_with_entry()).unwrap();
+        for other in [
+            StoreKey { seed: 8, ..key() },
+            StoreKey { granularity: 8, ..key() },
+            StoreKey { machine: "sandybridge/mkl/1t".into(), ..key() },
+        ] {
+            assert!(w.load::<MicroMemo>("micro_memo_g1", &other).unwrap().is_none());
+            // Saving under the other key leaves the original intact.
+            w.save("micro_memo_g1", &other, &MicroMemo::new()).unwrap();
+        }
+        let original = w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap().expect("intact");
+        assert_eq!(original.len(), 1, "other keys must not clobber this snapshot");
+        let status = w.take_status();
+        assert!(
+            status.iter().filter(|l| l.contains("cold start (no snapshot)")).count() >= 3,
+            "{status:?}"
+        );
+    }
+
+    #[test]
+    fn non_finite_values_are_rejected_at_save_time() {
+        // NaN renders as JSON null; persisting it would brick the slot
+        // (every later load = fatal corrupt-snapshot error). The save
+        // must refuse loudly instead — and leave any prior snapshot.
+        let dir = TempDir::new("warm_nonfinite");
+        let w = WarmStore::open(&dir.0).unwrap();
+        w.save("micro_memo_g1", &key(), &memo_with_entry()).unwrap();
+        let poisoned = memo_with_entry();
+        poisoned.preload(
+            "bad",
+            MicroTiming {
+                cold_total: f64::NAN,
+                cold_runs: 1,
+                steady: 0.1,
+                kernel_runs: 3,
+                cost: 0.2,
+            },
+        );
+        let err = w.save("micro_memo_g1", &key(), &poisoned).unwrap_err();
+        assert!(err.to_string().contains("refusing to save"), "{err}");
+        // The previous good snapshot is untouched and still loads warm.
+        let back = w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap().expect("intact");
+        assert_eq!(back.len(), 1);
+    }
+
+    #[test]
+    fn canonical_slot_builders_share_one_contract() {
+        let (mslot, mkey) = models_slot("haswell/openblas/1t", 7, 2104, 536);
+        assert_eq!(mslot, "models_n2104_b536");
+        assert_eq!(mkey.scope, mslot);
+        assert_eq!((mkey.granularity, mkey.seed), (1, 7));
+        let (cslot, ckey) = model_cache_slot("haswell/openblas/1t", 7, 2104, 536);
+        assert_eq!(cslot, "model_cache_n2104_b536");
+        assert_eq!(ckey.scope, cslot);
+        let (uslot, ukey) = micro_memo_slot("haswell/openblas/1t", 7, 8);
+        assert_eq!(uslot, "micro_memo_g8");
+        assert_eq!((ukey.granularity, &*ukey.scope), (8, "micro"));
+    }
+
+    #[test]
+    fn tampered_header_starts_cold_silently() {
+        // Defense in depth for hand-moved/edited files: a snapshot whose
+        // header no longer matches its key is rejected, not loaded.
+        let dir = TempDir::new("warm_tampered");
+        let w = WarmStore::open(&dir.0).unwrap();
+        w.save("micro_memo_g1", &key(), &memo_with_entry()).unwrap();
+        let path = w.slot_path("micro_memo_g1", &key());
+        let tampered = std::fs::read_to_string(&path)
+            .unwrap()
+            .replacen("\"scope\":\"micro\"", "\"scope\":\"other\"", 1);
+        assert!(tampered.contains("\"scope\":\"other\""), "replacement must hit: {tampered}");
+        std::fs::write(&path, tampered).unwrap();
+        assert!(w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap().is_none());
+        let status = w.take_status();
+        assert!(
+            status.last().unwrap().contains("snapshot scope other, run uses micro"),
+            "{status:?}"
+        );
+    }
+
+    #[test]
+    fn stale_schema_starts_cold() {
+        let dir = TempDir::new("warm_stale");
+        let w = WarmStore::open(&dir.0).unwrap();
+        w.save("micro_memo_g1", &key(), &memo_with_entry()).unwrap();
+        let path = w.slot_path("micro_memo_g1", &key());
+        let stale = std::fs::read_to_string(&path)
+            .unwrap()
+            .replacen("\"schema\":1", "\"schema\":0", 1);
+        assert!(stale.contains("\"schema\":0"), "replacement must hit: {stale}");
+        std::fs::write(&path, stale).unwrap();
+        assert!(w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap().is_none());
+        assert!(w.take_status().last().unwrap().contains("schema 0"), "stale reason");
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_a_path_bearing_error() {
+        let dir = TempDir::new("warm_corrupt");
+        let w = WarmStore::open(&dir.0).unwrap();
+        let path = w.slot_path("micro_memo_g1", &key());
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, "{ not json").unwrap();
+        let err = w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("micro_memo_g1.v1.g1.s7.json"), "{msg}");
+        assert!(msg.contains("corrupt warm snapshot"), "{msg}");
+        // Well-formed JSON with a malformed body is corrupt too, with path.
+        std::fs::write(&path, r#"{"schema": 1}"#).unwrap();
+        let err = w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap_err();
+        assert!(err.to_string().contains("micro_memo_g1.v1.g1.s7.json"), "{err}");
+    }
+}

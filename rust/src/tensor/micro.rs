@@ -52,8 +52,11 @@ pub struct MicroPrediction {
 
 /// The measured core of a micro-benchmark, independent of the loop count
 /// it is extrapolated to. This is what [`MicroMemo`] stores: algorithms
-/// sharing a `(kernel signature, cache precondition)` share the timing.
-#[derive(Clone, Copy, Debug)]
+/// sharing a `(kernel signature, cache precondition)` share the timing —
+/// and what the warm store persists across processes
+/// ([`crate::store::codec`]), which is why every field must be a pure
+/// function of the memo key plus the base seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MicroTiming {
     /// Sum of the explicitly timed cold first iterations (§6.2.6).
     pub cold_total: f64,

@@ -3,8 +3,27 @@
 
 use std::process::Command;
 
+mod common;
+use common::TempDir;
+
 fn dlapm() -> Command {
     Command::new(env!("CARGO_BIN_EXE_dlapm"))
+}
+
+/// The selection-table rows of a stdout capture (lines like
+/// `"  1. alg  0.123 ms"`), i.e. the ranking output the warm-start
+/// acceptance criterion requires to be byte-identical cold vs warm.
+fn ranking_rows(stdout: &[u8]) -> Vec<String> {
+    String::from_utf8_lossy(stdout)
+        .lines()
+        .filter(|l| {
+            let t = l.trim_start();
+            t.split_once('.')
+                .map(|(rank, _)| !rank.is_empty() && rank.chars().all(|c| c.is_ascii_digit()))
+                .unwrap_or(false)
+        })
+        .map(|l| l.to_string())
+        .collect()
 }
 
 #[test]
@@ -40,6 +59,8 @@ fn help_documents_gen_and_jobs() {
     assert!(text.contains("gen"), "{text}");
     assert!(text.contains("--jobs"), "{text}");
     assert!(text.contains("--all"), "{text}");
+    assert!(text.contains("blocksize"), "{text}");
+    assert!(text.contains("--store"), "{text}");
 }
 
 /// Acceptance criterion of ISSUE 3: `contract --rank` stdout is
@@ -238,6 +259,167 @@ fn select_validate_jobs_parity_byte_for_byte() {
         String::from_utf8_lossy(&b),
         "select --validate must print identical rankings for --jobs 1 and --jobs 4"
     );
+}
+
+/// ISSUE 5 acceptance: the second `contract --sweep 30,32 --store DIR`
+/// run loads the warm micro-benchmark memo, reports zero new
+/// micro-benchmarks for the previously-seen keys, and prints
+/// byte-identical ranking output to the first (cold) run.
+#[test]
+fn contract_store_warm_restart_is_byte_identical_and_pays_zero() {
+    let dir = TempDir::new("warm_contract");
+    let run = || {
+        let out = dlapm()
+            .args([
+                "contract", "--spec", "abc=ai,ibc", "--sweep", "30,32", "--seed", "7", "--jobs",
+                "2", "--store",
+            ])
+            .arg(&dir.0)
+            .output()
+            .expect("spawning dlapm contract --store");
+        assert!(out.status.success(), "{:?}", out.status);
+        out.stdout
+    };
+    let cold = run();
+    let warm = run();
+    let cold_text = String::from_utf8_lossy(&cold).to_string();
+    let warm_text = String::from_utf8_lossy(&warm).to_string();
+    assert!(cold_text.contains("cold start (no snapshot)"), "{cold_text}");
+    assert!(warm_text.contains("micro_memo_g1.v1.g1.s7: loaded"), "{warm_text}");
+    // Zero new micro-benchmarks anywhere in the warm run.
+    for n in [30, 32] {
+        let zero_line = format!("micro-benchmarks for n={n}: 0.000000 ms over 0 kernel runs");
+        assert!(
+            warm_text.contains(&zero_line),
+            "warm run must pay zero for n={n}:\n{warm_text}"
+        );
+        // Every distinct benchmark key is a cross-run reuse.
+        let reuse = warm_text
+            .lines()
+            .find(|l| l.contains(&format!("memo reuse for n={n}:")))
+            .unwrap_or_else(|| panic!("no reuse line for n={n}:\n{warm_text}"));
+        let mut words = reuse.split(':').nth(1).expect("colon").split_whitespace();
+        let reused: usize = words.next().unwrap().parse().unwrap();
+        assert_eq!(words.next(), Some("of"));
+        let total: usize = words.next().unwrap().parse().unwrap();
+        assert_eq!(reused, total, "full warm reuse expected: {reuse}");
+    }
+    assert!(
+        warm_text.contains("total micro-benchmark cost: 0.000000 ms over 0 kernel runs"),
+        "{warm_text}"
+    );
+    // The ranking output itself is byte-identical cold vs warm.
+    let (cold_rows, warm_rows) = (ranking_rows(&cold), ranking_rows(&warm));
+    assert!(!cold_rows.is_empty(), "{cold_text}");
+    assert_eq!(cold_rows, warm_rows, "cold and warm rankings must match byte for byte");
+}
+
+/// A different seed never loads foreign measurements: it starts cold in
+/// its own seed-keyed snapshot — and leaves the original seed's warm
+/// state intact (differently-keyed snapshots coexist, not clobber).
+#[test]
+fn contract_store_mismatched_seed_starts_cold_and_preserves_prior_state() {
+    let dir = TempDir::new("warm_mismatch");
+    let run = |seed: &str| {
+        let out = dlapm()
+            .args([
+                "contract", "--spec", "abc=ai,ibc", "--n", "30", "--seed", seed, "--jobs", "2",
+                "--store",
+            ])
+            .arg(&dir.0)
+            .output()
+            .expect("spawning dlapm contract --store");
+        assert!(out.status.success(), "seed {seed}: {:?}", out.status);
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let first = run("7");
+    assert!(first.contains("cold start (no snapshot)"), "{first}");
+    let second = run("8");
+    assert!(
+        second.contains("micro_memo_g1.v1.g1.s8: cold start (no snapshot)"),
+        "a different seed must start cold in its own snapshot:\n{second}"
+    );
+    // Both seeds now have warm state; neither run destroyed the other's.
+    let third = run("7");
+    assert!(third.contains("micro_memo_g1.v1.g1.s7: loaded"), "{third}");
+    let fourth = run("8");
+    assert!(fourth.contains("micro_memo_g1.v1.g1.s8: loaded"), "{fourth}");
+}
+
+/// A corrupt snapshot is loud: the run fails with the offending path in
+/// the error instead of silently recomputing over damaged state.
+#[test]
+fn contract_store_corrupt_snapshot_fails_with_path() {
+    let dir = TempDir::new("warm_corrupt");
+    // Default contract machine is haswell/openblas/1t; seed 7 and the
+    // default granularity 1 name the snapshot file.
+    let machine_dir = dir.0.join("haswell_openblas_1t");
+    std::fs::create_dir_all(&machine_dir).unwrap();
+    std::fs::write(machine_dir.join("micro_memo_g1.v1.g1.s7.json"), "{ definitely not json")
+        .unwrap();
+    let out = dlapm()
+        .args(["contract", "--spec", "abc=ai,ibc", "--n", "30", "--seed", "7", "--store"])
+        .arg(&dir.0)
+        .output()
+        .expect("spawning dlapm contract --store");
+    assert!(!out.status.success(), "corrupt snapshot must fail the run");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("micro_memo_g1.v1.g1.s7.json"), "{err}");
+    assert!(err.contains("corrupt warm snapshot"), "{err}");
+}
+
+/// The new §4.6 CLI surface: `blocksize` ranks candidate block sizes
+/// through the selection core, emits the yield table under --validate,
+/// and restarts warm (models + estimate cache) from a --store directory.
+#[test]
+fn blocksize_cli_ranks_validates_and_warm_restarts() {
+    let dir = TempDir::new("warm_blocksize");
+    let run = || {
+        let out = dlapm()
+            .args([
+                "blocksize", "--op", "potrf", "--cpu", "sandybridge", "--lib", "openblas", "--n",
+                "520", "--b", "24,72,120,168", "--validate", "--reps", "2", "--seed", "5",
+                "--jobs", "2", "--store",
+            ])
+            .arg(&dir.0)
+            .output()
+            .expect("spawning dlapm blocksize");
+        assert!(out.status.success(), "{:?}", out.status);
+        out
+    };
+    let cold = run();
+    let cold_text = String::from_utf8_lossy(&cold.stdout).to_string();
+    assert!(cold_text.contains("block-size ranking for dpotrf"), "{cold_text}");
+    assert!(cold_text.contains("predicted optimal block size for n=520: b="), "{cold_text}");
+    assert!(cold_text.contains("block-size yield"), "{cold_text}");
+    assert!(cold_text.contains("b_pred"), "{cold_text}");
+    assert!(cold_text.contains("cold start (no snapshot)"), "{cold_text}");
+    let warm = run();
+    let warm_text = String::from_utf8_lossy(&warm.stdout).to_string();
+    assert!(warm_text.contains(": loaded"), "{warm_text}");
+    // Modulo the warm-store status lines, the two runs print the same
+    // bytes: rankings, b_pred and yields are all reloaded-state pure.
+    let strip = |text: &str| -> Vec<String> {
+        text.lines().filter(|l| !l.starts_with("warm store:")).map(|l| l.to_string()).collect()
+    };
+    assert_eq!(strip(&cold_text), strip(&warm_text));
+}
+
+/// `select` over an (n, b) grid: one ranking per grid point, all served
+/// by one prewarmed estimate cache.
+#[test]
+fn select_grid_ranks_every_pair() {
+    let out = dlapm()
+        .args([
+            "select", "--cpu", "sandybridge", "--lib", "openblas", "--op", "potrf", "--n", "520",
+            "--b", "104,112", "--seed", "5", "--jobs", "2",
+        ])
+        .output()
+        .expect("spawning dlapm select grid");
+    assert!(out.status.success(), "{:?}", out.status);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("predicted ranking for n=520, b=104"), "{text}");
+    assert!(text.contains("predicted ranking for n=520, b=112"), "{text}");
 }
 
 /// End-to-end `--jobs` parity through the real binary: `gen --jobs 1`

@@ -1,0 +1,34 @@
+//! Helpers shared by the integration-test binaries (`tests/*.rs`).
+//! (In-crate unit tests cannot see this module; `store/warm.rs` keeps
+//! its own small copy.)
+
+use std::path::{Path, PathBuf};
+
+/// Per-process unique scratch directory, removed on every exit path
+/// (including assertion-failure unwinds) via `Drop`.
+pub struct TempDir(pub PathBuf);
+
+// Not every test binary uses every helper; that's fine.
+#[allow(dead_code)]
+impl TempDir {
+    pub fn new(tag: &str) -> TempDir {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let dir = std::env::temp_dir()
+            .join(format!("dlapm_{tag}_{}_{nanos}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}

@@ -11,35 +11,10 @@ use dlapm::predict::algorithms::potrf::Potrf;
 use dlapm::predict::algorithms::BlockedAlg;
 use dlapm::predict::measurement::{coverage, measure_algorithm};
 use dlapm::predict::predictor::{predict_calls, predict_calls_cached};
+use dlapm::store::{StoreKey, WarmStore};
 
-/// Per-process unique scratch directory, removed on every exit path
-/// (including assertion-failure unwinds) via `Drop`.
-struct TempDir(std::path::PathBuf);
-
-impl TempDir {
-    fn new(tag: &str) -> TempDir {
-        let nanos = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.subsec_nanos())
-            .unwrap_or(0);
-        let dir = std::env::temp_dir().join(format!(
-            "dlapm_{tag}_{}_{nanos}",
-            std::process::id()
-        ));
-        std::fs::create_dir_all(&dir).unwrap();
-        TempDir(dir)
-    }
-
-    fn path(&self) -> &std::path::Path {
-        &self.0
-    }
-}
-
-impl Drop for TempDir {
-    fn drop(&mut self) {
-        let _ = std::fs::remove_dir_all(&self.0);
-    }
-}
+mod common;
+use common::TempDir;
 
 #[test]
 fn pipeline_generate_save_load_predict_validate() {
@@ -63,6 +38,54 @@ fn pipeline_generate_save_load_predict_validate() {
     let meas = measure_algorithm(&machine, &alg, n, b, 5, 7);
     let re = (pred.time.med - meas.med).abs() / meas.med;
     assert!(re < 0.08, "prediction error {re}");
+}
+
+/// ISSUE 5: the full warm-start pipeline at the library level — generate
+/// models, predict through a cache, persist both via the WarmStore,
+/// reload, and verify the warm state serves bit-identical predictions
+/// with zero regeneration and zero recomputation.
+#[test]
+fn warm_store_roundtrips_models_and_estimate_cache() {
+    let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+    let alg = Potrf { variant: 3, elem: Elem::D };
+    let mut store = ModelStore::new(&machine.label());
+    let n_gen = coverage::ensure_models(&machine, &mut store, &[&alg], 536, 104, 5);
+    assert!(n_gen > 0);
+    let cache = ModelCache::new();
+    let calls = alg.calls(520, 104);
+    let cold = predict_calls_cached(&store, &calls, &cache);
+    assert!(cache.misses() > 0);
+
+    let dir = TempDir::new("warmstore");
+    let warm = WarmStore::open(dir.path()).unwrap();
+    let models_key = StoreKey {
+        machine: machine.label(),
+        granularity: 1,
+        seed: 5,
+        scope: "models_n536_b104".into(),
+    };
+    warm.save("models_n536_b104", &models_key, &store).unwrap();
+    let cache_key = StoreKey { scope: "model_cache_n536_b104".into(), ..models_key.clone() };
+    warm.save("model_cache_n536_b104", &cache_key, &cache).unwrap();
+
+    // Reload into a "new process": models identical, nothing regenerates.
+    let mut store2: ModelStore =
+        warm.load("models_n536_b104", &models_key).unwrap().expect("warm models");
+    assert_eq!(store2.models.len(), store.models.len());
+    for (case, model) in &store.models {
+        assert_eq!(store2.get(case).expect(case), model, "model '{case}' must round-trip");
+    }
+    let regenerated = coverage::ensure_models(&machine, &mut store2, &[&alg], 536, 104, 5);
+    assert_eq!(regenerated, 0, "warm models must satisfy coverage");
+
+    // Warm cache serves every estimate: zero misses, bit-equal totals.
+    let cache2: ModelCache =
+        warm.load("model_cache_n536_b104", &cache_key).unwrap().expect("warm cache");
+    let warm_pred = predict_calls_cached(&store2, &calls, &cache2);
+    assert_eq!(warm_pred.time.med.to_bits(), cold.time.med.to_bits());
+    assert_eq!(warm_pred.time.std.to_bits(), cold.time.std.to_bits());
+    assert_eq!(cache2.misses(), 0, "warm cache must not recompute");
+    assert!(cache2.hits() > 0);
 }
 
 /// The acceptance criterion of ISSUE 2: a 1-job and an N-job `gen` run
