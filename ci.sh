@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 gate for the dlapm repo, mirroring .github/workflows/ci.yml:
-# fmt, clippy, release build, tests, bench compilation.
+# fmt, clippy, release build, tests, determinism lint, bench compilation.
 #
 # Usage: ./ci.sh [--quick] [--bench]
 #   --quick  skip the release build (debug test run only)
@@ -52,6 +52,11 @@ fi
 
 echo "== cargo test -q =="
 cargo test -q
+
+# Fatal in every mode (including --quick), and unlike fmt/clippy it needs
+# no extra toolchain components: the linter is the dlapm binary itself.
+echo "== dlapm lint (determinism static analysis) =="
+cargo run -q --bin dlapm -- lint
 
 echo "== cargo build --benches =="
 cargo build --benches

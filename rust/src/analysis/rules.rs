@@ -1,0 +1,324 @@
+//! The determinism lint rules and the `lint:allow` pragma parser.
+//!
+//! Every rule guards one edge of the crate's determinism contract
+//! (byte-identical output for any `--jobs`, shard split or warm/cold
+//! store state — see README):
+//!
+//! * `nan-partial-cmp` — `.partial_cmp(..)` on floats panics (via the
+//!   usual `.unwrap()`) or silently misorders when a NaN appears;
+//!   `f64::total_cmp` is total and deterministic.
+//! * `unsorted-map-iter` — iterating a `HashMap`/`HashSet` observes the
+//!   per-process random hasher seed; anything derived from the order
+//!   (float sums, ties, output lines) varies run to run.
+//! * `wall-clock-in-pure-path` — `Instant::now` / `SystemTime` outside
+//!   the benchmarking harness leaks real time into results that must be
+//!   pure functions of their inputs.
+//! * `raw-sync-primitive` — `std::sync::{Mutex, RwLock, Condvar}` used
+//!   directly skip `util::sync`'s poison recovery and debug-build
+//!   lock-order cycle detection.
+//! * `stdout-float-format` — fixed-precision float formatting in the
+//!   persistence layer (`store/`, `util/json.rs`) rounds away drift that
+//!   byte-comparison tests exist to catch.
+//!
+//! Rules are line-based heuristics over the stripped views from
+//! [`super::strip`]; a multi-line method chain can escape them. They are
+//! tuned to scan this crate's rustfmt-shaped sources with zero false
+//! positives; genuine exceptions carry a `lint:allow` pragma with a
+//! stated reason.
+
+use super::strip::{is_ident, LineView};
+
+/// All allowlistable rule names (the pragma parser validates against
+/// this; `lint-pragma` itself is not suppressible).
+pub const RULE_NAMES: [&str; 5] = [
+    "nan-partial-cmp",
+    "unsorted-map-iter",
+    "wall-clock-in-pure-path",
+    "raw-sync-primitive",
+    "stdout-float-format",
+];
+
+/// Outcome of inspecting one line's comment for an allow pragma.
+pub enum PragmaParse {
+    /// No pragma on this line.
+    None,
+    /// A well-formed `lint:allow(rule): reason`.
+    Allow(&'static str),
+    /// Something that starts like a pragma but does not parse; the
+    /// payload says what is wrong.
+    Malformed(String),
+}
+
+/// Parse a comment for an allow pragma. Only comments whose trimmed
+/// text *starts* with the pragma opener count, so prose that merely
+/// mentions the syntax mid-sentence is never parsed.
+pub fn parse_pragma(comment: &str) -> PragmaParse {
+    let trimmed = comment.trim();
+    let Some(rest) = trimmed.strip_prefix("lint:allow(") else {
+        return PragmaParse::None;
+    };
+    let Some(close) = rest.find(')') else {
+        return PragmaParse::Malformed("missing closing ')'".to_string());
+    };
+    let rule = rest[..close].trim();
+    let Some(known) = RULE_NAMES.iter().copied().find(|r| *r == rule) else {
+        return PragmaParse::Malformed(format!("unknown rule '{rule}'"));
+    };
+    let tail = rest[close + 1..].trim_start();
+    match tail.strip_prefix(':') {
+        Some(reason) if !reason.trim().is_empty() => PragmaParse::Allow(known),
+        _ => PragmaParse::Malformed("missing ': reason' after the rule name".to_string()),
+    }
+}
+
+/// Run every rule over a file's line views. Returns `(0-based line,
+/// rule, message)` triples; the caller applies pragma suppression and
+/// renders 1-based locations.
+pub fn check_lines(label: &str, views: &[LineView]) -> Vec<(usize, &'static str, String)> {
+    let tracked = tracked_names(views);
+    let mut out = Vec::new();
+    for (i, v) in views.iter().enumerate() {
+        let code = v.code.as_str();
+        if code.contains(".partial_cmp(") {
+            out.push((
+                i,
+                "nan-partial-cmp",
+                "partial_cmp on floats panics or misorders on NaN; use f64::total_cmp"
+                    .to_string(),
+            ));
+        }
+        if label != "util/bench.rs"
+            && (code.contains("Instant::now") || token_at(code, "SystemTime"))
+        {
+            out.push((
+                i,
+                "wall-clock-in-pure-path",
+                "wall-clock reads outside util::bench make results time-dependent; \
+                 derive names/seeds from util::sync::unique_token or inputs"
+                    .to_string(),
+            ));
+        }
+        if label != "util/sync.rs" && raw_sync_primitive(code) {
+            out.push((
+                i,
+                "raw-sync-primitive",
+                "raw std::sync lock primitive; use util::sync wrappers \
+                 (poison recovery + lock-order cycle detection)"
+                    .to_string(),
+            ));
+        }
+        if (label.starts_with("store/") || label == "util/json.rs")
+            && float_format_spec(&v.strings)
+        {
+            out.push((
+                i,
+                "stdout-float-format",
+                "fixed-precision float formatting in the persistence layer rounds \
+                 away drift; render full precision via util::json"
+                    .to_string(),
+            ));
+        }
+        for name in &tracked {
+            if (iter_call_on(code, name) || for_loop_over(code, name))
+                && !sorted_nearby(views, i)
+            {
+                out.push((
+                    i,
+                    "unsorted-map-iter",
+                    format!(
+                        "iteration over hash map/set '{name}' observes the random \
+                         hasher seed; sort first or use a BTreeMap/BTreeSet"
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Names declared as `HashMap`/`HashSet` in this file: `let` bindings
+/// and `name: Type` field/struct-literal positions on lines mentioning
+/// either type as a whole token.
+fn tracked_names(views: &[LineView]) -> Vec<String> {
+    let mut names = Vec::new();
+    for v in views {
+        let code = v.code.as_str();
+        if !token_at(code, "HashMap") && !token_at(code, "HashSet") {
+            continue;
+        }
+        let trimmed = code.trim_start();
+        let name = if let Some(rest) = trimmed.strip_prefix("let mut ") {
+            ident_prefix(rest)
+        } else if let Some(rest) = trimmed.strip_prefix("let ") {
+            ident_prefix(rest)
+        } else {
+            ident_before_single_colon(code)
+        };
+        if let Some(n) = name {
+            if !names.contains(&n) {
+                names.push(n);
+            }
+        }
+    }
+    names
+}
+
+/// Leading identifier of `s`, if any (empty for tuple patterns, whose
+/// first char is '(').
+fn ident_prefix(s: &str) -> Option<String> {
+    let n: String = s.chars().take_while(|&c| is_ident(c)).collect();
+    if n.is_empty() || n.starts_with(|c: char| c.is_ascii_digit()) {
+        None
+    } else {
+        Some(n)
+    }
+}
+
+/// The identifier directly before the first *single* colon (`name:
+/// HashMap<..>`), skipping `::` path separators.
+fn ident_before_single_colon(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    for i in 0..bytes.len() {
+        if bytes[i] != b':' {
+            continue;
+        }
+        if (i + 1 < bytes.len() && bytes[i + 1] == b':') || (i > 0 && bytes[i - 1] == b':') {
+            continue;
+        }
+        let head = code[..i].trim_end();
+        let rev: String = head.chars().rev().take_while(|&c| is_ident(c)).collect();
+        let n: String = rev.chars().rev().collect();
+        return if n.is_empty() || n.starts_with(|c: char| c.is_ascii_digit()) {
+            None
+        } else {
+            Some(n)
+        };
+    }
+    None
+}
+
+/// Token-bounded containment: `token` present and not embedded in a
+/// longer identifier (excludes e.g. `HashMapLite`).
+fn token_at(line: &str, token: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(token) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(line[..at].chars().next_back().unwrap());
+        let after_ok = line[at + token.len()..].chars().next().map_or(true, |c| !is_ident(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + token.len();
+    }
+    false
+}
+
+/// `name.iter()` / `.keys()` / `.values()` / `.drain(` etc., allowing a
+/// `self.`-style prefix before the name but no longer identifier.
+fn iter_call_on(code: &str, name: &str) -> bool {
+    const CALLS: [&str; 6] =
+        ["iter()", "iter_mut()", "keys()", "values()", "values_mut()", "into_iter()"];
+    let pat = format!("{name}.");
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(&pat) {
+        let at = start + pos;
+        let boundary = at == 0 || !is_ident(code[..at].chars().next_back().unwrap());
+        if boundary {
+            let rest = &code[at + pat.len()..];
+            if CALLS.iter().any(|c| rest.starts_with(c)) || rest.starts_with("drain(") {
+                return true;
+            }
+        }
+        start = at + pat.len();
+    }
+    false
+}
+
+/// `for .. in name`, `in &name`, `in &mut name`, `in self.name` and
+/// combinations thereof.
+fn for_loop_over(code: &str, name: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(name) {
+        let at = start + pos;
+        let end = at + name.len();
+        start = end;
+        let after_ok = code[end..].chars().next().map_or(true, |c| !is_ident(c) && c != '.');
+        if !after_ok {
+            continue;
+        }
+        let mut head = &code[..at];
+        if let Some(h) = head.strip_suffix("self.") {
+            head = h;
+        }
+        if let Some(h) = head.strip_suffix("mut ") {
+            head = h;
+        }
+        let head = head.strip_suffix('&').unwrap_or(head).trim_end();
+        if head.ends_with(" in") || head == "in" {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is the iteration ordered right where it happens? A `.sort` on the
+/// flagged line or the two following lines (collect-then-sort idiom)
+/// exempts it.
+fn sorted_nearby(views: &[LineView], i: usize) -> bool {
+    views[i..(i + 3).min(views.len())].iter().any(|v| v.code.contains(".sort"))
+}
+
+/// A `std::sync` lock primitive mentioned as a type/path segment.
+fn raw_sync_primitive(code: &str) -> bool {
+    if !code.contains("std::sync") {
+        return false;
+    }
+    ["Mutex", "RwLock", "Condvar"].iter().any(|prim| {
+        let mut start = 0;
+        while let Some(pos) = code[start..].find(prim) {
+            let at = start + pos;
+            if at == 0 || !is_ident(code[..at].chars().next_back().unwrap()) {
+                return true;
+            }
+            start = at + prim.len();
+        }
+        false
+    })
+}
+
+/// A `{name:spec}` format placeholder whose spec requests a decimal
+/// precision (`.` followed by a digit). The name part must be a plain
+/// identifier (or empty/an index), which keeps JSON-looking text like
+/// `{"a": 1.5}` out.
+fn float_format_spec(strings: &str) -> bool {
+    let chars: Vec<char> = strings.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] != '{' {
+            i += 1;
+            continue;
+        }
+        if chars.get(i + 1) == Some(&'{') {
+            i += 2; // escaped literal brace
+            continue;
+        }
+        let Some(close) = (i + 1..chars.len()).find(|&j| chars[j] == '}') else {
+            return false;
+        };
+        let inner: String = chars[i + 1..close].iter().collect();
+        if let Some((name, spec)) = inner.split_once(':') {
+            let name_ok = name.chars().all(is_ident);
+            let spec_ok = !spec.contains('"') && spec.len() < 16;
+            let precision = spec
+                .as_bytes()
+                .windows(2)
+                .any(|w| w[0] == b'.' && w[1].is_ascii_digit());
+            if name_ok && spec_ok && precision {
+                return true;
+            }
+        }
+        i = close + 1;
+    }
+    false
+}

@@ -1,0 +1,236 @@
+//! Comment/string splitting for the line-based lint scanner.
+//!
+//! The rules in [`crate::analysis::rules`] match token patterns against
+//! source lines. Matching raw text would self-flag the scanner (its own
+//! rule patterns are string literals) and flag documentation that merely
+//! *mentions* a pattern, so every line is split into three views first:
+//!
+//! * `code` — the source with comments removed and string-literal
+//!   contents emptied; most rules match here;
+//! * `strings` — the concatenated contents of string literals (the
+//!   `stdout-float-format` rule looks for format specs here);
+//! * `comment` — the comment text, where `lint:allow` pragmas live.
+//!
+//! The splitter is a small state machine that carries multi-line
+//! constructs — nested block comments, multi-line strings, raw strings
+//! with any number of `#`s — across line boundaries. It is a lexer for
+//! *views*, not a full Rust lexer: char literals and lifetimes are told
+//! apart heuristically (a char literal closes within a few characters; a
+//! lifetime never closes), which is exact for rustfmt-shaped code.
+
+/// The three views of one source line.
+#[derive(Debug, Default, Clone)]
+pub struct LineView {
+    /// Code with comments removed and string-literal contents emptied.
+    pub code: String,
+    /// Contents of string literals on this line, space-separated.
+    pub strings: String,
+    /// Comment text (line and block comments) on this line.
+    pub comment: String,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    /// Inside `/* .. */`; Rust block comments nest, hence the depth.
+    Block(usize),
+    /// Inside a `"` string (escapes recorded verbatim).
+    Str,
+    /// Inside `r".."` / `r#".."#` / `br".."`; payload = `#` count.
+    RawStr(usize),
+}
+
+/// Split `text` into per-line views. Never fails: an unterminated
+/// construct simply extends to the end of the input.
+pub fn line_views(text: &str) -> Vec<LineView> {
+    let mut out = Vec::new();
+    let mut state = State::Code;
+    for line in text.lines() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut view = LineView::default();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            match state {
+                State::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        view.comment.extend(&chars[i + 2..]);
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(1);
+                        i += 2;
+                    } else if (c == 'r' || c == 'b')
+                        && (i == 0 || !is_ident(chars[i - 1]))
+                        && raw_start(&chars, i).is_some()
+                    {
+                        let (len, hashes) = raw_start(&chars, i).unwrap();
+                        view.strings.push(' ');
+                        state = State::RawStr(hashes);
+                        i += len;
+                    } else if c == '"' {
+                        view.strings.push(' ');
+                        state = State::Str;
+                        i += 1;
+                    } else if c == '\'' {
+                        if let Some(len) = char_literal_len(&chars, i) {
+                            view.strings.push(' ');
+                            i += len;
+                        } else {
+                            // A lifetime: part of the code view.
+                            view.code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        view.code.push(c);
+                        i += 1;
+                    }
+                }
+                State::Block(depth) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        view.comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        // Record the escaped char verbatim so `\"` stays a
+                        // quote in the strings view (keeps embedded JSON
+                        // recognizable as non-format text).
+                        if let Some(&next) = chars.get(i + 1) {
+                            view.strings.push(next);
+                        }
+                        i += 2;
+                    } else if c == '"' {
+                        state = State::Code;
+                        i += 1;
+                    } else {
+                        view.strings.push(c);
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' && chars[i + 1..].iter().take_while(|&&h| h == '#').count() >= hashes
+                    {
+                        state = State::Code;
+                        i += 1 + hashes;
+                    } else {
+                        view.strings.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(view);
+    }
+    out
+}
+
+pub fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If `chars[i..]` opens a raw string (`r"`, `r#"`, `br"`, ...), the
+/// number of chars up to and including the opening quote plus the `#`
+/// count; `None` otherwise.
+fn raw_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let hashes = chars[j..].iter().take_while(|&&c| c == '#').count();
+    j += hashes;
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// If `chars[i] == '\''` starts a char (or byte) literal, its length in
+/// chars; `None` when it is a lifetime.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped: find the closing quote within a bounded window
+        // ('\u{10FFFF}' is the longest form).
+        for j in i + 3..(i + 12).min(chars.len()) {
+            if chars[j] == '\'' {
+                return Some(j + 1 - i);
+            }
+        }
+        None
+    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comment_splits_off_code() {
+        let v = line_views("let x = 1; // trailing note\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].code, "let x = 1; ");
+        assert_eq!(v[0].comment, " trailing note");
+        assert!(v[0].strings.is_empty());
+    }
+
+    #[test]
+    fn string_contents_leave_the_code_view() {
+        let v = line_views("call(\"a { b\", x);\n");
+        assert_eq!(v[0].code, "call(, x);");
+        assert_eq!(v[0].strings, " a { b");
+    }
+
+    #[test]
+    fn escaped_quote_does_not_close_the_string() {
+        let v = line_views("s(\"he said \\\"hi\\\" ok\");\n");
+        assert_eq!(v[0].code, "s();");
+        assert_eq!(v[0].strings, " he said \"hi\" ok");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_opaque() {
+        let v = line_views("let q = r#\"quote \" inside\"#; done();\n");
+        assert_eq!(v[0].code, "let q = ; done();");
+        assert_eq!(v[0].strings, " quote \" inside");
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let v = line_views("a(); /* one /* two */ still */ b();\nc();\n");
+        assert_eq!(v[0].code, "a();  b();");
+        assert_eq!(v[0].comment, " one  two  still ");
+        assert_eq!(v[1].code, "c();");
+    }
+
+    #[test]
+    fn multi_line_string_keeps_state() {
+        let v = line_views("let s = \"first\nsecond\" + tail();\n");
+        assert_eq!(v[0].code, "let s = ");
+        assert_eq!(v[0].strings, " first");
+        assert_eq!(v[1].code, " + tail();");
+        assert_eq!(v[1].strings, "second");
+    }
+
+    #[test]
+    fn char_literals_versus_lifetimes() {
+        let v = line_views("fn f<'a>(x: &'a str) { g('x', '\\n'); }\n");
+        assert_eq!(v[0].code, "fn f<'a>(x: &'a str) { g(, ); }");
+        // Both literals consumed as string-ish content.
+        assert_eq!(v[0].strings, "  ");
+    }
+}

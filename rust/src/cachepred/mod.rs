@@ -172,7 +172,7 @@ mod tests {
         let big = traces
             .iter()
             .filter(|t| t.call_desc.contains("syrk"))
-            .max_by(|a, b| a.cold.partial_cmp(&b.cold).unwrap())
+            .max_by(|a, b| a.cold.total_cmp(&b.cold))
             .unwrap();
         assert!(big.cold > big.warm * 1.05, "{big:?}");
     }

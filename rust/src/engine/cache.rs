@@ -16,9 +16,9 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
 
 use crate::util::stats::Summary;
+use crate::util::sync::RwLock;
 
 /// Stack-allocated size key: rounded sizes padded with zeros plus the
 /// dimension count. Models carry at most 4 size dimensions (see
@@ -66,7 +66,7 @@ impl ModelCache {
     pub fn with_granularity(granularity: usize) -> ModelCache {
         ModelCache {
             granularity: granularity.max(1),
-            map: RwLock::new(HashMap::new()),
+            map: RwLock::new(HashMap::new(), "engine::cache::map"),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -112,7 +112,7 @@ impl ModelCache {
             return compute(&rounded);
         };
         {
-            let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+            let map = self.map.read();
             if let Some(hit) = map.get(case).and_then(|inner| inner.get(&key)) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return *hit;
@@ -120,12 +120,7 @@ impl ModelCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let value = compute(&key.0[..sizes.len()]);
-        self.map
-            .write()
-            .unwrap_or_else(|p| p.into_inner())
-            .entry(case.to_string())
-            .or_default()
-            .insert(key, value);
+        self.map.write().entry(case.to_string()).or_default().insert(key, value);
         value
     }
 
@@ -138,12 +133,7 @@ impl ModelCache {
     /// are dropped (they were never cacheable to begin with).
     pub fn preload(&self, case: &str, sizes: &[usize], value: Summary) {
         let Some(key) = self.size_key(sizes) else { return };
-        self.map
-            .write()
-            .unwrap_or_else(|p| p.into_inner())
-            .entry(case.to_string())
-            .or_default()
-            .insert(key, value);
+        self.map.write().entry(case.to_string()).or_default().insert(key, value);
     }
 
     /// Fold over the memoized entries in sorted `(case, rounded sizes)`
@@ -154,7 +144,7 @@ impl ModelCache {
         init: A,
         mut f: impl FnMut(A, &str, &[usize], &Summary) -> A,
     ) -> A {
-        let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+        let map = self.map.read();
         let mut cases: Vec<&String> = map.keys().collect();
         cases.sort();
         let mut acc = init;
@@ -172,12 +162,7 @@ impl ModelCache {
     /// Peek without computing (counts as neither hit nor miss).
     pub fn peek(&self, case: &str, sizes: &[usize]) -> Option<Summary> {
         let key = self.size_key(sizes)?;
-        self.map
-            .read()
-            .unwrap_or_else(|p| p.into_inner())
-            .get(case)
-            .and_then(|inner| inner.get(&key))
-            .copied()
+        self.map.read().get(case).and_then(|inner| inner.get(&key)).copied()
     }
 
     pub fn hits(&self) -> u64 {
@@ -190,12 +175,7 @@ impl ModelCache {
 
     /// Number of memoized `(case, sizes)` entries.
     pub fn len(&self) -> usize {
-        self.map
-            .read()
-            .unwrap_or_else(|p| p.into_inner())
-            .values()
-            .map(|inner| inner.len())
-            .sum()
+        self.map.read().values().map(|inner| inner.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -203,7 +183,7 @@ impl ModelCache {
     }
 
     pub fn clear(&self) {
-        self.map.write().unwrap_or_else(|p| p.into_inner()).clear();
+        self.map.write().clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
     }

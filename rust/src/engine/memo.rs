@@ -15,9 +15,9 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
 
 use crate::util::rng::splitmix64;
+use crate::util::sync::RwLock;
 
 /// Thread-safe `key -> V` memo with hit/miss counters. Share by
 /// reference across threads (`Arc<Memo<V>>` for owned sharing).
@@ -56,7 +56,7 @@ impl<V: Copy> Memo<V> {
     pub fn with_granularity(granularity: usize) -> Memo<V> {
         Memo {
             granularity: granularity.max(1),
-            map: RwLock::new(HashMap::new()),
+            map: RwLock::new(HashMap::new(), "engine::memo::map"),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -73,7 +73,7 @@ impl<V: Copy> Memo<V> {
     /// irrelevant.
     pub fn get_or_insert_with(&self, key: &str, compute: impl FnOnce() -> V) -> V {
         {
-            let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+            let map = self.map.read();
             if let Some(hit) = map.get(key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return *hit;
@@ -81,11 +81,7 @@ impl<V: Copy> Memo<V> {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let value = compute();
-        self.map
-            .write()
-            .unwrap_or_else(|p| p.into_inner())
-            .entry(key.to_string())
-            .or_insert(value);
+        self.map.write().entry(key.to_string()).or_insert(value);
         value
     }
 
@@ -95,15 +91,12 @@ impl<V: Copy> Memo<V> {
     /// processes (a preloaded value must be what `compute` would have
     /// produced for the key, which snapshot header validation enforces).
     pub fn preload(&self, key: &str, value: V) {
-        self.map
-            .write()
-            .unwrap_or_else(|p| p.into_inner())
-            .insert(key.to_string(), value);
+        self.map.write().insert(key.to_string(), value);
     }
 
     /// Peek without computing (counts as neither hit nor miss).
     pub fn peek(&self, key: &str) -> Option<V> {
-        self.map.read().unwrap_or_else(|p| p.into_inner()).get(key).copied()
+        self.map.read().get(key).copied()
     }
 
     /// Is `key` memoized? Counts as neither hit nor miss. Unlike the
@@ -111,14 +104,14 @@ impl<V: Copy> Memo<V> {
     /// *set* after a batch completes is scheduling-independent, so
     /// reuse statistics built on `contains` are deterministic.
     pub fn contains(&self, key: &str) -> bool {
-        self.map.read().unwrap_or_else(|p| p.into_inner()).contains_key(key)
+        self.map.read().contains_key(key)
     }
 
     /// Fold over the stored values in sorted-key order. Sorting makes
     /// floating-point aggregates (total cost, total runs) independent of
     /// hash-map iteration order, hence byte-identical across runs.
     pub fn fold_sorted<A>(&self, init: A, mut f: impl FnMut(A, &str, &V) -> A) -> A {
-        let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+        let map = self.map.read();
         let mut keys: Vec<&String> = map.keys().collect();
         keys.sort();
         let mut acc = init;
@@ -140,7 +133,7 @@ impl<V: Copy> Memo<V> {
     /// deterministic under parallel execution (racing double-computes
     /// inflate the miss counter but store one entry).
     pub fn len(&self) -> usize {
-        self.map.read().unwrap_or_else(|p| p.into_inner()).len()
+        self.map.read().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -148,7 +141,7 @@ impl<V: Copy> Memo<V> {
     }
 
     pub fn clear(&self) {
-        self.map.write().unwrap_or_else(|p| p.into_inner()).clear();
+        self.map.write().clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
     }

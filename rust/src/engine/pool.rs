@@ -32,11 +32,12 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::util::error::{Error, Result};
+use crate::util::sync::{Condvar, Mutex};
 
 /// Number of hardware threads, with a safe fallback of 1.
 pub fn available_parallelism() -> usize {
@@ -45,12 +46,12 @@ pub fn available_parallelism() -> usize {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Lock that survives a poisoned mutex: jobs run under `catch_unwind`, so
-/// a poison can only come from a panic outside job execution; the queue
-/// data (a deque of not-yet-started jobs) is always consistent.
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|p| p.into_inner())
-}
+/// Lock sites for the debug-build order graph (`util::sync`). One label
+/// per lock *role*: all per-worker deques share the deque site — stealing
+/// locks sibling deques under one label, which the graph treats as
+/// same-site nesting, not an ordering edge.
+const DEQUE_SITE: &str = "engine::pool::deque";
+const WAKE_SITE: &str = "engine::pool::wake";
 
 /// Park/wake bookkeeping, guarded by one mutex so the idle count is
 /// exact at every wake decision.
@@ -79,7 +80,7 @@ struct Shared {
 impl Shared {
     fn push(&self, job: Job) {
         let slot = self.cursor.fetch_add(1, Ordering::SeqCst) % self.deques.len();
-        lock(&self.deques[slot]).push_back(job);
+        self.deques[slot].lock().push_back(job);
     }
 
     /// Advance the wake generation and rouse `min(queued, idle)` parked
@@ -94,7 +95,7 @@ impl Shared {
     /// that parks after this bump re-checks the deques first and never
     /// sleeps on available work.
     fn wake_for(&self, queued: usize) {
-        let mut state = lock(&self.wake);
+        let mut state = self.wake.lock();
         state.generation += 1;
         let idle = state.idle;
         drop(state);
@@ -110,19 +111,19 @@ impl Shared {
     /// Advance the wake generation and rouse every parked worker —
     /// shutdown must reach all of them.
     fn wake_all(&self) {
-        lock(&self.wake).generation += 1;
+        self.wake.lock().generation += 1;
         self.signal.notify_all();
     }
 
     /// Pop for worker `own`: own deque first (FIFO), then steal from the
     /// back of the others, scanning cyclically for fairness.
     fn pop_for(&self, own: usize) -> Option<Job> {
-        if let Some(job) = lock(&self.deques[own]).pop_front() {
+        if let Some(job) = self.deques[own].lock().pop_front() {
             return Some(job);
         }
         let n = self.deques.len();
         for off in 1..n {
-            if let Some(job) = lock(&self.deques[(own + off) % n]).pop_back() {
+            if let Some(job) = self.deques[(own + off) % n].lock().pop_back() {
                 return Some(job);
             }
         }
@@ -134,7 +135,7 @@ impl Shared {
     /// exact submission order.
     fn pop_helping(&self) -> Option<Job> {
         for dq in &self.deques {
-            if let Some(job) = lock(dq).pop_front() {
+            if let Some(job) = dq.lock().pop_front() {
                 return Some(job);
             }
         }
@@ -142,7 +143,7 @@ impl Shared {
     }
 
     fn has_work(&self) -> bool {
-        self.deques.iter().any(|dq| !lock(dq).is_empty())
+        self.deques.iter().any(|dq| !dq.lock().is_empty())
     }
 }
 
@@ -163,18 +164,15 @@ fn worker_loop(shared: Arc<Shared>, own: usize) {
         // this worker in the idle count, so at least one sleeper is
         // notified) — a wakeup can be early (spurious work check) but
         // never missed.
-        let mut guard = lock(&shared.wake);
+        let mut guard = shared.wake.lock();
         let seen = guard.generation;
         if shared.shutdown.load(Ordering::SeqCst) || shared.has_work() {
             continue;
         }
         guard.idle += 1;
-        let mut guard = shared
-            .signal
-            .wait_while(guard, |st| {
-                st.generation == seen && !shared.shutdown.load(Ordering::SeqCst)
-            })
-            .unwrap_or_else(|p| p.into_inner());
+        let mut guard = shared.signal.wait_while(guard, |st| {
+            st.generation == seen && !shared.shutdown.load(Ordering::SeqCst)
+        });
         guard.idle -= 1;
     }
 }
@@ -193,9 +191,9 @@ impl Engine {
         let jobs = jobs.max(1);
         let slots = (jobs - 1).max(1);
         let shared = Arc::new(Shared {
-            deques: (0..slots).map(|_| Mutex::new(VecDeque::new())).collect(),
+            deques: (0..slots).map(|_| Mutex::new(VecDeque::new(), DEQUE_SITE)).collect(),
             cursor: AtomicUsize::new(0),
-            wake: Mutex::new(WakeState { generation: 0, idle: 0 }),
+            wake: Mutex::new(WakeState { generation: 0, idle: 0 }, WAKE_SITE),
             signal: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -226,14 +224,14 @@ impl Engine {
     /// `wake_generation() - batches submitted` staying constant is the
     /// "no idle churn" property the condvar parking provides.
     pub fn wake_generation(&self) -> u64 {
-        lock(&self.shared.wake).generation
+        self.shared.wake.lock().generation
     }
 
     /// Number of workers currently parked on the condvar. Instantaneous
     /// (a worker between jobs is neither idle nor counted), so tests
     /// should poll for a settled value rather than assert mid-flight.
     pub fn idle_workers(&self) -> usize {
-        lock(&self.shared.wake).idle
+        self.shared.wake.lock().idle
     }
 
     /// Execute a batch of independent jobs, returning their results in

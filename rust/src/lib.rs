@@ -28,13 +28,17 @@
 //!   contractions (Ch. 6);
 //! * [`runtime`] — the PJRT bridge loading `artifacts/*.hlo.txt`;
 //! * [`figures`] — drivers regenerating every table and figure of the
-//!   paper's evaluation (see DESIGN.md §6).
+//!   paper's evaluation (see DESIGN.md §6);
+//! * [`analysis`] — the determinism lint behind `dlapm lint`: a
+//!   zero-dependency static scan of the crate's own sources for patterns
+//!   that break the byte-identical-output contract.
 
 // Crate-wide style posture for the clippy `-D warnings` CI gate: indexed
 // loops over parallel fixed-size arrays and wide-but-explicit argument
 // lists are deliberate idiom in this numeric codebase.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod analysis;
 pub mod engine;
 pub mod machine;
 pub mod util;

@@ -18,7 +18,7 @@ use super::kernels::Region;
 /// Side length of a tile in elements.
 pub const TILE: usize = 64;
 
-#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
 struct TileKey {
     matrix: u64,
     trow: u32,
@@ -162,7 +162,9 @@ impl CacheTracker {
             .iter()
             .map(|(k, &(stamp, bytes))| (*k, stamp, bytes))
             .collect();
-        entries.sort_by_key(|&(_, stamp, _)| stamp);
+        // Secondary key: the tile itself, so ties among equal stamps
+        // (tiles brought in by one touch) evict in map-order-free order.
+        entries.sort_by_key(|&(key, stamp, _)| (stamp, key));
         for (key, _, bytes) in entries {
             if self.used <= self.capacity {
                 break;

@@ -33,6 +33,7 @@ fn main() {
         "blocksize" => blocksize_cmd(&args),
         "contract" => contract_cmd(&args),
         "sampler" => sampler_cmd(&args),
+        "lint" => lint_cmd(&args),
         "list" => list_cmd(),
         _ => {
             println!("{}", HELP);
@@ -86,6 +87,10 @@ subcommands:
                         pays for zero new benchmarks and prints
                         byte-identical ranking tables
   sampler  (reads a Sampler script from stdin)
+  lint     [--src DIR]  determinism static analysis over the crate's own
+           sources (default: ./src, falling back to the build-time crate
+           root); exits non-zero per violation, reported as
+           'file:line rule message' (see README, Determinism contract)
   list     (available figure ids / cpus / libraries)
 ";
 
@@ -740,6 +745,43 @@ fn sampler_cmd(args: &Args) {
             }
         }
         Err(e) => eprintln!("sampler error: {e}"),
+    }
+}
+
+/// `dlapm lint`: run the determinism static analysis over the crate's
+/// sources. Exit 0 on a clean tree, 1 with one `file:line rule message`
+/// report per violation, 2 when the scan itself fails (unreadable tree).
+fn lint_cmd(args: &Args) {
+    let root = match args.get("src") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => {
+            // Prefer the source tree relative to the invocation directory
+            // (how ci.sh runs it); fall back to the build-time crate root
+            // so `cargo run -- lint` works from anywhere.
+            ["src", "rust/src"]
+                .iter()
+                .map(std::path::PathBuf::from)
+                .find(|p| p.is_dir())
+                .unwrap_or_else(|| {
+                    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+                })
+        }
+    };
+    match dlapm::analysis::scan_dir(&root) {
+        Ok(violations) if violations.is_empty() => {
+            println!("dlapm lint: {} clean", root.display());
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{}/{}", root.display(), v.render());
+            }
+            println!("dlapm lint: {} violation(s)", violations.len());
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("dlapm lint: {e}");
+            std::process::exit(2);
+        }
     }
 }
 

@@ -186,7 +186,7 @@ pub fn prune(scores: Vec<ConfigScore>) -> PruneResult {
         .collect();
     // First quartile of generation cost among accuracy survivors.
     let mut costs: Vec<f64> = after_accuracy.iter().map(|&i| scores[i].model_cost).collect();
-    costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    costs.sort_by(|a, b| a.total_cmp(b));
     let q1 = costs[(costs.len().saturating_sub(1)) / 4];
     let after_cost: Vec<usize> = after_accuracy
         .iter()
@@ -197,7 +197,10 @@ pub fn prune(scores: Vec<ConfigScore>) -> PruneResult {
     // Majority vote per parameter among survivors.
     let survivors: Vec<&ConfigScore> = after_cost.iter().map(|&i| &scores[i]).collect();
     let vote = |f: &dyn Fn(&GenConfig) -> String| -> String {
-        let mut counts: std::collections::HashMap<String, usize> = Default::default();
+        // BTreeMap so ties break on the largest key, deterministically —
+        // HashMap iteration order would make max_by_key's winner vary
+        // per process.
+        let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
         for s in &survivors {
             *counts.entry(f(&s.cfg)).or_default() += 1;
         }
@@ -293,5 +296,22 @@ mod tests {
         assert_eq!(res.after_accuracy, vec![0, 1, 3]);
         assert!(res.after_cost.contains(&1));
         assert!(!res.after_cost.contains(&0));
+    }
+
+    #[test]
+    fn prune_survives_nan_cost_scores() {
+        // A NaN model cost (degenerate config whose evaluation produced
+        // no finite timings) must not panic the quartile sort; total_cmp
+        // places NaN last, so finite-cost configs still prune normally.
+        let mk = |err: f64, cost: f64| ConfigScore {
+            cfg: GenConfig::default(),
+            model_error: err,
+            model_cost: cost,
+            pieces: 1,
+        };
+        let scores = vec![mk(0.01, f64::NAN), mk(0.011, 1.0), mk(0.012, 2.0)];
+        let res = prune(scores);
+        assert_eq!(res.after_accuracy, vec![0, 1, 2]);
+        assert!(res.after_cost.contains(&1));
     }
 }

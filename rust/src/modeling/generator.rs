@@ -319,7 +319,7 @@ pub fn generate_model_with(
             })
             .collect();
         cand.sort_by(|&a, &b| {
-            frontier[b].err.partial_cmp(&frontier[a].err).unwrap().then(a.cmp(&b))
+            frontier[b].err.total_cmp(&frontier[a].err).then(a.cmp(&b))
         });
         cand.truncate(budget);
         if cand.is_empty() {

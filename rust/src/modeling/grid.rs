@@ -85,7 +85,7 @@ pub fn nodes_1d(kind: GridKind, n: usize) -> Vec<f64> {
                     (1.0 - c) / 2.0
                 })
                 .collect();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(|a, b| a.total_cmp(b));
             v
         }
     }
@@ -142,6 +142,19 @@ mod tests {
         assert!((n[4] - 1.0).abs() < 1e-12);
         // Denser near boundaries than in the middle.
         assert!(n[1] - n[0] < n[2] - n[1]);
+    }
+
+    #[test]
+    fn chebyshev_nodes_sort_ascending_in_unit_interval() {
+        // Regression guard for the node sort: strictly ascending, both
+        // endpoints exact, everything inside [0, 1].
+        for n in [2usize, 3, 5, 9] {
+            let v = nodes_1d(GridKind::Chebyshev, n);
+            assert_eq!(v.len(), n);
+            assert_eq!(v[0], 0.0);
+            assert_eq!(v[n - 1], 1.0);
+            assert!(v.windows(2).all(|w| w[0] < w[1]), "{v:?}");
+        }
     }
 
     #[test]

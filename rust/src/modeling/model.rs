@@ -335,17 +335,21 @@ impl ModelStore {
         self.models.get(&case_key(call)).map(|m| m.estimate(&call.sizes()))
     }
 
-    /// Total virtual measurement cost of all models.
+    /// Total virtual measurement cost of all models. Summed in sorted
+    /// order: f64 addition is order-dependent, and the map's iteration
+    /// order is not, so an unsorted sum would drift across processes.
     pub fn total_gen_cost(&self) -> f64 {
-        self.models.values().map(|m| m.gen_cost).sum()
+        let mut costs: Vec<f64> = self.models.values().map(|m| m.gen_cost).collect();
+        costs.sort_by(|a, b| a.total_cmp(b));
+        costs.iter().sum()
     }
 
     pub fn to_json(&self) -> Json {
-        let mut models: Vec<&PerfModel> = self.models.values().collect();
-        models.sort_by(|a, b| a.case.cmp(&b.case));
+        let mut sorted: Vec<&PerfModel> = self.models.values().collect();
+        sorted.sort_by(|a, b| a.case.cmp(&b.case));
         Json::obj(vec![
             ("machine", Json::Str(self.machine_label.clone())),
-            ("models", Json::Arr(models.iter().map(|m| m.to_json()).collect())),
+            ("models", Json::Arr(sorted.iter().map(|m| m.to_json()).collect())),
         ])
     }
 
@@ -468,13 +472,10 @@ mod tests {
     fn store_roundtrip_via_file() {
         let mut store = ModelStore::new("haswell/openblas/1t");
         store.insert(linear_model());
-        // Per-process unique dir so parallel/repeated runs cannot collide.
-        let nanos = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.subsec_nanos())
-            .unwrap_or(0);
+        // Process- and call-unique dir so parallel/repeated runs cannot
+        // collide (no wall clock involved; see util::sync::unique_token).
         let dir = std::env::temp_dir()
-            .join(format!("dlapm_test_store_{}_{nanos}", std::process::id()));
+            .join(format!("dlapm_test_store_{}", crate::util::sync::unique_token()));
         let path = dir.join("models.json");
         // Cleanup runs on every exit path, including assertion unwinds.
         struct Cleanup(std::path::PathBuf);

@@ -86,6 +86,7 @@ pub fn prewarm_grid(
             }
         }
     }
+    // lint:allow(unsorted-map-iter): per_case is a BTreeMap (sorted); the HashSet is dedup-membership only
     for (case, (points, _)) in per_case {
         let model = store.get(&case).expect("case presence checked during collection");
         let estimates = model.evaluate_batch(&points);

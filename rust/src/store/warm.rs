@@ -30,10 +30,10 @@
 //!   what was saved.
 
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::util::sync::{unique_token, Mutex};
 
 use super::Persist;
 
@@ -127,7 +127,7 @@ impl WarmStore {
     pub fn open(dir: &Path) -> Result<WarmStore> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating warm store directory {}", dir.display()))?;
-        Ok(WarmStore { dir: dir.to_path_buf(), status: Mutex::new(Vec::new()) })
+        Ok(WarmStore { dir: dir.to_path_buf(), status: Mutex::new(Vec::new(), "store::warm::status") })
     }
 
     pub fn dir(&self) -> &Path {
@@ -142,12 +142,12 @@ impl WarmStore {
     }
 
     fn record(&self, line: String) {
-        self.status.lock().unwrap_or_else(|p| p.into_inner()).push(line);
+        self.status.lock().push(line);
     }
 
     /// Drain the accumulated status lines (load/save events, in order).
     pub fn take_status(&self) -> Vec<String> {
-        std::mem::take(&mut *self.status.lock().unwrap_or_else(|p| p.into_inner()))
+        std::mem::take(&mut *self.status.lock())
     }
 
     /// Load a slot. `Ok(None)` = cold start (missing, stale or
@@ -234,7 +234,10 @@ impl WarmStore {
                 format!("refusing to save unreloadable snapshot {}", path.display())
             })?;
         let stem = file_stem(slot, key);
-        let tmp = path.with_file_name(format!("{stem}.json.tmp{}", std::process::id()));
+        // Process-unique *and* in-process-unique temp name: two threads
+        // saving the same slot concurrently each rename their own file
+        // (last rename wins whole), and no wall clock is read here.
+        let tmp = path.with_file_name(format!("{stem}.json.tmp{}", unique_token()));
         let write = || -> Result<()> {
             std::fs::write(&tmp, &text)?;
             std::fs::rename(&tmp, &path)?;
@@ -257,12 +260,8 @@ mod tests {
 
     impl TempDir {
         fn new(tag: &str) -> TempDir {
-            let nanos = std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .map(|d| d.subsec_nanos())
-                .unwrap_or(0);
-            let dir = std::env::temp_dir()
-                .join(format!("dlapm_{tag}_{}_{nanos}", std::process::id()));
+            let dir =
+                std::env::temp_dir().join(format!("dlapm_{tag}_{}", unique_token()));
             std::fs::create_dir_all(&dir).unwrap();
             TempDir(dir)
         }
@@ -332,6 +331,33 @@ mod tests {
             .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
             .collect();
         assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn concurrent_saves_of_one_slot_leave_a_single_clean_snapshot() {
+        // The temp-name uniqueness contract under fire: several threads
+        // save the same slot at once. Each writes its own uniquely-named
+        // tmp file (pid + atomic counter) and renames it whole, so the
+        // slot ends valid — all writers render identical contents — with
+        // no tmp leftovers and no interleaved partial writes.
+        let dir = TempDir::new("warm_concurrent");
+        let w = WarmStore::open(&dir.0).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| w.save("micro_memo_g1", &key(), &memo_with_entry()).unwrap());
+            }
+        });
+        let back = w.load::<MicroMemo>("micro_memo_g1", &key()).unwrap().expect("warm");
+        assert_eq!(back.len(), 1);
+        let machine_dir = dir.0.join("haswell_openblas_1t");
+        let leftovers: Vec<_> = std::fs::read_dir(&machine_dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let status = w.take_status();
+        assert_eq!(status.iter().filter(|l| l.contains("saved 1 entries")).count(), 4);
     }
 
     #[test]

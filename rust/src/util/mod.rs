@@ -13,3 +13,4 @@ pub mod plot;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -54,7 +54,7 @@ impl Summary {
     pub fn from_samples(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "summary of no samples");
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let n = sorted.len();
         let med = if n % 2 == 1 {
             sorted[n / 2]
@@ -114,7 +114,7 @@ impl Summary {
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     assert!(!samples.is_empty());
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -157,6 +157,23 @@ mod tests {
         assert_eq!(s.med, 7.5);
         assert_eq!(s.max, 7.5);
         assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn summary_with_nan_sample_does_not_panic() {
+        // A NaN repetition (e.g. a timer glitch) must not abort the whole
+        // summary: total_cmp sorts NaN after every finite value, so min
+        // stays finite and the NaN surfaces in max where it is visible.
+        let s = Summary::from_samples(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(s.med, 2.0);
+    }
+
+    #[test]
+    fn percentile_with_nan_sample_does_not_panic() {
+        assert_eq!(percentile(&[f64::NAN, 3.0, 1.0], 0.0), 1.0);
+        assert!(percentile(&[f64::NAN, 3.0, 1.0], 100.0).is_nan());
     }
 
     #[test]

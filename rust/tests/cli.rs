@@ -426,11 +426,8 @@ fn select_grid_ranks_every_pair() {
 /// and `gen --jobs 4` write byte-identical model stores.
 #[test]
 fn gen_jobs_parity_byte_for_byte() {
-    let nanos = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.subsec_nanos())
-        .unwrap_or(0);
-    let dir = std::env::temp_dir().join(format!("dlapm_cli_gen_{}_{nanos}", std::process::id()));
+    let dir = std::env::temp_dir()
+        .join(format!("dlapm_cli_gen_{}", dlapm::util::sync::unique_token()));
     std::fs::create_dir_all(&dir).unwrap();
     struct Cleanup(std::path::PathBuf);
     impl Drop for Cleanup {
@@ -457,4 +454,36 @@ fn gen_jobs_parity_byte_for_byte() {
     let b = gen("4", "jobs4.json");
     assert!(!a.is_empty());
     assert_eq!(a, b, "gen --jobs 1 and --jobs 4 must write identical stores");
+}
+
+/// `dlapm lint` exits 0 on the crate's own (post-fix) source tree and
+/// prints the clean summary.
+#[test]
+fn lint_self_scan_is_clean() {
+    // cargo test runs with CWD = the crate root, so `src` resolves.
+    let out = dlapm().arg("lint").output().expect("spawning dlapm lint");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "dlapm lint flagged the tree:\n{text}");
+    assert!(text.contains("clean"), "{text}");
+}
+
+/// `dlapm lint --src DIR` exits non-zero on a tree with a violation and
+/// reports it as `file:line rule message`.
+#[test]
+fn lint_reports_violations_with_nonzero_exit() {
+    let dir = TempDir::new("cli_lint");
+    std::fs::write(
+        dir.path().join("bad.rs"),
+        "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+    )
+    .unwrap();
+    let out = dlapm()
+        .args(["lint", "--src"])
+        .arg(dir.path())
+        .output()
+        .expect("spawning dlapm lint --src");
+    assert_eq!(out.status.code(), Some(1), "{:?}", out.status);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("bad.rs:2 nan-partial-cmp"), "{text}");
+    assert!(text.contains("1 violation(s)"), "{text}");
 }

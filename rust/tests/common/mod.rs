@@ -12,12 +12,11 @@ pub struct TempDir(pub PathBuf);
 #[allow(dead_code)]
 impl TempDir {
     pub fn new(tag: &str) -> TempDir {
-        let nanos = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.subsec_nanos())
-            .unwrap_or(0);
+        // Process- and call-unique without reading the wall clock (the
+        // determinism lint bans SystemTime-derived names in the crate;
+        // the tests follow the same discipline).
         let dir = std::env::temp_dir()
-            .join(format!("dlapm_{tag}_{}_{nanos}", std::process::id()));
+            .join(format!("dlapm_{tag}_{}", dlapm::util::sync::unique_token()));
         std::fs::create_dir_all(&dir).unwrap();
         TempDir(dir)
     }
