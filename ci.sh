@@ -133,6 +133,55 @@ else
     exit 1
 fi
 
+echo "== serve --stdio smoke (jobs 1 cold vs jobs 4 warm against one --store) =="
+SERVE_STORE="$SMOKE_DIR/servestore"
+printf '%s\n' \
+    '{"op":"contract_rank","spec":"abc=ai,ibc","n":30,"seed":7,"id":1}' \
+    '{"op":"status","id":2}' \
+    '{"op":"shutdown","id":3}' > "$SMOKE_DIR/serve_script.jsonl"
+cargo run -q --bin dlapm -- serve --stdio --jobs 1 --store "$SERVE_STORE" \
+    < "$SMOKE_DIR/serve_script.jsonl" \
+    > "$SMOKE_DIR/serve_jobs1.txt" 2> "$SMOKE_DIR/serve_jobs1.err"
+cargo run -q --bin dlapm -- serve --stdio --jobs 4 --store "$SERVE_STORE" \
+    < "$SMOKE_DIR/serve_script.jsonl" \
+    > "$SMOKE_DIR/serve_jobs4.txt" 2> "$SMOKE_DIR/serve_jobs4.err"
+# Whole-file comparison: prediction responses AND the status line must be
+# byte-identical between a cold jobs-1 daemon and a warm jobs-4 daemon.
+if cmp -s "$SMOKE_DIR/serve_jobs1.txt" "$SMOKE_DIR/serve_jobs4.txt"; then
+    echo "serve responses are byte-identical: jobs 1 (cold) vs jobs 4 (warm restart)"
+else
+    echo "ERROR: serve --stdio differs between jobs 1 (cold) and jobs 4 (warm):" >&2
+    diff "$SMOKE_DIR/serve_jobs1.txt" "$SMOKE_DIR/serve_jobs4.txt" >&2 || true
+    exit 1
+fi
+if ! grep -q '"ok":true' "$SMOKE_DIR/serve_jobs1.txt"; then
+    echo "ERROR: serve smoke requests did not succeed:" >&2
+    cat "$SMOKE_DIR/serve_jobs1.txt" >&2
+    exit 1
+fi
+# The warm run reused everything, so its final checkpoint writes nothing.
+if ! grep -q "shutdown: 0 warm slot(s) checkpointed" "$SMOKE_DIR/serve_jobs4.err"; then
+    echo "ERROR: warm serve run should have nothing new to checkpoint:" >&2
+    cat "$SMOKE_DIR/serve_jobs4.err" >&2
+    exit 1
+fi
+echo "warm serve run checkpointed zero slots (zero new work)"
+
+echo "== serve protocol docs freshness (every op documented) =="
+SERVE_OPS="$(sed -n '/pub const OPS/,/];/p' src/serve/protocol.rs \
+    | grep -oE '"[a-z_]+"' | tr -d '"')"
+if [ -z "$SERVE_OPS" ]; then
+    echo "ERROR: could not extract the op list from src/serve/protocol.rs" >&2
+    exit 1
+fi
+for op in $SERVE_OPS; do
+    if ! grep -q "\`$op\`" docs/serve-protocol.md; then
+        echo "ERROR: op '$op' is not documented in docs/serve-protocol.md" >&2
+        exit 1
+    fi
+done
+echo "all $(echo "$SERVE_OPS" | wc -w) serve ops documented in docs/serve-protocol.md"
+
 if [ "$BENCH" -eq 1 ]; then
     echo "== bench suites (recording BENCH_<suite>.json) =="
     DLAPM_BENCH_JSON="$ROOT" cargo bench --bench modeling

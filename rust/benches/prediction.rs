@@ -2,8 +2,9 @@
 //! orders of magnitude faster than measurement). Covers Fig 4.12/4.14
 //! selection sweeps, cold-vs-warm estimate-cache prediction, batched
 //! model evaluation, block-size sweeps through the selection core
-//! (batched prewarm vs a per-b loop), and the scalar vs PJRT polyeval
-//! backends.
+//! (batched prewarm vs a per-b loop), the serve daemon's request path
+//! (cold vs resident-warm, plus contended coalescing), and the scalar
+//! vs PJRT polyeval backends.
 use std::sync::Arc;
 
 use dlapm::engine::{Engine, ModelCache};
@@ -13,6 +14,7 @@ use dlapm::predict::algorithms::potrf::Potrf;
 use dlapm::predict::algorithms::BlockedAlg;
 use dlapm::predict::measurement::coverage;
 use dlapm::predict::predictor::{predict_calls, predict_calls_cached};
+use dlapm::serve::{Coalescer, ServeOpts, ServeState};
 use dlapm::util::bench::BenchSuite;
 
 fn main() {
@@ -69,6 +71,35 @@ fn main() {
             .unwrap()
             .0
             .b_pred
+    });
+    // Prediction-as-a-service: the daemon's request path on a small
+    // contraction ranking. Cold pays state construction plus the first
+    // micro-benchmark pass; warm is the resident-daemon steady state
+    // (every memo lookup hits, the response is recomputed pure).
+    let req = r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":16,"small":4,"seed":7}"#;
+    let opts = || ServeOpts { store_dir: None, jobs: 1, checkpoint_every: 0 };
+    suite.add("serve/handle-contract-cold", || {
+        let state = ServeState::new(&opts()).unwrap();
+        state.handle_line(req).unwrap().len()
+    });
+    let resident = ServeState::new(&opts()).unwrap();
+    resident.handle_line(req).unwrap();
+    suite.add("serve/handle-contract-warm", || resident.handle_line(req).unwrap().len());
+    // Contended coalescing: 8 threads race one key — one leads, the rest
+    // park on the condvar and clone the leader's value.
+    suite.add("serve/coalesce-contended", || {
+        let co: Coalescer<u64> = Coalescer::new("bench-coalesce");
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..8 {
+                handles.push(s.spawn(|| co.run("k", || 1u64)));
+            }
+            let mut total = 0u64;
+            for h in handles {
+                total += h.join().unwrap();
+            }
+            total
+        })
     });
     // Batched evaluation: ordered sweep through one model's domain.
     if let Some(model) = store.models.values().max_by_key(|m| m.pieces.len()) {

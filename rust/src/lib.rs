@@ -23,6 +23,10 @@
 //! * [`store`] — warm-start persistence: a versioned on-disk store
 //!   reloading the model cache, micro-benchmark memo and generated models
 //!   across runs (the "generated once per platform" economics);
+//! * [`serve`] — prediction-as-a-service: the `dlapm serve` daemon
+//!   holding all warm state resident and answering requests over a
+//!   line-oriented JSON protocol with request coalescing and periodic
+//!   warm-store checkpointing;
 //! * [`cachepred`] — cache-aware timing combination (Ch. 5);
 //! * [`tensor`] — micro-benchmark-based predictions for BLAS-based tensor
 //!   contractions (Ch. 6);
@@ -46,6 +50,7 @@ pub mod sampler;
 pub mod modeling;
 pub mod predict;
 pub mod select;
+pub mod serve;
 pub mod store;
 pub mod runtime;
 pub mod tensor;

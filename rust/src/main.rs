@@ -33,6 +33,7 @@ fn main() {
         "blocksize" => blocksize_cmd(&args),
         "contract" => contract_cmd(&args),
         "sampler" => sampler_cmd(&args),
+        "serve" => serve_cmd(&args),
         "lint" => lint_cmd(&args),
         "list" => list_cmd(),
         _ => {
@@ -86,6 +87,20 @@ subcommands:
                         seed / granularity (implies --rank); a warm rerun
                         pays for zero new benchmarks and prints
                         byte-identical ranking tables
+  serve    --store DIR [--stdio | --addr HOST:PORT] [--jobs N]
+           [--checkpoint-every R]
+           prediction-as-a-service daemon: load all warm state once and
+           answer predict/select/blocksize/contract_rank requests over a
+           line-oriented JSON protocol (see docs/serve-protocol.md);
+           identical in-flight requests coalesce behind one computation;
+           the warm store checkpoints every R handled requests (default
+           64, 0 = only at shutdown) and on shutdown/SIGINT/EOF
+           --stdio    batch mode: requests on stdin, responses on stdout
+           --addr     TCP mode; 127.0.0.1:0 picks a free port (announced
+                      on stderr)
+           --client '{\"op\":...}' --addr HOST:PORT
+                      one-shot client: send one request, print the
+                      response line, exit
   sampler  (reads a Sampler script from stdin)
   lint     [--src DIR]  determinism static analysis over the crate's own
            sources (default: ./src, falling back to the build-time crate
@@ -270,37 +285,18 @@ fn generate_cmd(args: &Args) {
     );
 }
 
-/// Algorithm registry for an op family. `Arc`'d so the same objects can
-/// feed both borrowed call-sites (`gen`, `predict`) and the `'static`
-/// selection-core candidates (`select`).
+/// Algorithm registry for an op family — the CLI view of
+/// [`dlapm::predict::algorithms::registry`], which the serve daemon
+/// shares so every surface ranks the same candidates.
 fn default_algs(op: &str) -> Vec<Arc<dyn dlapm::predict::BlockedAlg + Send + Sync>> {
-    use dlapm::predict::algorithms::lapack::{LapackAlg, LapackOp};
-    use dlapm::predict::algorithms::potrf::Potrf;
-    use dlapm::predict::algorithms::trsyl::TrsylAlg;
-    use dlapm::predict::algorithms::trtri::Trtri;
-    let mut v: Vec<Arc<dyn dlapm::predict::BlockedAlg + Send + Sync>> = Vec::new();
-    if op == "potrf" || op == "all" || op == "full" {
-        v.extend(Potrf::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
-    }
-    if op == "trtri" || op == "all" || op == "full" {
-        v.extend(Trtri::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
-    }
-    if op == "trsyl" || op == "full" {
-        v.extend(TrsylAlg::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
-    }
-    if op == "all" || op == "full" {
-        for o in [LapackOp::Lauum, LapackOp::Sygst, LapackOp::Getrf, LapackOp::Geqrf] {
-            v.push(Arc::new(LapackAlg::new(o, Elem::D)));
-        }
-    }
-    v
+    dlapm::predict::algorithms::registry(op)
 }
 
 /// Borrowed views of the Arc'd registry (auto-trait-dropping coercion).
 fn alg_refs(
     algs: &[Arc<dyn dlapm::predict::BlockedAlg + Send + Sync>],
 ) -> Vec<&dyn dlapm::predict::BlockedAlg> {
-    algs.iter().map(|a| &**a as &dyn dlapm::predict::BlockedAlg).collect()
+    dlapm::predict::algorithms::registry_refs(algs)
 }
 
 fn predict_cmd(args: &Args) {
@@ -316,10 +312,8 @@ fn predict_cmd(args: &Args) {
     for alg in &algs {
         let pred = dlapm::predict::predictor::predict_calls_cached(&store, &alg.calls(n, b), &cache);
         println!(
-            "{:<24} t_med={:>10.4} ms  (skipped {} unmodeled calls)",
-            alg.name(),
-            pred.time.med * 1e3,
-            pred.unmodeled_calls
+            "{}",
+            dlapm::report::predict_line(&alg.name(), pred.time.med, pred.unmodeled_calls)
         );
     }
     eprintln!(
@@ -379,7 +373,7 @@ fn select_cmd(args: &Args) {
             .collect();
         let ranked =
             dlapm::select::rank_candidates_par(&engine, &cands).expect("selection ranking failed");
-        println!("predicted ranking for n={n}, b={b} on {}:", machine.label());
+        println!("{}", dlapm::report::select_header(n, b, &machine.label()));
         let (text, csv) = dlapm::report::selection_table(&ranked);
         print!("{text}");
         if let Some(q) = dlapm::select::selection_quality(&ranked) {
@@ -440,21 +434,14 @@ fn blocksize_cmd(args: &Args) {
         let (sweep, ranked) =
             blocksize::optimize_blocksize_with(&engine, &store, &cache, &alg, n, &bs)
                 .expect("block-size ranking failed");
-        println!(
-            "block-size ranking for {} at n={n} on {} ({} candidate block size(s)):",
-            alg.name(),
-            machine.label(),
-            bs.len()
+        let (text, csv) = dlapm::report::blocksize_block(
+            &alg.name(),
+            &machine.label(),
+            n,
+            &ranked,
+            sweep.b_pred,
         );
-        let (text, csv) = dlapm::report::selection_table(&ranked);
-        let shown = ranked.len().min(10);
-        for line in text.lines().take(shown) {
-            println!("{line}");
-        }
-        if ranked.len() > shown {
-            println!("  ... {} more candidate(s); full ranking in --csv", ranked.len() - shown);
-        }
-        println!("  predicted optimal block size for n={n}: b={}", sweep.b_pred);
+        print!("{text}");
         all_csv.push_str(&format!("# n={n}\n{csv}"));
         if validate {
             // Measure on a coarse subgrid (full executions are the
@@ -505,12 +492,13 @@ fn contract_cmd(args: &Args) {
     }
     let spec = match preset.as_deref() {
         None => args.get_or("spec", "abc=ai,ibc").to_string(),
-        Some("vector") => "a=iaj,ji".to_string(),
-        Some("challenging") => "abc=ija,jbic".to_string(),
-        Some(other) => {
-            eprintln!("unknown --preset '{other}' (expected vector or challenging)");
-            std::process::exit(2);
-        }
+        Some(name) => match dlapm::tensor::spec::preset_spec(name) {
+            Some(s) => s.to_string(),
+            None => {
+                eprintln!("unknown --preset '{name}' (expected vector or challenging)");
+                std::process::exit(2);
+            }
+        },
     };
     let small = args.get_usize("small", 8);
     let machine = machine_from(args);
@@ -520,14 +508,8 @@ fn contract_cmd(args: &Args) {
     let size_list = args.get("sweep").or_else(|| args.get("n")).unwrap_or("64").to_string();
     let sizes = parse_sizes(&size_list, "n");
     let base = dlapm::tensor::Contraction::parse(&spec).expect("bad --spec");
-    let sized = |n: usize| {
-        let dims: Vec<(char, usize)> = base
-            .dims
-            .keys()
-            .map(|&i| (i, if matches!(i, 'i' | 'j' | 'k') { small } else { n }))
-            .collect();
-        base.clone().with_dims(&dims)
-    };
+    // One sizing rule shared with the serve daemon's `contract_rank` op.
+    let sized = |n: usize| base.sized_uniform(small, n);
 
     // --validate/--sweep/--csv/--jobs/--preset/--memo-granularity/--store
     // only make sense for the selection core, so any of them implies
@@ -621,8 +603,8 @@ fn contract_cmd(args: &Args) {
         let ranked = dlapm::select::rank_candidates_par(&engine, &mk_cands(&memo, vreps))
             .expect("contraction ranking failed");
         println!(
-            "ranking {n_algs} algorithms for {spec} with n={n} (small={small}) on {}:",
-            machine.label()
+            "{}",
+            dlapm::report::contract_header(n_algs, &spec, n, small, &machine.label())
         );
         println!(
             "  memo reuse for n={n}: {reused} of {distinct} distinct benchmark(s) already \
@@ -745,6 +727,51 @@ fn sampler_cmd(args: &Args) {
             }
         }
         Err(e) => eprintln!("sampler error: {e}"),
+    }
+}
+
+/// `dlapm serve`: the prediction-as-a-service daemon, plus its one-shot
+/// `--client` mode. Wire protocol: docs/serve-protocol.md. Exit codes:
+/// 0 clean (including after structured error responses), 1 on transport
+/// or store failure, 2 on usage errors.
+fn serve_cmd(args: &Args) {
+    if let Some(request) = args.get("client") {
+        let addr = args.get("addr").unwrap_or_else(|| {
+            eprintln!("serve --client requires --addr HOST:PORT");
+            std::process::exit(2);
+        });
+        match dlapm::serve::run_client(addr, request) {
+            Ok(line) => println!("{line}"),
+            Err(e) => {
+                eprintln!("serve client: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    let opts = dlapm::serve::ServeOpts {
+        store_dir: args.get("store").map(std::path::PathBuf::from),
+        jobs: args.get_usize("jobs", engine::available_parallelism()),
+        checkpoint_every: args.get_u64("checkpoint-every", 64),
+    };
+    let state = match dlapm::serve::ServeState::new(&opts) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(1);
+        }
+    };
+    let result = if args.flag("stdio") {
+        dlapm::serve::serve_stdio(&state)
+    } else if let Some(addr) = args.get("addr") {
+        dlapm::serve::serve_tcp(&state, addr)
+    } else {
+        eprintln!("serve requires --stdio or --addr HOST:PORT (see dlapm help)");
+        std::process::exit(2);
+    };
+    if let Err(e) = result {
+        eprintln!("serve: {e}");
+        std::process::exit(1);
     }
 }
 

@@ -29,6 +29,45 @@ pub trait BlockedAlg {
     fn elem(&self) -> Elem;
 }
 
+/// The blocked-algorithm registry for an op family — the one list behind
+/// `gen`, `predict`, `select`, `blocksize` *and* the serve daemon, so
+/// every surface ranks exactly the same candidates. `Arc`'d so the same
+/// objects can feed both borrowed call-sites and the `'static`
+/// selection-core candidates. `"all"` is the standard set, `"full"` adds
+/// trsyl (the complete kernel-model registry); an unknown family returns
+/// an empty vector for the caller to report.
+pub fn registry(op: &str) -> Vec<std::sync::Arc<dyn BlockedAlg + Send + Sync>> {
+    use std::sync::Arc;
+    use lapack::{LapackAlg, LapackOp};
+    use potrf::Potrf;
+    use trsyl::TrsylAlg;
+    use trtri::Trtri;
+    let mut v: Vec<Arc<dyn BlockedAlg + Send + Sync>> = Vec::new();
+    if op == "potrf" || op == "all" || op == "full" {
+        v.extend(Potrf::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
+    }
+    if op == "trtri" || op == "all" || op == "full" {
+        v.extend(Trtri::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
+    }
+    if op == "trsyl" || op == "full" {
+        v.extend(TrsylAlg::all(Elem::D).into_iter().map(|a| Arc::new(a) as _));
+    }
+    if op == "all" || op == "full" {
+        for o in [LapackOp::Lauum, LapackOp::Sygst, LapackOp::Getrf, LapackOp::Geqrf] {
+            v.push(Arc::new(LapackAlg::new(o, Elem::D)));
+        }
+    }
+    v
+}
+
+/// Borrowed views of the Arc'd registry (auto-trait-dropping coercion),
+/// for call-sites that take `&[&dyn BlockedAlg]`.
+pub fn registry_refs(
+    algs: &[std::sync::Arc<dyn BlockedAlg + Send + Sync>],
+) -> Vec<&dyn BlockedAlg> {
+    algs.iter().map(|a| &**a as &dyn BlockedAlg).collect()
+}
+
 /// Sum of the call-sequence FLOPs — used by tests to check conservation
 /// against `op_flops` and by figure drivers for breakdowns.
 pub fn sequence_flops(calls: &[Call]) -> f64 {

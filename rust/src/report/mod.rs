@@ -46,6 +46,62 @@ pub fn selection_table(ranked: &[Ranked]) -> (String, String) {
     (text, csv)
 }
 
+// ------------------------------------------------------------------------
+// Shared render helpers: the CLI (`main.rs`) and the daemon (`serve/`)
+// both emit these exact strings, so a serve response's `output` field is
+// byte-identical to the equivalent one-shot CLI invocation by
+// construction — there is one formatting site per block, not two.
+
+/// Header line of a `select` ranking for one `(n, b)` grid point.
+pub fn select_header(n: usize, b: usize, machine: &str) -> String {
+    format!("predicted ranking for n={n}, b={b} on {machine}:")
+}
+
+/// Header line of a `contract --rank` ranking for one sweep size.
+pub fn contract_header(n_algs: usize, spec: &str, n: usize, small: usize, machine: &str) -> String {
+    format!("ranking {n_algs} algorithms for {spec} with n={n} (small={small}) on {machine}:")
+}
+
+/// One `predict` output line for a single algorithm variant.
+pub fn predict_line(name: &str, t_med_s: f64, unmodeled_calls: usize) -> String {
+    format!(
+        "{:<24} t_med={:>10.4} ms  (skipped {} unmodeled calls)",
+        name,
+        t_med_s * 1e3,
+        unmodeled_calls
+    )
+}
+
+/// The full `blocksize` text block for one problem size: header, top-10
+/// ranking rows, the elision line and the predicted optimum. Returns the
+/// block (trailing newline included) plus the full ranking as CSV.
+pub fn blocksize_block(
+    alg: &str,
+    machine: &str,
+    n: usize,
+    ranked: &[Ranked],
+    b_pred: usize,
+) -> (String, String) {
+    let (table, csv) = selection_table(ranked);
+    let mut text = format!(
+        "block-size ranking for {alg} at n={n} on {machine} ({} candidate block size(s)):\n",
+        ranked.len()
+    );
+    let shown = ranked.len().min(10);
+    for line in table.lines().take(shown) {
+        text.push_str(line);
+        text.push('\n');
+    }
+    if ranked.len() > shown {
+        text.push_str(&format!(
+            "  ... {} more candidate(s); full ranking in --csv\n",
+            ranked.len() - shown
+        ));
+    }
+    text.push_str(&format!("  predicted optimal block size for n={n}: b={b_pred}\n"));
+    (text, csv)
+}
+
 pub struct Report {
     pub out_dir: PathBuf,
     pub quiet: bool,
@@ -105,5 +161,28 @@ mod tests {
         // The cost-free model-based row has no micro annotation.
         let model_line = text.lines().next().unwrap();
         assert!(!model_line.contains("micro"), "{model_line}");
+    }
+
+    #[test]
+    fn blocksize_block_elides_past_ten_rows() {
+        let rows: Vec<Ranked> = (0..12)
+            .map(|i| Ranked {
+                index: i,
+                name: format!("b{:05}", 24 + 8 * i),
+                predicted: CandidatePrediction {
+                    time: Summary::constant(0.001 + i as f64 * 1e-5),
+                    cost: 0.0,
+                    work: 0,
+                },
+                measured: None,
+            })
+            .collect();
+        let (text, csv) = blocksize_block("potrf_L-var1", "haswell/openblas/t1", 2000, &rows, 24);
+        assert!(text.starts_with("block-size ranking for potrf_L-var1 at n=2000"));
+        assert!(text.contains("12 candidate block size(s)"));
+        assert!(text.contains("... 2 more candidate(s)"));
+        assert!(text.ends_with("predicted optimal block size for n=2000: b=24\n"));
+        assert_eq!(text.lines().count(), 1 + 10 + 1 + 1);
+        assert_eq!(csv.lines().count(), 13); // header + all 12 rows
     }
 }

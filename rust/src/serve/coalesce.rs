@@ -1,0 +1,233 @@
+//! Request coalescing: identical in-flight computations answered once.
+//!
+//! The daemon's answers are pure functions of the canonical request key
+//! (see [`super::protocol`]), so when several clients ask the same
+//! question concurrently only one of them — the *leader* — needs to
+//! compute; the rest park on a [`crate::util::sync::Condvar`] (keeping
+//! `dlapm lint`'s raw-primitive rule satisfied) and clone the leader's
+//! value. The pending table is a `BTreeMap` keyed by the canonical key;
+//! entries are swept as soon as the last interested party has taken the
+//! value, so the table only ever holds in-flight work, not a response
+//! cache (the warm stores underneath already make recomputation cheap).
+//!
+//! Purity makes the late-arrival race benign in both directions: a
+//! request that arrives while a finished slot is still draining takes
+//! the finished value; one that arrives a moment later recomputes and
+//! gets bit-identical bytes.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::sync::{Condvar, Mutex};
+
+struct Slot<V> {
+    done: bool,
+    value: Option<V>,
+    /// Parked followers still owed a clone of the value; the last one
+    /// out (or the leader, when nobody waited) sweeps the entry.
+    waiters: usize,
+}
+
+/// A pending-computation table for one value type. `V` must be `Clone`
+/// (every follower gets its own copy) and values must be pure functions
+/// of the key — the whole point of coalescing by key.
+pub struct Coalescer<V: Clone> {
+    slots: Mutex<BTreeMap<String, Slot<V>>>,
+    cv: Condvar,
+    led: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+/// Removes the leader's slot if `compute` panicked, so parked followers
+/// wake, observe the vanished slot and re-elect a leader instead of
+/// hanging forever.
+struct LeaderGuard<'a, V: Clone> {
+    co: &'a Coalescer<V>,
+    key: &'a str,
+    armed: bool,
+}
+
+impl<V: Clone> Drop for LeaderGuard<'_, V> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.co.slots.lock().remove(self.key);
+            self.co.cv.notify_all();
+        }
+    }
+}
+
+impl<V: Clone> Coalescer<V> {
+    /// `site` labels the internal mutex for the debug lock-order graph.
+    pub fn new(site: &'static str) -> Coalescer<V> {
+        Coalescer {
+            slots: Mutex::new(BTreeMap::new(), site),
+            cv: Condvar::new(),
+            led: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    /// Return `compute()`'s value for `key`, running `compute` only if no
+    /// identical computation is already in flight. `compute` runs with no
+    /// internal lock held, so it may itself block, fan out on the engine,
+    /// or re-enter the coalescer under a different key.
+    pub fn run(&self, key: &str, compute: impl FnOnce() -> V) -> V {
+        loop {
+            let mut slots = self.slots.lock();
+            match slots.get_mut(key) {
+                None => {
+                    slots.insert(key.to_string(), Slot { done: false, value: None, waiters: 0 });
+                    drop(slots);
+                    self.led.fetch_add(1, Ordering::Relaxed);
+                    let mut guard = LeaderGuard { co: self, key, armed: true };
+                    let value = compute();
+                    guard.armed = false;
+                    drop(guard);
+                    let mut slots = self.slots.lock();
+                    let waiters =
+                        slots.get(key).expect("leader slot vanished").waiters;
+                    if waiters == 0 {
+                        // Nobody parked: sweep immediately (no response
+                        // cache — recomputation is pure and warm).
+                        slots.remove(key);
+                    } else if let Some(slot) = slots.get_mut(key) {
+                        slot.done = true;
+                        slot.value = Some(value.clone());
+                    }
+                    drop(slots);
+                    self.cv.notify_all();
+                    return value;
+                }
+                Some(slot) if slot.done => {
+                    // A finished slot still draining its waiters: take the
+                    // value without registering (purity makes this exact).
+                    self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    return slot.value.clone().expect("done slot without value");
+                }
+                Some(slot) => {
+                    self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    slot.waiters += 1;
+                    let mut slots = self
+                        .cv
+                        .wait_while(slots, |m| m.get(key).map(|s| !s.done).unwrap_or(false));
+                    match slots.get_mut(key) {
+                        Some(slot) => {
+                            let value = slot.value.clone().expect("done slot without value");
+                            slot.waiters -= 1;
+                            let drained = slot.waiters == 0;
+                            if drained {
+                                slots.remove(key);
+                            }
+                            return value;
+                        }
+                        None => {
+                            // Leader panicked and its guard swept the slot:
+                            // retry (possibly becoming the new leader). Our
+                            // waiter registration died with the slot.
+                            continue;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Computations actually performed (leaders elected).
+    pub fn led(&self) -> u64 {
+        self.led.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered from another request's in-flight computation.
+    /// Scheduling-dependent — report it on stderr or in `status`, never
+    /// on a byte-stable output path.
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_caller_computes_and_sweeps() {
+        let co: Coalescer<u32> = Coalescer::new("test-coalesce-a");
+        assert_eq!(co.run("k", || 7), 7);
+        assert_eq!(co.led(), 1);
+        assert_eq!(co.coalesced(), 0);
+        // Slot swept: a second call recomputes.
+        assert_eq!(co.run("k", || 9), 9);
+        assert_eq!(co.led(), 2);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_compute_once() {
+        let co: Arc<Coalescer<u64>> = Arc::new(Coalescer::new("test-coalesce-b"));
+        let runs = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (co, runs) = (Arc::clone(&co), Arc::clone(&runs));
+            handles.push(std::thread::spawn(move || {
+                co.run("same", || {
+                    runs.fetch_add(1, Ordering::SeqCst);
+                    // Hold the computation open long enough for the other
+                    // threads to arrive and park.
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    42u64
+                })
+            }));
+        }
+        let values: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(values.iter().all(|&v| v == 42));
+        // At least the leader ran; late arrivals after the sweep may
+        // re-lead, but parked followers never recompute.
+        let actual_runs = runs.load(Ordering::SeqCst);
+        assert_eq!(actual_runs as u64, co.led());
+        assert_eq!(co.led() + co.coalesced(), 8);
+        // The common case on any real scheduler: one leader, 7 coalesced.
+        // Guaranteed invariant either way: strictly fewer runs than calls.
+        assert!(actual_runs < 8, "no coalescing happened at all");
+        // Table swept clean afterwards.
+        assert!(co.slots.lock().is_empty());
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let co: Arc<Coalescer<String>> = Arc::new(Coalescer::new("test-coalesce-c"));
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let co = Arc::clone(&co);
+            handles.push(std::thread::spawn(move || {
+                co.run(&format!("k{i}"), || format!("v{i}"))
+            }));
+        }
+        let mut values: Vec<String> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        values.sort();
+        assert_eq!(values, vec!["v0", "v1", "v2", "v3"]);
+        assert_eq!(co.led(), 4);
+        assert_eq!(co.coalesced(), 0);
+    }
+
+    #[test]
+    fn leader_panic_elects_a_new_leader() {
+        let co: Arc<Coalescer<u32>> = Arc::new(Coalescer::new("test-coalesce-d"));
+        let co2 = Arc::clone(&co);
+        let panicker = std::thread::spawn(move || {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                co2.run("k", || {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    panic!("leader dies");
+                })
+            }));
+        });
+        // Arrive while the doomed leader is computing.
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let v = co.run("k", || 5);
+        assert_eq!(v, 5);
+        panicker.join().unwrap();
+        assert!(co.slots.lock().is_empty());
+    }
+}

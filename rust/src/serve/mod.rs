@@ -1,0 +1,31 @@
+//! Prediction-as-a-service: the `dlapm serve` daemon.
+//!
+//! The dissertation's economics — models and micro-benchmark timings are
+//! "generated automatically once per platform", after which predictions
+//! are effectively free — only pay off if the warm state outlives a
+//! single query. The CLI rebuilds it per invocation; this module keeps
+//! it resident: load once, answer prediction / selection / block-size /
+//! contraction-ranking requests indefinitely over a zero-dependency
+//! line-oriented JSON protocol.
+//!
+//! * [`protocol`] — request parsing and response framing; the normative
+//!   prose spec is `docs/serve-protocol.md` (CI greps [`protocol::OPS`]
+//!   against it).
+//! * [`coalesce`] — identical in-flight requests answered by one
+//!   computation, followers parked on a `util::sync::Condvar`.
+//! * [`server`] — [`server::ServeState`] (warm scopes, checkpointing,
+//!   the op handlers) plus the stdio and TCP transports and the
+//!   `--client` one-shot.
+//!
+//! The determinism contract extends to the wire: a response to a
+//! well-formed request is a pure function of the request, byte-identical
+//! to the equivalent CLI stdout (`output` field), for any `--jobs`, any
+//! interleaving, cold or warm store.
+
+pub mod coalesce;
+pub mod protocol;
+pub mod server;
+
+pub use coalesce::Coalescer;
+pub use protocol::{OPS, PROTOCOL_VERSION};
+pub use server::{run_client, serve_stdio, serve_tcp, ServeOpts, ServeState};

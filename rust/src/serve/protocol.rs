@@ -1,0 +1,328 @@
+//! The `dlapm serve` wire protocol: one JSON object per line, both ways.
+//!
+//! This module is the *only* place requests are parsed and responses are
+//! framed; `docs/serve-protocol.md` is the normative prose spec and CI
+//! greps [`OPS`] against it so the two cannot drift. Design rules:
+//!
+//! * Responses are rendered through [`crate::util::json::Json`], whose
+//!   object maps are `BTreeMap`s — key order in every response line is
+//!   alphabetical by construction, which *is* the canonical encoding.
+//! * Every response to a well-formed request is a pure function of the
+//!   request (state-dependent observability lives in the `status` op and
+//!   on stderr), so response bytes are identical across `--jobs` values,
+//!   request interleavings and warm/cold stores.
+//! * Unknown fields are rejected, not ignored: a typo'd field name would
+//!   otherwise silently fall back to its default and return a
+//!   well-formed answer to a question the client didn't ask.
+
+use crate::util::json::Json;
+
+/// Protocol version; requests may pin it with `"v": 1`.
+pub const PROTOCOL_VERSION: usize = 1;
+
+/// Every operation the daemon understands — one string per line; CI's
+/// docs-freshness check extracts them textually and requires each to
+/// appear in `docs/serve-protocol.md`.
+pub const OPS: [&str; 6] = [
+    "predict",
+    "select",
+    "blocksize",
+    "contract_rank",
+    "status",
+    "shutdown",
+];
+
+/// Fields every request may carry regardless of op.
+const COMMON_FIELDS: [&str; 3] = ["id", "op", "v"];
+
+/// Per-op request fields (beyond [`COMMON_FIELDS`]).
+fn op_fields(op: &str) -> &'static [&'static str] {
+    match op {
+        "predict" | "select" => &["family", "n", "b", "seed", "cpu", "lib", "threads"],
+        "blocksize" => &["family", "alg", "n", "bs", "seed", "cpu", "lib", "threads"],
+        "contract_rank" => {
+            &["spec", "preset", "n", "small", "seed", "granularity", "cpu", "lib", "threads"]
+        }
+        _ => &[], // status, shutdown
+    }
+}
+
+/// A structured request-level error: `code` is one of the stable error
+/// codes in the spec (`parse`, `bad-request`, `unknown-op`, `version`,
+/// `internal`), `message` is human-readable detail.
+#[derive(Clone, Debug)]
+pub struct ReqError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ReqError {
+    pub fn bad(message: String) -> ReqError {
+        ReqError { code: "bad-request", message }
+    }
+}
+
+/// A validated request: the op, the echoed-back client `id`, the parsed
+/// body and the canonical coalescing key (the body rendered without the
+/// identity-irrelevant `id`/`v` fields — two requests with equal keys
+/// must receive byte-identical `output`/`data`).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub op: String,
+    pub id: Json,
+    pub body: Json,
+    pub key: String,
+}
+
+/// Parse and validate one request line. On error, returns the structured
+/// error plus the client id when one could be recovered (so the error
+/// response still correlates).
+pub fn parse_request(line: &str) -> Result<Request, (ReqError, Json)> {
+    let body = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return Err((
+                ReqError { code: "parse", message: format!("invalid JSON: {e}") },
+                Json::Null,
+            ))
+        }
+    };
+    let Some(obj) = body.as_obj() else {
+        return Err((
+            ReqError::bad("request must be a JSON object".to_string()),
+            Json::Null,
+        ));
+    };
+    let id = obj.get("id").cloned().unwrap_or(Json::Null);
+    if let Some(v) = obj.get("v") {
+        if v.as_exact_usize() != Some(PROTOCOL_VERSION) {
+            return Err((
+                ReqError {
+                    code: "version",
+                    message: format!(
+                        "unsupported protocol version {} (this daemon speaks v{PROTOCOL_VERSION})",
+                        v.render()
+                    ),
+                },
+                id,
+            ));
+        }
+    }
+    let Some(op) = obj.get("op").and_then(|o| o.as_str()).map(str::to_string) else {
+        return Err((ReqError::bad("missing string field 'op'".to_string()), id));
+    };
+    if !OPS.contains(&op.as_str()) {
+        return Err((
+            ReqError {
+                code: "unknown-op",
+                message: format!("unknown op '{op}' (known: {})", OPS.join(", ")),
+            },
+            id,
+        ));
+    }
+    let allowed = op_fields(&op);
+    for k in obj.keys() {
+        if !COMMON_FIELDS.contains(&k.as_str()) && !allowed.contains(&k.as_str()) {
+            return Err((
+                ReqError::bad(format!(
+                    "unknown field '{k}' for op '{op}' (allowed: {})",
+                    allowed.join(", ")
+                )),
+                id,
+            ));
+        }
+    }
+    // Canonical key: the body without `id` (client correlation) and `v`
+    // (already validated to the one supported version). BTreeMap render
+    // order makes this canonical across clients.
+    let mut canon = obj.clone();
+    canon.remove("id");
+    canon.remove("v");
+    let key = Json::Obj(canon).render();
+    Ok(Request { op, id, body, key })
+}
+
+impl Request {
+    fn field(&self, key: &str) -> Option<&Json> {
+        self.body.get(key)
+    }
+
+    /// String field with a default; present-but-not-a-string is an error.
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String, ReqError> {
+        match self.field(key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| ReqError::bad(format!("field '{key}' must be a string"))),
+        }
+    }
+
+    /// Optional string field (no default).
+    pub fn str_opt(&self, key: &str) -> Result<Option<String>, ReqError> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| ReqError::bad(format!("field '{key}' must be a string"))),
+        }
+    }
+
+    /// Exact non-negative integer field with a default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, ReqError> {
+        match self.field(key) {
+            None => Ok(default),
+            Some(v) => v.as_exact_usize().ok_or_else(|| {
+                ReqError::bad(format!("field '{key}' must be a non-negative integer"))
+            }),
+        }
+    }
+
+    /// Exact u64 field with a default (seeds).
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, ReqError> {
+        match self.field(key) {
+            None => Ok(default),
+            Some(v) => v.as_exact_u64().ok_or_else(|| {
+                ReqError::bad(format!("field '{key}' must be a non-negative integer"))
+            }),
+        }
+    }
+
+    /// Non-empty array-of-exact-integers field, or `default()` when absent.
+    pub fn sizes_or(
+        &self,
+        key: &str,
+        default: impl FnOnce() -> Vec<usize>,
+    ) -> Result<Vec<usize>, ReqError> {
+        match self.field(key) {
+            None => Ok(default()),
+            Some(v) => {
+                let arr = v.as_arr().ok_or_else(|| {
+                    ReqError::bad(format!("field '{key}' must be an array of integers"))
+                })?;
+                let sizes: Option<Vec<usize>> =
+                    arr.iter().map(|x| x.as_exact_usize()).collect();
+                match sizes {
+                    Some(s) if !s.is_empty() => Ok(s),
+                    _ => Err(ReqError::bad(format!(
+                        "field '{key}' must be a non-empty array of non-negative integers"
+                    ))),
+                }
+            }
+        }
+    }
+}
+
+/// Frame a success response. `output` is the byte-identical text the
+/// equivalent CLI invocation prints to stdout for this query; `data` is
+/// the structured view of the same answer.
+pub fn ok_line(op: &str, id: &Json, output: &str, data: Json) -> String {
+    Json::obj(vec![
+        ("data", data),
+        ("id", id.clone()),
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str(op.to_string())),
+        ("output", Json::Str(output.to_string())),
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+    ])
+    .render()
+}
+
+/// Frame an error response.
+pub fn error_line(id: &Json, code: &str, message: &str) -> String {
+    Json::obj(vec![
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::Str(code.to_string())),
+                ("message", Json::Str(message.to_string())),
+            ]),
+        ),
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_request_and_echoes_id() {
+        let r = parse_request(r#"{"op":"status","id":42}"#).unwrap();
+        assert_eq!(r.op, "status");
+        assert_eq!(r.id, Json::Num(42.0));
+        assert_eq!(r.key, r#"{"op":"status"}"#);
+    }
+
+    #[test]
+    fn canonical_key_ignores_id_and_v_and_field_order() {
+        let a = parse_request(r#"{"op":"select","n":520,"id":1,"v":1}"#).unwrap();
+        let b = parse_request(r#"{"n": 520, "op": "select"}"#).unwrap();
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.key, r#"{"n":520,"op":"select"}"#);
+    }
+
+    #[test]
+    fn rejects_malformed_unknown_and_versioned() {
+        let (e, _) = parse_request("not json").unwrap_err();
+        assert_eq!(e.code, "parse");
+        let (e, _) = parse_request("[1,2]").unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        let (e, id) = parse_request(r#"{"op":"florble","id":"x"}"#).unwrap_err();
+        assert_eq!(e.code, "unknown-op");
+        assert_eq!(id, Json::Str("x".into()));
+        let (e, _) = parse_request(r#"{"op":"status","v":2}"#).unwrap_err();
+        assert_eq!(e.code, "version");
+        let (e, _) = parse_request(r#"{"op":"status","n":5}"#).unwrap_err();
+        assert_eq!(e.code, "bad-request"); // unknown field for the op
+        let (e, _) = parse_request(r#"{"op":"select","N":5}"#).unwrap_err();
+        assert!(e.message.contains("'N'"), "{}", e.message);
+    }
+
+    #[test]
+    fn strict_field_accessors_reject_lossy_values() {
+        let r = parse_request(r#"{"op":"select","n":520,"seed":7}"#).unwrap();
+        assert_eq!(r.usize_or("n", 1).unwrap(), 520);
+        assert_eq!(r.usize_or("b", 128).unwrap(), 128);
+        assert_eq!(r.u64_or("seed", 0).unwrap(), 7);
+        let r = parse_request(r#"{"op":"select","n":2.5}"#).unwrap();
+        assert!(r.usize_or("n", 1).is_err());
+        let r = parse_request(r#"{"op":"blocksize","bs":[24,32]}"#).unwrap();
+        assert_eq!(r.sizes_or("bs", Vec::new).unwrap(), vec![24, 32]);
+        let r = parse_request(r#"{"op":"blocksize","bs":[]}"#).unwrap();
+        assert!(r.sizes_or("bs", Vec::new).is_err());
+    }
+
+    #[test]
+    fn response_framing_is_canonical() {
+        let line = ok_line("status", &Json::Num(3.0), "hi\n", Json::obj(vec![]));
+        assert_eq!(
+            line,
+            r#"{"data":{},"id":3,"ok":true,"op":"status","output":"hi\n","v":1}"#
+        );
+        let err = error_line(&Json::Null, "parse", "bad");
+        assert_eq!(
+            err,
+            r#"{"error":{"code":"parse","message":"bad"},"id":null,"ok":false,"v":1}"#
+        );
+        // One response per line: rendered frames never contain raw newlines.
+        assert!(!line.contains('\n') && !err.contains('\n'));
+    }
+
+    #[test]
+    fn every_op_is_known_to_the_field_tables() {
+        for op in OPS {
+            // status/shutdown legitimately take no extra fields.
+            let fields = op_fields(op);
+            if matches!(op, "status" | "shutdown") {
+                assert!(fields.is_empty());
+            } else {
+                assert!(!fields.is_empty(), "{op} has no field table");
+            }
+        }
+    }
+}

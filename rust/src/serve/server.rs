@@ -1,0 +1,859 @@
+//! The `dlapm serve` daemon: warm state loaded once, answers forever.
+//!
+//! One [`ServeState`] owns everything a CLI invocation would build and
+//! throw away — the [`Engine`], and per `(machine, seed, coverage)` /
+//! `(machine, seed, granularity)` scope a warm-loaded
+//! [`ModelStore`] + [`ModelCache`] pair or [`MicroMemo`]. Request
+//! handling fans out on the engine exactly like the CLI paths do, so a
+//! response's `output` field is byte-identical to the equivalent CLI
+//! stdout (both render through the shared `report::` helpers over the
+//! same warm artifacts).
+//!
+//! Concurrency shape:
+//!
+//! * transports (stdio batch loop, one thread per TCP connection) call
+//!   [`ServeState::handle_line`] — everything below it is thread-safe;
+//! * identical in-flight requests coalesce behind one computation
+//!   ([`super::coalesce`]), keyed by the canonical request key;
+//! * model generation for a not-yet-ensured family runs on a
+//!   copy-ensure-swap of the scope's `ModelStore` under that scope's
+//!   mutex, so concurrent requests for other scopes never block;
+//! * the warm store is checkpointed every `--checkpoint-every` handled
+//!   requests and at graceful shutdown (`{"op":"shutdown"}`, SIGINT, or
+//!   stdin EOF). The PR-5 "misses()==0 skips the rewrite" guard
+//!   generalizes to a long-lived process as: persist a slot exactly when
+//!   its entry count moved past the last snapshot (warm artifacts only
+//!   grow).
+//!
+//! Determinism: no wall-clock reads anywhere (checkpoint cadence is
+//! request-counted, not timed); scheduling-dependent counters (coalesce
+//! hits, cache hit/miss) stay off the response path — `status` reports
+//! only deterministic functions of the request history.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::{Engine, ModelCache};
+use crate::machine::{CpuSpec, Elem, Library, Machine};
+use crate::modeling::ModelStore;
+use crate::predict::algorithms;
+use crate::predict::blocksize;
+use crate::predict::predictor;
+use crate::predict::BlockedAlg;
+use crate::report;
+use crate::select::{BlockedCandidate, Candidate, TensorCandidate};
+use crate::store::{self, Persist, StoreKey, WarmStore};
+use crate::tensor::{micro, spec, Contraction, MicroMemo};
+use crate::util::error::{Context as _, Result};
+use crate::util::json::Json;
+use crate::util::sync::Mutex;
+
+use super::coalesce::Coalescer;
+use super::protocol::{self, ReqError, Request};
+
+/// Configuration for [`ServeState::new`].
+pub struct ServeOpts {
+    /// Warm-store directory (`--store`); `None` serves from memory only.
+    pub store_dir: Option<PathBuf>,
+    /// Engine worker count (`--jobs`).
+    pub jobs: usize,
+    /// Checkpoint the warm store every this many handled requests
+    /// (`--checkpoint-every`); 0 = only at shutdown. Request-counted, not
+    /// timed — the determinism lint bans wall-clock reads.
+    pub checkpoint_every: u64,
+}
+
+/// The blocked-prediction warm scope for one `(machine, seed, cov_n,
+/// cov_b)`: the same two slots `select`/`blocksize` share on the CLI.
+struct BlockedEntry {
+    models: Mutex<BlockedModels>,
+    cache: Arc<ModelCache>,
+    models_slot: String,
+    models_key: StoreKey,
+    cache_slot: String,
+    cache_key: StoreKey,
+    /// Entry counts at the last persisted snapshot (or warm load) — the
+    /// grow-only skip-rewrite guard.
+    saved_models: AtomicU64,
+    saved_cache: AtomicU64,
+}
+
+struct BlockedModels {
+    store: Arc<ModelStore>,
+    /// Families whose coverage has been ensured against this store.
+    ensured: BTreeSet<String>,
+}
+
+/// One micro-benchmark memo scope: `(machine, seed, granularity)`.
+struct MemoEntry {
+    memo: Arc<MicroMemo>,
+    slot: String,
+    key: StoreKey,
+    saved: AtomicU64,
+}
+
+/// What one computed request yields: the CLI-identical `output` text and
+/// the structured `data` object — or a structured error. Clone-able so
+/// coalesced followers each get a copy.
+type Outcome = std::result::Result<(String, Json), ReqError>;
+
+pub struct ServeState {
+    engine: Arc<Engine>,
+    warm: Option<WarmStore>,
+    checkpoint_every: u64,
+    blocked: Mutex<BTreeMap<String, Arc<BlockedEntry>>>,
+    memos: Mutex<BTreeMap<String, Arc<MemoEntry>>>,
+    coalescer: Coalescer<Outcome>,
+    /// Per-op counts of handled requests (the deterministic request
+    /// history `status` reports).
+    requests: Mutex<BTreeMap<String, u64>>,
+    served: AtomicU64,
+    models_generated: AtomicU64,
+    checkpoints: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+fn internal(what: &str, e: impl std::fmt::Display) -> ReqError {
+    ReqError { code: "internal", message: format!("{what}: {e}") }
+}
+
+/// Per-request machine selection, defaulting like the CLI's
+/// `machine_from` (haswell / openblas / 1 thread).
+fn machine_of(req: &Request) -> std::result::Result<Machine, ReqError> {
+    let cpu_s = req.str_or("cpu", "haswell")?;
+    let lib_s = req.str_or("lib", "openblas")?;
+    let threads = req.usize_or("threads", 1)?;
+    let cpu = CpuSpec::parse(&cpu_s)
+        .ok_or_else(|| ReqError::bad(format!("unknown cpu '{cpu_s}'")))?;
+    let lib = Library::parse(&lib_s)
+        .ok_or_else(|| ReqError::bad(format!("unknown lib '{lib_s}'")))?;
+    Ok(Machine::standard(cpu, lib, threads))
+}
+
+type AlgList = Vec<Arc<dyn BlockedAlg + Send + Sync>>;
+
+fn registry_of(family: &str) -> std::result::Result<AlgList, ReqError> {
+    let algs = algorithms::registry(family);
+    if algs.is_empty() {
+        return Err(ReqError::bad(format!(
+            "unknown family '{family}' (expected potrf, trtri, trsyl, all or full)"
+        )));
+    }
+    Ok(algs)
+}
+
+impl ServeState {
+    pub fn new(opts: &ServeOpts) -> Result<ServeState> {
+        let warm = match &opts.store_dir {
+            Some(dir) => Some(WarmStore::open(dir)?),
+            None => None,
+        };
+        Ok(ServeState {
+            engine: Arc::new(Engine::new(opts.jobs)),
+            warm,
+            checkpoint_every: opts.checkpoint_every,
+            blocked: Mutex::new(BTreeMap::new(), "serve-blocked-map"),
+            memos: Mutex::new(BTreeMap::new(), "serve-memo-map"),
+            coalescer: Coalescer::new("serve-coalescer"),
+            requests: Mutex::new(BTreeMap::new(), "serve-request-counts"),
+            served: AtomicU64::new(0),
+            models_generated: AtomicU64::new(0),
+            checkpoints: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Handle one wire line. `None` for blank lines (keep-alive friendly);
+    /// otherwise exactly one response line (no trailing newline — the
+    /// transport frames it). Every parse/validation/compute failure maps
+    /// to a structured error response: the daemon never stops serving
+    /// over a bad request.
+    pub fn handle_line(&self, line: &str) -> Option<String> {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            return None;
+        }
+        let resp = match protocol::parse_request(trimmed) {
+            Err((e, id)) => protocol::error_line(&id, e.code, &e.message),
+            Ok(req) => self.handle(&req),
+        };
+        let served = self.served.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.checkpoint_every > 0 && served % self.checkpoint_every == 0 {
+            if let Err(e) = self.checkpoint() {
+                eprintln!("[dlapm serve] periodic checkpoint failed: {e}");
+            }
+        }
+        Some(resp)
+    }
+
+    fn handle(&self, req: &Request) -> String {
+        *self.requests.lock().entry(req.op.clone()).or_insert(0) += 1;
+        match req.op.as_str() {
+            "status" => {
+                let (output, data) = self.status();
+                protocol::ok_line("status", &req.id, &output, data)
+            }
+            "shutdown" => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                protocol::ok_line(
+                    "shutdown",
+                    &req.id,
+                    "shutting down after final checkpoint\n",
+                    Json::obj(vec![]),
+                )
+            }
+            _ => match self.coalescer.run(&req.key, || self.compute(req)) {
+                Ok((output, data)) => protocol::ok_line(&req.op, &req.id, &output, data),
+                Err(e) => protocol::error_line(&req.id, e.code, &e.message),
+            },
+        }
+    }
+
+    /// The coalesced body: a pure function of the canonical request key.
+    fn compute(&self, req: &Request) -> Outcome {
+        match req.op.as_str() {
+            "predict" => self.op_predict(req),
+            "select" => self.op_select(req),
+            "blocksize" => self.op_blocksize(req),
+            "contract_rank" => self.op_contract(req),
+            other => Err(internal("dispatch", format!("op '{other}' not computable"))),
+        }
+    }
+
+    // ------------------------------------------------------------ warm state
+
+    fn warm_load<T: Persist>(
+        &self,
+        slot: &str,
+        key: &StoreKey,
+    ) -> std::result::Result<Option<T>, ReqError> {
+        match &self.warm {
+            None => Ok(None),
+            Some(w) => w.load(slot, key).map_err(|e| internal("warm store", e)),
+        }
+    }
+
+    /// The blocked scope for `(machine, seed, cov_n, cov_b)`, creating it
+    /// (with a warm load) on first touch. Slot names match the CLI's
+    /// `WarmPrediction`, so daemon and CLI share snapshots.
+    fn blocked_entry(
+        &self,
+        machine: &Machine,
+        seed: u64,
+        cov_n: usize,
+        cov_b: usize,
+    ) -> std::result::Result<Arc<BlockedEntry>, ReqError> {
+        let label = machine.label();
+        let map_key = format!("{label}|s{seed}|n{cov_n}|b{cov_b}");
+        let mut map = self.blocked.lock();
+        if let Some(e) = map.get(&map_key) {
+            return Ok(Arc::clone(e));
+        }
+        let (models_slot, models_key) = store::models_slot(&label, seed, cov_n, cov_b);
+        let (cache_slot, cache_key) = store::model_cache_slot(&label, seed, cov_n, cov_b);
+        let models: ModelStore = self
+            .warm_load(&models_slot, &models_key)?
+            .unwrap_or_else(|| ModelStore::new(&label));
+        let cache: ModelCache = self.warm_load(&cache_slot, &cache_key)?.unwrap_or_default();
+        let entry = Arc::new(BlockedEntry {
+            saved_models: AtomicU64::new(models.entries() as u64),
+            saved_cache: AtomicU64::new(cache.entries() as u64),
+            models: Mutex::new(
+                BlockedModels { store: Arc::new(models), ensured: BTreeSet::new() },
+                "serve-blocked-models",
+            ),
+            cache: Arc::new(cache),
+            models_slot,
+            models_key,
+            cache_slot,
+            cache_key,
+        });
+        map.insert(map_key, Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Model store + estimate cache with coverage ensured for `family`.
+    /// Copy-ensure-swap: generation runs on a clone of the scope's store
+    /// and the `Arc` is swapped only when something new was generated —
+    /// in-flight predictions keep reading the old snapshot (per-case
+    /// model values are pure functions of `(machine, case, seed,
+    /// coverage)`, so both snapshots agree wherever they overlap).
+    fn blocked_warm(
+        &self,
+        machine: &Machine,
+        seed: u64,
+        cov_n: usize,
+        cov_b: usize,
+        family: &str,
+        algs: &[Arc<dyn BlockedAlg + Send + Sync>],
+    ) -> std::result::Result<(Arc<ModelStore>, Arc<ModelCache>), ReqError> {
+        let entry = self.blocked_entry(machine, seed, cov_n, cov_b)?;
+        let mut models = entry.models.lock();
+        if !models.ensured.contains(family) {
+            let refs = algorithms::registry_refs(algs);
+            let mut owned = (*models.store).clone();
+            let generated = crate::predict::measurement::coverage::ensure_models_with(
+                &self.engine,
+                machine,
+                &mut owned,
+                &refs,
+                cov_n,
+                cov_b,
+                seed,
+            )
+            .map_err(|e| internal("model generation", e))?;
+            if generated > 0 {
+                self.models_generated.fetch_add(generated as u64, Ordering::SeqCst);
+                models.store = Arc::new(owned);
+            }
+            models.ensured.insert(family.to_string());
+        }
+        Ok((Arc::clone(&models.store), Arc::clone(&entry.cache)))
+    }
+
+    /// The micro-benchmark memo for `(machine, seed, granularity)`,
+    /// warm-loaded from the CLI-shared `micro_memo_g{g}` slot on first
+    /// touch.
+    fn memo_entry(
+        &self,
+        machine: &Machine,
+        seed: u64,
+        granularity: usize,
+    ) -> std::result::Result<Arc<MemoEntry>, ReqError> {
+        let label = machine.label();
+        let map_key = format!("{label}|s{seed}|g{granularity}");
+        let mut map = self.memos.lock();
+        if let Some(e) = map.get(&map_key) {
+            return Ok(Arc::clone(e));
+        }
+        let (slot, key) = store::micro_memo_slot(&label, seed, granularity);
+        let memo: MicroMemo = self
+            .warm_load(&slot, &key)?
+            .unwrap_or_else(|| MicroMemo::with_granularity(granularity));
+        let entry = Arc::new(MemoEntry {
+            saved: AtomicU64::new(memo.entries() as u64),
+            memo: Arc::new(memo),
+            slot,
+            key,
+        });
+        map.insert(map_key, Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Persist every warm artifact whose entry count grew past its last
+    /// snapshot; returns the number of slots written. Concurrent
+    /// checkpoints are safe (saves are atomic renames of identical or
+    /// newer pure content).
+    pub fn checkpoint(&self) -> Result<usize> {
+        let Some(warm) = &self.warm else { return Ok(0) };
+        let mut written = 0usize;
+        let blocked: Vec<Arc<BlockedEntry>> = self.blocked.lock().values().cloned().collect();
+        for e in blocked {
+            let models = Arc::clone(&e.models.lock().store);
+            let n = models.entries() as u64;
+            if n > e.saved_models.load(Ordering::SeqCst) {
+                warm.save(&e.models_slot, &e.models_key, models.as_ref())?;
+                e.saved_models.store(n, Ordering::SeqCst);
+                written += 1;
+            }
+            let c = e.cache.entries() as u64;
+            if c > e.saved_cache.load(Ordering::SeqCst) {
+                warm.save(&e.cache_slot, &e.cache_key, e.cache.as_ref())?;
+                e.saved_cache.store(c, Ordering::SeqCst);
+                written += 1;
+            }
+        }
+        let memos: Vec<Arc<MemoEntry>> = self.memos.lock().values().cloned().collect();
+        for m in memos {
+            let n = m.memo.entries() as u64;
+            if n > m.saved.load(Ordering::SeqCst) {
+                warm.save(&m.slot, &m.key, m.memo.as_ref())?;
+                m.saved.store(n, Ordering::SeqCst);
+                written += 1;
+            }
+        }
+        if written > 0 {
+            self.checkpoints.fetch_add(1, Ordering::SeqCst);
+        }
+        for line in warm.take_status() {
+            eprintln!("[dlapm serve] warm store: {line}");
+        }
+        Ok(written)
+    }
+
+    // ---------------------------------------------------------------- ops
+
+    fn op_predict(&self, req: &Request) -> Outcome {
+        let machine = machine_of(req)?;
+        let family = req.str_or("family", "potrf")?;
+        let n = req.usize_or("n", 2104)?;
+        let b = req.usize_or("b", 128)?;
+        let seed = req.u64_or("seed", 0x5EED)?;
+        let algs = registry_of(&family)?;
+        let (models, cache) =
+            self.blocked_warm(&machine, seed, n.max(520), b.max(536), &family, &algs)?;
+        let mut output = String::new();
+        for alg in &algs {
+            let pred = predictor::predict_calls_cached(&models, &alg.calls(n, b), &cache);
+            output.push_str(&report::predict_line(
+                &alg.name(),
+                pred.time.med,
+                pred.unmodeled_calls,
+            ));
+            output.push('\n');
+        }
+        let data = Json::obj(vec![
+            ("algorithms", Json::Num(algs.len() as f64)),
+            ("b", Json::Num(b as f64)),
+            ("family", Json::Str(family)),
+            ("n", Json::Num(n as f64)),
+        ]);
+        Ok((output, data))
+    }
+
+    fn op_select(&self, req: &Request) -> Outcome {
+        let machine = machine_of(req)?;
+        let family = req.str_or("family", "potrf")?;
+        let n = req.usize_or("n", 2104)?;
+        let b = req.usize_or("b", 128)?;
+        let seed = req.u64_or("seed", 0x5EED)?;
+        let algs = registry_of(&family)?;
+        let (models, cache) =
+            self.blocked_warm(&machine, seed, n.max(520), b.max(536), &family, &algs)?;
+        for alg in &algs {
+            blocksize::prewarm_grid(&models, &cache, alg.as_ref(), &[(n, b)]);
+        }
+        let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
+            .iter()
+            .map(|alg| {
+                Arc::new(BlockedCandidate {
+                    store: Arc::clone(&models),
+                    cache: Arc::clone(&cache),
+                    alg: Arc::clone(alg),
+                    n,
+                    b,
+                    label: None,
+                    validate: None,
+                }) as _
+            })
+            .collect();
+        let ranked = crate::select::rank_candidates_par(&self.engine, &cands)
+            .map_err(|e| internal("selection ranking", e))?;
+        let (table, _csv) = report::selection_table(&ranked);
+        let output = format!("{}\n{table}", report::select_header(n, b, &machine.label()));
+        let data = Json::obj(vec![
+            ("b", Json::Num(b as f64)),
+            ("candidates", Json::Num(ranked.len() as f64)),
+            ("family", Json::Str(family)),
+            ("n", Json::Num(n as f64)),
+            ("pred_med_s", Json::Num(ranked[0].predicted.time.med)),
+            ("winner", Json::Str(ranked[0].name.clone())),
+        ]);
+        Ok((output, data))
+    }
+
+    fn op_blocksize(&self, req: &Request) -> Outcome {
+        let machine = machine_of(req)?;
+        let family = req.str_or("family", "potrf")?;
+        let n = req.usize_or("n", 2000)?;
+        let bs = req.sizes_or("bs", blocksize::standard_bs)?;
+        let seed = req.u64_or("seed", 0x5EED)?;
+        let algs = registry_of(&family)?;
+        let alg: Arc<dyn BlockedAlg + Send + Sync> = match req.str_opt("alg")? {
+            None => Arc::clone(&algs[0]),
+            Some(name) => match algs.iter().find(|a| a.name() == name) {
+                Some(a) => Arc::clone(a),
+                None => {
+                    let known: Vec<String> = algs.iter().map(|a| a.name()).collect();
+                    return Err(ReqError::bad(format!(
+                        "unknown alg '{name}' for family '{family}' (available: {})",
+                        known.join(", ")
+                    )));
+                }
+            },
+        };
+        let cov_b = bs.iter().copied().max().unwrap_or(536).max(536);
+        let alg_slice = [Arc::clone(&alg)];
+        let (models, cache) =
+            self.blocked_warm(&machine, seed, n.max(520), cov_b, &family, &alg_slice)?;
+        let (sweep, ranked) =
+            blocksize::optimize_blocksize_with(&self.engine, &models, &cache, &alg, n, &bs)
+                .map_err(|e| internal("block-size ranking", e))?;
+        let (output, _csv) =
+            report::blocksize_block(&alg.name(), &machine.label(), n, &ranked, sweep.b_pred);
+        let data = Json::obj(vec![
+            ("alg", Json::Str(alg.name())),
+            ("b_pred", Json::Num(sweep.b_pred as f64)),
+            ("candidates", Json::Num(ranked.len() as f64)),
+            ("family", Json::Str(family)),
+            ("n", Json::Num(n as f64)),
+        ]);
+        Ok((output, data))
+    }
+
+    fn op_contract(&self, req: &Request) -> Outcome {
+        let machine = machine_of(req)?;
+        let preset = req.str_opt("preset")?;
+        let spec_field = req.str_opt("spec")?;
+        if preset.is_some() && spec_field.is_some() {
+            return Err(ReqError::bad(
+                "'preset' sets the contraction spec; drop 'spec' (or drop 'preset')".to_string(),
+            ));
+        }
+        let spec_str = match &preset {
+            Some(p) => spec::preset_spec(p)
+                .ok_or_else(|| {
+                    ReqError::bad(format!(
+                        "unknown preset '{p}' (expected vector or challenging)"
+                    ))
+                })?
+                .to_string(),
+            None => spec_field.unwrap_or_else(|| "abc=ai,ibc".to_string()),
+        };
+        let n = req.usize_or("n", 64)?;
+        let small = req.usize_or("small", 8)?;
+        let seed = req.u64_or("seed", 7)?;
+        let granularity = req.usize_or("granularity", 1)?.max(1);
+        let base = Contraction::parse(&spec_str)
+            .map_err(|e| ReqError::bad(format!("bad spec: {e}")))?;
+        let con = base.sized_uniform(small, n);
+        let algs = crate::tensor::generate(&con);
+        let entry = self.memo_entry(&machine, seed, granularity)?;
+        let memo = Arc::clone(&entry.memo);
+        // The distinct-benchmark count is a pure function of the request
+        // (unlike the reused count, which depends on what ran before and
+        // therefore stays out of the response).
+        let (_reused, distinct) = micro::memo_reuse(&machine, &con, &algs, Elem::D, &memo);
+        let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
+            .iter()
+            .map(|alg| {
+                Arc::new(TensorCandidate {
+                    machine: machine.clone(),
+                    con: con.clone(),
+                    alg: alg.clone(),
+                    elem: Elem::D,
+                    seed,
+                    memo: Arc::clone(&memo),
+                    engine: Arc::clone(&self.engine),
+                    validate_reps: 0,
+                }) as _
+            })
+            .collect();
+        let ranked = crate::select::rank_candidates_par(&self.engine, &cands)
+            .map_err(|e| internal("contraction ranking", e))?;
+        let (table, _csv) = report::selection_table(&ranked);
+        let output = format!(
+            "{}\n{table}",
+            report::contract_header(algs.len(), &spec_str, n, small, &machine.label())
+        );
+        let data = Json::obj(vec![
+            ("algorithms", Json::Num(algs.len() as f64)),
+            ("distinct_benchmarks", Json::Num(distinct as f64)),
+            ("granularity", Json::Num(granularity as f64)),
+            ("n", Json::Num(n as f64)),
+            ("pred_med_s", Json::Num(ranked[0].predicted.time.med)),
+            ("small", Json::Num(small as f64)),
+            ("spec", Json::Str(spec_str)),
+            ("winner", Json::Str(ranked[0].name.clone())),
+        ]);
+        Ok((output, data))
+    }
+
+    /// The one deliberately state-dependent op: deterministic functions
+    /// of the handled-request history (counts, warm entry totals), never
+    /// of scheduling. Includes itself in the counts.
+    fn status(&self) -> (String, Json) {
+        let requests: BTreeMap<String, u64> = self.requests.lock().clone();
+        let handled: u64 = requests.values().sum();
+        let (mut models, mut cached) = (0usize, 0usize);
+        for e in self.blocked.lock().values() {
+            models += e.models.lock().store.entries();
+            cached += e.cache.entries();
+        }
+        let (mut memo_entries, mut memo_runs) = (0usize, 0usize);
+        for m in self.memos.lock().values() {
+            memo_entries += m.memo.len();
+            let (_cost, runs) = micro::memo_totals(&m.memo);
+            memo_runs += runs;
+        }
+        let generated = self.models_generated.load(Ordering::SeqCst);
+        let checkpoints = self.checkpoints.load(Ordering::SeqCst);
+        let req_obj =
+            Json::Obj(requests.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect());
+        let output = format!(
+            "serve status: {handled} request(s) handled\n  \
+             warm: {models} model(s), {cached} cached estimate(s), \
+             {memo_entries} micro benchmark(s) over {memo_runs} kernel run(s)\n  \
+             this process: {generated} model(s) generated, {checkpoints} checkpoint(s) written\n"
+        );
+        let data = Json::obj(vec![
+            ("checkpoints", Json::Num(checkpoints as f64)),
+            ("memo_entries", Json::Num(memo_entries as f64)),
+            ("memo_kernel_runs", Json::Num(memo_runs as f64)),
+            ("model_cache_entries", Json::Num(cached as f64)),
+            ("models", Json::Num(models as f64)),
+            ("models_generated", Json::Num(generated as f64)),
+            ("requests", req_obj),
+            ("store", Json::Bool(self.warm.is_some())),
+        ]);
+        (output, data)
+    }
+}
+
+// ------------------------------------------------------------- transports
+
+/// SIGINT-to-flag bridge: the handler only stores an atomic (async-signal
+/// safe); the serve loops poll it and run the graceful-shutdown path.
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" fn on_sigint(_sig: i32) {
+            REQUESTED.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            // libc is already linked by std; SIG_ERR return intentionally
+            // ignored (worst case: ctrl-C kills us without a checkpoint,
+            // which the atomic-rename store tolerates).
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        unsafe {
+            signal(SIGINT, on_sigint);
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install() {}
+}
+
+fn finish(state: &ServeState) -> Result<()> {
+    let written = state.checkpoint().context("final checkpoint")?;
+    eprintln!("[dlapm serve] shutdown: {written} warm slot(s) checkpointed");
+    Ok(())
+}
+
+/// Stdin/stdout batch mode: read request lines from stdin, write one
+/// response line per request to stdout, in order. Exits gracefully
+/// (final checkpoint) on EOF, `{"op":"shutdown"}` or SIGINT.
+pub fn serve_stdio(state: &Arc<ServeState>) -> Result<()> {
+    sigint::install();
+    let (tx, rx) = mpsc::channel::<std::io::Result<String>>();
+    std::thread::spawn(move || {
+        for line in std::io::stdin().lock().lines() {
+            let failed = line.is_err();
+            if tx.send(line).is_err() || failed {
+                return;
+            }
+        }
+    });
+    let stdout = std::io::stdout();
+    loop {
+        if sigint::requested() || state.shutdown_requested() {
+            break;
+        }
+        match rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(line) => {
+                let line = line.context("reading stdin")?;
+                if let Some(resp) = state.handle_line(&line) {
+                    let mut out = stdout.lock();
+                    out.write_all(resp.as_bytes()).context("writing response")?;
+                    out.write_all(b"\n").context("writing response")?;
+                    out.flush().context("flushing stdout")?;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break, // EOF
+        }
+    }
+    finish(state)
+}
+
+/// TCP mode: line-oriented protocol on `addr` (`127.0.0.1:0` picks a free
+/// port), one thread per connection. The bound address is announced on
+/// stderr as `[dlapm serve] listening on <addr>` — tests and scripts
+/// parse that line.
+pub fn serve_tcp(state: &Arc<ServeState>, addr: &str) -> Result<()> {
+    sigint::install();
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr().context("resolving bound address")?;
+    eprintln!("[dlapm serve] listening on {local}");
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let mut handles = Vec::new();
+    while !sigint::requested() && !state.shutdown_requested() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let st = Arc::clone(state);
+                handles.push(std::thread::spawn(move || connection(&st, stream)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accepting connection"),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    finish(state)
+}
+
+fn connection(state: &ServeState, mut stream: TcpStream) {
+    // Read timeouts keep connection threads joinable at shutdown.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut buf = String::new();
+    loop {
+        match reader.read_line(&mut buf) {
+            Ok(0) => return, // client closed
+            Ok(_) => {
+                if let Some(resp) = state.handle_line(&buf) {
+                    if stream.write_all(resp.as_bytes()).is_err()
+                        || stream.write_all(b"\n").is_err()
+                        || stream.flush().is_err()
+                    {
+                        return;
+                    }
+                }
+                if state.shutdown_requested() {
+                    return;
+                }
+                buf.clear();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Timeout mid-wait; any partial line already read stays
+                // in `buf` (read_line appends before erroring).
+                if state.shutdown_requested() {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// `serve --client`: send one request line to a running daemon and print
+/// its response line. The one-shot query surface tests and scripts use.
+pub fn run_client(addr: &str, request: &str) -> Result<String> {
+    let line = request.trim();
+    crate::ensure!(!line.is_empty(), "--client needs a non-empty JSON request");
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.write_all(line.as_bytes()).context("sending request")?;
+    stream.write_all(b"\n").context("sending request")?;
+    stream.flush().context("sending request")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).context("reading response")?;
+    crate::ensure!(!resp.is_empty(), "server closed the connection without responding");
+    Ok(resp.trim_end_matches(['\r', '\n']).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> ServeState {
+        ServeState::new(&ServeOpts { store_dir: None, jobs: 2, checkpoint_every: 0 })
+            .expect("serve state")
+    }
+
+    #[test]
+    fn blank_lines_are_ignored() {
+        let s = state();
+        assert_eq!(s.handle_line(""), None);
+        assert_eq!(s.handle_line("   \t "), None);
+    }
+
+    #[test]
+    fn malformed_and_unknown_requests_get_structured_errors() {
+        let s = state();
+        let resp = s.handle_line("garbage").unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error").unwrap().get("code").unwrap().as_str(), Some("parse"));
+        let resp = s.handle_line(r#"{"op":"florble","id":9}"#).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("error").unwrap().get("code").unwrap().as_str(), Some("unknown-op"));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(9.0));
+        // Bad field values are bad-request, not crashes.
+        let resp = s.handle_line(r#"{"op":"contract_rank","spec":"no-equals"}"#).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("error").unwrap().get("code").unwrap().as_str(), Some("bad-request"));
+        // The daemon keeps serving afterwards.
+        assert!(!s.shutdown_requested());
+    }
+
+    #[test]
+    fn shutdown_op_sets_the_flag_and_acknowledges() {
+        let s = state();
+        let resp = s.handle_line(r#"{"op":"shutdown","id":"bye"}"#).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("id").unwrap().as_str(), Some("bye"));
+        assert!(s.shutdown_requested());
+    }
+
+    #[test]
+    fn repeated_contract_request_reuses_all_warm_state() {
+        let s = state();
+        let req = r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":20,"small":4,"seed":7}"#;
+        let first = s.handle_line(req).unwrap();
+        let j1 = Json::parse(&first).unwrap();
+        assert_eq!(j1.get("ok").unwrap().as_bool(), Some(true), "{first}");
+        let (_, status1) = s.status();
+        let runs1 = status1.get("memo_kernel_runs").unwrap().as_usize().unwrap();
+        assert!(runs1 > 0, "first request should micro-benchmark");
+        // Identical request: byte-identical response, zero new kernel
+        // runs, zero model generations.
+        let second = s.handle_line(req).unwrap();
+        assert_eq!(first, second);
+        let (_, status2) = s.status();
+        assert_eq!(
+            status2.get("memo_kernel_runs").unwrap().as_usize().unwrap(),
+            runs1
+        );
+        assert_eq!(status2.get("models_generated").unwrap().as_usize(), Some(0));
+        // Distinct-benchmark count is part of the structured answer.
+        let data = j1.get("data").unwrap();
+        assert!(data.get("distinct_benchmarks").unwrap().as_usize().unwrap() > 0);
+        assert!(data.get("winner").unwrap().as_str().is_some());
+    }
+
+    #[test]
+    fn status_counts_requests_per_op() {
+        let s = state();
+        s.handle_line(r#"{"op":"shutdown"}"#).unwrap();
+        let resp = s.handle_line(r#"{"op":"status","id":1}"#).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        let reqs = j.get("data").unwrap().get("requests").unwrap();
+        assert_eq!(reqs.get("shutdown").unwrap().as_usize(), Some(1));
+        assert_eq!(reqs.get("status").unwrap().as_usize(), Some(1)); // itself
+        assert_eq!(j.get("data").unwrap().get("store").unwrap().as_bool(), Some(false));
+    }
+}

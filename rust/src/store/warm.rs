@@ -361,6 +361,56 @@ mod tests {
     }
 
     #[test]
+    fn load_racing_save_sees_old_or_new_snapshot_never_partial() {
+        // The atomicity contract from the reader's side: while a saver
+        // alternates between a 1-entry and a 2-entry snapshot, every
+        // concurrent load must parse a complete snapshot of one
+        // generation or the other — rename-over-the-target means a
+        // reader can never open a half-written file. A torn write would
+        // surface as a parse error or an impossible entry count.
+        let dir = TempDir::new("warm_load_race");
+        let w = WarmStore::open(&dir.0).unwrap();
+        let two = {
+            let memo = memo_with_entry();
+            memo.preload(
+                "haswell/openblas/1t|dgemm|L6",
+                MicroTiming {
+                    cold_total: 0.5,
+                    cold_runs: 2,
+                    steady: 0.25,
+                    kernel_runs: 9,
+                    cost: 1.0,
+                },
+            );
+            memo
+        };
+        // Seed the slot so the reader always finds a snapshot.
+        w.save("micro_memo_g1", &key(), &memo_with_entry()).unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..40 {
+                    if i % 2 == 0 {
+                        w.save("micro_memo_g1", &key(), &two).unwrap();
+                    } else {
+                        w.save("micro_memo_g1", &key(), &memo_with_entry()).unwrap();
+                    }
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..80 {
+                    let back = w
+                        .load::<MicroMemo>("micro_memo_g1", &key())
+                        .expect("load raced into a torn snapshot")
+                        .expect("snapshot vanished mid-race");
+                    let n = back.len();
+                    assert!(n == 1 || n == 2, "partial snapshot: {n} entries");
+                }
+            });
+        });
+        let _ = w.take_status();
+    }
+
+    #[test]
     fn differently_keyed_snapshots_coexist_without_clobbering() {
         // The validity tuple is part of the path: a run under another
         // seed/granularity/machine starts cold in its own file and can

@@ -68,6 +68,22 @@ impl Contraction {
         self
     }
 
+    /// The CLI/daemon sizing rule shared by `contract --n/--small` and the
+    /// serve `contract_rank` op: the conventionally-contracted index names
+    /// `i`, `j`, `k` get the `small` dimension, every other index gets
+    /// `n` — exactly how [`Contraction::example_vector`] /
+    /// [`Contraction::example_challenging`] size the paper's scenarios.
+    /// Having one implementation keeps daemon responses byte-identical to
+    /// the equivalent CLI run.
+    pub fn sized_uniform(&self, small: usize, n: usize) -> Contraction {
+        let dims: Vec<(char, usize)> = self
+            .dims
+            .keys()
+            .map(|&i| (i, if matches!(i, 'i' | 'j' | 'k') { small } else { n }))
+            .collect();
+        self.clone().with_dims(&dims)
+    }
+
     pub fn dim(&self, i: char) -> usize {
         self.dims[&i]
     }
@@ -150,6 +166,16 @@ impl Contraction {
         Contraction::parse("abc=ija,jbic")
             .unwrap()
             .with_dims(&[('a', n), ('b', n), ('c', n), ('i', small), ('j', small)])
+    }
+}
+
+/// The named scenario presets behind `contract --preset` and the serve
+/// `contract_rank` op's `preset` field — one mapping for both surfaces.
+pub fn preset_spec(name: &str) -> Option<&'static str> {
+    match name {
+        "vector" => Some("a=iaj,ji"),         // §6.3.2
+        "challenging" => Some("abc=ija,jbic"), // §6.3.3
+        _ => None,
     }
 }
 
@@ -239,6 +265,17 @@ mod tests {
         assert_eq!(c.quantized(1), c);
         let tiny = Contraction::example_abc(3).quantized(8);
         assert!(tiny.dims.values().all(|&v| v >= 1), "{tiny:?}");
+    }
+
+    #[test]
+    fn sized_uniform_matches_example_constructors() {
+        let v = Contraction::parse("a=iaj,ji").unwrap().sized_uniform(8, 1000);
+        assert_eq!(v, Contraction::example_vector(1000, 8));
+        let c = Contraction::parse("abc=ija,jbic").unwrap().sized_uniform(4, 96);
+        assert_eq!(c, Contraction::example_challenging(96, 4));
+        assert_eq!(preset_spec("vector"), Some("a=iaj,ji"));
+        assert_eq!(preset_spec("challenging"), Some("abc=ija,jbic"));
+        assert_eq!(preset_spec("nope"), None);
     }
 
     #[test]

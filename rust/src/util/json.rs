@@ -30,6 +30,22 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// Strict integer accessor: `Some` only for a finite, non-negative
+    /// number with no fractional part that fits f64's exact-integer range.
+    /// Wire-protocol field validation wants a hard error for `"n": 2.5`
+    /// or `"n": -3` where the truncating [`Json::as_usize`] would guess.
+    pub fn as_exact_usize(&self) -> Option<usize> {
+        self.as_exact_u64().map(|n| n as usize)
+    }
+    /// See [`Json::as_exact_usize`]; `u64` variant for seeds.
+    pub fn as_exact_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(n) if n.is_finite() && n >= 0.0 && n == n.trunc() && n < 9.0e15 => {
+                Some(n as u64)
+            }
+            _ => None,
+        }
+    }
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -345,6 +361,19 @@ mod tests {
     fn roundtrip_escapes_and_unicode() {
         let j = Json::Str("tab\there \"q\" \\ μs".into());
         assert_eq!(Json::parse(&j.render()).unwrap(), j);
+    }
+
+    #[test]
+    fn exact_integer_accessor_rejects_lossy_values() {
+        assert_eq!(Json::Num(128.0).as_exact_usize(), Some(128));
+        assert_eq!(Json::Num(0.0).as_exact_u64(), Some(0));
+        assert_eq!(Json::Num(2.5).as_exact_usize(), None);
+        assert_eq!(Json::Num(-3.0).as_exact_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_exact_usize(), None);
+        assert_eq!(Json::Num(1e16).as_exact_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_exact_usize(), None);
+        // The truncating accessor keeps its legacy behavior.
+        assert_eq!(Json::Num(2.5).as_usize(), Some(2));
     }
 
     #[test]

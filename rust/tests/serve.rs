@@ -1,0 +1,263 @@
+//! End-to-end tests for `dlapm serve`: the stdio batch transport, the
+//! TCP transport with its `--client` one-shot, `--jobs` parity, warm
+//! restart from a `--store` directory, and the structured-error contract
+//! of the wire protocol (docs/serve-protocol.md).
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Command, Stdio};
+
+use dlapm::util::json::Json;
+
+mod common;
+use common::TempDir;
+
+fn dlapm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_dlapm"))
+}
+
+/// Run `dlapm serve --stdio` with `extra` args, feed `script` on stdin
+/// (EOF after the last line), return (stdout, stderr, exit-success).
+fn serve_stdio(extra: &[&str], script: &str) -> (String, String, bool) {
+    let mut child = dlapm()
+        .args(["serve", "--stdio"])
+        .args(extra)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning dlapm serve --stdio");
+    child
+        .stdin
+        .take()
+        .expect("piped stdin")
+        .write_all(script.as_bytes())
+        .expect("writing request script");
+    // stdin dropped above: the daemon sees EOF after the script and runs
+    // its graceful-shutdown path (final checkpoint) on its own.
+    let out = child.wait_with_output().expect("waiting for dlapm serve");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+const SELECT: &str =
+    r#"{"op":"select","cpu":"sandybridge","family":"potrf","n":520,"b":104,"seed":5,"id":1}"#;
+const CONTRACT: &str =
+    r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":20,"small":4,"seed":7,"id":2}"#;
+const STATUS: &str = r#"{"op":"status","id":3}"#;
+
+/// The tentpole contract: the `output` field of a serve response is
+/// byte-identical to what the equivalent CLI invocation prints.
+#[test]
+fn select_response_output_equals_cli_stdout() {
+    let (stdout, stderr, ok) = serve_stdio(&["--jobs", "2"], &format!("{SELECT}\n"));
+    assert!(ok, "{stderr}");
+    let resp = Json::parse(stdout.lines().next().expect("one response line")).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{stdout}");
+    assert_eq!(resp.get("op").unwrap().as_str(), Some("select"));
+    let served = resp.get("output").unwrap().as_str().unwrap().to_string();
+    let cli = dlapm()
+        .args([
+            "select", "--cpu", "sandybridge", "--lib", "openblas", "--op", "potrf", "--n",
+            "520", "--b", "104", "--seed", "5", "--jobs", "2",
+        ])
+        .output()
+        .expect("spawning dlapm select");
+    assert!(cli.status.success(), "{:?}", cli.status);
+    assert_eq!(
+        served,
+        String::from_utf8_lossy(&cli.stdout),
+        "serve 'output' must be byte-identical to the CLI's stdout"
+    );
+}
+
+/// Whole-batch determinism: the same request script answered at
+/// `--jobs 1` and `--jobs 4` produces byte-identical stdout, and an
+/// identical request repeated within one batch gets identical bytes.
+#[test]
+fn stdio_batch_is_byte_identical_across_jobs_and_repeats() {
+    let script = format!(
+        "{CONTRACT}\n\
+         {{\"op\":\"blocksize\",\"family\":\"potrf\",\"cpu\":\"sandybridge\",\"n\":520,\
+         \"bs\":[24,72,120],\"seed\":5,\"id\":2}}\n\
+         {CONTRACT}\n\
+         {STATUS}\n\
+         {{\"op\":\"shutdown\",\"id\":4}}\n"
+    );
+    let (a, err_a, ok_a) = serve_stdio(&["--jobs", "1"], &script);
+    let (b, err_b, ok_b) = serve_stdio(&["--jobs", "4"], &script);
+    assert!(ok_a, "{err_a}");
+    assert!(ok_b, "{err_b}");
+    assert_eq!(a, b, "serve --jobs 1 and --jobs 4 must answer byte-identically");
+    let lines: Vec<&str> = a.lines().collect();
+    assert_eq!(lines.len(), 5, "{a}");
+    assert_eq!(lines[0], lines[2], "identical requests must get identical response bytes");
+    let bye = Json::parse(lines[4]).unwrap();
+    assert_eq!(bye.get("ok").unwrap().as_bool(), Some(true), "{}", lines[4]);
+}
+
+/// The zero-marginal-cost acceptance criterion: a second identical
+/// request generates no models and runs no new micro-benchmarks — the
+/// `status` counters before and after prove it.
+#[test]
+fn second_identical_request_does_zero_new_work() {
+    let script = format!("{SELECT}\n{CONTRACT}\n{STATUS}\n{SELECT}\n{CONTRACT}\n{STATUS}\n");
+    let (out, err, ok) = serve_stdio(&["--jobs", "2"], &script);
+    assert!(ok, "{err}");
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 6, "{out}");
+    assert_eq!(lines[0], lines[3], "repeat select must be byte-identical");
+    assert_eq!(lines[1], lines[4], "repeat contract_rank must be byte-identical");
+    let counters = |line: &str| {
+        let d = Json::parse(line).unwrap();
+        let d = d.get("data").cloned().unwrap();
+        (
+            d.get("models_generated").unwrap().as_usize().unwrap(),
+            d.get("memo_kernel_runs").unwrap().as_usize().unwrap(),
+            d.get("models").unwrap().as_usize().unwrap(),
+            d.get("model_cache_entries").unwrap().as_usize().unwrap(),
+        )
+    };
+    let first = counters(lines[2]);
+    let second = counters(lines[5]);
+    assert!(first.0 > 0, "cold select must generate models: {}", lines[2]);
+    assert!(first.1 > 0, "cold contract_rank must micro-benchmark: {}", lines[2]);
+    assert_eq!(
+        second, first,
+        "repeated requests must add zero models, zero kernel runs, zero cache entries"
+    );
+}
+
+/// Bad input never kills the daemon: each malformed / unknown / invalid
+/// request gets a structured error object and the process still exits 0.
+#[test]
+fn malformed_and_unknown_requests_error_structurally_with_exit_zero() {
+    let script = concat!(
+        "this is not json\n",
+        r#"{"op":"florble","id":1}"#,
+        "\n",
+        r#"{"op":"status","id":2,"surprise":true}"#,
+        "\n",
+        r#"{"op":"predict","v":2,"id":3}"#,
+        "\n",
+        "\n", // blank keep-alive line: no response at all
+        r#"{"op":"status","id":4}"#,
+        "\n",
+    );
+    let (out, err, ok) = serve_stdio(&[], script);
+    assert!(ok, "bad requests must not kill the daemon: {err}");
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 5, "blank lines get no response: {out}");
+    let code = |line: &str| {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{line}");
+        j.get("error").unwrap().get("code").unwrap().as_str().unwrap().to_string()
+    };
+    assert_eq!(code(lines[0]), "parse");
+    assert_eq!(code(lines[1]), "unknown-op");
+    assert_eq!(code(lines[2]), "bad-request"); // unknown field for status
+    assert_eq!(code(lines[3]), "version");
+    let last = Json::parse(lines[4]).unwrap();
+    assert_eq!(last.get("ok").unwrap().as_bool(), Some(true), "{}", lines[4]);
+    assert_eq!(last.get("id").unwrap().as_usize(), Some(4));
+}
+
+/// Warm restart: a daemon shut down over a `--store` directory
+/// checkpoints its state; a second daemon over the same directory
+/// answers byte-identically while generating nothing new.
+#[test]
+fn warm_restart_from_store_is_byte_identical_and_regenerates_nothing() {
+    let dir = TempDir::new("serve_store");
+    let store = dir.path().to_str().expect("utf-8 temp path").to_string();
+    let script = format!("{SELECT}\n{CONTRACT}\n{STATUS}\n{{\"op\":\"shutdown\"}}\n");
+    let run = || serve_stdio(&["--jobs", "2", "--store", &store], &script);
+    let (cold, cold_err, ok_cold) = run();
+    assert!(ok_cold, "{cold_err}");
+    assert!(
+        cold_err.contains("cold start (no snapshot)"),
+        "first run must start cold:\n{cold_err}"
+    );
+    let (warm, warm_err, ok_warm) = run();
+    assert!(ok_warm, "{warm_err}");
+    assert!(warm_err.contains(": loaded"), "second run must warm-load:\n{warm_err}");
+    // Nothing grew in the warm run, so its final checkpoint writes nothing.
+    assert!(
+        warm_err.contains("shutdown: 0 warm slot(s) checkpointed"),
+        "{warm_err}"
+    );
+    let (cold_lines, warm_lines): (Vec<&str>, Vec<&str>) =
+        (cold.lines().collect(), warm.lines().collect());
+    assert_eq!(cold_lines.len(), 4, "{cold}");
+    assert_eq!(warm_lines.len(), 4, "{warm}");
+    // The prediction responses (not the state-dependent status) are
+    // byte-identical cold vs warm.
+    assert_eq!(cold_lines[0], warm_lines[0]);
+    assert_eq!(cold_lines[1], warm_lines[1]);
+    let warm_status = Json::parse(warm_lines[2]).unwrap();
+    let data = warm_status.get("data").cloned().unwrap();
+    assert_eq!(
+        data.get("models_generated").unwrap().as_usize(),
+        Some(0),
+        "warm daemon must regenerate nothing: {}",
+        warm_lines[2]
+    );
+    assert!(data.get("models").unwrap().as_usize().unwrap() > 0);
+    assert_eq!(data.get("store").unwrap().as_bool(), Some(true));
+}
+
+/// TCP transport: the daemon announces its bound address on stderr, the
+/// `--client` one-shot round-trips a request, and a shutdown request
+/// terminates the daemon with exit 0.
+#[test]
+fn tcp_client_one_shot_round_trip_and_shutdown() {
+    let mut child = dlapm()
+        .args(["serve", "--addr", "127.0.0.1:0", "--jobs", "2"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning dlapm serve --addr");
+    let mut reader = BufReader::new(child.stderr.take().expect("piped stderr"));
+    let mut addr = None;
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap_or(0) > 0 {
+        if let Some(rest) = line.trim().strip_prefix("[dlapm serve] listening on ") {
+            addr = Some(rest.to_string());
+            break;
+        }
+        line.clear();
+    }
+    let addr = addr.expect("daemon never announced a listening address");
+    // Keep draining stderr so the daemon can never block on a full pipe.
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        loop {
+            sink.clear();
+            match reader.read_line(&mut sink) {
+                Ok(0) | Err(_) => return,
+                Ok(_) => {}
+            }
+        }
+    });
+    let client = |req: &str| {
+        let out = dlapm()
+            .args(["serve", "--client", req, "--addr", &addr])
+            .output()
+            .expect("spawning dlapm serve --client");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).trim().to_string()
+    };
+    let resp =
+        client(r#"{"op":"predict","cpu":"sandybridge","n":520,"b":104,"seed":5,"id":"p1"}"#);
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    assert_eq!(j.get("id").unwrap().as_str(), Some("p1"));
+    assert!(j.get("output").unwrap().as_str().unwrap().contains("t_med="), "{resp}");
+    let bye = client(r#"{"op":"shutdown"}"#);
+    let j = Json::parse(&bye).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{bye}");
+    let status = child.wait().expect("waiting for dlapm serve");
+    assert!(status.success(), "daemon exit: {status:?}");
+}
