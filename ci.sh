@@ -167,6 +167,27 @@ if ! grep -q "shutdown: 0 warm slot(s) checkpointed" "$SMOKE_DIR/serve_jobs4.err
 fi
 echo "warm serve run checkpointed zero slots (zero new work)"
 
+echo "== shard parity smoke (--shards 1 vs --shards 8, jobs 1 vs 4) =="
+cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --n 32 --rank --jobs 1 --shards 1 \
+    > "$SMOKE_DIR/rank_shards1.txt"
+cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --n 32 --rank --jobs 4 --shards 8 \
+    > "$SMOKE_DIR/rank_shards8.txt"
+if cmp -s "$SMOKE_DIR/rank_shards1.txt" "$SMOKE_DIR/rank_shards8.txt"; then
+    echo "contract --rank output is byte-identical across shard counts"
+else
+    echo "ERROR: contract --rank differs between --shards 1 and --shards 8:" >&2
+    diff "$SMOKE_DIR/rank_shards1.txt" "$SMOKE_DIR/rank_shards8.txt" >&2 || true
+    exit 1
+fi
+# And against the flagless default (hardware-derived shard count).
+if cmp -s "$SMOKE_DIR/rank_jobs1.txt" "$SMOKE_DIR/rank_shards1.txt"; then
+    echo "contract --rank --shards 1 matches the default shard count byte-for-byte"
+else
+    echo "ERROR: --shards 1 differs from the no-flag default:" >&2
+    diff "$SMOKE_DIR/rank_jobs1.txt" "$SMOKE_DIR/rank_shards1.txt" >&2 || true
+    exit 1
+fi
+
 echo "== serve protocol docs freshness (every op documented) =="
 SERVE_OPS="$(sed -n '/pub const OPS/,/];/p' src/serve/protocol.rs \
     | grep -oE '"[a-z_]+"' | tr -d '"')"

@@ -16,6 +16,7 @@ use dlapm::predict::measurement::coverage;
 use dlapm::predict::predictor::{predict_calls, predict_calls_cached};
 use dlapm::serve::{Coalescer, ServeOpts, ServeState};
 use dlapm::util::bench::BenchSuite;
+use dlapm::util::stats::Summary;
 
 fn main() {
     let machine = Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
@@ -77,7 +78,13 @@ fn main() {
     // micro-benchmark pass; warm is the resident-daemon steady state
     // (every memo lookup hits, the response is recomputed pure).
     let req = r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":16,"small":4,"seed":7}"#;
-    let opts = || ServeOpts { store_dir: None, jobs: 1, checkpoint_every: 0 };
+    let opts = || ServeOpts {
+        store_dir: None,
+        jobs: 1,
+        checkpoint_every: 0,
+        max_connections: 0,
+        max_queue: 0,
+    };
     suite.add("serve/handle-contract-cold", || {
         let state = ServeState::new(&opts()).unwrap();
         state.handle_line(req).unwrap().len()
@@ -101,6 +108,60 @@ fn main() {
             total
         })
     });
+    // Sharded variant: 8 threads race 8 *distinct* keys. With one shard
+    // (the PR-7 layout) they all serialize on the table mutex; across 8
+    // shards each key parks and sweeps on its own lock.
+    suite.add("serve/coalesce-contended-sharded", || {
+        let co: Coalescer<u64> = Coalescer::with_shards("bench-coalesce-sharded", 8);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..8u64 {
+                let co = &co;
+                handles.push(s.spawn(move || co.run(&format!("k{t}"), || t)));
+            }
+            let mut total = 0u64;
+            for h in handles {
+                total += h.join().unwrap();
+            }
+            total
+        })
+    });
+    // Cache contention A/B: 4 threads hammer one fully warm ModelCache
+    // (pure hit path) — the single global lock every PR-7 lookup took vs
+    // the sharded default. Identical work, identical results; only the
+    // lock layout differs.
+    let hot_cache = |shards: usize| {
+        let cache = ModelCache::with_shards(1, shards);
+        for i in 0..64usize {
+            let n = (i + 1) * 8;
+            cache.preload("dpotf2_L_a1", &[n], Summary::constant(n as f64));
+        }
+        cache
+    };
+    let hammer = |cache: &ModelCache| -> f64 {
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..4usize {
+                handles.push(s.spawn(move || {
+                    let mut acc = 0.0;
+                    for i in 0..2000usize {
+                        let n = ((i * 7 + t * 13) % 64 + 1) * 8;
+                        acc += cache
+                            .get_or_insert_with("dpotf2_L_a1", &[n], |sz| {
+                                Summary::constant(sz[0] as f64)
+                            })
+                            .med;
+                    }
+                    acc
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        })
+    };
+    let shared_cache = hot_cache(1);
+    suite.add("cache/jobs4-hot-shared", || hammer(&shared_cache));
+    let sharded_cache = hot_cache(16);
+    suite.add("cache/jobs4-hot-sharded", || hammer(&sharded_cache));
     // Batched evaluation: ordered sweep through one model's domain.
     if let Some(model) = store.models.values().max_by_key(|m| m.pieces.len()) {
         let pts: Vec<Vec<usize>> =

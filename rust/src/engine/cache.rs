@@ -10,15 +10,23 @@
 //! size perturbation for a higher hit rate (the models are piecewise
 //! polynomials, so nearby sizes share pieces and similar values).
 //!
-//! Writes go through an `RwLock<HashMap>`; concurrent lookups only take
-//! the read lock. A racing double-compute of the same key is harmless:
-//! estimates are deterministic, so both writers store the same value.
+//! The map is sharded by key hash over a [`ShardedRwLock`]: concurrent
+//! lookups of different keys take different locks, so the serve daemon's
+//! warm hot path (nearly every request a pure hit) never serializes on
+//! one global lock. Hit/miss counters are per-shard atomics summed on
+//! read — each lookup touches exactly one shard's counter, so
+//! `hits + misses == lookups` stays exact. Shard placement is an
+//! implementation detail: [`ModelCache::fold_sorted`] merges all shards
+//! in sorted `(case, sizes)` order, so serialization and statistics are
+//! byte-identical for any shard count. A racing double-compute of the
+//! same key is harmless: estimates are deterministic, so both writers
+//! store the same value.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 
 use crate::util::stats::Summary;
-use crate::util::sync::RwLock;
+use crate::util::sync::{default_shards, ShardCounters, ShardHasher, ShardedRwLock};
 
 /// Stack-allocated size key: rounded sizes padded with zeros plus the
 /// dimension count. Models carry at most 4 size dimensions (see
@@ -26,6 +34,9 @@ use crate::util::sync::RwLock;
 /// reach the cache (the zero-size fast path answers first), so zero
 /// padding is unambiguous.
 type SizeKey = ([usize; 4], u8);
+
+/// One shard's slice of the two-level `(case, sizes) -> Summary` map.
+type Shard = HashMap<String, HashMap<SizeKey, Summary>>;
 
 /// The one quantization rule every granularity knob shares (this cache,
 /// [`crate::engine::Memo`] key builders via `Contraction::quantized`):
@@ -35,18 +46,19 @@ pub fn quantize_size(v: usize, g: usize) -> usize {
     ((v + g / 2) / g * g).max(1)
 }
 
-/// Memoized `(case, rounded sizes) -> Summary` store with hit/miss
-/// counters. Shareable across threads (`&ModelCache` is all that's
-/// needed; wrap in `Arc` to share ownership).
+/// Memoized `(case, rounded sizes) -> Summary` store with exact hit/miss
+/// counters, sharded by key hash. Shareable across threads (`&ModelCache`
+/// is all that's needed; wrap in `Arc` to share ownership).
 ///
-/// Two-level map so the hot hit path allocates nothing: the case is
-/// looked up by `&str` and the size key lives on the stack; only a miss
-/// pays for the owned `String` entry.
+/// Two-level map per shard so the hot hit path allocates nothing: the
+/// case is looked up by `&str` and the size key lives on the stack; only
+/// a miss pays for the owned `String` entry. The shard is selected by a
+/// deterministic FNV-1a hash of `(case, quantized key)` — the quantized
+/// key, so a lookup and the preload that warmed it always agree.
 pub struct ModelCache {
     granularity: usize,
-    map: RwLock<HashMap<String, HashMap<SizeKey, Summary>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    shards: ShardedRwLock<Shard>,
+    stats: Box<[ShardCounters]>,
 }
 
 impl Default for ModelCache {
@@ -57,25 +69,43 @@ impl Default for ModelCache {
 
 impl ModelCache {
     /// Exact-key cache (granularity 1): memoization only, no rounding.
+    /// Shard count defaults to [`default_shards`] (next power of two >=
+    /// hardware parallelism, or the `--shards` override).
     pub fn new() -> ModelCache {
         ModelCache::with_granularity(1)
     }
 
     /// Cache whose keys quantize sizes to multiples of `granularity`
-    /// (nearest multiple; clamped to >= 1).
+    /// (nearest multiple; clamped to >= 1), with the default shard count.
     pub fn with_granularity(granularity: usize) -> ModelCache {
-        ModelCache {
-            granularity: granularity.max(1),
-            map: RwLock::new(HashMap::new(), "engine::cache::map"),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
+        ModelCache::with_shards(granularity, default_shards())
+    }
+
+    /// Fully explicit constructor: key granularity plus shard count
+    /// (rounded up to a power of two, min 1). Shard count never affects
+    /// output bytes — only lock contention — so any value is safe.
+    pub fn with_shards(granularity: usize, shards: usize) -> ModelCache {
+        let shards = ShardedRwLock::new(shards, "engine::cache::map", HashMap::new);
+        let stats = (0..shards.shard_count()).map(|_| ShardCounters::default()).collect();
+        ModelCache { granularity: granularity.max(1), shards, stats }
+    }
+
+    /// Exact-key cache sized for an engine's worker count: one shard per
+    /// worker (rounded up to a power of two), so a fully loaded pool can
+    /// expect a shard to itself.
+    pub fn for_engine(engine: &crate::engine::Engine) -> ModelCache {
+        ModelCache::with_shards(1, engine.jobs())
     }
 
     /// The key-quantization granularity (1 = exact keys). Mirrors
     /// [`crate::engine::Memo::granularity`].
     pub fn granularity(&self) -> usize {
         self.granularity
+    }
+
+    /// The (power-of-two) number of lock shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.shard_count()
     }
 
     /// Quantize sizes to the cache key grid. Idempotent: rounding an
@@ -98,9 +128,23 @@ impl ModelCache {
         Some((padded, sizes.len() as u8))
     }
 
+    /// The shard a quantized key lives on: FNV-1a over the case string
+    /// and the padded key. Deterministic across processes, so a warm
+    /// snapshot preloads entries onto the same shards lookups will probe.
+    fn shard_of(&self, case: &str, key: &SizeKey) -> usize {
+        let mut h = ShardHasher::new();
+        h.write(case.as_bytes());
+        h.write(&[0, key.1]);
+        for &v in &key.0 {
+            h.write_usize(v);
+        }
+        self.shards.shard_index(h.finish())
+    }
+
     /// Cached estimate: on a miss, `compute` is called with the *rounded*
     /// sizes (so the stored value matches its key exactly) and the result
-    /// is stored. A hit performs no allocation.
+    /// is stored. A hit performs no allocation and touches only the one
+    /// shard the key hashes to.
     pub fn get_or_insert_with(
         &self,
         case: &str,
@@ -111,16 +155,17 @@ impl ModelCache {
             let rounded = self.round(sizes);
             return compute(&rounded);
         };
+        let idx = self.shard_of(case, &key);
         {
-            let map = self.map.read();
-            if let Some(hit) = map.get(case).and_then(|inner| inner.get(&key)) {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+            let shard = self.shards.shard_at(idx).read();
+            if let Some(hit) = shard.get(case).and_then(|inner| inner.get(&key)) {
+                self.stats[idx].hits.fetch_add(1, Ordering::Relaxed);
                 return *hit;
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.stats[idx].misses.fetch_add(1, Ordering::Relaxed);
         let value = compute(&key.0[..sizes.len()]);
-        self.map.write().entry(case.to_string()).or_default().insert(key, value);
+        self.shards.shard_at(idx).write().entry(case.to_string()).or_default().insert(key, value);
         value
     }
 
@@ -133,49 +178,62 @@ impl ModelCache {
     /// are dropped (they were never cacheable to begin with).
     pub fn preload(&self, case: &str, sizes: &[usize], value: Summary) {
         let Some(key) = self.size_key(sizes) else { return };
-        self.map.write().entry(case.to_string()).or_default().insert(key, value);
+        let idx = self.shard_of(case, &key);
+        self.shards.shard_at(idx).write().entry(case.to_string()).or_default().insert(key, value);
     }
 
     /// Fold over the memoized entries in sorted `(case, rounded sizes)`
     /// order — deterministic iteration for serialization and statistics,
-    /// mirroring [`crate::engine::Memo::fold_sorted`].
+    /// mirroring [`crate::engine::Memo::fold_sorted`]. All shards are
+    /// read-locked at once (same site label — no lock-order edge), their
+    /// entries merged and globally sorted, so the fold is byte-identical
+    /// for any shard count.
     pub fn fold_sorted<A>(
         &self,
         init: A,
         mut f: impl FnMut(A, &str, &[usize], &Summary) -> A,
     ) -> A {
-        let map = self.map.read();
-        let mut cases: Vec<&String> = map.keys().collect();
-        cases.sort();
-        let mut acc = init;
-        for case in cases {
-            let inner = &map[case];
-            let mut keys: Vec<&SizeKey> = inner.keys().collect();
-            keys.sort();
-            for key in keys {
-                acc = f(acc, case, &key.0[..key.1 as usize], &inner[key]);
+        self.shards.fold_shards(|guards| {
+            let mut entries: Vec<(&String, &SizeKey, &Summary)> = Vec::new();
+            for guard in guards {
+                for (case, inner) in guard.iter() {
+                    for (key, value) in inner.iter() {
+                        entries.push((case, key, value));
+                    }
+                }
             }
-        }
-        acc
+            entries.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            let mut acc = init;
+            for (case, key, value) in entries {
+                acc = f(acc, case, &key.0[..key.1 as usize], value);
+            }
+            acc
+        })
     }
 
     /// Peek without computing (counts as neither hit nor miss).
     pub fn peek(&self, case: &str, sizes: &[usize]) -> Option<Summary> {
         let key = self.size_key(sizes)?;
-        self.map.read().get(case).and_then(|inner| inner.get(&key)).copied()
+        let idx = self.shard_of(case, &key);
+        self.shards.shard_at(idx).read().get(case).and_then(|inner| inner.get(&key)).copied()
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.stats.iter().map(|s| s.hits.load(Ordering::Relaxed)).sum()
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.stats.iter().map(|s| s.misses.load(Ordering::Relaxed)).sum()
     }
 
     /// Number of memoized `(case, sizes)` entries.
     pub fn len(&self) -> usize {
-        self.map.read().values().map(|inner| inner.len()).sum()
+        let mut total = 0;
+        for i in 0..self.shards.shard_count() {
+            let shard = self.shards.shard_at(i).read();
+            total += shard.values().map(|inner| inner.len()).sum::<usize>();
+        }
+        total
     }
 
     pub fn is_empty(&self) -> bool {
@@ -183,9 +241,13 @@ impl ModelCache {
     }
 
     pub fn clear(&self) {
-        self.map.write().clear();
-        self.hits.store(0, Ordering::Relaxed);
-        self.misses.store(0, Ordering::Relaxed);
+        for i in 0..self.shards.shard_count() {
+            self.shards.shard_at(i).write().clear();
+        }
+        for s in self.stats.iter() {
+            s.hits.store(0, Ordering::Relaxed);
+            s.misses.store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -268,6 +330,31 @@ mod tests {
         assert_eq!(order, "a[8, 4];a[8, 8];b[8];b[16];");
     }
 
+    /// The sharding determinism contract: fold order (hence snapshot
+    /// bytes) is identical for any shard count, including the degenerate
+    /// single-shard layout this structure replaced.
+    #[test]
+    fn fold_sorted_is_identical_across_shard_counts() {
+        let folds: Vec<String> = [1usize, 4, 64]
+            .into_iter()
+            .map(|n| {
+                let cache = ModelCache::with_shards(1, n);
+                for (case, sizes) in
+                    [("b", vec![16usize]), ("a", vec![8, 8]), ("b", vec![8]), ("a", vec![8, 4])]
+                {
+                    cache.get_or_insert_with(case, &sizes, |s| Summary::constant(s[0] as f64));
+                }
+                cache.fold_sorted(String::new(), |mut acc, case, sizes, v| {
+                    acc.push_str(&format!("{case}{sizes:?}={};", v.med));
+                    acc
+                })
+            })
+            .collect();
+        assert_eq!(folds[0], folds[1]);
+        assert_eq!(folds[0], folds[2]);
+        assert_eq!(ModelCache::with_shards(1, 3).shard_count(), 4);
+    }
+
     #[test]
     fn clear_resets_contents_and_counters() {
         let cache = ModelCache::new();
@@ -278,30 +365,45 @@ mod tests {
     }
 
     #[test]
+    fn for_engine_matches_worker_count() {
+        let engine = Engine::new(3);
+        let cache = ModelCache::for_engine(&engine);
+        assert_eq!(cache.shard_count(), 4); // 3 workers round up
+        assert_eq!(cache.granularity(), 1);
+    }
+
+    #[test]
     fn concurrent_access_through_engine_is_consistent() {
-        let cache = Arc::new(ModelCache::new());
-        let engine = Engine::new(4);
-        let tasks: Vec<_> = (0..32usize)
-            .map(|i| {
-                let cache = Arc::clone(&cache);
-                move || {
-                    // 32 tasks over 8 distinct keys: heavy sharing.
-                    let n = (i % 8 + 1) * 8;
-                    cache
-                        .get_or_insert_with("dpotf2_L_a1", &[n], |s| {
-                            Summary::constant(s[0] as f64 * 2.0)
-                        })
-                        .med
-                }
-            })
-            .collect();
-        let out = engine.run(tasks).unwrap();
-        for (i, v) in out.iter().enumerate() {
-            assert_eq!(*v, ((i % 8 + 1) * 8) as f64 * 2.0);
+        // Both the single-shard layout and a contention-free one must
+        // keep the counters exact: each lookup lands on exactly one
+        // shard's counter, so hits + misses == lookups regardless of
+        // scheduling or shard count.
+        for shards in [1usize, 8] {
+            let cache = Arc::new(ModelCache::with_shards(1, shards));
+            let engine = Engine::new(4);
+            let tasks: Vec<_> = (0..32usize)
+                .map(|i| {
+                    let cache = Arc::clone(&cache);
+                    move || {
+                        // 32 tasks over 8 distinct keys: heavy sharing.
+                        let n = (i % 8 + 1) * 8;
+                        cache
+                            .get_or_insert_with("dpotf2_L_a1", &[n], |s| {
+                                Summary::constant(s[0] as f64 * 2.0)
+                            })
+                            .med
+                    }
+                })
+                .collect();
+            let out = engine.run(tasks).unwrap();
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, ((i % 8 + 1) * 8) as f64 * 2.0);
+            }
+            assert_eq!(cache.len(), 8);
+            // Every lookup either hit or missed; double-computes may
+            // inflate misses slightly under contention but hits + misses
+            // == lookups exactly.
+            assert_eq!(cache.hits() + cache.misses(), 32);
         }
-        assert_eq!(cache.len(), 8);
-        // Every lookup either hit or missed; double-computes may inflate
-        // misses slightly under contention but hits + misses == lookups.
-        assert_eq!(cache.hits() + cache.misses(), 32);
     }
 }

@@ -8,19 +8,30 @@
 //!
 //! [`ModelCache`]: crate::engine::ModelCache
 //!
+//! Like [`ModelCache`], the table is sharded by key hash over a
+//! [`ShardedRwLock`] so concurrent lookups of different keys never
+//! contend, with per-shard hit/miss atomics summed on read (exact:
+//! each lookup touches one shard's counter) and a sorted cross-shard
+//! merge in [`Memo::fold_sorted`] keeping iteration — and therefore
+//! snapshot bytes — independent of the shard count.
+//!
 //! Contract: `compute` must be a pure function of the key (derive any RNG
 //! seeds from the key, never from the calling thread or submission
 //! order). Under that contract a racing double-compute stores the same
 //! value, so memoized results are byte-identical for any worker count.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 
 use crate::util::rng::splitmix64;
-use crate::util::sync::RwLock;
+use crate::util::sync::{default_shards, ShardCounters, ShardHasher, ShardedRwLock};
 
-/// Thread-safe `key -> V` memo with hit/miss counters. Share by
-/// reference across threads (`Arc<Memo<V>>` for owned sharing).
+/// One shard's slice of the `key -> V` table.
+type Slots<V> = HashMap<String, V>;
+
+/// Thread-safe `key -> V` memo with exact hit/miss counters, sharded by
+/// key hash. Share by reference across threads (`Arc<Memo<V>>` for owned
+/// sharing).
 ///
 /// The memo also carries a *granularity* knob, mirroring
 /// [`ModelCache::with_granularity`]: the memo itself keys exact strings,
@@ -32,11 +43,13 @@ use crate::util::sync::RwLock;
 /// Contract for g > 1: on a miss, `compute` must derive its result from
 /// the *quantized* configuration the key describes — never from the
 /// caller's exact one — so racing double-computes still store one value.
+///
+/// [`ModelCache`]: crate::engine::ModelCache
+/// [`ModelCache::with_granularity`]: crate::engine::ModelCache::with_granularity
 pub struct Memo<V: Copy> {
     granularity: usize,
-    map: RwLock<HashMap<String, V>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    shards: ShardedRwLock<Slots<V>>,
+    stats: Box<[ShardCounters]>,
 }
 
 impl<V: Copy> Default for Memo<V> {
@@ -46,20 +59,31 @@ impl<V: Copy> Default for Memo<V> {
 }
 
 impl<V: Copy> Memo<V> {
-    /// Exact-key memo (granularity 1).
+    /// Exact-key memo (granularity 1) with the default shard count
+    /// ([`default_shards`]).
     pub fn new() -> Memo<V> {
         Memo::with_granularity(1)
     }
 
     /// Memo whose key builders quantize embedded dimensions to multiples
-    /// of `granularity` (clamped to >= 1).
+    /// of `granularity` (clamped to >= 1), with the default shard count.
     pub fn with_granularity(granularity: usize) -> Memo<V> {
-        Memo {
-            granularity: granularity.max(1),
-            map: RwLock::new(HashMap::new(), "engine::memo::map"),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
+        Memo::with_shards(granularity, default_shards())
+    }
+
+    /// Fully explicit constructor: granularity plus shard count (rounded
+    /// up to a power of two, min 1). Shard count never affects memoized
+    /// values or iteration order — only lock contention.
+    pub fn with_shards(granularity: usize, shards: usize) -> Memo<V> {
+        let shards = ShardedRwLock::new(shards, "engine::memo::map", HashMap::new);
+        let stats = (0..shards.shard_count()).map(|_| ShardCounters::default()).collect();
+        Memo { granularity: granularity.max(1), shards, stats }
+    }
+
+    /// Memo sized for an engine's worker count: one shard per worker
+    /// (rounded up to a power of two).
+    pub fn for_engine(engine: &crate::engine::Engine, granularity: usize) -> Memo<V> {
+        Memo::with_shards(granularity, engine.jobs())
     }
 
     /// The key-quantization granularity key builders must honour.
@@ -67,21 +91,36 @@ impl<V: Copy> Memo<V> {
         self.granularity
     }
 
+    /// The (power-of-two) number of lock shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.shard_count()
+    }
+
+    /// The shard a key lives on: a deterministic FNV-1a hash of the key
+    /// bytes, stable across processes so warm-start preloads land where
+    /// lookups probe.
+    fn shard_of(&self, key: &str) -> usize {
+        let mut h = ShardHasher::new();
+        h.write(key.as_bytes());
+        self.shards.shard_index(h.finish())
+    }
+
     /// Memoized lookup: on a miss, `compute` runs and its result is
     /// stored. Concurrent misses on the same key may both compute; both
     /// store the same value (see the module contract), so the winner is
-    /// irrelevant.
+    /// irrelevant. Only the one shard the key hashes to is locked.
     pub fn get_or_insert_with(&self, key: &str, compute: impl FnOnce() -> V) -> V {
+        let idx = self.shard_of(key);
         {
-            let map = self.map.read();
-            if let Some(hit) = map.get(key) {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+            let shard = self.shards.shard_at(idx).read();
+            if let Some(hit) = shard.get(key) {
+                self.stats[idx].hits.fetch_add(1, Ordering::Relaxed);
                 return *hit;
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.stats[idx].misses.fetch_add(1, Ordering::Relaxed);
         let value = compute();
-        self.map.write().entry(key.to_string()).or_insert(value);
+        self.shards.shard_at(idx).write().entry(key.to_string()).or_insert(value);
         value
     }
 
@@ -91,12 +130,14 @@ impl<V: Copy> Memo<V> {
     /// processes (a preloaded value must be what `compute` would have
     /// produced for the key, which snapshot header validation enforces).
     pub fn preload(&self, key: &str, value: V) {
-        self.map.write().insert(key.to_string(), value);
+        let idx = self.shard_of(key);
+        self.shards.shard_at(idx).write().insert(key.to_string(), value);
     }
 
     /// Peek without computing (counts as neither hit nor miss).
     pub fn peek(&self, key: &str) -> Option<V> {
-        self.map.read().get(key).copied()
+        let idx = self.shard_of(key);
+        self.shards.shard_at(idx).read().get(key).copied()
     }
 
     /// Is `key` memoized? Counts as neither hit nor miss. Unlike the
@@ -104,36 +145,49 @@ impl<V: Copy> Memo<V> {
     /// *set* after a batch completes is scheduling-independent, so
     /// reuse statistics built on `contains` are deterministic.
     pub fn contains(&self, key: &str) -> bool {
-        self.map.read().contains_key(key)
+        let idx = self.shard_of(key);
+        self.shards.shard_at(idx).read().contains_key(key)
     }
 
-    /// Fold over the stored values in sorted-key order. Sorting makes
-    /// floating-point aggregates (total cost, total runs) independent of
-    /// hash-map iteration order, hence byte-identical across runs.
+    /// Fold over the stored values in sorted-key order. All shards are
+    /// read-locked at once (one site label — no lock-order edge), the
+    /// entries merged and globally sorted, so floating-point aggregates
+    /// (total cost, total runs) are independent of both hash-map
+    /// iteration order and the shard count — byte-identical across runs.
     pub fn fold_sorted<A>(&self, init: A, mut f: impl FnMut(A, &str, &V) -> A) -> A {
-        let map = self.map.read();
-        let mut keys: Vec<&String> = map.keys().collect();
-        keys.sort();
-        let mut acc = init;
-        for k in keys {
-            acc = f(acc, k, &map[k]);
-        }
-        acc
+        self.shards.fold_shards(|guards| {
+            let mut entries: Vec<(&String, &V)> = Vec::new();
+            for guard in guards {
+                for (key, value) in guard.iter() {
+                    entries.push((key, value));
+                }
+            }
+            entries.sort_by(|a, b| a.0.cmp(b.0));
+            let mut acc = init;
+            for (key, value) in entries {
+                acc = f(acc, key, value);
+            }
+            acc
+        })
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.stats.iter().map(|s| s.hits.load(Ordering::Relaxed)).sum()
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.stats.iter().map(|s| s.misses.load(Ordering::Relaxed)).sum()
     }
 
     /// Number of distinct memoized keys. Unlike `misses()`, this is
     /// deterministic under parallel execution (racing double-computes
     /// inflate the miss counter but store one entry).
     pub fn len(&self) -> usize {
-        self.map.read().len()
+        let mut total = 0;
+        for i in 0..self.shards.shard_count() {
+            total += self.shards.shard_at(i).read().len();
+        }
+        total
     }
 
     pub fn is_empty(&self) -> bool {
@@ -141,9 +195,13 @@ impl<V: Copy> Memo<V> {
     }
 
     pub fn clear(&self) {
-        self.map.write().clear();
-        self.hits.store(0, Ordering::Relaxed);
-        self.misses.store(0, Ordering::Relaxed);
+        for i in 0..self.shards.shard_count() {
+            self.shards.shard_at(i).write().clear();
+        }
+        for s in self.stats.iter() {
+            s.hits.store(0, Ordering::Relaxed);
+            s.misses.store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -192,6 +250,26 @@ mod tests {
         assert_eq!(order, "a1b2c3");
     }
 
+    /// The sharding determinism contract: sorted folds are identical for
+    /// any shard count, so snapshot bytes never observe the shard split.
+    #[test]
+    fn fold_sorted_is_identical_across_shard_counts() {
+        let folds: Vec<String> = [1usize, 4, 32]
+            .into_iter()
+            .map(|n| {
+                let memo: Memo<u32> = Memo::with_shards(1, n);
+                for (k, v) in [("c", 3u32), ("a", 1), ("d", 4), ("b", 2)] {
+                    memo.get_or_insert_with(k, || v);
+                }
+                memo.fold_sorted(String::new(), |mut s, k, v| {
+                    s.push_str(&format!("{k}{v}"));
+                    s
+                })
+            })
+            .collect();
+        assert!(folds.iter().all(|f| f == "a1b2c3d4"), "{folds:?}");
+    }
+
     #[test]
     fn preload_feeds_lookups_without_counting() {
         let memo: Memo<f64> = Memo::new();
@@ -207,6 +285,16 @@ mod tests {
         assert_eq!(Memo::<f64>::new().granularity(), 1);
         assert_eq!(Memo::<f64>::with_granularity(8).granularity(), 8);
         assert_eq!(Memo::<f64>::with_granularity(0).granularity(), 1);
+    }
+
+    #[test]
+    fn shard_constructors_round_to_power_of_two() {
+        assert_eq!(Memo::<u8>::with_shards(1, 5).shard_count(), 8);
+        assert_eq!(Memo::<u8>::with_shards(1, 0).shard_count(), 1);
+        let engine = Engine::new(3);
+        let memo: Memo<u8> = Memo::for_engine(&engine, 8);
+        assert_eq!(memo.shard_count(), 4);
+        assert_eq!(memo.granularity(), 8);
     }
 
     #[test]
@@ -227,19 +315,23 @@ mod tests {
 
     #[test]
     fn concurrent_misses_store_one_entry() {
-        let memo: Arc<Memo<usize>> = Arc::new(Memo::new());
-        let engine = Engine::new(4);
-        let tasks: Vec<_> = (0..32usize)
-            .map(|i| {
-                let memo = Arc::clone(&memo);
-                move || memo.get_or_insert_with(&format!("k{}", i % 4), || i % 4)
-            })
-            .collect();
-        let out = engine.run(tasks).unwrap();
-        for (i, v) in out.iter().enumerate() {
-            assert_eq!(*v, i % 4);
+        // Counter exactness must hold for the single-shard layout and a
+        // contention-free split alike.
+        for shards in [1usize, 8] {
+            let memo: Arc<Memo<usize>> = Arc::new(Memo::with_shards(1, shards));
+            let engine = Engine::new(4);
+            let tasks: Vec<_> = (0..32usize)
+                .map(|i| {
+                    let memo = Arc::clone(&memo);
+                    move || memo.get_or_insert_with(&format!("k{}", i % 4), || i % 4)
+                })
+                .collect();
+            let out = engine.run(tasks).unwrap();
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i % 4);
+            }
+            assert_eq!(memo.len(), 4);
+            assert_eq!(memo.hits() + memo.misses(), 32);
         }
-        assert_eq!(memo.len(), 4);
-        assert_eq!(memo.hits() + memo.misses(), 32);
     }
 }

@@ -24,6 +24,15 @@
 //!   racing double-computes. The tensor micro-benchmark memo
 //!   ([`crate::tensor::micro::MicroMemo`]) builds on it.
 //!
+//! Both caches are sharded by a deterministic key hash over
+//! [`crate::util::sync::ShardedRwLock`] (default shard count: next power
+//! of two >= hardware parallelism, overridable with `--shards`), so the
+//! serve daemon's warm hot path — nearly every request a pure cache hit —
+//! never serializes on a global lock. Shard placement is unobservable:
+//! `fold_sorted` merges all shards in sorted key order and the per-shard
+//! hit/miss atomics sum to exactly one increment per lookup, so output
+//! bytes and counter totals are identical for any shard count.
+//!
 //! Determinism contract: the engine never changes *what* is computed, only
 //! *where*. Every job derives its random streams from its own inputs (see
 //! [`crate::modeling::generator::fit_leaf`]), so a batch's results are

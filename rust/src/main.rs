@@ -24,6 +24,13 @@ use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
+    // `--shards N` pins the cache shard count for every subsequently
+    // built sharded structure (engine caches, serve coalescer). Output
+    // bytes never depend on it — the determinism tests sweep it.
+    let shards = args.get_usize("shards", 0);
+    if shards > 0 {
+        dlapm::util::sync::set_default_shards(shards);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "figures" => figures_cmd(&args),
@@ -88,7 +95,7 @@ subcommands:
                         pays for zero new benchmarks and prints
                         byte-identical ranking tables
   serve    --store DIR [--stdio | --addr HOST:PORT] [--jobs N]
-           [--checkpoint-every R]
+           [--checkpoint-every R] [--max-connections C] [--max-queue Q]
            prediction-as-a-service daemon: load all warm state once and
            answer predict/select/blocksize/contract_rank requests over a
            line-oriented JSON protocol (see docs/serve-protocol.md);
@@ -98,15 +105,29 @@ subcommands:
            --stdio    batch mode: requests on stdin, responses on stdout
            --addr     TCP mode; 127.0.0.1:0 picks a free port (announced
                       on stderr)
+           --max-connections C / --max-queue Q
+                      backpressure (TCP connections / in-flight compute
+                      ops): excess requests get a structured 'overloaded'
+                      error instead of queueing; 0 = unlimited (default)
            --client '{\"op\":...}' --addr HOST:PORT
                       one-shot client: send one request, print the
                       response line, exit
+           --client-script FILE --addr HOST:PORT
+                      persistent client: send every non-blank line of
+                      FILE ('-' = stdin) over one connection, print one
+                      response line per request, exit
   sampler  (reads a Sampler script from stdin)
   lint     [--src DIR]  determinism static analysis over the crate's own
            sources (default: ./src, falling back to the build-time crate
            root); exits non-zero per violation, reported as
            'file:line rule message' (see README, Determinism contract)
   list     (available figure ids / cpus / libraries)
+
+global flags:
+  --shards N   lock-shard count for the in-memory caches and the serve
+               coalescer (default: next power of two >= the hardware
+               parallelism). Purely a contention knob: output bytes are
+               identical for any value — the parity tests sweep it
 ";
 
 /// Comma-separated `--n`/`--b` size lists (`"48,64,96"` or a single
@@ -730,7 +751,7 @@ fn sampler_cmd(args: &Args) {
     }
 }
 
-/// `dlapm serve`: the prediction-as-a-service daemon, plus its one-shot
+///// `dlapm serve`: the prediction-as-a-service daemon, plus its one-shot
 /// `--client` mode. Wire protocol: docs/serve-protocol.md. Exit codes:
 /// 0 clean (including after structured error responses), 1 on transport
 /// or store failure, 2 on usage errors.
@@ -749,10 +770,44 @@ fn serve_cmd(args: &Args) {
         }
         return;
     }
+    if let Some(path) = args.get("client-script") {
+        let addr = args.get("addr").unwrap_or_else(|| {
+            eprintln!("serve --client-script requires --addr HOST:PORT");
+            std::process::exit(2);
+        });
+        let script = if path == "-" {
+            let mut buf = String::new();
+            use std::io::Read as _;
+            if let Err(e) = std::io::stdin().read_to_string(&mut buf) {
+                eprintln!("serve client script: reading stdin: {e}");
+                std::process::exit(1);
+            }
+            buf
+        } else {
+            std::fs::read_to_string(path).unwrap_or_else(|e| {
+                eprintln!("serve client script: reading {path}: {e}");
+                std::process::exit(1);
+            })
+        };
+        match dlapm::serve::run_client_script(addr, &script) {
+            Ok(lines) => {
+                for line in lines {
+                    println!("{line}");
+                }
+            }
+            Err(e) => {
+                eprintln!("serve client script: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
     let opts = dlapm::serve::ServeOpts {
         store_dir: args.get("store").map(std::path::PathBuf::from),
         jobs: args.get_usize("jobs", engine::available_parallelism()),
         checkpoint_every: args.get_u64("checkpoint-every", 64),
+        max_connections: args.get_usize("max-connections", 0),
+        max_queue: args.get_usize("max-queue", 0),
     };
     let state = match dlapm::serve::ServeState::new(&opts) {
         Ok(s) => Arc::new(s),

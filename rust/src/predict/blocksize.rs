@@ -150,7 +150,9 @@ pub fn optimize_blocksize(
     bs: &[usize],
 ) -> BlockSizeSweep {
     let engine = Arc::new(Engine::sequential());
-    let cache = Arc::new(ModelCache::new());
+    // Engine-aware sharding: a sequential engine gets one cache shard
+    // (no contention to split; shard count never affects output bytes).
+    let cache = Arc::new(ModelCache::for_engine(&engine));
     optimize_blocksize_with(&engine, store, &cache, alg, n, bs)
         .expect("sequential block-size ranking cannot fail")
         .0

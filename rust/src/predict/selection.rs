@@ -62,7 +62,9 @@ fn rank_impl(
     b: usize,
     validate: Option<(&Machine, usize, u64)>,
 ) -> Vec<RankedAlg> {
-    let cache = ModelCache::new();
+    // Single shard: this helper ranks sequentially, so there is no
+    // contention to split (shard count never affects output bytes).
+    let cache = ModelCache::with_shards(1, 1);
     let cands: Vec<Borrowed> = algs
         .iter()
         .map(|&alg| Borrowed { store, cache: &cache, alg, n, b, validate })

@@ -5,20 +5,27 @@
 //! question concurrently only one of them — the *leader* — needs to
 //! compute; the rest park on a [`crate::util::sync::Condvar`] (keeping
 //! `dlapm lint`'s raw-primitive rule satisfied) and clone the leader's
-//! value. The pending table is a `BTreeMap` keyed by the canonical key;
-//! entries are swept as soon as the last interested party has taken the
-//! value, so the table only ever holds in-flight work, not a response
-//! cache (the warm stores underneath already make recomputation cheap).
+//! value. The pending table is sharded by a deterministic hash of the
+//! canonical key — each shard a `BTreeMap` under its own
+//! [`crate::util::sync::Mutex`]/condvar pair sharing one site label — so
+//! concurrent *distinct* requests park and sweep on different locks and
+//! a notify wakes only the shard that owns the finished key, never the
+//! whole waiting room. Entries are swept as soon as the last interested
+//! party has taken the value, so the table only ever holds in-flight
+//! work, not a response cache (the warm stores underneath already make
+//! recomputation cheap).
 //!
 //! Purity makes the late-arrival race benign in both directions: a
 //! request that arrives while a finished slot is still draining takes
 //! the finished value; one that arrives a moment later recomputes and
-//! gets bit-identical bytes.
+//! gets bit-identical bytes. Sharding adds nothing to observe: a key
+//! always maps to one shard, and responses never depend on which
+//! requests coalesced.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::util::sync::{Condvar, Mutex};
+use crate::util::sync::{default_shards, Condvar, Mutex, ShardHasher};
 
 struct Slot<V> {
     done: bool,
@@ -28,12 +35,19 @@ struct Slot<V> {
     waiters: usize,
 }
 
+/// One shard of the pending table: its slice of in-flight keys plus the
+/// condvar its followers park on.
+struct CoShard<V> {
+    slots: Mutex<BTreeMap<String, Slot<V>>>,
+    cv: Condvar,
+}
+
 /// A pending-computation table for one value type. `V` must be `Clone`
 /// (every follower gets its own copy) and values must be pure functions
 /// of the key — the whole point of coalescing by key.
 pub struct Coalescer<V: Clone> {
-    slots: Mutex<BTreeMap<String, Slot<V>>>,
-    cv: Condvar,
+    shards: Box<[CoShard<V>]>,
+    mask: usize,
     led: AtomicU64,
     coalesced: AtomicU64,
 }
@@ -41,30 +55,55 @@ pub struct Coalescer<V: Clone> {
 /// Removes the leader's slot if `compute` panicked, so parked followers
 /// wake, observe the vanished slot and re-elect a leader instead of
 /// hanging forever.
-struct LeaderGuard<'a, V: Clone> {
-    co: &'a Coalescer<V>,
+struct LeaderGuard<'a, V> {
+    shard: &'a CoShard<V>,
     key: &'a str,
     armed: bool,
 }
 
-impl<V: Clone> Drop for LeaderGuard<'_, V> {
+impl<V> Drop for LeaderGuard<'_, V> {
     fn drop(&mut self) {
         if self.armed {
-            self.co.slots.lock().remove(self.key);
-            self.co.cv.notify_all();
+            self.shard.slots.lock().remove(self.key);
+            self.shard.cv.notify_all();
         }
     }
 }
 
 impl<V: Clone> Coalescer<V> {
-    /// `site` labels the internal mutex for the debug lock-order graph.
+    /// `site` labels every shard's mutex for the debug lock-order graph
+    /// (one label — cross-shard nesting is same-site, though `run` never
+    /// holds two shards at once). Shard count defaults to
+    /// [`default_shards`].
     pub fn new(site: &'static str) -> Coalescer<V> {
+        Coalescer::with_shards(site, default_shards())
+    }
+
+    /// Explicit shard count (rounded up to a power of two, min 1). One
+    /// shard reproduces the PR 7 single-table layout exactly.
+    pub fn with_shards(site: &'static str, shards: usize) -> Coalescer<V> {
+        let n = shards.clamp(1, 1024).next_power_of_two();
+        let shards: Box<[CoShard<V>]> = (0..n)
+            .map(|_| CoShard { slots: Mutex::new(BTreeMap::new(), site), cv: Condvar::new() })
+            .collect();
         Coalescer {
-            slots: Mutex::new(BTreeMap::new(), site),
-            cv: Condvar::new(),
+            shards,
+            mask: n - 1,
             led: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
         }
+    }
+
+    /// The (power-of-two) number of table shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning `key`: deterministic FNV-1a over the key bytes.
+    fn shard_of(&self, key: &str) -> &CoShard<V> {
+        let mut h = ShardHasher::new();
+        h.write(key.as_bytes());
+        &self.shards[(h.finish() as usize) & self.mask]
     }
 
     /// Return `compute()`'s value for `key`, running `compute` only if no
@@ -72,18 +111,19 @@ impl<V: Clone> Coalescer<V> {
     /// internal lock held, so it may itself block, fan out on the engine,
     /// or re-enter the coalescer under a different key.
     pub fn run(&self, key: &str, compute: impl FnOnce() -> V) -> V {
+        let shard = self.shard_of(key);
         loop {
-            let mut slots = self.slots.lock();
+            let mut slots = shard.slots.lock();
             match slots.get_mut(key) {
                 None => {
                     slots.insert(key.to_string(), Slot { done: false, value: None, waiters: 0 });
                     drop(slots);
                     self.led.fetch_add(1, Ordering::Relaxed);
-                    let mut guard = LeaderGuard { co: self, key, armed: true };
+                    let mut guard = LeaderGuard { shard, key, armed: true };
                     let value = compute();
                     guard.armed = false;
                     drop(guard);
-                    let mut slots = self.slots.lock();
+                    let mut slots = shard.slots.lock();
                     let waiters =
                         slots.get(key).expect("leader slot vanished").waiters;
                     if waiters == 0 {
@@ -95,7 +135,7 @@ impl<V: Clone> Coalescer<V> {
                         slot.value = Some(value.clone());
                     }
                     drop(slots);
-                    self.cv.notify_all();
+                    shard.cv.notify_all();
                     return value;
                 }
                 Some(slot) if slot.done => {
@@ -107,7 +147,7 @@ impl<V: Clone> Coalescer<V> {
                 Some(slot) => {
                     self.coalesced.fetch_add(1, Ordering::Relaxed);
                     slot.waiters += 1;
-                    let mut slots = self
+                    let mut slots = shard
                         .cv
                         .wait_while(slots, |m| m.get(key).map(|s| !s.done).unwrap_or(false));
                     match slots.get_mut(key) {
@@ -143,6 +183,12 @@ impl<V: Clone> Coalescer<V> {
     pub fn coalesced(&self) -> u64 {
         self.coalesced.load(Ordering::Relaxed)
     }
+
+    /// In-flight keys across all shards (a count, so shard order is
+    /// unobservable). Only ever nonzero while computations are running.
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|shard| shard.slots.lock().len()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -164,33 +210,38 @@ mod tests {
 
     #[test]
     fn concurrent_identical_requests_compute_once() {
-        let co: Arc<Coalescer<u64>> = Arc::new(Coalescer::new("test-coalesce-b"));
-        let runs = Arc::new(AtomicUsize::new(0));
-        let mut handles = Vec::new();
-        for _ in 0..8 {
-            let (co, runs) = (Arc::clone(&co), Arc::clone(&runs));
-            handles.push(std::thread::spawn(move || {
-                co.run("same", || {
-                    runs.fetch_add(1, Ordering::SeqCst);
-                    // Hold the computation open long enough for the other
-                    // threads to arrive and park.
-                    std::thread::sleep(std::time::Duration::from_millis(50));
-                    42u64
-                })
-            }));
+        // One shard and many: identical keys always meet on one table
+        // regardless of the split, so coalescing behaves the same.
+        for shards in [1usize, 8] {
+            let co: Arc<Coalescer<u64>> =
+                Arc::new(Coalescer::with_shards("test-coalesce-b", shards));
+            let runs = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for _ in 0..8 {
+                let (co, runs) = (Arc::clone(&co), Arc::clone(&runs));
+                handles.push(std::thread::spawn(move || {
+                    co.run("same", || {
+                        runs.fetch_add(1, Ordering::SeqCst);
+                        // Hold the computation open long enough for the other
+                        // threads to arrive and park.
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        42u64
+                    })
+                }));
+            }
+            let values: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            assert!(values.iter().all(|&v| v == 42));
+            // At least the leader ran; late arrivals after the sweep may
+            // re-lead, but parked followers never recompute.
+            let actual_runs = runs.load(Ordering::SeqCst);
+            assert_eq!(actual_runs as u64, co.led());
+            assert_eq!(co.led() + co.coalesced(), 8);
+            // The common case on any real scheduler: one leader, 7 coalesced.
+            // Guaranteed invariant either way: strictly fewer runs than calls.
+            assert!(actual_runs < 8, "no coalescing happened at all");
+            // Table swept clean afterwards.
+            assert_eq!(co.pending(), 0);
         }
-        let values: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
-        assert!(values.iter().all(|&v| v == 42));
-        // At least the leader ran; late arrivals after the sweep may
-        // re-lead, but parked followers never recompute.
-        let actual_runs = runs.load(Ordering::SeqCst);
-        assert_eq!(actual_runs as u64, co.led());
-        assert_eq!(co.led() + co.coalesced(), 8);
-        // The common case on any real scheduler: one leader, 7 coalesced.
-        // Guaranteed invariant either way: strictly fewer runs than calls.
-        assert!(actual_runs < 8, "no coalescing happened at all");
-        // Table swept clean afterwards.
-        assert!(co.slots.lock().is_empty());
     }
 
     #[test]
@@ -212,6 +263,16 @@ mod tests {
     }
 
     #[test]
+    fn shard_count_rounds_and_routing_is_stable() {
+        let co: Coalescer<u8> = Coalescer::with_shards("test-coalesce-e", 3);
+        assert_eq!(co.shard_count(), 4);
+        // Same key, same shard — pointer identity across calls.
+        let a = co.shard_of("k") as *const _;
+        let b = co.shard_of("k") as *const _;
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn leader_panic_elects_a_new_leader() {
         let co: Arc<Coalescer<u32>> = Arc::new(Coalescer::new("test-coalesce-d"));
         let co2 = Arc::clone(&co);
@@ -228,6 +289,6 @@ mod tests {
         let v = co.run("k", || 5);
         assert_eq!(v, 5);
         panicker.join().unwrap();
-        assert!(co.slots.lock().is_empty());
+        assert_eq!(co.pending(), 0);
     }
 }

@@ -14,8 +14,10 @@
 //! * [`coalesce`] — identical in-flight requests answered by one
 //!   computation, followers parked on a `util::sync::Condvar`.
 //! * [`server`] — [`server::ServeState`] (warm scopes, checkpointing,
-//!   the op handlers) plus the stdio and TCP transports and the
-//!   `--client` one-shot.
+//!   the op handlers) plus the stdio and TCP transports, the `--client`
+//!   one-shot, the `--client-script` persistent-connection client, and
+//!   the `--max-connections` / `--max-queue` backpressure limits
+//!   (structured `overloaded` errors instead of unbounded queueing).
 //!
 //! The determinism contract extends to the wire: a response to a
 //! well-formed request is a pure function of the request, byte-identical
@@ -28,4 +30,4 @@ pub mod server;
 
 pub use coalesce::Coalescer;
 pub use protocol::{OPS, PROTOCOL_VERSION};
-pub use server::{run_client, serve_stdio, serve_tcp, ServeOpts, ServeState};
+pub use server::{run_client, run_client_script, serve_stdio, serve_tcp, ServeOpts, ServeState};

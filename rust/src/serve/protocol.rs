@@ -49,7 +49,10 @@ fn op_fields(op: &str) -> &'static [&'static str] {
 
 /// A structured request-level error: `code` is one of the stable error
 /// codes in the spec (`parse`, `bad-request`, `unknown-op`, `version`,
-/// `internal`), `message` is human-readable detail.
+/// `overloaded`, `internal`), `message` is human-readable detail.
+/// `overloaded` is the backpressure code — emitted by the server layer
+/// when `--max-queue` compute slots are busy or `--max-connections` TCP
+/// connections are open; the request was valid, retry later.
 #[derive(Clone, Debug)]
 pub struct ReqError {
     pub code: &'static str,

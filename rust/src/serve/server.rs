@@ -34,7 +34,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufRead, BufReader, Write as _};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
@@ -67,6 +67,15 @@ pub struct ServeOpts {
     /// (`--checkpoint-every`); 0 = only at shutdown. Request-counted, not
     /// timed — the determinism lint bans wall-clock reads.
     pub checkpoint_every: u64,
+    /// TCP backpressure: refuse connections beyond this many concurrently
+    /// open ones with a structured `overloaded` error (`--max-connections`);
+    /// 0 = unlimited.
+    pub max_connections: usize,
+    /// Compute backpressure: refuse compute ops while this many are
+    /// already in flight, with a structured `overloaded` error
+    /// (`--max-queue`); 0 = unlimited. `status`/`shutdown` always pass —
+    /// an operator must be able to inspect and stop an overloaded daemon.
+    pub max_queue: usize,
 }
 
 /// The blocked-prediction warm scope for one `(machine, seed, cov_n,
@@ -107,6 +116,10 @@ pub struct ServeState {
     engine: Arc<Engine>,
     warm: Option<WarmStore>,
     checkpoint_every: u64,
+    max_connections: usize,
+    max_queue: usize,
+    /// Compute ops currently in flight — the `--max-queue` gauge.
+    inflight: AtomicUsize,
     blocked: Mutex<BTreeMap<String, Arc<BlockedEntry>>>,
     memos: Mutex<BTreeMap<String, Arc<MemoEntry>>>,
     coalescer: Coalescer<Outcome>,
@@ -121,6 +134,16 @@ pub struct ServeState {
 
 fn internal(what: &str, e: impl std::fmt::Display) -> ReqError {
     ReqError { code: "internal", message: format!("{what}: {e}") }
+}
+
+/// RAII slot in the `--max-queue` gauge: decrements on drop, so a compute
+/// that errors or panics still frees its slot.
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// Per-request machine selection, defaulting like the CLI's
@@ -158,6 +181,9 @@ impl ServeState {
             engine: Arc::new(Engine::new(opts.jobs)),
             warm,
             checkpoint_every: opts.checkpoint_every,
+            max_connections: opts.max_connections,
+            max_queue: opts.max_queue,
+            inflight: AtomicUsize::new(0),
             blocked: Mutex::new(BTreeMap::new(), "serve-blocked-map"),
             memos: Mutex::new(BTreeMap::new(), "serve-memo-map"),
             coalescer: Coalescer::new("serve-coalescer"),
@@ -212,11 +238,32 @@ impl ServeState {
                     Json::obj(vec![]),
                 )
             }
-            _ => match self.coalescer.run(&req.key, || self.compute(req)) {
-                Ok((output, data)) => protocol::ok_line(&req.op, &req.id, &output, data),
-                Err(e) => protocol::error_line(&req.id, e.code, &e.message),
+            _ => match self.admit() {
+                None => protocol::error_line(
+                    &req.id,
+                    "overloaded",
+                    &format!("compute queue full (--max-queue {}); retry later", self.max_queue),
+                ),
+                Some(_slot) => match self.coalescer.run(&req.key, || self.compute(req)) {
+                    Ok((output, data)) => protocol::ok_line(&req.op, &req.id, &output, data),
+                    Err(e) => protocol::error_line(&req.id, e.code, &e.message),
+                },
             },
         }
+    }
+
+    /// Claim a compute slot, or `None` when `--max-queue` compute ops are
+    /// already in flight. A plain gauge: increment first, hand back an
+    /// RAII decrement, refuse if the pre-increment count was at the
+    /// limit — exact under any interleaving because each admitted request
+    /// holds exactly one slot for exactly its compute duration.
+    fn admit(&self) -> Option<InflightGuard<'_>> {
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        let slot = InflightGuard(&self.inflight);
+        if self.max_queue > 0 && prev >= self.max_queue {
+            return None; // `slot` drops here, undoing the increment
+        }
+        Some(slot)
     }
 
     /// The coalesced body: a pure function of the canonical request key.
@@ -264,7 +311,11 @@ impl ServeState {
         let models: ModelStore = self
             .warm_load(&models_slot, &models_key)?
             .unwrap_or_else(|| ModelStore::new(&label));
-        let cache: ModelCache = self.warm_load(&cache_slot, &cache_key)?.unwrap_or_default();
+        // Engine-aware sharding: one cache shard per worker, so a fully
+        // loaded pool can expect a lock to itself on the warm hit path.
+        let cache: ModelCache = self
+            .warm_load(&cache_slot, &cache_key)?
+            .unwrap_or_else(|| ModelCache::for_engine(&self.engine));
         let entry = Arc::new(BlockedEntry {
             saved_models: AtomicU64::new(models.entries() as u64),
             saved_cache: AtomicU64::new(cache.entries() as u64),
@@ -339,7 +390,7 @@ impl ServeState {
         let (slot, key) = store::micro_memo_slot(&label, seed, granularity);
         let memo: MicroMemo = self
             .warm_load(&slot, &key)?
-            .unwrap_or_else(|| MicroMemo::with_granularity(granularity));
+            .unwrap_or_else(|| MicroMemo::for_engine(&self.engine, granularity));
         let entry = Arc::new(MemoEntry {
             saved: AtomicU64::new(memo.entries() as u64),
             memo: Arc::new(memo),
@@ -689,19 +740,32 @@ pub fn serve_stdio(state: &Arc<ServeState>) -> Result<()> {
 /// TCP mode: line-oriented protocol on `addr` (`127.0.0.1:0` picks a free
 /// port), one thread per connection. The bound address is announced on
 /// stderr as `[dlapm serve] listening on <addr>` — tests and scripts
-/// parse that line.
+/// parse that line. Connections beyond `--max-connections` are answered
+/// with a single `overloaded` error line and closed at the accept loop,
+/// before a thread is spawned for them.
 pub fn serve_tcp(state: &Arc<ServeState>, addr: &str) -> Result<()> {
     sigint::install();
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr().context("resolving bound address")?;
     eprintln!("[dlapm serve] listening on {local}");
     listener.set_nonblocking(true).context("nonblocking listener")?;
+    let active = Arc::new(AtomicUsize::new(0));
     let mut handles = Vec::new();
     while !sigint::requested() && !state.shutdown_requested() {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                let limit = state.max_connections;
+                if limit > 0 && active.load(Ordering::SeqCst) >= limit {
+                    reject_overloaded(stream, limit);
+                    continue;
+                }
+                active.fetch_add(1, Ordering::SeqCst);
                 let st = Arc::clone(state);
-                handles.push(std::thread::spawn(move || connection(&st, stream)));
+                let gauge = Arc::clone(&active);
+                handles.push(std::thread::spawn(move || {
+                    connection(&st, stream);
+                    gauge.fetch_sub(1, Ordering::SeqCst);
+                }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(10));
@@ -713,6 +777,19 @@ pub fn serve_tcp(state: &Arc<ServeState>, addr: &str) -> Result<()> {
         let _ = h.join();
     }
     finish(state)
+}
+
+/// One `overloaded` error line (null `id` — no request was read) and a
+/// close: what a connection beyond `--max-connections` receives.
+fn reject_overloaded(mut stream: TcpStream, limit: usize) {
+    let line = protocol::error_line(
+        &Json::Null,
+        "overloaded",
+        &format!("connection limit reached (--max-connections {limit}); retry later"),
+    );
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.flush();
 }
 
 fn connection(state: &ServeState, mut stream: TcpStream) {
@@ -774,13 +851,62 @@ pub fn run_client(addr: &str, request: &str) -> Result<String> {
     Ok(resp.trim_end_matches(['\r', '\n']).to_string())
 }
 
+/// `serve --client-script`: send every non-blank line of `script` over
+/// ONE TCP connection, in order, collecting one response line per
+/// request — the persistent-connection client (a one-shot `--client` per
+/// request pays a connect/teardown each time and burns a connection slot
+/// under `--max-connections`). Responses are pure functions of each
+/// request, so a script's output is byte-identical to running its lines
+/// as separate `--client` calls. A `shutdown` line mid-script is
+/// answered, after which the server closes the connection and any
+/// remaining lines error.
+pub fn run_client_script(addr: &str, script: &str) -> Result<Vec<String>> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let mut reader =
+        BufReader::new(stream.try_clone().context("cloning client stream")?);
+    let mut responses = Vec::new();
+    for line in script.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue; // blank lines get no response line (keep-alive)
+        }
+        stream.write_all(line.as_bytes()).context("sending request")?;
+        stream.write_all(b"\n").context("sending request")?;
+        stream.flush().context("sending request")?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp).context("reading response")?;
+        crate::ensure!(
+            !resp.is_empty(),
+            "server closed the connection mid-script (after {} response(s))",
+            responses.len()
+        );
+        responses.push(resp.trim_end_matches(['\r', '\n']).to_string());
+    }
+    crate::ensure!(
+        !responses.is_empty(),
+        "--client-script needs at least one non-blank request line"
+    );
+    Ok(responses)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn state() -> ServeState {
-        ServeState::new(&ServeOpts { store_dir: None, jobs: 2, checkpoint_every: 0 })
-            .expect("serve state")
+        state_with_queue(0)
+    }
+
+    fn state_with_queue(max_queue: usize) -> ServeState {
+        ServeState::new(&ServeOpts {
+            store_dir: None,
+            jobs: 2,
+            checkpoint_every: 0,
+            max_connections: 0,
+            max_queue,
+        })
+        .expect("serve state")
     }
 
     #[test]
@@ -843,6 +969,42 @@ mod tests {
         let data = j1.get("data").unwrap();
         assert!(data.get("distinct_benchmarks").unwrap().as_usize().unwrap() > 0);
         assert!(data.get("winner").unwrap().as_str().is_some());
+    }
+
+    #[test]
+    fn max_queue_admission_is_an_exact_gauge() {
+        let s = state_with_queue(2);
+        let first = s.admit().expect("first slot");
+        let _second = s.admit().expect("second slot");
+        assert!(s.admit().is_none(), "third concurrent compute must be refused");
+        drop(first);
+        assert!(s.admit().is_some(), "a finished compute frees its slot");
+        // 0 = unlimited: slots never run out.
+        let open = state();
+        for _ in 0..64 {
+            assert!(open.admit().is_some());
+        }
+    }
+
+    #[test]
+    fn overloaded_refuses_compute_but_not_status_or_shutdown() {
+        let s = state_with_queue(1);
+        let slot = s.admit().expect("occupy the only compute slot");
+        // Compute ops are refused with the structured `overloaded` code...
+        let resp = s.handle_line(r#"{"op":"predict","id":5,"n":8,"b":4}"#).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error").unwrap().get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(5.0));
+        // ...while the operator surface keeps answering.
+        let resp = s.handle_line(r#"{"op":"status"}"#).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        let resp = s.handle_line(r#"{"op":"shutdown"}"#).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert!(s.shutdown_requested());
+        drop(slot);
     }
 
     #[test]

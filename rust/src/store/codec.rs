@@ -254,6 +254,46 @@ mod tests {
         assert_eq!(Persist::to_json(&back).render(), text);
     }
 
+    /// ISSUE 8: shard placement is unobservable in the persisted bytes —
+    /// the sorted folds merge shards globally, so the same entries yield
+    /// the same snapshot for any shard count.
+    #[test]
+    fn snapshot_bytes_are_identical_for_any_shard_count() {
+        let fill_cache = |shards: usize| {
+            let cache = ModelCache::with_shards(2, shards);
+            for i in 0..24usize {
+                cache.get_or_insert_with("dgemm_a1", &[i * 8 + 2, 64], |s| {
+                    Summary::constant(s[0] as f64 / 7.0)
+                });
+                cache.get_or_insert_with("dtrsm_LLNN_a1", &[i * 16 + 4], |s| {
+                    Summary::constant(s[0] as f64 / 3.0)
+                });
+            }
+            Persist::to_json(&cache).render()
+        };
+        let cache_base = fill_cache(1);
+        assert_eq!(cache_base, fill_cache(4));
+        assert_eq!(cache_base, fill_cache(64));
+
+        let fill_memo = |shards: usize| {
+            let memo = Memo::<MicroTiming>::with_shards(1, shards);
+            for i in 0..24usize {
+                let t = MicroTiming {
+                    cold_total: i as f64 / 3.0,
+                    cold_runs: i,
+                    steady: 1.5e-6,
+                    kernel_runs: i + 1,
+                    cost: 0.5,
+                };
+                memo.preload(&format!("machine|dgemm|ld{i}"), t);
+            }
+            Persist::to_json(&memo).render()
+        };
+        let memo_base = fill_memo(1);
+        assert_eq!(memo_base, fill_memo(4));
+        assert_eq!(memo_base, fill_memo(64));
+    }
+
     #[test]
     fn model_store_persist_delegates_to_inherent_codec() {
         let store = ModelStore::new("haswell/openblas/1t");

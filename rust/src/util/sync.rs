@@ -257,6 +257,150 @@ impl Default for Condvar {
     }
 }
 
+// ---------------------------------------------------------- ShardedRwLock
+
+/// Process-wide shard-count override (0 = none). Set once at startup by
+/// the `--shards` CLI flag; read by [`default_shards`].
+static SHARD_OVERRIDE: AtomicU64 = AtomicU64::new(0);
+
+/// Override the default shard count for subsequently constructed sharded
+/// structures (0 clears the override). Intended for startup flag parsing
+/// and determinism tests; shard count never affects output bytes, only
+/// contention.
+pub fn set_default_shards(n: usize) {
+    SHARD_OVERRIDE.store(n as u64, Ordering::Relaxed);
+}
+
+/// The default shard count: the `--shards` override if set, otherwise the
+/// next power of two >= hardware parallelism (capped at 1024). Power of
+/// two so shard selection is a mask, >= parallelism so under full load
+/// each thread can expect a shard to itself.
+pub fn default_shards() -> usize {
+    let over = SHARD_OVERRIDE.load(Ordering::Relaxed) as usize;
+    let raw = if over > 0 {
+        over
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    raw.clamp(1, 1024).next_power_of_two()
+}
+
+/// Deterministic 64-bit FNV-1a hasher for shard selection. Stable across
+/// processes and runs (unlike `std`'s randomized `RandomState`), so a
+/// key's shard placement is reproducible — not that correctness depends
+/// on it: deterministic iteration comes from the sorted cross-shard merge
+/// ([`ShardedRwLock::fold_shards`] callers), never from placement.
+pub struct ShardHasher(u64);
+
+impl ShardHasher {
+    pub fn new() -> ShardHasher {
+        ShardHasher(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write(&(v as u64).to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for ShardHasher {
+    fn default() -> ShardHasher {
+        ShardHasher::new()
+    }
+}
+
+/// N independent [`RwLock`]s under one site label, selected by key hash:
+/// the contention-free backing for hot shared maps ([`crate::engine::ModelCache`],
+/// [`crate::engine::Memo`]). Concurrent lookups of different keys take
+/// different locks and never contend; the debug lock-order graph treats
+/// cross-shard nesting as same-site (see the module docs), so holding
+/// several shards at once — as the sorted fold does — is not a cycle.
+///
+/// Determinism contract for users: any iteration that feeds output must
+/// merge entries from *all* shards and sort them by key before folding
+/// (placement is an implementation detail; sorted merges make it
+/// unobservable). The shard count is rounded up to a power of two so
+/// selection is `hash & mask`.
+pub struct ShardedRwLock<T> {
+    shards: Box<[RwLock<T>]>,
+    mask: usize,
+}
+
+impl<T> ShardedRwLock<T> {
+    /// `shards` locks (rounded up to a power of two, min 1) under one
+    /// `site` label, each initialized via `init`.
+    pub fn new(shards: usize, site: &'static str, mut init: impl FnMut() -> T) -> ShardedRwLock<T> {
+        let n = shards.clamp(1, 1024).next_power_of_two();
+        let shards: Box<[RwLock<T>]> = (0..n).map(|_| RwLock::new(init(), site)).collect();
+        ShardedRwLock { shards, mask: n - 1 }
+    }
+
+    /// The (power-of-two) number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn site(&self) -> &'static str {
+        self.shards[0].site()
+    }
+
+    /// The shard index a key hash selects.
+    pub fn shard_index(&self, hash: u64) -> usize {
+        (hash as usize) & self.mask
+    }
+
+    /// The shard lock a key hash selects.
+    pub fn shard(&self, hash: u64) -> &RwLock<T> {
+        &self.shards[self.shard_index(hash)]
+    }
+
+    /// Shard lock by index — for whole-structure walks (`fold`/`len`/
+    /// `clear`). Callers producing output must merge across shards in
+    /// sorted key order (see the type docs).
+    pub fn shard_at(&self, index: usize) -> &RwLock<T> {
+        &self.shards[index]
+    }
+
+    /// Read-lock every shard at once (same site label, so the debug order
+    /// graph stays quiet) and hand the guards to `f` — the snapshot
+    /// primitive behind sorted cross-shard folds.
+    pub fn fold_shards<A>(&self, f: impl FnOnce(&[RwLockReadGuard<'_, T>]) -> A) -> A {
+        let guards: Vec<RwLockReadGuard<'_, T>> =
+            self.shards.iter().map(|shard| shard.read()).collect();
+        f(&guards)
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for ShardedRwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShardedRwLock")
+            .field("site", &self.site())
+            .field("shards", &self.shards.len())
+            .finish()
+    }
+}
+
+/// Per-shard hit/miss counters, cache-line aligned so adjacent shards'
+/// counters never false-share. Each lookup increments exactly one counter
+/// on exactly one shard, so sums across shards keep the exactness
+/// invariant `hits + misses == lookups` that the single-lock caches had.
+#[repr(align(64))]
+#[derive(Default)]
+pub struct ShardCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
 // -------------------------------------------------------- order tracking
 
 /// Potential-deadlock reports accumulated so far: one line per site-order
@@ -457,6 +601,84 @@ mod tests {
         assert!(
             reports.iter().any(|r| r.contains(SITE_A) && r.contains(SITE_B)),
             "expected a report naming both sites, got: {reports:?}"
+        );
+    }
+
+    #[test]
+    fn sharded_rwlock_routes_by_hash_and_rounds_to_power_of_two() {
+        let sharded: ShardedRwLock<Vec<u64>> =
+            ShardedRwLock::new(3, "util::sync::test::sharded-rw", Vec::new);
+        assert_eq!(sharded.shard_count(), 4); // 3 rounds up
+        assert_eq!(sharded.site(), "util::sync::test::sharded-rw");
+        for h in [0u64, 1, 2, 3, 4, 0xdead_beef] {
+            let idx = sharded.shard_index(h);
+            assert!(idx < 4);
+            sharded.shard(h).write().push(h);
+            assert!(sharded.shard_at(idx).read().contains(&h));
+        }
+        // Zero shards clamps to one — a sharded lock degenerates to the
+        // single-lock layout it replaced, same API.
+        let one: ShardedRwLock<u8> = ShardedRwLock::new(0, "util::sync::test::one", || 0);
+        assert_eq!(one.shard_count(), 1);
+    }
+
+    #[test]
+    fn shard_hasher_is_stable_and_input_sensitive() {
+        let hash = |parts: &[&[u8]]| {
+            let mut h = ShardHasher::new();
+            for p in parts {
+                h.write(p);
+            }
+            h.finish()
+        };
+        assert_eq!(hash(&[b"dgemm", b"128"]), hash(&[b"dgemm", b"128"]));
+        assert_ne!(hash(&[b"dgemm"]), hash(&[b"dtrsm"]));
+        let mut a = ShardHasher::new();
+        a.write_usize(128);
+        let mut b = ShardHasher::new();
+        b.write_usize(129);
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn fold_shards_sees_every_shard_under_simultaneous_read_locks() {
+        let sharded: ShardedRwLock<u64> = ShardedRwLock::new(8, "util::sync::test::fold", || 1);
+        let total = sharded.fold_shards(|guards| {
+            assert_eq!(guards.len(), 8);
+            guards.iter().map(|g| **g).sum::<u64>()
+        });
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn default_shards_is_power_of_two_and_honours_override() {
+        let d = default_shards();
+        assert!(d.is_power_of_two() && d >= 1);
+        set_default_shards(5);
+        assert_eq!(default_shards(), 8); // rounds up
+        set_default_shards(0);
+        assert_eq!(default_shards(), d);
+    }
+
+    /// Cross-shard nesting of a `ShardedRwLock` in either order is
+    /// same-site and must never feed the cycle detector — the guarantee
+    /// the engine caches' multi-shard folds rely on.
+    #[test]
+    fn sharded_rwlock_cross_shard_nesting_is_not_a_cycle() {
+        const SITE: &str = "util::sync::test::sharded-nest";
+        let sharded: ShardedRwLock<u8> = ShardedRwLock::new(2, SITE, || 0);
+        {
+            let _a = sharded.shard_at(0).read();
+            let _b = sharded.shard_at(1).write();
+        }
+        {
+            let _b = sharded.shard_at(1).write();
+            let _a = sharded.shard_at(0).read();
+        }
+        sharded.fold_shards(|guards| assert_eq!(guards.len(), 2));
+        assert!(
+            deadlock_reports().iter().all(|r| !r.contains(SITE)),
+            "sharded nesting must not be reported"
         );
     }
 

@@ -61,6 +61,53 @@ fn help_documents_gen_and_jobs() {
     assert!(text.contains("--all"), "{text}");
     assert!(text.contains("blocksize"), "{text}");
     assert!(text.contains("--store"), "{text}");
+    assert!(text.contains("--shards"), "{text}");
+}
+
+/// ISSUE 8 acceptance: output bytes never depend on the lock-shard count.
+/// Full product over `--shards` {default, 1, 4} x `--jobs` {1, 4} for the
+/// three cache-heavy commands, each compared byte-for-byte against the
+/// flagless baseline.
+#[test]
+fn shard_count_never_changes_output_bytes() {
+    let commands: [&[&str]; 3] = [
+        &["contract", "--spec", "abc=ai,ibc", "--n", "30", "--seed", "7", "--rank"],
+        &[
+            "select", "--cpu", "sandybridge", "--lib", "openblas", "--op", "potrf", "--n",
+            "520", "--b", "104", "--seed", "5",
+        ],
+        &[
+            "blocksize", "--op", "potrf", "--cpu", "sandybridge", "--lib", "openblas", "--n",
+            "520", "--b", "24,72,120", "--seed", "5",
+        ],
+    ];
+    for base in commands {
+        let run = |shards: Option<&str>, jobs: &str| {
+            let mut args: Vec<&str> = base.to_vec();
+            args.extend_from_slice(&["--jobs", jobs]);
+            if let Some(s) = shards {
+                args.extend_from_slice(&["--shards", s]);
+            }
+            let out = dlapm().args(&args).output().expect("spawning dlapm");
+            assert!(out.status.success(), "{args:?}: {:?}", out.status);
+            out.stdout
+        };
+        let baseline = run(None, "1");
+        assert!(!baseline.is_empty(), "{base:?} printed nothing");
+        for jobs in ["1", "4"] {
+            for shards in [None, Some("1"), Some("4")] {
+                if shards.is_none() && jobs == "1" {
+                    continue; // that's the baseline itself
+                }
+                let got = run(shards, jobs);
+                assert_eq!(
+                    String::from_utf8_lossy(&baseline),
+                    String::from_utf8_lossy(&got),
+                    "{base:?} with --shards {shards:?} --jobs {jobs} changed output bytes"
+                );
+            }
+        }
+    }
 }
 
 /// Acceptance criterion of ISSUE 3: `contract --rank` stdout is

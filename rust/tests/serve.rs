@@ -207,13 +207,13 @@ fn warm_restart_from_store_is_byte_identical_and_regenerates_nothing() {
     assert_eq!(data.get("store").unwrap().as_bool(), Some(true));
 }
 
-/// TCP transport: the daemon announces its bound address on stderr, the
-/// `--client` one-shot round-trips a request, and a shutdown request
-/// terminates the daemon with exit 0.
-#[test]
-fn tcp_client_one_shot_round_trip_and_shutdown() {
+/// Spawn a TCP daemon with `extra` args, parse the announced address off
+/// stderr, and leave a drain thread running so the daemon can never block
+/// on a full stderr pipe. Returns (child, addr).
+fn spawn_tcp(extra: &[&str]) -> (std::process::Child, String) {
     let mut child = dlapm()
-        .args(["serve", "--addr", "127.0.0.1:0", "--jobs", "2"])
+        .args(["serve", "--addr", "127.0.0.1:0"])
+        .args(extra)
         .stdin(Stdio::null())
         .stdout(Stdio::null())
         .stderr(Stdio::piped())
@@ -230,7 +230,6 @@ fn tcp_client_one_shot_round_trip_and_shutdown() {
         line.clear();
     }
     let addr = addr.expect("daemon never announced a listening address");
-    // Keep draining stderr so the daemon can never block on a full pipe.
     std::thread::spawn(move || {
         let mut sink = String::new();
         loop {
@@ -241,14 +240,28 @@ fn tcp_client_one_shot_round_trip_and_shutdown() {
             }
         }
     });
-    let client = |req: &str| {
-        let out = dlapm()
-            .args(["serve", "--client", req, "--addr", &addr])
-            .output()
-            .expect("spawning dlapm serve --client");
-        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
-        String::from_utf8_lossy(&out.stdout).trim().to_string()
-    };
+    (child, addr)
+}
+
+/// One-shot `--client` round trip against `addr`; asserts exit 0 (the
+/// client exits 0 even for structured error responses) and returns the
+/// trimmed response line.
+fn one_shot(addr: &str, req: &str) -> String {
+    let out = dlapm()
+        .args(["serve", "--client", req, "--addr", addr])
+        .output()
+        .expect("spawning dlapm serve --client");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    String::from_utf8_lossy(&out.stdout).trim().to_string()
+}
+
+/// TCP transport: the daemon announces its bound address on stderr, the
+/// `--client` one-shot round-trips a request, and a shutdown request
+/// terminates the daemon with exit 0.
+#[test]
+fn tcp_client_one_shot_round_trip_and_shutdown() {
+    let (mut child, addr) = spawn_tcp(&["--jobs", "2"]);
+    let client = |req: &str| one_shot(&addr, req);
     let resp =
         client(r#"{"op":"predict","cpu":"sandybridge","n":520,"b":104,"seed":5,"id":"p1"}"#);
     let j = Json::parse(&resp).unwrap();
@@ -258,6 +271,99 @@ fn tcp_client_one_shot_round_trip_and_shutdown() {
     let bye = client(r#"{"op":"shutdown"}"#);
     let j = Json::parse(&bye).unwrap();
     assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{bye}");
+    let status = child.wait().expect("waiting for dlapm serve");
+    assert!(status.success(), "daemon exit: {status:?}");
+}
+
+/// `--client-script`: every non-blank line goes over ONE TCP connection,
+/// one response line per request in order, blank lines skipped — and each
+/// response is byte-identical to a one-shot `--client` of the same
+/// request (responses are pure functions of the request).
+#[test]
+fn client_script_reuses_one_connection_and_matches_one_shots() {
+    let (mut child, addr) = spawn_tcp(&["--jobs", "2"]);
+    let pred = r#"{"op":"predict","cpu":"sandybridge","n":520,"b":104,"seed":5,"id":"p1"}"#;
+    let dir = TempDir::new("serve_client_script");
+    let script_path = dir.path().join("script.jsonl");
+    // Blank line in the middle: keep-alive, must produce no response line.
+    std::fs::write(&script_path, format!("{pred}\n\n{pred}\n")).expect("writing script");
+    let out = dlapm()
+        .args(["serve", "--client-script"])
+        .arg(&script_path)
+        .args(["--addr", &addr])
+        .output()
+        .expect("spawning dlapm serve --client-script");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    let lines: Vec<&str> = stdout.lines().collect();
+    assert_eq!(lines.len(), 2, "two requests, two responses: {stdout}");
+    assert_eq!(lines[0], lines[1], "identical requests must answer byte-identically");
+    let j = Json::parse(lines[0]).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{}", lines[0]);
+    assert_eq!(j.get("id").unwrap().as_str(), Some("p1"));
+    // The persistent connection answers exactly like the one-shot client.
+    assert_eq!(lines[0], one_shot(&addr, pred));
+    let bye = one_shot(&addr, r#"{"op":"shutdown"}"#);
+    assert_eq!(Json::parse(&bye).unwrap().get("ok").unwrap().as_bool(), Some(true), "{bye}");
+    let status = child.wait().expect("waiting for dlapm serve");
+    assert!(status.success(), "daemon exit: {status:?}");
+}
+
+/// `--max-connections 1`: while one connection is open, a second one gets
+/// a structured `overloaded` error at the accept loop (null id — no
+/// request was read); after the first closes, its slot frees and new
+/// connections are served again.
+#[test]
+fn max_connections_rejects_excess_with_overloaded_then_recovers() {
+    let (mut child, addr) = spawn_tcp(&["--jobs", "1", "--max-connections", "1"]);
+    // Occupy the only slot with a raw connection and prove it is live.
+    let mut held = std::net::TcpStream::connect(&addr).expect("first connection");
+    held.write_all(b"{\"op\":\"status\",\"id\":\"hold\"}\n").expect("request on held conn");
+    held.flush().expect("flush held conn");
+    let mut held_reader = BufReader::new(held.try_clone().expect("clone held conn"));
+    let mut resp = String::new();
+    held_reader.read_line(&mut resp).expect("response on held conn");
+    let j = Json::parse(resp.trim()).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    // Second connection: rejected at the accept loop, before any request
+    // is read — so reading without sending anything yields the error line
+    // (and avoids racing our own write against the server's close).
+    let mut second =
+        BufReader::new(std::net::TcpStream::connect(&addr).expect("second connection"));
+    let mut over = String::new();
+    second.read_line(&mut over).expect("reading overloaded line");
+    let j = Json::parse(over.trim()).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{over}");
+    assert_eq!(j.get("error").unwrap().get("code").unwrap().as_str(), Some("overloaded"));
+    assert_eq!(j.get("id").unwrap(), &Json::Null, "no request line was read");
+    // Close the held connection; the daemon notices within its 100ms read
+    // timeout and frees the slot — retry until a client gets through. A
+    // still-rejected attempt may also die on the write/close race, so
+    // anything short of an ok:true response just means "retry".
+    drop(held_reader);
+    drop(held);
+    let try_status = || -> Option<Json> {
+        let mut s = std::net::TcpStream::connect(&addr).ok()?;
+        let _ = s.write_all(b"{\"op\":\"status\",\"id\":\"again\"}\n");
+        let _ = s.flush();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).ok()?;
+        Json::parse(line.trim()).ok()
+    };
+    let mut recovered = false;
+    for _ in 0..100 {
+        if let Some(j) = try_status() {
+            if j.get("ok").and_then(|o| o.as_bool()) == Some(true) {
+                recovered = true;
+                break;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    assert!(recovered, "slot never freed after closing the first connection");
+    let bye = one_shot(&addr, r#"{"op":"shutdown"}"#);
+    assert_eq!(Json::parse(&bye).unwrap().get("ok").unwrap().as_bool(), Some(true), "{bye}");
     let status = child.wait().expect("waiting for dlapm serve");
     assert!(status.success(), "daemon exit: {status:?}");
 }
