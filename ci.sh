@@ -167,6 +167,35 @@ if ! grep -q "shutdown: 0 warm slot(s) checkpointed" "$SMOKE_DIR/serve_jobs4.err
 fi
 echo "warm serve run checkpointed zero slots (zero new work)"
 
+echo "== serve batch-parity smoke (--batch-window 0 vs --batch-window 4) =="
+# Three same-scope contract rankings (two distinct + one repeat) fuse into
+# one batch at window 4 and run per request at window 0; the response
+# stream must be byte-identical either way. No status line here: batch
+# counters legitimately differ between the two runs.
+printf '%s\n' \
+    '{"op":"contract_rank","spec":"abc=ai,ibc","n":24,"small":4,"seed":7,"id":1}' \
+    '{"op":"contract_rank","spec":"abc=ai,ibc","n":26,"small":4,"seed":7,"id":2}' \
+    '{"op":"contract_rank","spec":"abc=ai,ibc","n":24,"small":4,"seed":7,"id":3}' \
+    '{"op":"shutdown","id":4}' > "$SMOKE_DIR/batch_script.jsonl"
+cargo run -q --bin dlapm -- serve --stdio --jobs 2 --batch-window 0 \
+    < "$SMOKE_DIR/batch_script.jsonl" \
+    > "$SMOKE_DIR/serve_window0.txt" 2> "$SMOKE_DIR/serve_window0.err"
+cargo run -q --bin dlapm -- serve --stdio --jobs 2 --batch-window 4 \
+    < "$SMOKE_DIR/batch_script.jsonl" \
+    > "$SMOKE_DIR/serve_window4.txt" 2> "$SMOKE_DIR/serve_window4.err"
+if cmp -s "$SMOKE_DIR/serve_window0.txt" "$SMOKE_DIR/serve_window4.txt"; then
+    echo "serve responses are byte-identical: --batch-window 0 vs --batch-window 4"
+else
+    echo "ERROR: serve --stdio differs between --batch-window 0 and 4:" >&2
+    diff "$SMOKE_DIR/serve_window0.txt" "$SMOKE_DIR/serve_window4.txt" >&2 || true
+    exit 1
+fi
+if ! grep -q '"ok":true' "$SMOKE_DIR/serve_window0.txt"; then
+    echo "ERROR: serve batch-parity requests did not succeed:" >&2
+    cat "$SMOKE_DIR/serve_window0.txt" >&2
+    exit 1
+fi
+
 echo "== shard parity smoke (--shards 1 vs --shards 8, jobs 1 vs 4) =="
 cargo run -q --bin dlapm -- contract --spec "abc=ai,ibc" --n 32 --rank --jobs 1 --shards 1 \
     > "$SMOKE_DIR/rank_shards1.txt"

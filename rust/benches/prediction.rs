@@ -78,20 +78,45 @@ fn main() {
     // micro-benchmark pass; warm is the resident-daemon steady state
     // (every memo lookup hits, the response is recomputed pure).
     let req = r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":16,"small":4,"seed":7}"#;
-    let opts = || ServeOpts {
+    let opts = |batch_window: u64| ServeOpts {
         store_dir: None,
         jobs: 1,
         checkpoint_every: 0,
         max_connections: 0,
         max_queue: 0,
+        batch_window,
+        batch_max: 0,
     };
     suite.add("serve/handle-contract-cold", || {
-        let state = ServeState::new(&opts()).unwrap();
+        let state = ServeState::new(&opts(0)).unwrap();
         state.handle_line(req).unwrap().len()
     });
-    let resident = ServeState::new(&opts()).unwrap();
+    let resident = ServeState::new(&opts(0)).unwrap();
     resident.handle_line(req).unwrap();
     suite.add("serve/handle-contract-warm", || resident.handle_line(req).unwrap().len());
+    // Admission batching A/B: four same-scope selects at mixed sizes,
+    // answered per request (window 0: one warm pass, one prewarm sweep
+    // and one engine fan-out EACH) vs fused (window 8: the whole class
+    // shares one of each). Responses are byte-identical; only the
+    // execution shape differs. Warm states: the steady-state regime.
+    let mixed_selects = concat!(
+        r#"{"op":"select","cpu":"sandybridge","n":480,"b":104,"seed":5,"id":1}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":400,"b":104,"seed":5,"id":2}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":360,"b":104,"seed":5,"id":3}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":440,"b":104,"seed":5,"id":4}"#,
+        "\n",
+    );
+    let unbatched = ServeState::new(&opts(0)).unwrap();
+    unbatched.handle_script(mixed_selects);
+    suite.add("serve/unbatched-mixed-sizes", || {
+        unbatched.handle_script(mixed_selects).len()
+    });
+    let batched = ServeState::new(&opts(8)).unwrap();
+    batched.handle_script(mixed_selects);
+    suite.add("serve/batched-mixed-sizes", || batched.handle_script(mixed_selects).len());
     // Contended coalescing: 8 threads race one key — one leads, the rest
     // park on the condvar and clone the leader's value.
     suite.add("serve/coalesce-contended", || {

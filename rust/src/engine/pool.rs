@@ -309,6 +309,25 @@ impl Engine {
         }
         Ok(out)
     }
+
+    /// Execute several groups of jobs as **one** fused submission: all
+    /// jobs of all groups go into a single [`Engine::run`] batch (one
+    /// wake-generation bump, one fan-out), and the flat results are
+    /// split back per group in submission order. This is the serve
+    /// batch scheduler's entry point: a compatibility class of K
+    /// requests submits K groups here instead of K separate batches,
+    /// with results identical to per-group `run` calls by the
+    /// submission-order guarantee.
+    pub fn run_grouped<T, F>(&self, groups: Vec<Vec<F>>) -> Result<Vec<Vec<T>>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let lens: Vec<usize> = groups.iter().map(Vec::len).collect();
+        let flat: Vec<F> = groups.into_iter().flatten().collect();
+        let mut results = self.run(flat)?.into_iter();
+        Ok(lens.into_iter().map(|len| results.by_ref().take(len).collect()).collect())
+    }
 }
 
 impl Drop for Engine {
@@ -425,6 +444,32 @@ mod tests {
         let out = engine.run(tasks).unwrap();
         let want: Vec<usize> = (0..6usize).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn grouped_batches_fuse_into_one_submission() {
+        let engine = Engine::new(3);
+        let groups: Vec<Vec<Box<dyn FnOnce() -> usize + Send>>> = (0..4usize)
+            .map(|g| {
+                (0..=g)
+                    .map(|i| -> Box<dyn FnOnce() -> usize + Send> {
+                        Box::new(move || g * 100 + i)
+                    })
+                    .collect()
+            })
+            .collect();
+        let g0 = engine.wake_generation();
+        let out = engine.run_grouped(groups).unwrap();
+        // One fused fan-out for all four groups, not four.
+        assert_eq!(engine.wake_generation(), g0 + 1);
+        let want: Vec<Vec<usize>> =
+            (0..4usize).map(|g| (0..=g).map(|i| g * 100 + i).collect()).collect();
+        assert_eq!(out, want);
+        // Empty and mixed-size groups split back exactly.
+        let groups: Vec<Vec<Box<dyn FnOnce() -> usize + Send>>> =
+            vec![vec![], vec![Box::new(|| 7)], vec![]];
+        let out = engine.run_grouped(groups).unwrap();
+        assert_eq!(out, vec![vec![], vec![7], vec![]]);
     }
 
     #[test]

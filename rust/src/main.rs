@@ -96,6 +96,7 @@ subcommands:
                         byte-identical ranking tables
   serve    --store DIR [--stdio | --addr HOST:PORT] [--jobs N]
            [--checkpoint-every R] [--max-connections C] [--max-queue Q]
+           [--batch-window W] [--batch-max M]
            prediction-as-a-service daemon: load all warm state once and
            answer predict/select/blocksize/contract_rank requests over a
            line-oriented JSON protocol (see docs/serve-protocol.md);
@@ -109,6 +110,13 @@ subcommands:
                       backpressure (TCP connections / in-flight compute
                       ops): excess requests get a structured 'overloaded'
                       error instead of queueing; 0 = unlimited (default)
+           --batch-window W / --batch-max M
+                      admission batching: hold compatible (same warm
+                      scope) compute requests for W request arrivals —
+                      never wall time — and run each class as one fused
+                      engine batch; M caps a class's size (0 = no cap).
+                      W=0 (default) = off; response bytes are identical
+                      at any W/M
            --client '{\"op\":...}' --addr HOST:PORT
                       one-shot client: send one request, print the
                       response line, exit
@@ -116,6 +124,10 @@ subcommands:
                       persistent client: send every non-blank line of
                       FILE ('-' = stdin) over one connection, print one
                       response line per request, exit
+           --retry N  (client modes) retry connection failures and
+                      structured 'overloaded' refusals up to N times with
+                      bounded exponential backoff (25ms doubling, 800ms
+                      cap) before surfacing the final error; default 0
   sampler  (reads a Sampler script from stdin)
   lint     [--src DIR]  determinism static analysis over the crate's own
            sources (default: ./src, falling back to the build-time crate
@@ -761,7 +773,8 @@ fn serve_cmd(args: &Args) {
             eprintln!("serve --client requires --addr HOST:PORT");
             std::process::exit(2);
         });
-        match dlapm::serve::run_client(addr, request) {
+        let retries = args.get_usize("retry", 0);
+        match dlapm::serve::run_client_with_retry(addr, request, retries) {
             Ok(line) => println!("{line}"),
             Err(e) => {
                 eprintln!("serve client: {e}");
@@ -789,7 +802,8 @@ fn serve_cmd(args: &Args) {
                 std::process::exit(1);
             })
         };
-        match dlapm::serve::run_client_script(addr, &script) {
+        let retries = args.get_usize("retry", 0);
+        match dlapm::serve::run_client_script_with_retry(addr, &script, retries) {
             Ok(lines) => {
                 for line in lines {
                     println!("{line}");
@@ -808,6 +822,8 @@ fn serve_cmd(args: &Args) {
         checkpoint_every: args.get_u64("checkpoint-every", 64),
         max_connections: args.get_usize("max-connections", 0),
         max_queue: args.get_usize("max-queue", 0),
+        batch_window: args.get_u64("batch-window", 0),
+        batch_max: args.get_usize("batch-max", 0),
     };
     let state = match dlapm::serve::ServeState::new(&opts) {
         Ok(s) => Arc::new(s),

@@ -51,12 +51,14 @@ pub fn b_name(b: usize) -> String {
 /// many `b`), `select` over `(n, b)` grids, and the ch4 accuracy
 /// heat-maps — walk the grid in its natural order so consecutive points
 /// land in the same model piece.
+/// Returns the number of size points actually batch-evaluated (cache
+/// misses); callers that only want the warm side effect can discard it.
 pub fn prewarm_grid(
     store: &ModelStore,
     cache: &ModelCache,
     alg: &dyn BlockedAlg,
     points: &[(usize, usize)],
-) {
+) -> usize {
     use std::collections::{BTreeMap, HashSet};
     // Per case: points in first-encounter (= sweep) order, deduplicated
     // on their cache-rounded form.
@@ -86,14 +88,17 @@ pub fn prewarm_grid(
             }
         }
     }
+    let mut batched = 0usize;
     // lint:allow(unsorted-map-iter): per_case is a BTreeMap (sorted); the HashSet is dedup-membership only
     for (case, (points, _)) in per_case {
         let model = store.get(&case).expect("case presence checked during collection");
         let estimates = model.evaluate_batch(&points);
+        batched += points.len();
         for (p, est) in points.iter().zip(estimates) {
             cache.get_or_insert_with(&case, p, |_| est);
         }
     }
+    batched
 }
 
 fn sweep_from(n: usize, bs: &[usize], ranked: &[Ranked]) -> BlockSizeSweep {
@@ -120,25 +125,70 @@ pub fn optimize_blocksize_with(
     n: usize,
     bs: &[usize],
 ) -> Result<(BlockSizeSweep, Vec<Ranked>)> {
-    assert!(!bs.is_empty(), "empty block-size sweep");
-    let points: Vec<(usize, usize)> = bs.iter().map(|&b| (n, b)).collect();
-    prewarm_grid(store, cache, alg.as_ref(), &points);
-    let cands: Vec<Arc<dyn Candidate + Send + Sync>> = bs
+    let item = SweepItem {
+        store: Arc::clone(store),
+        cache: Arc::clone(cache),
+        alg: Arc::clone(alg),
+        n,
+        bs: bs.to_vec(),
+    };
+    let (mut out, _batched) = optimize_blocksize_grouped(engine, &[item])?;
+    Ok(out.pop().expect("one sweep item in, one sweep out"))
+}
+
+/// One block-size sweep of a fused group: which store/cache scope it
+/// predicts against, the algorithm, and its `(n, bs)` grid.
+pub struct SweepItem {
+    pub store: Arc<ModelStore>,
+    pub cache: Arc<ModelCache>,
+    pub alg: Arc<dyn BlockedAlg + Send + Sync>,
+    pub n: usize,
+    pub bs: Vec<usize>,
+}
+
+/// Run several block-size sweeps as **one** fused ranking: every item's
+/// grid is prewarmed first (ordered `evaluate_batch` sweeps per model
+/// case), then all items' candidates rank in a single
+/// [`select::rank_candidate_groups`] engine submission. Each item's
+/// result is byte-identical to its own [`optimize_blocksize_with`] call
+/// — this is the entry point the serve batch scheduler shares with the
+/// CLI sweep path (which passes one item). Also returns the total
+/// number of size points batch-evaluated across all prewarm sweeps
+/// (the fused-batch observability counter).
+pub fn optimize_blocksize_grouped(
+    engine: &Arc<Engine>,
+    items: &[SweepItem],
+) -> Result<(Vec<(BlockSizeSweep, Vec<Ranked>)>, usize)> {
+    let mut batched = 0usize;
+    let mut groups: Vec<Vec<Arc<dyn Candidate + Send + Sync>>> = Vec::with_capacity(items.len());
+    for item in items {
+        assert!(!item.bs.is_empty(), "empty block-size sweep");
+        let points: Vec<(usize, usize)> = item.bs.iter().map(|&b| (item.n, b)).collect();
+        batched += prewarm_grid(&item.store, &item.cache, item.alg.as_ref(), &points);
+        groups.push(
+            item.bs
+                .iter()
+                .map(|&b| {
+                    Arc::new(BlockedCandidate {
+                        store: Arc::clone(&item.store),
+                        cache: Arc::clone(&item.cache),
+                        alg: Arc::clone(&item.alg),
+                        n: item.n,
+                        b,
+                        label: Some(b_name(b)),
+                        validate: None,
+                    }) as _
+                })
+                .collect(),
+        );
+    }
+    let rankings = select::rank_candidate_groups(engine, &groups)?;
+    let out = items
         .iter()
-        .map(|&b| {
-            Arc::new(BlockedCandidate {
-                store: Arc::clone(store),
-                cache: Arc::clone(cache),
-                alg: Arc::clone(alg),
-                n,
-                b,
-                label: Some(b_name(b)),
-                validate: None,
-            }) as _
-        })
+        .zip(rankings)
+        .map(|(item, ranked)| (sweep_from(item.n, &item.bs, &ranked), ranked))
         .collect();
-    let ranked = select::rank_candidates_par(engine, &cands)?;
-    Ok((sweep_from(n, bs, &ranked), ranked))
+    Ok((out, batched))
 }
 
 /// Convenience sequential wrapper around [`optimize_blocksize_with`]:
@@ -291,6 +341,46 @@ mod tests {
             assert_eq!(ranked.len(), bs.len());
             assert_eq!(sweep.b_pred, bs[ranked[0].index]);
             assert!(cache.hits() > 0, "candidates must hit the prewarmed cache");
+        }
+    }
+
+    #[test]
+    fn grouped_sweeps_match_solo_sweeps_bit_for_bit() {
+        // The fused multi-sweep entry (serve batching) must reproduce
+        // each per-item sweep exactly, and report the batched point
+        // count its prewarm actually evaluated.
+        let machine =
+            Machine::standard(CpuId::SandyBridge, Library::OpenBlas { fixed_dswap: false }, 1);
+        let (store, alg) = arcs(&machine);
+        let engine = Arc::new(Engine::new(4));
+        let bs: Vec<usize> = (24..=200).step_by(16).collect();
+        let items: Vec<SweepItem> = [1200usize, 1500, 1200]
+            .iter()
+            .map(|&n| SweepItem {
+                store: Arc::clone(&store),
+                cache: Arc::new(ModelCache::new()),
+                alg: Arc::clone(&alg),
+                n,
+                bs: bs.clone(),
+            })
+            .collect();
+        let (fused, batched) = optimize_blocksize_grouped(&engine, &items).unwrap();
+        assert!(batched > 0, "cold caches must batch-evaluate points");
+        assert_eq!(fused.len(), items.len());
+        for (item, (sweep, ranked)) in items.iter().zip(&fused) {
+            let solo_cache = Arc::new(ModelCache::new());
+            let (solo_sweep, solo_ranked) =
+                optimize_blocksize_with(&engine, &store, &solo_cache, &alg, item.n, &bs)
+                    .unwrap();
+            assert_eq!(sweep.b_pred, solo_sweep.b_pred);
+            for (a, b) in sweep.predicted_med.iter().zip(&solo_sweep.predicted_med) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(ranked.len(), solo_ranked.len());
+            for (a, b) in ranked.iter().zip(&solo_ranked) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.index, b.index);
+            }
         }
     }
 

@@ -122,6 +122,32 @@ pub fn rank_candidates_par(
     Ok(assemble(engine.run(tasks)?))
 }
 
+/// Rank several candidate sets through **one** fused engine submission
+/// ([`Engine::run_grouped`]): the serve batch scheduler's entry point,
+/// where a compatibility class of K requests ranks all K candidate sets
+/// in a single fan-out. Each group's result is byte-identical to its
+/// own [`rank_candidates_par`] call — grouping changes scheduling, and
+/// candidates derive their random streams from their own identity, not
+/// from the batch they ran in.
+pub fn rank_candidate_groups(
+    engine: &Arc<Engine>,
+    groups: &[Vec<Arc<dyn Candidate + Send + Sync>>],
+) -> Result<Vec<Vec<Ranked>>> {
+    let tasks: Vec<Vec<_>> = groups
+        .iter()
+        .map(|cands| {
+            cands
+                .iter()
+                .map(|c| {
+                    let c = Arc::clone(c);
+                    move || (c.name(), c.predict(), c.measure())
+                })
+                .collect()
+        })
+        .collect();
+    Ok(engine.run_grouped(tasks)?.into_iter().map(assemble).collect())
+}
+
 /// Scalar core of the winner check, shared with the scenario adapters
 /// (e.g. `predict::selection` over its own `RankedAlg` rows): ratio of
 /// the chosen candidate's measured median to the best measured median.
@@ -262,6 +288,36 @@ mod tests {
             assert_eq!(a.index, b.index);
             assert_eq!(a.predicted.time.med, b.predicted.time.med);
             assert_eq!(a.measured.map(|m| m.med), b.measured.map(|m| m.med));
+        }
+    }
+
+    #[test]
+    fn grouped_ranking_matches_per_group_ranking() {
+        let group = |offset: usize, len: usize| -> Vec<Arc<dyn Candidate + Send + Sync>> {
+            (0..len)
+                .map(|i| {
+                    Arc::new(Fake {
+                        name: Box::leak(format!("g{offset}c{i:02}").into_boxed_str()),
+                        med: ((offset + i * 7) % 13) as f64,
+                        measured: Some((offset + i) as f64),
+                    }) as _
+                })
+                .collect()
+        };
+        let engine = Arc::new(Engine::new(4));
+        let groups: Vec<Vec<Arc<dyn Candidate + Send + Sync>>> =
+            vec![group(0, 5), group(100, 1), group(200, 8)];
+        let fused = rank_candidate_groups(&engine, &groups).unwrap();
+        assert_eq!(fused.len(), groups.len());
+        for (fused_ranked, cands) in fused.iter().zip(&groups) {
+            let solo = rank_candidates_par(&engine, cands).unwrap();
+            assert_eq!(fused_ranked.len(), solo.len());
+            for (a, b) in fused_ranked.iter().zip(&solo) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.predicted.time.med, b.predicted.time.med);
+                assert_eq!(a.measured.map(|m| m.med), b.measured.map(|m| m.med));
+            }
         }
     }
 }

@@ -13,21 +13,31 @@
 //!   against it).
 //! * [`coalesce`] — identical in-flight requests answered by one
 //!   computation, followers parked on a `util::sync::Condvar`.
+//! * [`scheduler`] — the admission/batch scheduler (`--batch-window` /
+//!   `--batch-max`): *compatible* (same warm-scope) in-flight requests
+//!   park in per-class queues and execute as one fused engine batch,
+//!   clocked by request arrivals, never wall time.
 //! * [`server`] — [`server::ServeState`] (warm scopes, checkpointing,
-//!   the op handlers) plus the stdio and TCP transports, the `--client`
-//!   one-shot, the `--client-script` persistent-connection client, and
+//!   the op handlers, the fused batch execution) plus the stdio and TCP
+//!   transports, the `--client` one-shot, the `--client-script`
+//!   persistent-connection client (both with `--retry` backoff), and
 //!   the `--max-connections` / `--max-queue` backpressure limits
 //!   (structured `overloaded` errors instead of unbounded queueing).
 //!
 //! The determinism contract extends to the wire: a response to a
 //! well-formed request is a pure function of the request, byte-identical
 //! to the equivalent CLI stdout (`output` field), for any `--jobs`, any
-//! interleaving, cold or warm store.
+//! interleaving, any `--batch-window`/`--batch-max`, cold or warm store.
 
 pub mod coalesce;
 pub mod protocol;
+pub mod scheduler;
 pub mod server;
 
 pub use coalesce::Coalescer;
 pub use protocol::{OPS, PROTOCOL_VERSION};
-pub use server::{run_client, run_client_script, serve_stdio, serve_tcp, ServeOpts, ServeState};
+pub use scheduler::{BatchScheduler, Gate};
+pub use server::{
+    retry_backoff, run_client, run_client_script, run_client_script_with_retry,
+    run_client_with_retry, serve_stdio, serve_tcp, ServeOpts, ServeState,
+};

@@ -1,0 +1,420 @@
+//! Admission/batch scheduler: fuse compatible in-flight requests into
+//! shared engine batches.
+//!
+//! The daemon's answers are pure functions of each request's canonical
+//! key, and the prediction machinery underneath amortizes: one
+//! `Engine::run` fan-out can rank many candidates, one ordered
+//! `PerfModel::evaluate_batch` sweep can price many points. Coalescing
+//! ([`super::coalesce`]) exploits that only for *byte-identical*
+//! requests; this module exploits it for *compatible* ones — requests
+//! that resolve to the same state scope (op kind, machine label, seed,
+//! coverage or granularity) and can therefore share a warm scope, a
+//! model-cache pass and one fused engine batch.
+//!
+//! The scheduling core, [`BatchScheduler`], is a discrete-event
+//! component in the `next_tick`/`tick` style: its clock is the
+//! **arrival counter** (one tick per submitted request — never wall
+//! time, which `dlapm lint` bans from pure paths). Submitting a request
+//! opens its compatibility class (or joins the open one) with a close
+//! deadline `arrival + window`; a class closes — becomes one fused
+//! execution — when the clock reaches its deadline or its membership
+//! hits the `--batch-max` cap. `window == 0` closes every class at its
+//! own arrival tick, reproducing unbatched behavior exactly. The core
+//! holds no locks and spawns no threads, so every timing property
+//! (window close, cap close, single-request fast path) is unit-testable
+//! deterministically.
+//!
+//! [`Gate`] wraps the core for the server: transports submit parsed
+//! requests and receive tickets, closed classes come back as [`Batch`]es
+//! for the caller to execute, and per-ticket responses are delivered
+//! through a [`Condvar`] so TCP connection threads can park while their
+//! batch forms. Determinism contract: batch *formation* depends only on
+//! the submission history (which transports make deterministic where
+//! they promise order — see `docs/serve-protocol.md`, *Batching*), and
+//! batch *results* are byte-identical to unbatched execution by the
+//! purity rule, so clients cannot observe whether they were fused.
+
+use std::collections::BTreeMap;
+
+use super::protocol::Request;
+use crate::util::sync::{Condvar, Mutex};
+
+/// An open compatibility class: the tickets parked in it and the
+/// arrival tick at which it closes.
+struct OpenClass {
+    deadline: u64,
+    members: Vec<u64>,
+}
+
+/// A class the scheduler has closed: its key and member tickets, in
+/// arrival order.
+#[derive(Debug, PartialEq, Eq)]
+pub struct ClosedClass {
+    pub key: String,
+    pub members: Vec<u64>,
+}
+
+/// The deterministic discrete-event core. Thread-free: callers drive it
+/// explicitly via [`submit`](BatchScheduler::submit) /
+/// [`tick`](BatchScheduler::tick) / [`flush`](BatchScheduler::flush).
+pub struct BatchScheduler {
+    window: u64,
+    max: usize,
+    arrivals: u64,
+    open: BTreeMap<String, OpenClass>,
+}
+
+impl BatchScheduler {
+    /// `window` is the close delay in arrival ticks (0 = close each
+    /// class at its own arrival, i.e. unbatched); `max` caps class size
+    /// (0 = uncapped).
+    pub fn new(window: u64, max: usize) -> BatchScheduler {
+        BatchScheduler { window, max, arrivals: 0, open: BTreeMap::new() }
+    }
+
+    /// Total requests submitted — the scheduler's clock.
+    pub fn arrivals(&self) -> u64 {
+        self.arrivals
+    }
+
+    /// Any classes still open (waiting on their window)?
+    pub fn has_open(&self) -> bool {
+        !self.open.is_empty()
+    }
+
+    /// The next tick at which a class will close, if any — the
+    /// discrete-event `next_tick` accessor.
+    pub fn next_tick(&self) -> Option<u64> {
+        self.open.values().map(|c| c.deadline).min()
+    }
+
+    /// Advance the clock to `now` and close every class whose deadline
+    /// has arrived, in class-key order (deterministic in history).
+    pub fn tick(&mut self, now: u64) -> Vec<ClosedClass> {
+        let due: Vec<String> = self
+            .open
+            .iter()
+            .filter(|(_, c)| c.deadline <= now)
+            .map(|(k, _)| k.clone())
+            .collect();
+        due.into_iter()
+            .map(|key| {
+                let class = self.open.remove(&key).expect("due class vanished");
+                ClosedClass { key, members: class.members }
+            })
+            .collect()
+    }
+
+    /// Record an arrival: park `ticket` in the class for `key`, then
+    /// advance the clock one tick and return whatever closed. A class
+    /// closes when its deadline arrives (`window` ticks after it
+    /// opened) or its membership reaches `max`.
+    pub fn submit(&mut self, key: &str, ticket: u64) -> Vec<ClosedClass> {
+        self.arrivals += 1;
+        let now = self.arrivals;
+        let window = self.window;
+        let class = self
+            .open
+            .entry(key.to_string())
+            .or_insert_with(|| OpenClass { deadline: now + window, members: Vec::new() });
+        class.members.push(ticket);
+        if self.max > 0 && class.members.len() >= self.max {
+            class.deadline = now; // cap reached: close this tick
+        }
+        self.tick(now)
+    }
+
+    /// Close every open class regardless of deadline (transport idle /
+    /// barrier ops / shutdown), in class-key order.
+    pub fn flush(&mut self) -> Vec<ClosedClass> {
+        let open = std::mem::take(&mut self.open);
+        open.into_iter()
+            .map(|(key, class)| ClosedClass { key, members: class.members })
+            .collect()
+    }
+}
+
+/// A closed class with its member requests attached: what the server
+/// executes as one fused engine batch.
+pub struct Batch {
+    pub class: String,
+    pub members: Vec<(u64, Request)>,
+}
+
+/// One parked request: its payload until its batch closes, then its
+/// rendered response line until the submitter takes it.
+struct GateSlot {
+    payload: Option<Request>,
+    done: Option<String>,
+}
+
+struct GateInner {
+    sched: BatchScheduler,
+    slots: BTreeMap<u64, GateSlot>,
+    next_ticket: u64,
+}
+
+/// Thread-safe wrapper around [`BatchScheduler`] holding parked request
+/// payloads and finished response lines. Lock discipline mirrors
+/// [`super::coalesce`]: one [`Mutex`]/[`Condvar`] pair, never held
+/// while a batch executes.
+pub struct Gate {
+    inner: Mutex<GateInner>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn new(window: u64, max: usize) -> Gate {
+        Gate {
+            inner: Mutex::new(
+                GateInner {
+                    sched: BatchScheduler::new(window, max),
+                    slots: BTreeMap::new(),
+                    next_ticket: 0,
+                },
+                "serve-batch-gate",
+            ),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Park `req` in the class for `class`; returns this request's
+    /// ticket plus any batches its arrival closed (the caller executes
+    /// them with no gate lock held and reports back via
+    /// [`complete`](Gate::complete)).
+    pub fn submit(&self, class: &str, req: Request) -> (u64, Vec<Batch>) {
+        let mut g = self.inner.lock();
+        let ticket = g.next_ticket;
+        g.next_ticket += 1;
+        g.slots.insert(ticket, GateSlot { payload: Some(req), done: None });
+        let closed = g.sched.submit(class, ticket);
+        let batches = take_batches(&mut g, closed);
+        (ticket, batches)
+    }
+
+    /// Close every open class (idle transport, `status`/`shutdown`
+    /// barrier, stream end) and hand the batches to the caller.
+    pub fn flush(&self) -> Vec<Batch> {
+        let mut g = self.inner.lock();
+        let closed = g.sched.flush();
+        take_batches(&mut g, closed)
+    }
+
+    /// Any classes still waiting on their window?
+    pub fn has_open(&self) -> bool {
+        self.inner.lock().sched.has_open()
+    }
+
+    /// Deliver rendered response lines for executed batch members and
+    /// wake every parked submitter.
+    pub fn complete(&self, results: Vec<(u64, String)>) {
+        if results.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock();
+        for (ticket, line) in results {
+            if let Some(slot) = g.slots.get_mut(&ticket) {
+                slot.done = Some(line);
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Take `ticket`'s response if it is ready (non-blocking).
+    pub fn try_take(&self, ticket: u64) -> Option<String> {
+        let mut g = self.inner.lock();
+        if g.slots.get(&ticket).map(|s| s.done.is_some()).unwrap_or(false) {
+            return g.slots.remove(&ticket).and_then(|s| s.done);
+        }
+        None
+    }
+
+    /// Park until `ticket`'s response is ready, then take it. Callers
+    /// must guarantee the batch holding `ticket` is (or will be)
+    /// executing on another thread, or flush first.
+    pub fn wait(&self, ticket: u64) -> String {
+        let g = self.inner.lock();
+        let mut g = self
+            .cv
+            .wait_while(g, |g| g.slots.get(&ticket).map(|s| s.done.is_none()).unwrap_or(false));
+        g.slots
+            .remove(&ticket)
+            .and_then(|s| s.done)
+            .expect("gate ticket resolved without a response")
+    }
+}
+
+/// Attach each closed class's parked payloads, producing executable
+/// batches. Payloads move out of the slots; the slots stay to receive
+/// their response lines.
+fn take_batches(g: &mut GateInner, closed: Vec<ClosedClass>) -> Vec<Batch> {
+    closed
+        .into_iter()
+        .map(|c| Batch {
+            class: c.key,
+            members: c
+                .members
+                .into_iter()
+                .map(|t| {
+                    let req = g
+                        .slots
+                        .get_mut(&t)
+                        .and_then(|s| s.payload.take())
+                        .expect("closed class member without parked payload");
+                    (t, req)
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::parse_request;
+
+    fn closed_keys(closed: &[ClosedClass]) -> Vec<&str> {
+        closed.iter().map(|c| c.key.as_str()).collect()
+    }
+
+    #[test]
+    fn window_zero_closes_each_request_at_its_own_tick() {
+        let mut s = BatchScheduler::new(0, 0);
+        let closed = s.submit("a", 0);
+        assert_eq!(closed, vec![ClosedClass { key: "a".into(), members: vec![0] }]);
+        let closed = s.submit("a", 1);
+        assert_eq!(closed, vec![ClosedClass { key: "a".into(), members: vec![1] }]);
+        assert!(!s.has_open());
+        assert_eq!(s.arrivals(), 2);
+    }
+
+    #[test]
+    fn window_holds_a_class_open_for_exactly_window_arrivals() {
+        let mut s = BatchScheduler::new(2, 0);
+        assert!(s.submit("a", 0).is_empty()); // tick 1, deadline 3
+        assert_eq!(s.next_tick(), Some(3));
+        assert!(s.submit("a", 1).is_empty()); // tick 2
+        let closed = s.submit("b", 2); // tick 3: a's deadline
+        assert_eq!(closed, vec![ClosedClass { key: "a".into(), members: vec![0, 1] }]);
+        assert_eq!(s.next_tick(), Some(5)); // b opened at 3
+        assert!(s.has_open());
+    }
+
+    #[test]
+    fn joining_does_not_extend_the_window() {
+        // The deadline is set when the class opens; later joiners ride
+        // the same window instead of pushing it out indefinitely.
+        let mut s = BatchScheduler::new(3, 0);
+        assert!(s.submit("a", 0).is_empty()); // tick 1, deadline 4
+        assert!(s.submit("a", 1).is_empty()); // tick 2
+        assert!(s.submit("a", 2).is_empty()); // tick 3
+        let closed = s.submit("a", 3); // tick 4: closes with all four
+        assert_eq!(
+            closed,
+            vec![ClosedClass { key: "a".into(), members: vec![0, 1, 2, 3] }]
+        );
+    }
+
+    #[test]
+    fn cap_closes_a_class_before_its_window() {
+        let mut s = BatchScheduler::new(100, 2);
+        assert!(s.submit("a", 0).is_empty());
+        let closed = s.submit("a", 1); // cap of 2 reached at tick 2
+        assert_eq!(closed, vec![ClosedClass { key: "a".into(), members: vec![0, 1] }]);
+        assert!(!s.has_open());
+    }
+
+    #[test]
+    fn cap_of_one_is_the_single_request_fast_path() {
+        let mut s = BatchScheduler::new(100, 1);
+        let closed = s.submit("a", 0);
+        assert_eq!(closed, vec![ClosedClass { key: "a".into(), members: vec![0] }]);
+    }
+
+    #[test]
+    fn arrivals_join_their_class_before_the_deadline_check() {
+        let mut s = BatchScheduler::new(2, 0);
+        assert!(s.submit("zeta", 0).is_empty()); // tick 1, deadline 3
+        assert!(s.submit("alpha", 1).is_empty()); // tick 2, deadline 4
+        // Tick 3 is zeta's own deadline: the arrival joins first, then
+        // the class closes carrying it.
+        let closed = s.submit("zeta", 2);
+        assert_eq!(
+            closed,
+            vec![ClosedClass { key: "zeta".into(), members: vec![0, 2] }]
+        );
+        let closed = s.submit("mu", 3); // tick 4: alpha's deadline
+        assert_eq!(closed_keys(&closed), vec!["alpha"]);
+        // Flush closes the rest in key order.
+        let closed = s.flush();
+        assert_eq!(closed_keys(&closed), vec!["mu"]);
+        assert!(!s.has_open());
+        assert_eq!(s.next_tick(), None);
+    }
+
+    #[test]
+    fn flush_closes_everything_in_key_order() {
+        let mut s = BatchScheduler::new(50, 0);
+        assert!(s.submit("b", 0).is_empty());
+        assert!(s.submit("a", 1).is_empty());
+        assert!(s.submit("b", 2).is_empty());
+        let closed = s.flush();
+        assert_eq!(closed_keys(&closed), vec!["a", "b"]);
+        assert_eq!(closed[1].members, vec![0, 2]);
+    }
+
+    fn req(line: &str) -> Request {
+        parse_request(line).expect("test request parses")
+    }
+
+    #[test]
+    fn gate_roundtrip_submit_complete_take() {
+        let gate = Gate::new(0, 0);
+        let (ticket, batches) = gate.submit("c", req(r#"{"op":"status","id":1}"#));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].class, "c");
+        assert_eq!(batches[0].members.len(), 1);
+        assert_eq!(batches[0].members[0].0, ticket);
+        assert!(gate.try_take(ticket).is_none());
+        gate.complete(vec![(ticket, "response".to_string())]);
+        assert_eq!(gate.try_take(ticket).as_deref(), Some("response"));
+        assert!(gate.try_take(ticket).is_none()); // taken = gone
+    }
+
+    #[test]
+    fn gate_windows_park_then_flush_delivers() {
+        let gate = Gate::new(10, 0);
+        let (t0, b0) = gate.submit("c", req(r#"{"op":"status","id":1}"#));
+        let (t1, b1) = gate.submit("c", req(r#"{"op":"status","id":2}"#));
+        assert!(b0.is_empty() && b1.is_empty());
+        assert!(gate.has_open());
+        let batches = gate.flush();
+        assert_eq!(batches.len(), 1);
+        let tickets: Vec<u64> = batches[0].members.iter().map(|m| m.0).collect();
+        assert_eq!(tickets, vec![t0, t1]);
+        assert!(!gate.has_open());
+        gate.complete(vec![(t0, "r0".into()), (t1, "r1".into())]);
+        assert_eq!(gate.try_take(t1).as_deref(), Some("r1"));
+        assert_eq!(gate.try_take(t0).as_deref(), Some("r0"));
+    }
+
+    #[test]
+    fn gate_wait_parks_until_another_thread_completes() {
+        use std::sync::Arc;
+        let gate = Arc::new(Gate::new(10, 0));
+        let (ticket, _) = gate.submit("c", req(r#"{"op":"status"}"#));
+        let g2 = Arc::clone(&gate);
+        let completer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            let batches = g2.flush();
+            let results = batches
+                .iter()
+                .flat_map(|b| b.members.iter().map(|(t, _)| (*t, format!("done-{t}"))))
+                .collect();
+            g2.complete(results);
+        });
+        assert_eq!(gate.wait(ticket), format!("done-{ticket}"));
+        completer.join().unwrap();
+    }
+}

@@ -12,9 +12,18 @@
 //! Concurrency shape:
 //!
 //! * transports (stdio batch loop, one thread per TCP connection) call
-//!   [`ServeState::handle_line`] — everything below it is thread-safe;
+//!   [`ServeState::dispatch`] / [`ServeState::handle_line`] — everything
+//!   below it is thread-safe;
 //! * identical in-flight requests coalesce behind one computation
 //!   ([`super::coalesce`]), keyed by the canonical request key;
+//! * with `--batch-window > 0`, *compatible* compute requests (same
+//!   state scope — see [`ServeState::scope_of`]) park in the
+//!   [`super::scheduler::Gate`] and execute as one fused class: one
+//!   engine fan-out ranks every member, one ordered `evaluate_batch`
+//!   sweep per model prices every member's points, one warm-scope pass
+//!   per class. Responses render per member through the same `report::`
+//!   helpers, so fused bytes equal unbatched bytes (the purity rule is
+//!   what makes batching legal);
 //! * model generation for a not-yet-ensured family runs on a
 //!   copy-ensure-swap of the scope's `ModelStore` under that scope's
 //!   mutex, so concurrent requests for other scopes never block;
@@ -30,9 +39,10 @@
 //! hits, cache hit/miss) stay off the response path — `status` reports
 //! only deterministic functions of the request history.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::{BufRead, BufReader, Write as _};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -47,15 +57,16 @@ use crate::predict::blocksize;
 use crate::predict::predictor;
 use crate::predict::BlockedAlg;
 use crate::report;
-use crate::select::{BlockedCandidate, Candidate, TensorCandidate};
+use crate::select::{BlockedCandidate, Candidate, Ranked, TensorCandidate};
 use crate::store::{self, Persist, StoreKey, WarmStore};
-use crate::tensor::{micro, spec, Contraction, MicroMemo};
+use crate::tensor::{micro, spec, Contraction, MicroMemo, TensorAlg};
 use crate::util::error::{Context as _, Result};
 use crate::util::json::Json;
 use crate::util::sync::Mutex;
 
 use super::coalesce::Coalescer;
 use super::protocol::{self, ReqError, Request};
+use super::scheduler::{Batch, Gate};
 
 /// Configuration for [`ServeState::new`].
 pub struct ServeOpts {
@@ -76,6 +87,17 @@ pub struct ServeOpts {
     /// (`--max-queue`); 0 = unlimited. `status`/`shutdown` always pass —
     /// an operator must be able to inspect and stop an overloaded daemon.
     pub max_queue: usize,
+    /// Admission batching: hold a compatibility class open for this many
+    /// request *arrivals* (`--batch-window`); 0 = off (every request
+    /// executes immediately, exactly the pre-batching path). The clock is
+    /// the arrival counter, never wall time — the determinism lint bans
+    /// `Instant::now`, and counting arrivals keeps batch composition a
+    /// pure function of the request history.
+    pub batch_window: u64,
+    /// Close a class early once it holds this many requests
+    /// (`--batch-max`); 0 = no size cap. `--batch-max 1` degenerates to
+    /// per-request execution even with a window open.
+    pub batch_max: usize,
 }
 
 /// The blocked-prediction warm scope for one `(machine, seed, cov_n,
@@ -123,6 +145,11 @@ pub struct ServeState {
     blocked: Mutex<BTreeMap<String, Arc<BlockedEntry>>>,
     memos: Mutex<BTreeMap<String, Arc<MemoEntry>>>,
     coalescer: Coalescer<Outcome>,
+    /// The admission/batch gate (`--batch-window` / `--batch-max`):
+    /// parks compatible compute requests and closes them into fused
+    /// classes. Bypassed entirely when `batch_window == 0`.
+    gate: Gate,
+    batch_window: u64,
     /// Per-op counts of handled requests (the deterministic request
     /// history `status` reports).
     requests: Mutex<BTreeMap<String, u64>>,
@@ -130,6 +157,22 @@ pub struct ServeState {
     models_generated: AtomicU64,
     checkpoints: AtomicU64,
     shutdown: AtomicBool,
+    /// Open TCP connections (load observability; scheduling-dependent,
+    /// so `status` documents it as non-deterministic under load).
+    connections: AtomicUsize,
+    /// High-water mark of the `--max-queue` gauge over admitted requests.
+    queue_peak: AtomicUsize,
+    /// Fused classes executed (≥ 2 distinct member computations each).
+    batch_classes: AtomicU64,
+    /// Total member requests across fused classes.
+    batch_requests_fused: AtomicU64,
+    /// Model points priced through shared `evaluate_batch` sweeps on
+    /// behalf of fused classes (cache misses actually batch-evaluated).
+    batch_points_fused: AtomicU64,
+    /// Engine fan-outs submitted on behalf of whole fused classes.
+    batch_fanouts: AtomicU64,
+    /// Engine fan-outs submitted for individual (unfused) requests.
+    single_fanouts: AtomicU64,
 }
 
 fn internal(what: &str, e: impl std::fmt::Display) -> ReqError {
@@ -137,13 +180,28 @@ fn internal(what: &str, e: impl std::fmt::Display) -> ReqError {
 }
 
 /// RAII slot in the `--max-queue` gauge: decrements on drop, so a compute
-/// that errors or panics still frees its slot.
-struct InflightGuard<'a>(&'a AtomicUsize);
+/// that errors or panics still frees its slot. Public (opaquely) because
+/// [`Disposition::Parked`] carries it: a parked request keeps holding its
+/// queue slot until its batch executes and the response is taken.
+pub struct InflightGuard<'a>(&'a AtomicUsize);
 
 impl Drop for InflightGuard<'_> {
     fn drop(&mut self) {
         self.0.fetch_sub(1, Ordering::SeqCst);
     }
+}
+
+/// What [`ServeState::dispatch`] decided about one request line.
+pub enum Disposition<'a> {
+    /// The response line is ready now (status/shutdown/errors, any
+    /// compute at `--batch-window 0`, or a batch that closed on this very
+    /// arrival and already ran).
+    Ready(String),
+    /// The request parked in an open batch class; the transport redeems
+    /// the ticket once the class closes (`handle_line` blocks on it,
+    /// `serve_stdio`/`handle_script` poll and flush). Holds the
+    /// request's `--max-queue` slot for as long as it parks.
+    Parked(u64, InflightGuard<'a>),
 }
 
 /// Per-request machine selection, defaulting like the CLI's
@@ -171,6 +229,222 @@ fn registry_of(family: &str) -> std::result::Result<AlgList, ReqError> {
     Ok(algs)
 }
 
+// -------------------------------------------------------- request decoding
+//
+// Each compute op decodes to one args struct through exactly one function,
+// shared by the unbatched handler, the fused batch path AND the
+// compatibility-class keying — so a request can never land in a class
+// whose fused execution would decode it differently, and decode errors
+// surface identically at any `--batch-window`. Field order (and therefore
+// first-error precedence) is the pre-batching handlers' order, verbatim.
+
+/// Decoded `predict` / `select` request.
+struct BlockedArgs {
+    machine: Machine,
+    family: String,
+    n: usize,
+    b: usize,
+    seed: u64,
+    algs: AlgList,
+}
+
+impl BlockedArgs {
+    fn cov_n(&self) -> usize {
+        self.n.max(520)
+    }
+    fn cov_b(&self) -> usize {
+        self.b.max(536)
+    }
+}
+
+fn blocked_args(req: &Request) -> std::result::Result<BlockedArgs, ReqError> {
+    let machine = machine_of(req)?;
+    let family = req.str_or("family", "potrf")?;
+    let n = req.usize_or("n", 2104)?;
+    let b = req.usize_or("b", 128)?;
+    let seed = req.u64_or("seed", 0x5EED)?;
+    let algs = registry_of(&family)?;
+    Ok(BlockedArgs { machine, family, n, b, seed, algs })
+}
+
+/// Decoded `blocksize` request.
+struct BlocksizeArgs {
+    machine: Machine,
+    family: String,
+    n: usize,
+    bs: Vec<usize>,
+    seed: u64,
+    alg: Arc<dyn BlockedAlg + Send + Sync>,
+}
+
+impl BlocksizeArgs {
+    fn cov_n(&self) -> usize {
+        self.n.max(520)
+    }
+    fn cov_b(&self) -> usize {
+        self.bs.iter().copied().max().unwrap_or(536).max(536)
+    }
+}
+
+fn blocksize_args(req: &Request) -> std::result::Result<BlocksizeArgs, ReqError> {
+    let machine = machine_of(req)?;
+    let family = req.str_or("family", "potrf")?;
+    let n = req.usize_or("n", 2000)?;
+    let bs = req.sizes_or("bs", blocksize::standard_bs)?;
+    let seed = req.u64_or("seed", 0x5EED)?;
+    let algs = registry_of(&family)?;
+    let alg: Arc<dyn BlockedAlg + Send + Sync> = match req.str_opt("alg")? {
+        None => Arc::clone(&algs[0]),
+        Some(name) => match algs.iter().find(|a| a.name() == name) {
+            Some(a) => Arc::clone(a),
+            None => {
+                let known: Vec<String> = algs.iter().map(|a| a.name()).collect();
+                return Err(ReqError::bad(format!(
+                    "unknown alg '{name}' for family '{family}' (available: {})",
+                    known.join(", ")
+                )));
+            }
+        },
+    };
+    Ok(BlocksizeArgs { machine, family, n, bs, seed, alg })
+}
+
+/// Decoded `contract_rank` request.
+struct ContractArgs {
+    machine: Machine,
+    spec_str: String,
+    n: usize,
+    small: usize,
+    seed: u64,
+    granularity: usize,
+    con: Contraction,
+}
+
+fn contract_args(req: &Request) -> std::result::Result<ContractArgs, ReqError> {
+    let machine = machine_of(req)?;
+    let preset = req.str_opt("preset")?;
+    let spec_field = req.str_opt("spec")?;
+    if preset.is_some() && spec_field.is_some() {
+        return Err(ReqError::bad(
+            "'preset' sets the contraction spec; drop 'spec' (or drop 'preset')".to_string(),
+        ));
+    }
+    let spec_str = match &preset {
+        Some(p) => spec::preset_spec(p)
+            .ok_or_else(|| {
+                ReqError::bad(format!("unknown preset '{p}' (expected vector or challenging)"))
+            })?
+            .to_string(),
+        None => spec_field.unwrap_or_else(|| "abc=ai,ibc".to_string()),
+    };
+    let n = req.usize_or("n", 64)?;
+    let small = req.usize_or("small", 8)?;
+    let seed = req.u64_or("seed", 7)?;
+    let granularity = req.usize_or("granularity", 1)?.max(1);
+    let base =
+        Contraction::parse(&spec_str).map_err(|e| ReqError::bad(format!("bad spec: {e}")))?;
+    let con = base.sized_uniform(small, n);
+    Ok(ContractArgs { machine, spec_str, n, small, seed, granularity, con })
+}
+
+// --------------------------------------------------------------- rendering
+//
+// One formatting site per op, shared by the unbatched and fused paths:
+// given identical warm artifacts, both produce identical bytes. All are
+// pure functions of (args, computed results).
+
+fn render_predict(a: &BlockedArgs, models: &ModelStore, cache: &ModelCache) -> (String, Json) {
+    let mut output = String::new();
+    for alg in &a.algs {
+        let pred = predictor::predict_calls_cached(models, &alg.calls(a.n, a.b), cache);
+        output.push_str(&report::predict_line(&alg.name(), pred.time.med, pred.unmodeled_calls));
+        output.push('\n');
+    }
+    let data = Json::obj(vec![
+        ("algorithms", Json::Num(a.algs.len() as f64)),
+        ("b", Json::Num(a.b as f64)),
+        ("family", Json::Str(a.family.clone())),
+        ("n", Json::Num(a.n as f64)),
+    ]);
+    (output, data)
+}
+
+fn select_candidates(
+    a: &BlockedArgs,
+    models: &Arc<ModelStore>,
+    cache: &Arc<ModelCache>,
+) -> Vec<Arc<dyn Candidate + Send + Sync>> {
+    a.algs
+        .iter()
+        .map(|alg| {
+            Arc::new(BlockedCandidate {
+                store: Arc::clone(models),
+                cache: Arc::clone(cache),
+                alg: Arc::clone(alg),
+                n: a.n,
+                b: a.b,
+                label: None,
+                validate: None,
+            }) as _
+        })
+        .collect()
+}
+
+fn render_select(a: &BlockedArgs, ranked: &[Ranked]) -> (String, Json) {
+    let (table, _csv) = report::selection_table(ranked);
+    let output = format!("{}\n{table}", report::select_header(a.n, a.b, &a.machine.label()));
+    let data = Json::obj(vec![
+        ("b", Json::Num(a.b as f64)),
+        ("candidates", Json::Num(ranked.len() as f64)),
+        ("family", Json::Str(a.family.clone())),
+        ("n", Json::Num(a.n as f64)),
+        ("pred_med_s", Json::Num(ranked[0].predicted.time.med)),
+        ("winner", Json::Str(ranked[0].name.clone())),
+    ]);
+    (output, data)
+}
+
+fn render_blocksize(
+    a: &BlocksizeArgs,
+    sweep: &blocksize::BlockSizeSweep,
+    ranked: &[Ranked],
+) -> (String, Json) {
+    let (output, _csv) =
+        report::blocksize_block(&a.alg.name(), &a.machine.label(), a.n, ranked, sweep.b_pred);
+    let data = Json::obj(vec![
+        ("alg", Json::Str(a.alg.name())),
+        ("b_pred", Json::Num(sweep.b_pred as f64)),
+        ("candidates", Json::Num(ranked.len() as f64)),
+        ("family", Json::Str(a.family.clone())),
+        ("n", Json::Num(a.n as f64)),
+    ]);
+    (output, data)
+}
+
+fn render_contract(
+    a: &ContractArgs,
+    algs_len: usize,
+    distinct: usize,
+    ranked: &[Ranked],
+) -> (String, Json) {
+    let (table, _csv) = report::selection_table(ranked);
+    let output = format!(
+        "{}\n{table}",
+        report::contract_header(algs_len, &a.spec_str, a.n, a.small, &a.machine.label())
+    );
+    let data = Json::obj(vec![
+        ("algorithms", Json::Num(algs_len as f64)),
+        ("distinct_benchmarks", Json::Num(distinct as f64)),
+        ("granularity", Json::Num(a.granularity as f64)),
+        ("n", Json::Num(a.n as f64)),
+        ("pred_med_s", Json::Num(ranked[0].predicted.time.med)),
+        ("small", Json::Num(a.small as f64)),
+        ("spec", Json::Str(a.spec_str.clone())),
+        ("winner", Json::Str(ranked[0].name.clone())),
+    ]);
+    (output, data)
+}
+
 impl ServeState {
     pub fn new(opts: &ServeOpts) -> Result<ServeState> {
         let warm = match &opts.store_dir {
@@ -187,11 +461,20 @@ impl ServeState {
             blocked: Mutex::new(BTreeMap::new(), "serve-blocked-map"),
             memos: Mutex::new(BTreeMap::new(), "serve-memo-map"),
             coalescer: Coalescer::new("serve-coalescer"),
+            gate: Gate::new(opts.batch_window, opts.batch_max),
+            batch_window: opts.batch_window,
             requests: Mutex::new(BTreeMap::new(), "serve-request-counts"),
             served: AtomicU64::new(0),
             models_generated: AtomicU64::new(0),
             checkpoints: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
+            connections: AtomicUsize::new(0),
+            queue_peak: AtomicUsize::new(0),
+            batch_classes: AtomicU64::new(0),
+            batch_requests_fused: AtomicU64::new(0),
+            batch_points_fused: AtomicU64::new(0),
+            batch_fanouts: AtomicU64::new(0),
+            single_fanouts: AtomicU64::new(0),
         })
     }
 
@@ -199,57 +482,499 @@ impl ServeState {
         self.shutdown.load(Ordering::SeqCst)
     }
 
-    /// Handle one wire line. `None` for blank lines (keep-alive friendly);
-    /// otherwise exactly one response line (no trailing newline — the
-    /// transport frames it). Every parse/validation/compute failure maps
-    /// to a structured error response: the daemon never stops serving
-    /// over a bad request.
+    /// Handle one wire line, blocking until the response exists. `None`
+    /// for blank lines (keep-alive friendly); otherwise exactly one
+    /// response line (no trailing newline — the transport frames it).
+    /// Every parse/validation/compute failure maps to a structured error
+    /// response: the daemon never stops serving over a bad request.
+    ///
+    /// With `--batch-window > 0` a compute request may park in an open
+    /// batch class; this call then blocks until another arrival, a
+    /// barrier op, or an idle transport closes the class. Single-threaded
+    /// callers that feed many lines should use [`Self::dispatch`] (as
+    /// `serve_stdio` does) or [`Self::handle_script`] instead of looping
+    /// over `handle_line`, which would wait out each window serially.
     pub fn handle_line(&self, line: &str) -> Option<String> {
+        match self.dispatch(line)? {
+            Disposition::Ready(resp) => Some(resp),
+            Disposition::Parked(ticket, _slot) => Some(self.gate.wait(ticket)),
+        }
+    }
+
+    /// Handle one wire line without blocking on batch formation: the
+    /// non-blank, non-parked cases come back [`Disposition::Ready`]
+    /// immediately; a parked request returns its gate ticket. This is the
+    /// transport building block — `handle_line` is the blocking wrapper.
+    pub fn dispatch(&self, line: &str) -> Option<Disposition<'_>> {
         let trimmed = line.trim();
         if trimmed.is_empty() {
             return None;
         }
-        let resp = match protocol::parse_request(trimmed) {
-            Err((e, id)) => protocol::error_line(&id, e.code, &e.message),
-            Ok(req) => self.handle(&req),
-        };
-        let served = self.served.fetch_add(1, Ordering::SeqCst) + 1;
-        if self.checkpoint_every > 0 && served % self.checkpoint_every == 0 {
-            if let Err(e) = self.checkpoint() {
-                eprintln!("[dlapm serve] periodic checkpoint failed: {e}");
-            }
-        }
-        Some(resp)
+        Some(match protocol::parse_request(trimmed) {
+            Err((e, id)) => self.ready(protocol::error_line(&id, e.code, &e.message)),
+            Ok(req) => self.route(req),
+        })
     }
 
-    fn handle(&self, req: &Request) -> String {
+    /// Handle a whole script of lines (one per request) and return the
+    /// responses in request order, flushing any still-open batch classes
+    /// at the end — the deterministic batched analogue of mapping
+    /// `handle_line` over the lines. Blank lines yield no response.
+    pub fn handle_script(&self, script: &str) -> Vec<String> {
+        enum Pending<'a> {
+            Done(String),
+            Waiting(u64, InflightGuard<'a>),
+        }
+        let mut pending: Vec<Pending<'_>> = Vec::new();
+        for line in script.lines() {
+            match self.dispatch(line) {
+                None => {}
+                Some(Disposition::Ready(resp)) => pending.push(Pending::Done(resp)),
+                Some(Disposition::Parked(t, slot)) => pending.push(Pending::Waiting(t, slot)),
+            }
+        }
+        self.drain_gate();
+        pending
+            .into_iter()
+            .map(|p| match p {
+                Pending::Done(resp) => resp,
+                Pending::Waiting(t, _slot) => {
+                    self.gate.try_take(t).expect("flushed class left no response")
+                }
+            })
+            .collect()
+    }
+
+    /// Count one finished response and honor the periodic-checkpoint
+    /// cadence (request-counted, exactly as before batching: one tick per
+    /// response line produced).
+    fn note_served(&self, n: usize) {
+        for _ in 0..n {
+            let served = self.served.fetch_add(1, Ordering::SeqCst) + 1;
+            if self.checkpoint_every > 0 && served % self.checkpoint_every == 0 {
+                if let Err(e) = self.checkpoint() {
+                    eprintln!("[dlapm serve] periodic checkpoint failed: {e}");
+                }
+            }
+        }
+    }
+
+    fn ready(&self, resp: String) -> Disposition<'_> {
+        self.note_served(1);
+        Disposition::Ready(resp)
+    }
+
+    fn route(&self, req: Request) -> Disposition<'_> {
         *self.requests.lock().entry(req.op.clone()).or_insert(0) += 1;
         match req.op.as_str() {
             "status" => {
+                // Barrier op: close and run every open class first, so the
+                // reported counters reflect all requests that arrived
+                // before this one (and no batch outlives an observer).
+                self.drain_gate();
                 let (output, data) = self.status();
-                protocol::ok_line("status", &req.id, &output, data)
+                self.ready(protocol::ok_line("status", &req.id, &output, data))
             }
             "shutdown" => {
+                self.drain_gate();
                 self.shutdown.store(true, Ordering::SeqCst);
-                protocol::ok_line(
+                self.ready(protocol::ok_line(
                     "shutdown",
                     &req.id,
                     "shutting down after final checkpoint\n",
                     Json::obj(vec![]),
-                )
+                ))
             }
             _ => match self.admit() {
-                None => protocol::error_line(
+                None => self.ready(protocol::error_line(
                     &req.id,
                     "overloaded",
                     &format!("compute queue full (--max-queue {}); retry later", self.max_queue),
-                ),
-                Some(_slot) => match self.coalescer.run(&req.key, || self.compute(req)) {
-                    Ok((output, data)) => protocol::ok_line(&req.op, &req.id, &output, data),
-                    Err(e) => protocol::error_line(&req.id, e.code, &e.message),
-                },
+                )),
+                Some(slot) => {
+                    if self.batch_window == 0 {
+                        // Batching off: the exact pre-batching path.
+                        let _slot = slot;
+                        let resp = match self.coalescer.run(&req.key, || self.compute(&req)) {
+                            Ok((output, data)) => {
+                                protocol::ok_line(&req.op, &req.id, &output, data)
+                            }
+                            Err(e) => protocol::error_line(&req.id, e.code, &e.message),
+                        };
+                        return self.ready(resp);
+                    }
+                    match self.scope_of(&req) {
+                        Err(e) => self.ready(protocol::error_line(&req.id, e.code, &e.message)),
+                        Ok(class) => {
+                            let (ticket, batches) = self.gate.submit(&class, req);
+                            self.run_batches(batches);
+                            match self.gate.try_take(ticket) {
+                                // Already counted by run_batches.
+                                Some(resp) => Disposition::Ready(resp),
+                                None => Disposition::Parked(ticket, slot),
+                            }
+                        }
+                    }
+                }
             },
         }
+    }
+
+    /// The compatibility-class key for a compute request: the warm-state
+    /// scope its execution touches. Two requests with equal keys may fuse
+    /// into one batch — they share (op kind, machine, seed, coverage or
+    /// granularity), so one warm pass, one point sweep and one engine
+    /// fan-out serve the whole class. The family is deliberately NOT part
+    /// of the key: blocked scopes hold all families of one coverage, and
+    /// the fused path warms each member's family in arrival order exactly
+    /// like sequential execution would.
+    fn scope_of(&self, req: &Request) -> std::result::Result<String, ReqError> {
+        match req.op.as_str() {
+            "predict" | "select" => {
+                let a = blocked_args(req)?;
+                Ok(format!(
+                    "{}|{}|s{}|n{}|b{}",
+                    req.op,
+                    a.machine.label(),
+                    a.seed,
+                    a.cov_n(),
+                    a.cov_b()
+                ))
+            }
+            "blocksize" => {
+                let a = blocksize_args(req)?;
+                Ok(format!(
+                    "blocksize|{}|s{}|n{}|b{}",
+                    a.machine.label(),
+                    a.seed,
+                    a.cov_n(),
+                    a.cov_b()
+                ))
+            }
+            "contract_rank" => {
+                let a = contract_args(req)?;
+                Ok(format!("contract_rank|{}|s{}|g{}", a.machine.label(), a.seed, a.granularity))
+            }
+            other => Err(internal("dispatch", format!("op '{other}' not computable"))),
+        }
+    }
+
+    /// Close and execute every open batch class. Transports call this at
+    /// idle points (stdio EOF / TCP accept-loop idle), barrier ops
+    /// (`status`, `shutdown`) call it for ordering.
+    fn drain_gate(&self) {
+        self.run_batches(self.gate.flush());
+    }
+
+    /// Execute closed classes and publish each member's response through
+    /// the gate. A panic inside a class is caught per class: every member
+    /// still receives a (structured-error) response, so no waiter hangs.
+    fn run_batches(&self, batches: Vec<Batch>) {
+        for batch in batches {
+            let fallback: Vec<(u64, Json)> =
+                batch.members.iter().map(|(t, req)| (*t, req.id.clone())).collect();
+            let count = batch.members.len();
+            let results = catch_unwind(AssertUnwindSafe(|| self.execute_class(&batch.members)));
+            let results = match results {
+                Ok(r) => r,
+                Err(_) => {
+                    eprintln!(
+                        "[dlapm serve] batched computation panicked; \
+                         answering {count} member(s) with internal errors"
+                    );
+                    fallback
+                        .iter()
+                        .map(|(t, id)| {
+                            (
+                                *t,
+                                protocol::error_line(
+                                    id,
+                                    "internal",
+                                    "batched computation panicked; see stderr",
+                                ),
+                            )
+                        })
+                        .collect()
+                }
+            };
+            self.gate.complete(results);
+            self.note_served(count);
+        }
+    }
+
+    /// Run one closed class: dedup members by canonical request key
+    /// (coalescing inside the batch), compute each distinct request —
+    /// fused when there are several — and render every member's response
+    /// with its own `id`.
+    fn execute_class(&self, members: &[(u64, Request)]) -> Vec<(u64, String)> {
+        let mut distinct: Vec<&Request> = Vec::new();
+        let mut slot_of: Vec<usize> = Vec::with_capacity(members.len());
+        let mut by_key: BTreeMap<&str, usize> = BTreeMap::new();
+        for (_t, req) in members {
+            let slot = *by_key.entry(req.key.as_str()).or_insert_with(|| {
+                distinct.push(req);
+                distinct.len() - 1
+            });
+            slot_of.push(slot);
+        }
+        let outcomes: Vec<Outcome> = if distinct.len() == 1 {
+            // Single distinct computation: share it with identical
+            // requests already in flight outside the batch too.
+            let req = distinct[0];
+            vec![self.coalescer.run(&req.key, || self.compute(req))]
+        } else {
+            self.batch_classes.fetch_add(1, Ordering::SeqCst);
+            self.batch_requests_fused.fetch_add(members.len() as u64, Ordering::SeqCst);
+            self.compute_fused(&distinct)
+        };
+        members
+            .iter()
+            .zip(&slot_of)
+            .map(|((t, req), slot)| {
+                let resp = match &outcomes[*slot] {
+                    Ok((output, data)) => {
+                        protocol::ok_line(&req.op, &req.id, output, data.clone())
+                    }
+                    Err(e) => protocol::error_line(&req.id, e.code, &e.message),
+                };
+                (*t, resp)
+            })
+            .collect()
+    }
+
+    /// Fused execution of ≥ 2 distinct same-class requests: one outcome
+    /// per request, in order. Class keys guarantee every member shares
+    /// the op kind, so dispatch is by the first member's op.
+    fn compute_fused(&self, reqs: &[&Request]) -> Vec<Outcome> {
+        match reqs[0].op.as_str() {
+            "predict" => self.fused_blocked(reqs, false),
+            "select" => self.fused_blocked(reqs, true),
+            "blocksize" => self.fused_blocksize(reqs),
+            "contract_rank" => self.fused_contract(reqs),
+            other => {
+                let e = internal("dispatch", format!("op '{other}' not computable"));
+                reqs.iter().map(|_| Err(e.clone())).collect()
+            }
+        }
+    }
+
+    /// Fused `predict` / `select`: warm each member's family in arrival
+    /// order (the same ensured-set evolution as sequential execution),
+    /// price every member's `(n, b)` point through one batched-evaluation
+    /// pass per (family, algorithm), then — for `select` — rank all
+    /// members' candidates in one engine fan-out. Prewarmed cache values
+    /// are bit-identical to uncached predictions and rendering is shared,
+    /// so member bytes equal the unbatched bytes.
+    fn fused_blocked(&self, reqs: &[&Request], is_select: bool) -> Vec<Outcome> {
+        type Prepped = (BlockedArgs, Arc<ModelStore>, Arc<ModelCache>);
+        let prepped: Vec<std::result::Result<Prepped, ReqError>> = reqs
+            .iter()
+            .map(|req| {
+                blocked_args(req).and_then(|a| {
+                    let (models, cache) = self.blocked_warm(
+                        &a.machine,
+                        a.seed,
+                        a.cov_n(),
+                        a.cov_b(),
+                        &a.family,
+                        &a.algs,
+                    )?;
+                    Ok((a, models, cache))
+                })
+            })
+            .collect();
+        // One point sweep per family: (first-arrival index, members'
+        // points in arrival order).
+        let mut fam_order: Vec<String> = Vec::new();
+        let mut fam_points: BTreeMap<String, (usize, Vec<(usize, usize)>)> = BTreeMap::new();
+        for (i, p) in prepped.iter().enumerate() {
+            if let Ok((a, _, _)) = p {
+                let slot = fam_points.entry(a.family.clone()).or_insert_with(|| {
+                    fam_order.push(a.family.clone());
+                    (i, Vec::new())
+                });
+                slot.1.push((a.n, a.b));
+            }
+        }
+        let mut batched = 0usize;
+        for fam in &fam_order {
+            let (rep, points) = &fam_points[fam];
+            let (a, models, cache) =
+                prepped[*rep].as_ref().expect("family representative decoded");
+            for alg in &a.algs {
+                batched += blocksize::prewarm_grid(models, cache, alg.as_ref(), points);
+            }
+        }
+        self.batch_points_fused.fetch_add(batched as u64, Ordering::SeqCst);
+        if !is_select {
+            // `predict` reads the now-warm cache per member: no ranking
+            // fan-out at all for the class.
+            return prepped
+                .into_iter()
+                .map(|p| p.map(|(a, models, cache)| render_predict(&a, &models, &cache)))
+                .collect();
+        }
+        let groups: Vec<Vec<Arc<dyn Candidate + Send + Sync>>> = prepped
+            .iter()
+            .filter_map(|p| p.as_ref().ok())
+            .map(|(a, models, cache)| select_candidates(a, models, cache))
+            .collect();
+        if !groups.is_empty() {
+            self.batch_fanouts.fetch_add(1, Ordering::SeqCst);
+        }
+        match crate::select::rank_candidate_groups(&self.engine, &groups) {
+            Err(e) => {
+                let err = internal("selection ranking", e);
+                prepped.into_iter().map(|p| p.and(Err(err.clone()))).collect()
+            }
+            Ok(rankings) => {
+                let mut it = rankings.into_iter();
+                prepped
+                    .into_iter()
+                    .map(|p| {
+                        p.map(|(a, _, _)| {
+                            let ranked = it.next().expect("one ranking per candidate group");
+                            render_select(&a, &ranked)
+                        })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Fused `blocksize`: per-member warm in arrival order, then all
+    /// members' sweeps through `optimize_blocksize_grouped` — one batched
+    /// point pass and one engine fan-out for the whole class.
+    fn fused_blocksize(&self, reqs: &[&Request]) -> Vec<Outcome> {
+        type Prepped = (BlocksizeArgs, Arc<ModelStore>, Arc<ModelCache>);
+        let prepped: Vec<std::result::Result<Prepped, ReqError>> = reqs
+            .iter()
+            .map(|req| {
+                blocksize_args(req).and_then(|a| {
+                    let alg_slice = [Arc::clone(&a.alg)];
+                    let (models, cache) = self.blocked_warm(
+                        &a.machine,
+                        a.seed,
+                        a.cov_n(),
+                        a.cov_b(),
+                        &a.family,
+                        &alg_slice,
+                    )?;
+                    Ok((a, models, cache))
+                })
+            })
+            .collect();
+        let items: Vec<blocksize::SweepItem> = prepped
+            .iter()
+            .filter_map(|p| p.as_ref().ok())
+            .map(|(a, models, cache)| blocksize::SweepItem {
+                store: Arc::clone(models),
+                cache: Arc::clone(cache),
+                alg: Arc::clone(&a.alg),
+                n: a.n,
+                bs: a.bs.clone(),
+            })
+            .collect();
+        if !items.is_empty() {
+            self.batch_fanouts.fetch_add(1, Ordering::SeqCst);
+        }
+        match blocksize::optimize_blocksize_grouped(&self.engine, &items) {
+            Err(e) => {
+                let err = internal("block-size ranking", e);
+                prepped.into_iter().map(|p| p.and(Err(err.clone()))).collect()
+            }
+            Ok((results, batched)) => {
+                self.batch_points_fused.fetch_add(batched as u64, Ordering::SeqCst);
+                let mut it = results.into_iter();
+                prepped
+                    .into_iter()
+                    .map(|p| {
+                        p.map(|(a, _, _)| {
+                            let (sweep, ranked) = it.next().expect("one sweep per item");
+                            render_blocksize(&a, &sweep, &ranked)
+                        })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Fused `contract_rank`: one memo-scope resolution for the class
+    /// (members share it by construction), then every member's candidate
+    /// set ranked in one engine fan-out.
+    fn fused_contract(&self, reqs: &[&Request]) -> Vec<Outcome> {
+        let decoded: Vec<std::result::Result<ContractArgs, ReqError>> =
+            reqs.iter().map(|req| contract_args(req)).collect();
+        let memo = match decoded.iter().flatten().next() {
+            None => {
+                // Every member failed to decode; nothing to compute.
+                return decoded
+                    .into_iter()
+                    .map(|d| match d {
+                        Err(e) => Err(e),
+                        Ok(_) => unreachable!("flatten found no Ok member"),
+                    })
+                    .collect();
+            }
+            Some(a) => match self.memo_entry(&a.machine, a.seed, a.granularity) {
+                Ok(entry) => Arc::clone(&entry.memo),
+                Err(e) => {
+                    return decoded.into_iter().map(|d| d.and(Err(e.clone()))).collect();
+                }
+            },
+        };
+        let mut groups: Vec<Vec<Arc<dyn Candidate + Send + Sync>>> = Vec::new();
+        let mut metas: Vec<(usize, usize)> = Vec::new();
+        for a in decoded.iter().flatten() {
+            let algs = crate::tensor::generate(&a.con);
+            let (_reused, distinct) = micro::memo_reuse(&a.machine, &a.con, &algs, Elem::D, &memo);
+            groups.push(self.contract_candidates(a, &algs, &memo));
+            metas.push((algs.len(), distinct));
+        }
+        if !groups.is_empty() {
+            self.batch_fanouts.fetch_add(1, Ordering::SeqCst);
+        }
+        match crate::select::rank_candidate_groups(&self.engine, &groups) {
+            Err(e) => {
+                let err = internal("contraction ranking", e);
+                decoded.into_iter().map(|d| d.and(Err(err.clone()))).collect()
+            }
+            Ok(rankings) => {
+                let mut it = rankings.into_iter().zip(metas);
+                decoded
+                    .into_iter()
+                    .map(|d| {
+                        d.map(|a| {
+                            let (ranked, (algs_len, distinct)) =
+                                it.next().expect("one ranking per member");
+                            render_contract(&a, algs_len, distinct, &ranked)
+                        })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn contract_candidates(
+        &self,
+        a: &ContractArgs,
+        algs: &[TensorAlg],
+        memo: &Arc<MicroMemo>,
+    ) -> Vec<Arc<dyn Candidate + Send + Sync>> {
+        algs.iter()
+            .map(|alg| {
+                Arc::new(TensorCandidate {
+                    machine: a.machine.clone(),
+                    con: a.con.clone(),
+                    alg: alg.clone(),
+                    elem: Elem::D,
+                    seed: a.seed,
+                    memo: Arc::clone(memo),
+                    engine: Arc::clone(&self.engine),
+                    validate_reps: 0,
+                }) as _
+            })
+            .collect()
     }
 
     /// Claim a compute slot, or `None` when `--max-queue` compute ops are
@@ -263,6 +988,9 @@ impl ServeState {
         if self.max_queue > 0 && prev >= self.max_queue {
             return None; // `slot` drops here, undoing the increment
         }
+        // Track the high-water mark over *admitted* requests only —
+        // refused attempts never occupied a slot.
+        self.queue_peak.fetch_max(prev + 1, Ordering::SeqCst);
         Some(slot)
     }
 
@@ -445,179 +1173,52 @@ impl ServeState {
     // ---------------------------------------------------------------- ops
 
     fn op_predict(&self, req: &Request) -> Outcome {
-        let machine = machine_of(req)?;
-        let family = req.str_or("family", "potrf")?;
-        let n = req.usize_or("n", 2104)?;
-        let b = req.usize_or("b", 128)?;
-        let seed = req.u64_or("seed", 0x5EED)?;
-        let algs = registry_of(&family)?;
+        let a = blocked_args(req)?;
         let (models, cache) =
-            self.blocked_warm(&machine, seed, n.max(520), b.max(536), &family, &algs)?;
-        let mut output = String::new();
-        for alg in &algs {
-            let pred = predictor::predict_calls_cached(&models, &alg.calls(n, b), &cache);
-            output.push_str(&report::predict_line(
-                &alg.name(),
-                pred.time.med,
-                pred.unmodeled_calls,
-            ));
-            output.push('\n');
-        }
-        let data = Json::obj(vec![
-            ("algorithms", Json::Num(algs.len() as f64)),
-            ("b", Json::Num(b as f64)),
-            ("family", Json::Str(family)),
-            ("n", Json::Num(n as f64)),
-        ]);
-        Ok((output, data))
+            self.blocked_warm(&a.machine, a.seed, a.cov_n(), a.cov_b(), &a.family, &a.algs)?;
+        Ok(render_predict(&a, &models, &cache))
     }
 
     fn op_select(&self, req: &Request) -> Outcome {
-        let machine = machine_of(req)?;
-        let family = req.str_or("family", "potrf")?;
-        let n = req.usize_or("n", 2104)?;
-        let b = req.usize_or("b", 128)?;
-        let seed = req.u64_or("seed", 0x5EED)?;
-        let algs = registry_of(&family)?;
+        let a = blocked_args(req)?;
         let (models, cache) =
-            self.blocked_warm(&machine, seed, n.max(520), b.max(536), &family, &algs)?;
-        for alg in &algs {
-            blocksize::prewarm_grid(&models, &cache, alg.as_ref(), &[(n, b)]);
+            self.blocked_warm(&a.machine, a.seed, a.cov_n(), a.cov_b(), &a.family, &a.algs)?;
+        for alg in &a.algs {
+            blocksize::prewarm_grid(&models, &cache, alg.as_ref(), &[(a.n, a.b)]);
         }
-        let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
-            .iter()
-            .map(|alg| {
-                Arc::new(BlockedCandidate {
-                    store: Arc::clone(&models),
-                    cache: Arc::clone(&cache),
-                    alg: Arc::clone(alg),
-                    n,
-                    b,
-                    label: None,
-                    validate: None,
-                }) as _
-            })
-            .collect();
+        let cands = select_candidates(&a, &models, &cache);
+        self.single_fanouts.fetch_add(1, Ordering::SeqCst);
         let ranked = crate::select::rank_candidates_par(&self.engine, &cands)
             .map_err(|e| internal("selection ranking", e))?;
-        let (table, _csv) = report::selection_table(&ranked);
-        let output = format!("{}\n{table}", report::select_header(n, b, &machine.label()));
-        let data = Json::obj(vec![
-            ("b", Json::Num(b as f64)),
-            ("candidates", Json::Num(ranked.len() as f64)),
-            ("family", Json::Str(family)),
-            ("n", Json::Num(n as f64)),
-            ("pred_med_s", Json::Num(ranked[0].predicted.time.med)),
-            ("winner", Json::Str(ranked[0].name.clone())),
-        ]);
-        Ok((output, data))
+        Ok(render_select(&a, &ranked))
     }
 
     fn op_blocksize(&self, req: &Request) -> Outcome {
-        let machine = machine_of(req)?;
-        let family = req.str_or("family", "potrf")?;
-        let n = req.usize_or("n", 2000)?;
-        let bs = req.sizes_or("bs", blocksize::standard_bs)?;
-        let seed = req.u64_or("seed", 0x5EED)?;
-        let algs = registry_of(&family)?;
-        let alg: Arc<dyn BlockedAlg + Send + Sync> = match req.str_opt("alg")? {
-            None => Arc::clone(&algs[0]),
-            Some(name) => match algs.iter().find(|a| a.name() == name) {
-                Some(a) => Arc::clone(a),
-                None => {
-                    let known: Vec<String> = algs.iter().map(|a| a.name()).collect();
-                    return Err(ReqError::bad(format!(
-                        "unknown alg '{name}' for family '{family}' (available: {})",
-                        known.join(", ")
-                    )));
-                }
-            },
-        };
-        let cov_b = bs.iter().copied().max().unwrap_or(536).max(536);
-        let alg_slice = [Arc::clone(&alg)];
+        let a = blocksize_args(req)?;
+        let alg_slice = [Arc::clone(&a.alg)];
         let (models, cache) =
-            self.blocked_warm(&machine, seed, n.max(520), cov_b, &family, &alg_slice)?;
+            self.blocked_warm(&a.machine, a.seed, a.cov_n(), a.cov_b(), &a.family, &alg_slice)?;
+        self.single_fanouts.fetch_add(1, Ordering::SeqCst);
         let (sweep, ranked) =
-            blocksize::optimize_blocksize_with(&self.engine, &models, &cache, &alg, n, &bs)
+            blocksize::optimize_blocksize_with(&self.engine, &models, &cache, &a.alg, a.n, &a.bs)
                 .map_err(|e| internal("block-size ranking", e))?;
-        let (output, _csv) =
-            report::blocksize_block(&alg.name(), &machine.label(), n, &ranked, sweep.b_pred);
-        let data = Json::obj(vec![
-            ("alg", Json::Str(alg.name())),
-            ("b_pred", Json::Num(sweep.b_pred as f64)),
-            ("candidates", Json::Num(ranked.len() as f64)),
-            ("family", Json::Str(family)),
-            ("n", Json::Num(n as f64)),
-        ]);
-        Ok((output, data))
+        Ok(render_blocksize(&a, &sweep, &ranked))
     }
 
     fn op_contract(&self, req: &Request) -> Outcome {
-        let machine = machine_of(req)?;
-        let preset = req.str_opt("preset")?;
-        let spec_field = req.str_opt("spec")?;
-        if preset.is_some() && spec_field.is_some() {
-            return Err(ReqError::bad(
-                "'preset' sets the contraction spec; drop 'spec' (or drop 'preset')".to_string(),
-            ));
-        }
-        let spec_str = match &preset {
-            Some(p) => spec::preset_spec(p)
-                .ok_or_else(|| {
-                    ReqError::bad(format!(
-                        "unknown preset '{p}' (expected vector or challenging)"
-                    ))
-                })?
-                .to_string(),
-            None => spec_field.unwrap_or_else(|| "abc=ai,ibc".to_string()),
-        };
-        let n = req.usize_or("n", 64)?;
-        let small = req.usize_or("small", 8)?;
-        let seed = req.u64_or("seed", 7)?;
-        let granularity = req.usize_or("granularity", 1)?.max(1);
-        let base = Contraction::parse(&spec_str)
-            .map_err(|e| ReqError::bad(format!("bad spec: {e}")))?;
-        let con = base.sized_uniform(small, n);
-        let algs = crate::tensor::generate(&con);
-        let entry = self.memo_entry(&machine, seed, granularity)?;
+        let a = contract_args(req)?;
+        let algs = crate::tensor::generate(&a.con);
+        let entry = self.memo_entry(&a.machine, a.seed, a.granularity)?;
         let memo = Arc::clone(&entry.memo);
         // The distinct-benchmark count is a pure function of the request
         // (unlike the reused count, which depends on what ran before and
         // therefore stays out of the response).
-        let (_reused, distinct) = micro::memo_reuse(&machine, &con, &algs, Elem::D, &memo);
-        let cands: Vec<Arc<dyn Candidate + Send + Sync>> = algs
-            .iter()
-            .map(|alg| {
-                Arc::new(TensorCandidate {
-                    machine: machine.clone(),
-                    con: con.clone(),
-                    alg: alg.clone(),
-                    elem: Elem::D,
-                    seed,
-                    memo: Arc::clone(&memo),
-                    engine: Arc::clone(&self.engine),
-                    validate_reps: 0,
-                }) as _
-            })
-            .collect();
+        let (_reused, distinct) = micro::memo_reuse(&a.machine, &a.con, &algs, Elem::D, &memo);
+        let cands = self.contract_candidates(&a, &algs, &memo);
+        self.single_fanouts.fetch_add(1, Ordering::SeqCst);
         let ranked = crate::select::rank_candidates_par(&self.engine, &cands)
             .map_err(|e| internal("contraction ranking", e))?;
-        let (table, _csv) = report::selection_table(&ranked);
-        let output = format!(
-            "{}\n{table}",
-            report::contract_header(algs.len(), &spec_str, n, small, &machine.label())
-        );
-        let data = Json::obj(vec![
-            ("algorithms", Json::Num(algs.len() as f64)),
-            ("distinct_benchmarks", Json::Num(distinct as f64)),
-            ("granularity", Json::Num(granularity as f64)),
-            ("n", Json::Num(n as f64)),
-            ("pred_med_s", Json::Num(ranked[0].predicted.time.med)),
-            ("small", Json::Num(small as f64)),
-            ("spec", Json::Str(spec_str)),
-            ("winner", Json::Str(ranked[0].name.clone())),
-        ]);
-        Ok((output, data))
+        Ok(render_contract(&a, algs.len(), distinct, &ranked))
     }
 
     /// The one deliberately state-dependent op: deterministic functions
@@ -639,22 +1240,40 @@ impl ServeState {
         }
         let generated = self.models_generated.load(Ordering::SeqCst);
         let checkpoints = self.checkpoints.load(Ordering::SeqCst);
+        let batch_classes = self.batch_classes.load(Ordering::SeqCst);
+        let batch_requests = self.batch_requests_fused.load(Ordering::SeqCst);
+        let batch_points = self.batch_points_fused.load(Ordering::SeqCst);
+        let batch_fanouts = self.batch_fanouts.load(Ordering::SeqCst);
+        let single_fanouts = self.single_fanouts.load(Ordering::SeqCst);
+        let connections = self.connections.load(Ordering::SeqCst);
+        let queue_peak = self.queue_peak.load(Ordering::SeqCst);
         let req_obj =
             Json::Obj(requests.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect());
         let output = format!(
             "serve status: {handled} request(s) handled\n  \
              warm: {models} model(s), {cached} cached estimate(s), \
              {memo_entries} micro benchmark(s) over {memo_runs} kernel run(s)\n  \
-             this process: {generated} model(s) generated, {checkpoints} checkpoint(s) written\n"
+             this process: {generated} model(s) generated, {checkpoints} checkpoint(s) written\n  \
+             batch: {batch_classes} fused class(es) over {batch_requests} request(s), \
+             {batch_points} batched point(s); \
+             fan-outs: {single_fanouts} single, {batch_fanouts} fused\n  \
+             load: {connections} open connection(s), queue high-water {queue_peak}\n"
         );
         let data = Json::obj(vec![
+            ("batch_classes", Json::Num(batch_classes as f64)),
+            ("batch_fanouts", Json::Num(batch_fanouts as f64)),
+            ("batch_points_fused", Json::Num(batch_points as f64)),
+            ("batch_requests_fused", Json::Num(batch_requests as f64)),
             ("checkpoints", Json::Num(checkpoints as f64)),
+            ("connections", Json::Num(connections as f64)),
             ("memo_entries", Json::Num(memo_entries as f64)),
             ("memo_kernel_runs", Json::Num(memo_runs as f64)),
             ("model_cache_entries", Json::Num(cached as f64)),
             ("models", Json::Num(models as f64)),
             ("models_generated", Json::Num(generated as f64)),
+            ("queue_peak", Json::Num(queue_peak as f64)),
             ("requests", req_obj),
+            ("single_fanouts", Json::Num(single_fanouts as f64)),
             ("store", Json::Bool(self.warm.is_some())),
         ]);
         (output, data)
@@ -704,6 +1323,12 @@ fn finish(state: &ServeState) -> Result<()> {
 /// Stdin/stdout batch mode: read request lines from stdin, write one
 /// response line per request to stdout, in order. Exits gracefully
 /// (final checkpoint) on EOF, `{"op":"shutdown"}` or SIGINT.
+///
+/// Responses stay in request order: parked requests queue as pending
+/// dispositions and nothing behind an unresolved head is written. Batch
+/// classes close only on arrivals, barrier ops, or end of input — never
+/// on a timer — so the response stream for a given stdin is identical
+/// run to run at any `--batch-window`.
 pub fn serve_stdio(state: &Arc<ServeState>) -> Result<()> {
     sigint::install();
     let (tx, rx) = mpsc::channel::<std::io::Result<String>>();
@@ -716,25 +1341,53 @@ pub fn serve_stdio(state: &Arc<ServeState>) -> Result<()> {
         }
     });
     let stdout = std::io::stdout();
+    let mut pending: VecDeque<Disposition<'_>> = VecDeque::new();
     loop {
+        drain_stdio_queue(state, &mut pending, &stdout)?;
         if sigint::requested() || state.shutdown_requested() {
             break;
         }
         match rx.recv_timeout(Duration::from_millis(25)) {
             Ok(line) => {
                 let line = line.context("reading stdin")?;
-                if let Some(resp) = state.handle_line(&line) {
-                    let mut out = stdout.lock();
-                    out.write_all(resp.as_bytes()).context("writing response")?;
-                    out.write_all(b"\n").context("writing response")?;
-                    out.flush().context("flushing stdout")?;
+                if let Some(d) = state.dispatch(&line) {
+                    pending.push_back(d);
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => continue,
             Err(mpsc::RecvTimeoutError::Disconnected) => break, // EOF
         }
     }
+    // End of input: close any still-open classes and flush their
+    // responses before the final checkpoint.
+    state.drain_gate();
+    drain_stdio_queue(state, &mut pending, &stdout)?;
     finish(state)
+}
+
+/// Write every resolved response at the head of the pending queue, in
+/// order; stop at the first still-parked request (head-of-line order is
+/// the protocol contract for stdio).
+fn drain_stdio_queue<'a>(
+    state: &'a ServeState,
+    pending: &mut VecDeque<Disposition<'a>>,
+    stdout: &std::io::Stdout,
+) -> Result<()> {
+    while let Some(head) = pending.front_mut() {
+        let resp = match head {
+            Disposition::Ready(r) => std::mem::take(r),
+            Disposition::Parked(ticket, _slot) => match state.gate.try_take(*ticket) {
+                Some(r) => r,
+                None => return Ok(()),
+            },
+        };
+        pending.pop_front();
+        let mut out = stdout.lock();
+        out.write_all(resp.as_bytes()).context("writing response")?;
+        out.write_all(b"\n").context("writing response")?;
+        out.flush().context("flushing stdout")?;
+    }
+    Ok(())
 }
 
 /// TCP mode: line-oriented protocol on `addr` (`127.0.0.1:0` picks a free
@@ -749,30 +1402,37 @@ pub fn serve_tcp(state: &Arc<ServeState>, addr: &str) -> Result<()> {
     let local = listener.local_addr().context("resolving bound address")?;
     eprintln!("[dlapm serve] listening on {local}");
     listener.set_nonblocking(true).context("nonblocking listener")?;
-    let active = Arc::new(AtomicUsize::new(0));
     let mut handles = Vec::new();
     while !sigint::requested() && !state.shutdown_requested() {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let limit = state.max_connections;
-                if limit > 0 && active.load(Ordering::SeqCst) >= limit {
+                if limit > 0 && state.connections.load(Ordering::SeqCst) >= limit {
                     reject_overloaded(stream, limit);
                     continue;
                 }
-                active.fetch_add(1, Ordering::SeqCst);
+                state.connections.fetch_add(1, Ordering::SeqCst);
                 let st = Arc::clone(state);
-                let gauge = Arc::clone(&active);
                 handles.push(std::thread::spawn(move || {
                     connection(&st, stream);
-                    gauge.fetch_sub(1, Ordering::SeqCst);
+                    st.connections.fetch_sub(1, Ordering::SeqCst);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Idle accept loop: requests parked in open batch classes
+                // have no further arrivals coming from this lull, so close
+                // them now rather than letting blocked connection threads
+                // wait out the quiet period.
+                if state.gate.has_open() {
+                    state.drain_gate();
+                }
                 std::thread::sleep(Duration::from_millis(10));
             }
             Err(e) => return Err(e).context("accepting connection"),
         }
     }
+    // Unblock any connection thread still waiting on a parked request.
+    state.drain_gate();
     for h in handles {
         let _ = h.join();
     }
@@ -851,6 +1511,49 @@ pub fn run_client(addr: &str, request: &str) -> Result<String> {
     Ok(resp.trim_end_matches(['\r', '\n']).to_string())
 }
 
+/// The client retry schedule: bounded exponential backoff, 25 ms doubling
+/// to an 800 ms ceiling (25, 50, 100, 200, 400, 800, 800, …). A fixed
+/// table — never randomized and never clock-derived — so retry traffic is
+/// as reproducible as everything else here.
+pub fn retry_backoff(attempt: usize) -> Duration {
+    Duration::from_millis((25u64 << attempt.min(5)).min(800))
+}
+
+/// True when a response line is a structured `overloaded` refusal — the
+/// daemon saying "full now, retry later" (`--max-queue` refusals and
+/// accept-loop `--max-connections` rejections both use it).
+fn is_overloaded_line(line: &str) -> bool {
+    match Json::parse(line) {
+        Ok(j) => {
+            j.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str())
+                == Some("overloaded")
+        }
+        Err(_) => false,
+    }
+}
+
+/// [`run_client`] plus `--retry N`: on a connection error or an
+/// `overloaded` response, sleep the [`retry_backoff`] schedule and try
+/// again, up to `retries` additional attempts. The final outcome (success
+/// or the last error/refusal) surfaces unchanged; `retries == 0` is
+/// exactly `run_client`.
+pub fn run_client_with_retry(addr: &str, request: &str, retries: usize) -> Result<String> {
+    let mut attempt = 0usize;
+    loop {
+        match run_client(addr, request) {
+            Ok(resp) if is_overloaded_line(&resp) && attempt < retries => {}
+            Ok(resp) => return Ok(resp),
+            Err(e) => {
+                if attempt >= retries {
+                    return Err(e);
+                }
+            }
+        }
+        std::thread::sleep(retry_backoff(attempt));
+        attempt += 1;
+    }
+}
+
 /// `serve --client-script`: send every non-blank line of `script` over
 /// ONE TCP connection, in order, collecting one response line per
 /// request — the persistent-connection client (a one-shot `--client` per
@@ -861,52 +1564,109 @@ pub fn run_client(addr: &str, request: &str) -> Result<String> {
 /// answered, after which the server closes the connection and any
 /// remaining lines error.
 pub fn run_client_script(addr: &str, script: &str) -> Result<Vec<String>> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-    let mut reader =
-        BufReader::new(stream.try_clone().context("cloning client stream")?);
-    let mut responses = Vec::new();
-    for line in script.lines() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue; // blank lines get no response line (keep-alive)
-        }
-        stream.write_all(line.as_bytes()).context("sending request")?;
-        stream.write_all(b"\n").context("sending request")?;
-        stream.flush().context("sending request")?;
-        let mut resp = String::new();
-        reader.read_line(&mut resp).context("reading response")?;
-        crate::ensure!(
-            !resp.is_empty(),
-            "server closed the connection mid-script (after {} response(s))",
-            responses.len()
-        );
-        responses.push(resp.trim_end_matches(['\r', '\n']).to_string());
-    }
+    run_client_script_with_retry(addr, script, 0)
+}
+
+/// [`run_client_script`] plus `--retry N`: each request gets its own
+/// retry budget of `retries` attempts over the [`retry_backoff`]
+/// schedule. A connection failure (refused connect, mid-script close)
+/// reconnects and resumes at the first unanswered request — earlier
+/// responses are kept, never re-requested (responses are pure functions
+/// of their requests, so a resumed script's output is byte-identical to
+/// an uninterrupted run). An `overloaded` response likewise retries on a
+/// fresh connection; the final refusal/error surfaces unchanged once the
+/// budget is spent.
+pub fn run_client_script_with_retry(
+    addr: &str,
+    script: &str,
+    retries: usize,
+) -> Result<Vec<String>> {
+    let lines: Vec<&str> =
+        script.lines().map(str::trim).filter(|l| !l.is_empty()).collect();
     crate::ensure!(
-        !responses.is_empty(),
+        !lines.is_empty(),
         "--client-script needs at least one non-blank request line"
     );
-    Ok(responses)
+    let mut responses: Vec<String> = Vec::new();
+    let mut attempt = 0usize;
+    'reconnect: loop {
+        let mut stream = match TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))
+        {
+            Ok(s) => s,
+            Err(e) => {
+                if attempt >= retries {
+                    return Err(e);
+                }
+                std::thread::sleep(retry_backoff(attempt));
+                attempt += 1;
+                continue 'reconnect;
+            }
+        };
+        let mut reader =
+            BufReader::new(stream.try_clone().context("cloning client stream")?);
+        while responses.len() < lines.len() {
+            let line = lines[responses.len()];
+            let sent: Result<String> = (|| {
+                stream.write_all(line.as_bytes()).context("sending request")?;
+                stream.write_all(b"\n").context("sending request")?;
+                stream.flush().context("sending request")?;
+                let mut resp = String::new();
+                reader.read_line(&mut resp).context("reading response")?;
+                crate::ensure!(
+                    !resp.is_empty(),
+                    "server closed the connection mid-script (after {} response(s))",
+                    responses.len()
+                );
+                Ok(resp.trim_end_matches(['\r', '\n']).to_string())
+            })();
+            match sent {
+                Ok(resp) if is_overloaded_line(&resp) && attempt < retries => {
+                    std::thread::sleep(retry_backoff(attempt));
+                    attempt += 1;
+                    continue 'reconnect;
+                }
+                Ok(resp) => {
+                    responses.push(resp);
+                    attempt = 0; // per-request budget: a success resets it
+                }
+                Err(e) => {
+                    if attempt >= retries {
+                        return Err(e);
+                    }
+                    std::thread::sleep(retry_backoff(attempt));
+                    attempt += 1;
+                    continue 'reconnect;
+                }
+            }
+        }
+        return Ok(responses);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn state() -> ServeState {
-        state_with_queue(0)
-    }
-
-    fn state_with_queue(max_queue: usize) -> ServeState {
+    fn make_state(max_queue: usize, batch_window: u64, batch_max: usize) -> ServeState {
         ServeState::new(&ServeOpts {
             store_dir: None,
             jobs: 2,
             checkpoint_every: 0,
             max_connections: 0,
             max_queue,
+            batch_window,
+            batch_max,
         })
         .expect("serve state")
+    }
+
+    fn state() -> ServeState {
+        make_state(0, 0, 0)
+    }
+
+    fn state_with_queue(max_queue: usize) -> ServeState {
+        make_state(max_queue, 0, 0)
     }
 
     #[test]
@@ -1017,5 +1777,125 @@ mod tests {
         assert_eq!(reqs.get("shutdown").unwrap().as_usize(), Some(1));
         assert_eq!(reqs.get("status").unwrap().as_usize(), Some(1)); // itself
         assert_eq!(j.get("data").unwrap().get("store").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn retry_backoff_is_deterministic_and_bounded() {
+        let ms: Vec<u64> =
+            (0..8).map(|a| retry_backoff(a).as_millis() as u64).collect();
+        assert_eq!(ms, vec![25, 50, 100, 200, 400, 800, 800, 800]);
+        assert!(is_overloaded_line(
+            r#"{"error":{"code":"overloaded","message":"full"},"id":null,"ok":false,"v":1}"#
+        ));
+        assert!(!is_overloaded_line(
+            r#"{"error":{"code":"bad-request","message":"no"},"id":null,"ok":false,"v":1}"#
+        ));
+        assert!(!is_overloaded_line("not json"));
+    }
+
+    #[test]
+    fn scope_keys_fuse_compatible_requests_and_split_incompatible_ones() {
+        let s = state();
+        let key = |line: &str| {
+            let req = protocol::parse_request(line).expect("parse");
+            s.scope_of(&req).expect("scope")
+        };
+        // Below the coverage floors (n <= 520, b <= 536) everything in a
+        // family-agnostic blocked scope fuses.
+        assert_eq!(
+            key(r#"{"op":"select","n":520,"b":104,"seed":5}"#),
+            key(r#"{"op":"select","n":400,"b":96,"seed":5}"#)
+        );
+        // The family is deliberately NOT part of the class key.
+        assert_eq!(
+            key(r#"{"op":"select","family":"potrf","n":520,"seed":5}"#),
+            key(r#"{"op":"select","family":"trtri","n":520,"seed":5}"#)
+        );
+        // Op kind, seed, coverage and machine all split the class.
+        let base = key(r#"{"op":"select","n":520,"seed":5}"#);
+        assert_ne!(base, key(r#"{"op":"predict","n":520,"seed":5}"#));
+        assert_ne!(base, key(r#"{"op":"select","n":520,"seed":6}"#));
+        assert_ne!(base, key(r#"{"op":"select","n":2104,"seed":5}"#));
+        assert_ne!(base, key(r#"{"op":"select","n":520,"seed":5,"cpu":"sandybridge"}"#));
+        // Contract classes key on granularity, not on problem size.
+        assert_eq!(
+            key(r#"{"op":"contract_rank","n":20,"small":4,"seed":7}"#),
+            key(r#"{"op":"contract_rank","n":24,"small":4,"seed":7}"#)
+        );
+        // Scope decoding reports the same bad-request the compute path
+        // would, so batching never changes an error response.
+        let req = protocol::parse_request(r#"{"op":"select","cpu":"z80"}"#).expect("parse");
+        let err = s.scope_of(&req).expect_err("unknown cpu");
+        assert_eq!(err.code, "bad-request");
+    }
+
+    #[test]
+    fn batched_script_responses_match_unbatched_byte_for_byte() {
+        let script = concat!(
+            r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":20,"small":4,"seed":7,"id":1}"#,
+            "\n",
+            r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":24,"small":4,"seed":7,"id":2}"#,
+            "\n",
+            r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":20,"small":4,"seed":7,"id":3}"#,
+            "\n",
+        );
+        let unbatched = state().handle_script(script);
+        assert_eq!(unbatched.len(), 3);
+        for (window, max) in [(4u64, 0usize), (100, 1), (100, 2)] {
+            let s = make_state(0, window, max);
+            assert_eq!(
+                s.handle_script(script),
+                unbatched,
+                "window {window} / max {max} changed response bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_class_performs_one_fanout_with_zero_single_fanouts() {
+        let s = make_state(0, 8, 0);
+        let script = concat!(
+            r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":16,"small":4,"seed":7}"#,
+            "\n",
+            r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":18,"small":4,"seed":7}"#,
+            "\n",
+            r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":20,"small":4,"seed":7}"#,
+            "\n",
+            r#"{"op":"status","id":"s"}"#,
+            "\n",
+        );
+        let responses = s.handle_script(script);
+        assert_eq!(responses.len(), 4);
+        for r in &responses[..3] {
+            let j = Json::parse(r).unwrap();
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        }
+        // The status barrier drained the class before reporting, so the
+        // counters already reflect the fused execution: one class, three
+        // members, exactly one engine fan-out and no per-request ones.
+        let j = Json::parse(&responses[3]).unwrap();
+        let data = j.get("data").unwrap();
+        assert_eq!(data.get("batch_classes").unwrap().as_usize(), Some(1));
+        assert_eq!(data.get("batch_requests_fused").unwrap().as_usize(), Some(3));
+        assert_eq!(data.get("batch_fanouts").unwrap().as_usize(), Some(1));
+        assert_eq!(data.get("single_fanouts").unwrap().as_usize(), Some(0));
+        assert!(data.get("queue_peak").unwrap().as_usize().unwrap() >= 1);
+    }
+
+    #[test]
+    fn single_member_class_takes_the_unfused_path() {
+        let s = make_state(0, 2, 0);
+        let script = concat!(
+            r#"{"op":"contract_rank","spec":"abc=ai,ibc","n":20,"small":4,"seed":7}"#,
+            "\n",
+            r#"{"op":"status"}"#,
+            "\n",
+        );
+        let responses = s.handle_script(script);
+        let j = Json::parse(&responses[1]).unwrap();
+        let data = j.get("data").unwrap();
+        assert_eq!(data.get("batch_classes").unwrap().as_usize(), Some(0));
+        assert_eq!(data.get("batch_fanouts").unwrap().as_usize(), Some(0));
+        assert_eq!(data.get("single_fanouts").unwrap().as_usize(), Some(1));
     }
 }

@@ -309,6 +309,136 @@ fn client_script_reuses_one_connection_and_matches_one_shots() {
     assert!(status.success(), "daemon exit: {status:?}");
 }
 
+/// The batching purity rule, end to end: the same stdio script answered
+/// with batching off, with a 4-arrival window, and with the window
+/// degenerated by `--batch-max 1`, crossed with `--jobs` 1/4 and
+/// `--shards` 1/4, produces byte-identical stdout in all twelve
+/// configurations. Three same-scope selects (they fuse into one class at
+/// window 4) plus a predict (its own class — op kind splits scopes).
+#[test]
+fn batching_is_byte_identical_across_windows_jobs_and_shards() {
+    let script = concat!(
+        r#"{"op":"select","cpu":"sandybridge","n":520,"b":104,"seed":5,"id":"s1"}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":400,"b":96,"seed":5,"id":"s2"}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":360,"b":104,"seed":5,"id":"s3"}"#,
+        "\n",
+        r#"{"op":"predict","cpu":"sandybridge","n":520,"b":104,"seed":5,"id":"p1"}"#,
+        "\n",
+    );
+    // One shared warm store: the first run generates the models, the rest
+    // warm-load — response purity makes cold and warm bytes identical,
+    // and the sharing keeps twelve daemon runs cheap.
+    let dir = TempDir::new("serve_batch_parity");
+    let store = dir.path().to_str().expect("utf-8 temp path").to_string();
+    let batch_cfgs: [&[&str]; 3] = [
+        &[],
+        &["--batch-window", "4"],
+        &["--batch-window", "4", "--batch-max", "1"],
+    ];
+    let mut baseline: Option<String> = None;
+    for jobs in ["1", "4"] {
+        for shards in ["1", "4"] {
+            for batch in batch_cfgs {
+                let mut extra = vec!["--jobs", jobs, "--shards", shards, "--store", &store];
+                extra.extend_from_slice(batch);
+                let (out, err, ok) = serve_stdio(&extra, script);
+                assert!(ok, "jobs {jobs} shards {shards} {batch:?}: {err}");
+                assert_eq!(out.lines().count(), 4, "{out}");
+                match &baseline {
+                    None => baseline = Some(out),
+                    Some(first) => assert_eq!(
+                        &out, first,
+                        "jobs {jobs} shards {shards} {batch:?} changed response bytes"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// The fused-execution acceptance criterion, observable over the wire:
+/// three same-scope selects inside one window report exactly one fused
+/// class of three requests, one fused engine fan-out, zero per-request
+/// fan-outs, and a positive batched-point count.
+#[test]
+fn fused_class_counters_show_one_fanout_and_batched_points() {
+    let script = concat!(
+        r#"{"op":"select","cpu":"sandybridge","n":520,"b":104,"seed":5,"id":"s1"}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":400,"b":96,"seed":5,"id":"s2"}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":360,"b":104,"seed":5,"id":"s3"}"#,
+        "\n",
+        r#"{"op":"status","id":"st"}"#,
+        "\n",
+    );
+    let (out, err, ok) = serve_stdio(&["--jobs", "2", "--batch-window", "8"], script);
+    assert!(ok, "{err}");
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 4, "{out}");
+    for line in &lines[..3] {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{line}");
+    }
+    let status = Json::parse(lines[3]).unwrap();
+    let data = status.get("data").cloned().unwrap();
+    let count = |k: &str| data.get(k).unwrap().as_usize().unwrap();
+    assert_eq!(count("batch_classes"), 1, "{}", lines[3]);
+    assert_eq!(count("batch_requests_fused"), 3, "{}", lines[3]);
+    assert_eq!(count("batch_fanouts"), 1, "one engine fan-out for the class: {}", lines[3]);
+    assert_eq!(count("single_fanouts"), 0, "no per-request fan-outs: {}", lines[3]);
+    assert!(count("batch_points_fused") > 0, "points must batch-evaluate: {}", lines[3]);
+    assert!(count("queue_peak") >= 1, "{}", lines[3]);
+}
+
+/// `--retry N` on the one-shot client: while the only `--max-connections`
+/// slot is held, the client is rejected with `overloaded`; once the
+/// holder disconnects (mid-backoff), a retry gets through and the final
+/// answer is an ordinary ok response.
+#[test]
+fn client_retry_recovers_from_connection_rejection() {
+    let (mut child, addr) = spawn_tcp(&["--jobs", "1", "--max-connections", "1"]);
+    // Occupy the only slot and prove the connection is live.
+    let mut held = std::net::TcpStream::connect(&addr).expect("first connection");
+    held.write_all(b"{\"op\":\"status\",\"id\":\"hold\"}\n").expect("request on held conn");
+    held.flush().expect("flush held conn");
+    let mut held_reader = BufReader::new(held.try_clone().expect("clone held conn"));
+    let mut resp = String::new();
+    held_reader.read_line(&mut resp).expect("response on held conn");
+    assert_eq!(Json::parse(resp.trim()).unwrap().get("ok").unwrap().as_bool(), Some(true));
+    // Free the slot only after the client has had time to be rejected at
+    // least once (its backoff schedule starts at 25ms and totals ~3s).
+    let holder = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        drop(held_reader);
+        drop(held);
+    });
+    let out = dlapm()
+        .args([
+            "serve",
+            "--client",
+            r#"{"op":"status","id":"retry"}"#,
+            "--addr",
+            &addr,
+            "--retry",
+            "8",
+        ])
+        .output()
+        .expect("spawning dlapm serve --client --retry");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let j = Json::parse(stdout.trim()).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "retry must end in success: {stdout}");
+    assert_eq!(j.get("id").unwrap().as_str(), Some("retry"));
+    holder.join().expect("holder thread");
+    let bye = one_shot(&addr, r#"{"op":"shutdown"}"#);
+    assert_eq!(Json::parse(&bye).unwrap().get("ok").unwrap().as_bool(), Some(true), "{bye}");
+    let status = child.wait().expect("waiting for dlapm serve");
+    assert!(status.success(), "daemon exit: {status:?}");
+}
+
 /// `--max-connections 1`: while one connection is open, a second one gets
 /// a structured `overloaded` error at the accept loop (null id — no
 /// request was read); after the first closes, its slot frees and new
