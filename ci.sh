@@ -160,7 +160,7 @@ if ! grep -q '"ok":true' "$SMOKE_DIR/serve_jobs1.txt"; then
     exit 1
 fi
 # The warm run reused everything, so its final checkpoint writes nothing.
-if ! grep -q "shutdown: 0 warm slot(s) checkpointed" "$SMOKE_DIR/serve_jobs4.err"; then
+if ! grep -q "event=shutdown 0 warm slot(s) checkpointed" "$SMOKE_DIR/serve_jobs4.err"; then
     echo "ERROR: warm serve run should have nothing new to checkpoint:" >&2
     cat "$SMOKE_DIR/serve_jobs4.err" >&2
     exit 1
@@ -217,6 +217,46 @@ else
     exit 1
 fi
 
+echo "== serve trace-parity smoke (--trace must not change response bytes) =="
+# Re-run the batch-parity script with span tracing enabled: the response
+# stream must be byte-identical to the untraced window-4 run, and the
+# trace file must record the full request lifecycle.
+TRACE_FILE="$SMOKE_DIR/serve_trace.jsonl"
+cargo run -q --bin dlapm -- --trace "$TRACE_FILE" serve --stdio --jobs 2 --batch-window 4 \
+    < "$SMOKE_DIR/batch_script.jsonl" \
+    > "$SMOKE_DIR/serve_traced.txt" 2> "$SMOKE_DIR/serve_traced.err"
+if cmp -s "$SMOKE_DIR/serve_window4.txt" "$SMOKE_DIR/serve_traced.txt"; then
+    echo "serve responses are byte-identical with and without --trace"
+else
+    echo "ERROR: --trace changed the serve response stream:" >&2
+    diff "$SMOKE_DIR/serve_window4.txt" "$SMOKE_DIR/serve_traced.txt" >&2 || true
+    exit 1
+fi
+for span in serve.admit serve.class_close serve.fused_exec serve.render; do
+    if ! grep -q "\"name\":\"$span\"" "$TRACE_FILE"; then
+        echo "ERROR: trace file is missing the '$span' span:" >&2
+        cat "$TRACE_FILE" >&2
+        exit 1
+    fi
+done
+echo "trace file records the admit/close/execute/render lifecycle"
+
+echo "== serve metrics-op smoke (exposition via the wire protocol) =="
+printf '%s\n' \
+    '{"op":"contract_rank","spec":"abc=ai,ibc","n":24,"small":4,"seed":7,"id":1}' \
+    '{"op":"metrics","id":2}' \
+    '{"op":"shutdown","id":3}' > "$SMOKE_DIR/metrics_script.jsonl"
+cargo run -q --bin dlapm -- serve --stdio --jobs 2 \
+    < "$SMOKE_DIR/metrics_script.jsonl" > "$SMOKE_DIR/serve_metrics.txt"
+for name in dlapm_serve_requests_total dlapm_engine_jobs_total dlapm_serve_latency_us; do
+    if ! grep -q "$name" "$SMOKE_DIR/serve_metrics.txt"; then
+        echo "ERROR: 'metrics' op response is missing the $name series:" >&2
+        cat "$SMOKE_DIR/serve_metrics.txt" >&2
+        exit 1
+    fi
+done
+echo "metrics op exposes the registry (requests, engine jobs, latency series)"
+
 echo "== serve protocol docs freshness (every op documented) =="
 SERVE_OPS="$(sed -n '/pub const OPS/,/];/p' src/serve/protocol.rs \
     | grep -oE '"[a-z_]+"' | tr -d '"')"
@@ -231,6 +271,22 @@ for op in $SERVE_OPS; do
     fi
 done
 echo "all $(echo "$SERVE_OPS" | wc -w) serve ops documented in docs/serve-protocol.md"
+
+echo "== metrics docs freshness (every registered metric documented) =="
+METRIC_NAMES="$(grep -oE 'r\.(counter|gauge)\("dlapm_[a-z_]+"\)' src/obs/metrics.rs \
+    | grep -oE 'dlapm_[a-z_]+')"
+METRIC_NAMES="$METRIC_NAMES dlapm_serve_latency_us"
+if [ "$(echo "$METRIC_NAMES" | wc -w)" -lt 10 ]; then
+    echo "ERROR: could not extract the metric inventory from src/obs/metrics.rs" >&2
+    exit 1
+fi
+for name in $METRIC_NAMES; do
+    if ! grep -q "$name" docs/serve-protocol.md; then
+        echo "ERROR: metric '$name' is not documented in docs/serve-protocol.md" >&2
+        exit 1
+    fi
+done
+echo "all $(echo "$METRIC_NAMES" | wc -w) registered metrics documented in docs/serve-protocol.md"
 
 if [ "$BENCH" -eq 1 ]; then
     echo "== bench suites (recording BENCH_<suite>.json) =="

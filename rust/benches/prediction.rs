@@ -216,5 +216,29 @@ fn main() {
             dlapm::runtime::polyeval_model(&mut rt, &model, dlapm::util::stats::Stat::Med, &pts).unwrap().len()
         });
     }
+    // Metrics hot path: the per-event cost every migrated mirror pays on
+    // the production path — 10k sharded-counter increments plus a
+    // cross-shard read, on one cache-line-aligned obs counter.
+    suite.add("engine/metrics-hot-path", || {
+        let h = dlapm::obs::metrics::handles();
+        for _ in 0..10_000u32 {
+            h.engine_jobs.add(1);
+        }
+        h.engine_jobs.get()
+    });
+    // Observability overhead A/B: the same warm fused-select script with
+    // span tracing off (global default) vs streaming JSON-lines to a
+    // file. Responses are byte-identical either way; the delta is the
+    // pure cost of span assembly and buffered trace writes. These two
+    // run LAST because trace::init is one-way and process-global — the
+    // "off" leg must be measured before the sink exists.
+    let traced = ServeState::new(&opts(8)).unwrap();
+    traced.handle_script(mixed_selects);
+    suite.add("serve/traced-vs-untraced/off", || traced.handle_script(mixed_selects).len());
+    let trace_path =
+        std::env::temp_dir().join(format!("dlapm_bench_trace_{}.jsonl", std::process::id()));
+    dlapm::obs::trace::init(trace_path.to_str().unwrap()).unwrap();
+    suite.add("serve/traced-vs-untraced/on", || traced.handle_script(mixed_selects).len());
+    let _ = std::fs::remove_file(&trace_path);
     suite.finish();
 }

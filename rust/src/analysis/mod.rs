@@ -169,8 +169,27 @@ mod tests {
         let vs = scan_source("m.rs", src);
         assert_eq!(vs.len(), 1);
         assert_eq!((vs[0].rule, vs[0].line), ("wall-clock-in-pure-path", 2));
-        // The benchmarking harness is the one sanctioned timer site.
+        // The benchmarking harness is the one sanctioned timer site…
         assert!(rule_list("util/bench.rs", src).is_empty());
+        // …and the observability layer, whose timestamps never reach
+        // output bytes (trace files and histograms only).
+        assert!(rule_list("obs/trace.rs", src).is_empty());
+        assert!(rule_list("obs/metrics.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_obs_reads_in_report_scope_exactly_once() {
+        let src = "fn table() -> String {\n    \
+                   format!(\"rows={}\", crate::obs::metrics::handles().serve_requests.get())\n}\n";
+        let vs = scan_source("report.rs", src);
+        assert_eq!(vs.len(), 1);
+        assert_eq!((vs[0].rule, vs[0].line), ("trace-in-response-path", 2));
+        // Outside report:: formatting code the same read is fine (the
+        // status op and stderr are the sanctioned state-dependent outputs).
+        assert!(rule_list("serve/server.rs", src).is_empty());
+        // Prose and strings never flag.
+        let prose = "// obs:: reads are banned here\nfn f() -> &'static str {\n    \"obs::\"\n}\n";
+        assert!(rule_list("report.rs", prose).is_empty());
     }
 
     #[test]

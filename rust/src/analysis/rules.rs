@@ -11,14 +11,20 @@
 //!   per-process random hasher seed; anything derived from the order
 //!   (float sums, ties, output lines) varies run to run.
 //! * `wall-clock-in-pure-path` — `Instant::now` / `SystemTime` outside
-//!   the benchmarking harness leaks real time into results that must be
-//!   pure functions of their inputs.
+//!   the benchmarking harness and the observability layer (`obs/`,
+//!   whose timestamps flow only into traces and histograms, never into
+//!   output bytes) leaks real time into results that must be pure
+//!   functions of their inputs.
 //! * `raw-sync-primitive` — `std::sync::{Mutex, RwLock, Condvar}` used
 //!   directly skip `util::sync`'s poison recovery and debug-build
 //!   lock-order cycle detection.
 //! * `stdout-float-format` — fixed-precision float formatting in the
 //!   persistence layer (`store/`, `util/json.rs`) rounds away drift that
 //!   byte-comparison tests exist to catch.
+//! * `trace-in-response-path` — `obs::` reads inside `report::`
+//!   formatting code would let span/metric state leak into rendered
+//!   output, breaking the rule that responses are pure functions of the
+//!   request key (tracing on vs off must be byte-identical).
 //!
 //! Rules are line-based heuristics over the stripped views from
 //! [`super::strip`]; a multi-line method chain can escape them. They are
@@ -30,12 +36,13 @@ use super::strip::{is_ident, LineView};
 
 /// All allowlistable rule names (the pragma parser validates against
 /// this; `lint-pragma` itself is not suppressible).
-pub const RULE_NAMES: [&str; 5] = [
+pub const RULE_NAMES: [&str; 6] = [
     "nan-partial-cmp",
     "unsorted-map-iter",
     "wall-clock-in-pure-path",
     "raw-sync-primitive",
     "stdout-float-format",
+    "trace-in-response-path",
 ];
 
 /// Outcome of inspecting one line's comment for an allow pragma.
@@ -88,6 +95,7 @@ pub fn check_lines(label: &str, views: &[LineView]) -> Vec<(usize, &'static str,
             ));
         }
         if label != "util/bench.rs"
+            && !label.starts_with("obs/")
             && (code.contains("Instant::now") || token_at(code, "SystemTime"))
         {
             out.push((
@@ -104,6 +112,16 @@ pub fn check_lines(label: &str, views: &[LineView]) -> Vec<(usize, &'static str,
                 "raw-sync-primitive",
                 "raw std::sync lock primitive; use util::sync wrappers \
                  (poison recovery + lock-order cycle detection)"
+                    .to_string(),
+            ));
+        }
+        if label.starts_with("report") && code.contains("obs::") {
+            out.push((
+                i,
+                "trace-in-response-path",
+                "observability reads inside report:: formatting leak span/metric \
+                 state into rendered output; responses must be pure functions of \
+                 the request key"
                     .to_string(),
             ));
         }

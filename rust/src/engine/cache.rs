@@ -160,10 +160,12 @@ impl ModelCache {
             let shard = self.shards.shard_at(idx).read();
             if let Some(hit) = shard.get(case).and_then(|inner| inner.get(&key)) {
                 self.stats[idx].hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::metrics::handles().model_cache_hits.add(1);
                 return *hit;
             }
         }
         self.stats[idx].misses.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::handles().model_cache_misses.add(1);
         let value = compute(&key.0[..sizes.len()]);
         self.shards.shard_at(idx).write().entry(case.to_string()).or_default().insert(key, value);
         value

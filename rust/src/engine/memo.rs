@@ -115,10 +115,12 @@ impl<V: Copy> Memo<V> {
             let shard = self.shards.shard_at(idx).read();
             if let Some(hit) = shard.get(key) {
                 self.stats[idx].hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::metrics::handles().memo_hits.add(1);
                 return *hit;
             }
         }
         self.stats[idx].misses.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::handles().memo_misses.add(1);
         let value = compute();
         self.shards.shard_at(idx).write().entry(key.to_string()).or_insert(value);
         value

@@ -124,6 +124,7 @@ impl Shared {
         let n = self.deques.len();
         for off in 1..n {
             if let Some(job) = self.deques[(own + off) % n].lock().pop_back() {
+                crate::obs::metrics::handles().engine_steals.add(1);
                 return Some(job);
             }
         }
@@ -170,10 +171,12 @@ fn worker_loop(shared: Arc<Shared>, own: usize) {
             continue;
         }
         guard.idle += 1;
+        crate::obs::metrics::handles().engine_parks.add(1);
         let mut guard = shared.signal.wait_while(guard, |st| {
             st.generation == seen && !shared.shutdown.load(Ordering::SeqCst)
         });
         guard.idle -= 1;
+        crate::obs::metrics::handles().engine_wakes.add(1);
     }
 }
 
@@ -256,6 +259,10 @@ impl Engine {
             }));
         }
         drop(tx);
+        let obs = crate::obs::metrics::handles();
+        obs.engine_jobs.add(n as u64);
+        obs.engine_queue_depth_peak.record_max(n as u64);
+        let span = crate::obs::trace::begin("engine.batch", "", "");
         // Batch-aware fan-out: rouse at most as many sleepers as there
         // are queued jobs (the submitter itself helps below, so tiny
         // batches often complete with zero worker wakeups).
@@ -292,6 +299,9 @@ impl Engine {
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => break,
             }
+        }
+        if let Some(s) = span {
+            s.num("jobs", n as u64).num("workers", self.jobs as u64).finish();
         }
         let mut out = Vec::with_capacity(n);
         for (i, slot) in slots.into_iter().enumerate() {

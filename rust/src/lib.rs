@@ -35,7 +35,12 @@
 //!   paper's evaluation (see DESIGN.md §6);
 //! * [`analysis`] — the determinism lint behind `dlapm lint`: a
 //!   zero-dependency static scan of the crate's own sources for patterns
-//!   that break the byte-identical-output contract.
+//!   that break the byte-identical-output contract;
+//! * [`obs`] — unified observability: the process-wide metrics registry
+//!   (counters / gauges / fixed-boundary histograms, exported via the
+//!   `metrics` wire op and `serve --metrics-addr`), `--trace` span
+//!   tracing, and the daemon's leveled `level=… event=…` stderr logging
+//!   — all outside the response path by construction.
 
 // Crate-wide style posture for the clippy `-D warnings` CI gate: indexed
 // loops over parallel fixed-size arrays and wide-but-explicit argument
@@ -44,6 +49,7 @@
 
 pub mod analysis;
 pub mod engine;
+pub mod obs;
 pub mod machine;
 pub mod util;
 pub mod sampler;

@@ -31,6 +31,16 @@ fn main() {
     if shards > 0 {
         dlapm::util::sync::set_default_shards(shards);
     }
+    // `--trace FILE|-` streams JSON-lines observability spans (request
+    // lifecycle, engine batches, model generation, micro-benchmark runs)
+    // to FILE, or stderr for '-'. Tracing never touches stdout or
+    // response bytes: output is byte-identical with it on or off.
+    if let Some(path) = args.get("trace") {
+        if let Err(e) = dlapm::obs::trace::init(path) {
+            eprintln!("--trace {path}: {e}");
+            std::process::exit(2);
+        }
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "figures" => figures_cmd(&args),
@@ -96,7 +106,7 @@ subcommands:
                         byte-identical ranking tables
   serve    --store DIR [--stdio | --addr HOST:PORT] [--jobs N]
            [--checkpoint-every R] [--max-connections C] [--max-queue Q]
-           [--batch-window W] [--batch-max M]
+           [--batch-window W] [--batch-max M] [--metrics-addr HOST:PORT]
            prediction-as-a-service daemon: load all warm state once and
            answer predict/select/blocksize/contract_rank requests over a
            line-oriented JSON protocol (see docs/serve-protocol.md);
@@ -128,6 +138,11 @@ subcommands:
                       structured 'overloaded' refusals up to N times with
                       bounded exponential backoff (25ms doubling, 800ms
                       cap) before surfacing the final error; default 0
+           --metrics-addr HOST:PORT
+                      plaintext metrics scrape endpoint: each connection
+                      receives one sorted-name text exposition of the
+                      process metrics registry and is closed (same text
+                      as the 'metrics' wire op)
   sampler  (reads a Sampler script from stdin)
   lint     [--src DIR]  determinism static analysis over the crate's own
            sources (default: ./src, falling back to the build-time crate
@@ -140,6 +155,11 @@ global flags:
                coalescer (default: next power of two >= the hardware
                parallelism). Purely a contention knob: output bytes are
                identical for any value — the parity tests sweep it
+  --trace F    stream observability spans as JSON lines to file F ('-' =
+               stderr): request admit/park/class-close/fused-exec/render,
+               engine batches, model-generation rounds, micro-benchmark
+               runs. Spans never touch stdout or response bytes — output
+               is byte-identical with tracing on or off
 ";
 
 /// Comma-separated `--n`/`--b` size lists (`"48,64,96"` or a single
@@ -832,6 +852,12 @@ fn serve_cmd(args: &Args) {
             std::process::exit(1);
         }
     };
+    if let Some(addr) = args.get("metrics-addr") {
+        if let Err(e) = dlapm::serve::spawn_metrics_listener(addr) {
+            eprintln!("serve: {e}");
+            std::process::exit(1);
+        }
+    }
     let result = if args.flag("stdio") {
         dlapm::serve::serve_stdio(&state)
     } else if let Some(addr) = args.get("addr") {

@@ -267,6 +267,7 @@ fn run_fits(
     stats: &mut GenStats,
 ) -> Result<Vec<FittedNode>> {
     stats.refinements += domains.len();
+    let span = crate::obs::trace::begin("model.gen_round", "", &plan.case);
     let tasks: Vec<_> = domains
         .into_iter()
         .map(|d| {
@@ -275,7 +276,11 @@ fn run_fits(
             move || fit_leaf(&machine, &plan, &d)
         })
         .collect();
+    let n_fits = tasks.len();
     let results = engine.run(tasks)?;
+    if let Some(s) = span {
+        s.num("fits", n_fits as u64).finish();
+    }
     let mut out = Vec::with_capacity(results.len());
     for (node, leaf) in results {
         stats.measured_points += leaf.measured_points;

@@ -1,0 +1,34 @@
+//! Leveled stderr logging for the serve daemon: one uniform, greppable
+//! line shape.
+//!
+//! Every daemon stderr line is
+//!
+//! ```text
+//! [dlapm serve] level=<info|warn|error> event=<kebab-name> <detail…>
+//! ```
+//!
+//! so operators (and the CI smokes) can grep by `event=` instead of
+//! matching free-form prose. The `[dlapm serve]` prefix is kept for
+//! continuity with the pre-obs banner format. Stderr is explicitly
+//! outside the determinism contract — these lines may mention warm
+//! state, timing and scheduling; response bytes may not.
+
+fn emit(level: &str, event: &str, detail: &str) {
+    if detail.is_empty() {
+        eprintln!("[dlapm serve] level={level} event={event}");
+    } else {
+        eprintln!("[dlapm serve] level={level} event={event} {detail}");
+    }
+}
+
+pub fn info(event: &str, detail: impl std::fmt::Display) {
+    emit("info", event, &detail.to_string());
+}
+
+pub fn warn(event: &str, detail: impl std::fmt::Display) {
+    emit("warn", event, &detail.to_string());
+}
+
+pub fn error(event: &str, detail: impl std::fmt::Display) {
+    emit("error", event, &detail.to_string());
+}

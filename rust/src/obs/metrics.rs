@@ -1,0 +1,502 @@
+//! Process-wide metrics registry: named counters, gauges and
+//! fixed-boundary histograms with a deterministic text exposition.
+//!
+//! Counters follow the `util::sync::ShardCounters` pattern: a
+//! power-of-two array of cache-line-aligned atomic cells, each thread
+//! routed to one cell by a process-stable slot id, so concurrent
+//! increments never contend on one line. Reads sum every cell — exact
+//! under any interleaving, like the sharded cache counters.
+//!
+//! Histograms use **fixed** bucket boundaries (compile-time constants,
+//! never adaptive), so the set of exposition lines — names, label
+//! values, `le` edges — is a pure function of the metric inventory:
+//! only the sample *values* are state-dependent. [`Registry::render`]
+//! walks a `BTreeMap`, so the exposition is always in sorted-name
+//! order; two scrapes of identical state are byte-identical.
+//!
+//! The global registry ([`global`]) backs the serve daemon's `metrics`
+//! wire op and `--metrics-addr` scrape endpoint; hot paths use the
+//! pre-resolved [`handles`] struct instead of name lookups.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::util::sync::Mutex;
+
+/// One cache-line-aligned counter cell (the `ShardCounters` layout).
+#[repr(align(64))]
+#[derive(Default)]
+struct Cell(AtomicU64);
+
+static NEXT_SLOT: AtomicUsize = AtomicUsize::new(0);
+thread_local! {
+    /// Process-stable per-thread cell slot: assigned once per thread,
+    /// in thread-creation order.
+    static SLOT: usize = NEXT_SLOT.fetch_add(1, Ordering::Relaxed);
+}
+
+fn thread_slot() -> usize {
+    SLOT.with(|s| *s)
+}
+
+/// A monotonically increasing counter, sharded across aligned atomic
+/// cells so hot-path increments from different threads do not share a
+/// cache line. `get()` sums all cells: exact under any interleaving.
+pub struct Counter {
+    cells: Box<[Cell]>,
+    mask: usize,
+}
+
+impl Counter {
+    /// A counter with `cells` shards (clamped to a power of two).
+    pub fn with_cells(cells: usize) -> Counter {
+        let n = cells.max(1).next_power_of_two();
+        Counter { cells: (0..n).map(|_| Cell::default()).collect(), mask: n - 1 }
+    }
+
+    /// A counter sharded for the machine's hardware parallelism.
+    pub fn new() -> Counter {
+        Counter::with_cells(crate::util::sync::default_shards())
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cells[thread_slot() & self.mask].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cells.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// A last-value gauge (single atomic; gauges are low-frequency).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if `v` exceeds it (high-water marks).
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The fixed bucket edges (microseconds) for serve latency histograms:
+/// 50µs … 1s. Fixed at compile time so the exposition's `le` label set
+/// never depends on observed traffic.
+pub const LATENCY_EDGES_US: [u64; 13] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 1_000_000];
+
+/// A histogram with fixed, strictly increasing bucket edges plus an
+/// implicit `+Inf` bucket. Bucket assignment is deterministic: a sample
+/// lands in the first bucket whose edge is ≥ the value.
+pub struct Histogram {
+    edges: Vec<u64>,
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(edges: &[u64]) -> Histogram {
+        assert!(
+            edges.windows(2).all(|w| w[0] < w[1]),
+            "histogram edges must be strictly increasing"
+        );
+        Histogram {
+            edges: edges.to_vec(),
+            buckets: (0..edges.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// The bucket index `v` lands in (edges.len() = the `+Inf` bucket).
+    pub fn bucket_index(&self, v: u64) -> usize {
+        self.edges.iter().position(|&e| v <= e).unwrap_or(self.edges.len())
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[self.bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+/// A timer for latency histograms. Lives in `obs/` because this module
+/// is the sanctioned wall-clock site (see the module docs in
+/// [`crate::obs`]): elapsed time flows into histograms and traces only,
+/// never into response bytes.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn elapsed_us(&self) -> u64 {
+        u64::try_from(self.0.elapsed().as_micros()).unwrap_or(u64::MAX)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of metrics with get-or-create accessors and a
+/// sorted text exposition. Use [`global`] for the process registry;
+/// fresh instances exist for unit tests.
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { metrics: Mutex::new(BTreeMap::new(), "obs-metrics-registry") }
+    }
+
+    /// Get or create the counter `name`. Panics if `name` is already
+    /// registered as a different metric kind (a programming error).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.metrics.lock();
+        let m = g
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())));
+        match m {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.metrics.lock();
+        let m = g.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())));
+        match m {
+            Metric::Gauge(v) => Arc::clone(v),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, edges: &[u64]) -> Arc<Histogram> {
+        let mut g = self.metrics.lock();
+        let m = g
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(edges))));
+        match m {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Render the Prometheus-style text exposition: metrics in sorted
+    /// name order, one `# TYPE` comment per metric base name (the part
+    /// before any `{label}` block), integer sample values. The line
+    /// *set* is a pure function of the registered inventory; only the
+    /// values are state-dependent.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let g = self.metrics.lock();
+        let mut out = String::new();
+        let mut typed: Option<String> = None;
+        for (name, metric) in g.iter() {
+            let (base, labels) = split_name(name);
+            let kind = match metric {
+                Metric::Counter(_) => "counter",
+                Metric::Gauge(_) => "gauge",
+                Metric::Histogram(_) => "histogram",
+            };
+            if typed.as_deref() != Some(base) {
+                let _ = writeln!(out, "# TYPE {base} {kind}");
+                typed = Some(base.to_string());
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(v) => {
+                    let _ = writeln!(out, "{name} {}", v.get());
+                }
+                Metric::Histogram(h) => {
+                    // Bucket labels compose with the metric's own labels:
+                    // base_bucket{op="x",le="50"} — `le` always last.
+                    let with = |extra: &str| match labels {
+                        Some(l) => format!("{{{l},{extra}}}"),
+                        None => format!("{{{extra}}}"),
+                    };
+                    let plain = match labels {
+                        Some(l) => format!("{{{l}}}"),
+                        None => String::new(),
+                    };
+                    let mut cum = 0u64;
+                    for (i, edge) in h.edges.iter().enumerate() {
+                        cum += h.buckets[i].load(Ordering::Relaxed);
+                        let _ =
+                            writeln!(out, "{base}_bucket{} {cum}", with(&format!("le=\"{edge}\"")));
+                    }
+                    cum += h.buckets[h.edges.len()].load(Ordering::Relaxed);
+                    let _ = writeln!(out, "{base}_bucket{} {cum}", with("le=\"+Inf\""));
+                    let _ = writeln!(out, "{base}_sum{plain} {}", h.sum.load(Ordering::Relaxed));
+                    let _ =
+                        writeln!(out, "{base}_count{plain} {}", h.count.load(Ordering::Relaxed));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+/// Split a metric name into its base and optional label block:
+/// `lat{op="x"}` → (`lat`, `Some(op="x")`).
+fn split_name(name: &str) -> (&str, Option<&str>) {
+    match name.find('{') {
+        Some(i) => (&name[..i], Some(&name[i + 1..name.len() - 1])),
+        None => (name, None),
+    }
+}
+
+/// The process-wide registry behind the `metrics` wire op and
+/// `serve --metrics-addr`.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Pre-resolved handles for every migrated counter and gauge, so hot
+/// paths (cache lookups, engine steals) pay one relaxed `fetch_add` —
+/// no registry lock, no name hashing. Instance counters (`ModelCache`
+/// / `Memo` / `Coalescer` per-object totals feeding the `status` op)
+/// stay authoritative and untouched; these are process-wide mirrors.
+pub struct Handles {
+    pub model_cache_hits: Arc<Counter>,
+    pub model_cache_misses: Arc<Counter>,
+    pub memo_hits: Arc<Counter>,
+    pub memo_misses: Arc<Counter>,
+    pub coalesce_led: Arc<Counter>,
+    pub coalesce_coalesced: Arc<Counter>,
+    pub serve_requests: Arc<Counter>,
+    pub serve_batch_classes: Arc<Counter>,
+    pub serve_batch_requests_fused: Arc<Counter>,
+    pub serve_batch_points_fused: Arc<Counter>,
+    pub serve_batch_fanouts: Arc<Counter>,
+    pub serve_single_fanouts: Arc<Counter>,
+    pub serve_models_generated: Arc<Counter>,
+    pub serve_checkpoints: Arc<Counter>,
+    pub engine_steals: Arc<Counter>,
+    pub engine_parks: Arc<Counter>,
+    pub engine_wakes: Arc<Counter>,
+    pub engine_jobs: Arc<Counter>,
+    pub serve_inflight: Arc<Gauge>,
+    pub serve_queue_max: Arc<Gauge>,
+    pub serve_queue_peak: Arc<Gauge>,
+    pub serve_connections: Arc<Gauge>,
+    pub engine_queue_depth_peak: Arc<Gauge>,
+}
+
+pub fn handles() -> &'static Handles {
+    static HANDLES: OnceLock<Handles> = OnceLock::new();
+    HANDLES.get_or_init(|| {
+        let r = global();
+        Handles {
+            model_cache_hits: r.counter("dlapm_model_cache_hits_total"),
+            model_cache_misses: r.counter("dlapm_model_cache_misses_total"),
+            memo_hits: r.counter("dlapm_memo_hits_total"),
+            memo_misses: r.counter("dlapm_memo_misses_total"),
+            coalesce_led: r.counter("dlapm_coalesce_led_total"),
+            coalesce_coalesced: r.counter("dlapm_coalesce_coalesced_total"),
+            serve_requests: r.counter("dlapm_serve_requests_total"),
+            serve_batch_classes: r.counter("dlapm_serve_batch_classes_total"),
+            serve_batch_requests_fused: r.counter("dlapm_serve_batch_requests_fused_total"),
+            serve_batch_points_fused: r.counter("dlapm_serve_batch_points_fused_total"),
+            serve_batch_fanouts: r.counter("dlapm_serve_batch_fanouts_total"),
+            serve_single_fanouts: r.counter("dlapm_serve_single_fanouts_total"),
+            serve_models_generated: r.counter("dlapm_serve_models_generated_total"),
+            serve_checkpoints: r.counter("dlapm_serve_checkpoints_total"),
+            engine_steals: r.counter("dlapm_engine_steals_total"),
+            engine_parks: r.counter("dlapm_engine_parks_total"),
+            engine_wakes: r.counter("dlapm_engine_wakes_total"),
+            engine_jobs: r.counter("dlapm_engine_jobs_total"),
+            serve_inflight: r.gauge("dlapm_serve_inflight"),
+            serve_queue_max: r.gauge("dlapm_serve_queue_max"),
+            serve_queue_peak: r.gauge("dlapm_serve_queue_peak"),
+            serve_connections: r.gauge("dlapm_serve_connections"),
+            engine_queue_depth_peak: r.gauge("dlapm_engine_queue_depth_peak"),
+        }
+    })
+}
+
+/// The per-op serve latency histogram
+/// `dlapm_serve_latency_us{op="<op>"}` in the global registry.
+pub fn latency(op: &str) -> Arc<Histogram> {
+    global().histogram(&format!("dlapm_serve_latency_us{{op=\"{op}\"}}"), &LATENCY_EDGES_US)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_cells_exactly_across_threads() {
+        let c = Arc::new(Counter::with_cells(4));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.add(1);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn gauge_record_max_is_a_high_water_mark() {
+        let g = Gauge::new();
+        g.record_max(5);
+        g.record_max(3);
+        assert_eq!(g.get(), 5);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn histogram_bucket_assignment_is_deterministic() {
+        let h = Histogram::new(&[10, 20]);
+        // A sample lands in the first bucket whose edge is >= the value;
+        // exact-edge values land in that edge's own bucket.
+        for (v, want) in [(0, 0), (5, 0), (10, 0), (11, 1), (20, 1), (21, 2), (u64::MAX, 2)] {
+            assert_eq!(h.bucket_index(v), want, "v={v}");
+        }
+        h.observe(5);
+        h.observe(10);
+        h.observe(15);
+        h.observe(999);
+        assert_eq!(h.count(), 4);
+        let counts: Vec<u64> = h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        assert_eq!(counts, vec![2, 1, 1]);
+        assert_eq!(h.sum.load(Ordering::Relaxed), 5 + 10 + 15 + 999);
+    }
+
+    #[test]
+    fn latency_edges_are_strictly_increasing() {
+        assert!(LATENCY_EDGES_US.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn render_is_sorted_and_groups_types() {
+        let r = Registry::new();
+        r.counter("zz_total").add(7);
+        r.counter("aa_total").add(1);
+        r.gauge("mm_gauge").set(3);
+        let h = r.histogram("lat{op=\"x\"}", &[10, 20]);
+        h.observe(5);
+        h.observe(25);
+        let text = r.render();
+        assert_eq!(
+            text,
+            "# TYPE aa_total counter\n\
+             aa_total 1\n\
+             # TYPE lat histogram\n\
+             lat_bucket{op=\"x\",le=\"10\"} 1\n\
+             lat_bucket{op=\"x\",le=\"20\"} 1\n\
+             lat_bucket{op=\"x\",le=\"+Inf\"} 2\n\
+             lat_sum{op=\"x\"} 30\n\
+             lat_count{op=\"x\"} 2\n\
+             # TYPE mm_gauge gauge\n\
+             mm_gauge 3\n\
+             # TYPE zz_total counter\n\
+             zz_total 7\n"
+        );
+        // Two scrapes of identical state are byte-identical.
+        assert_eq!(text, r.render());
+    }
+
+    #[test]
+    fn labelled_histograms_share_one_type_comment() {
+        let r = Registry::new();
+        r.histogram("lat{op=\"a\"}", &[10]);
+        r.histogram("lat{op=\"b\"}", &[10]);
+        let text = r.render();
+        assert_eq!(text.matches("# TYPE lat histogram").count(), 1);
+        assert!(text.contains("lat_bucket{op=\"a\",le=\"10\"} 0"));
+        assert!(text.contains("lat_bucket{op=\"b\",le=\"10\"} 0"));
+    }
+
+    #[test]
+    fn get_or_create_returns_the_same_metric() {
+        let r = Registry::new();
+        r.counter("c_total").add(2);
+        assert_eq!(r.counter("c_total").get(), 2);
+    }
+
+    #[test]
+    fn global_handles_register_every_migrated_name() {
+        // Touch the handles, then check the global exposition lists the
+        // whole inventory (presence only: other tests share the global
+        // registry, so values are not asserted here).
+        let _ = handles();
+        let _ = latency("select");
+        let text = global().render();
+        for name in [
+            "dlapm_model_cache_hits_total",
+            "dlapm_model_cache_misses_total",
+            "dlapm_memo_hits_total",
+            "dlapm_memo_misses_total",
+            "dlapm_coalesce_led_total",
+            "dlapm_coalesce_coalesced_total",
+            "dlapm_serve_requests_total",
+            "dlapm_serve_batch_classes_total",
+            "dlapm_serve_batch_requests_fused_total",
+            "dlapm_serve_batch_points_fused_total",
+            "dlapm_serve_batch_fanouts_total",
+            "dlapm_serve_single_fanouts_total",
+            "dlapm_serve_models_generated_total",
+            "dlapm_serve_checkpoints_total",
+            "dlapm_engine_steals_total",
+            "dlapm_engine_parks_total",
+            "dlapm_engine_wakes_total",
+            "dlapm_engine_jobs_total",
+            "dlapm_serve_inflight",
+            "dlapm_serve_queue_max",
+            "dlapm_serve_queue_peak",
+            "dlapm_serve_connections",
+            "dlapm_engine_queue_depth_peak",
+            "dlapm_serve_latency_us{op=\"select\"}",
+        ] {
+            assert!(text.contains(name), "missing {name} in exposition");
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Unified observability: process-wide metrics, span tracing, leveled
+//! stderr logging.
+//!
+//! Three small, zero-dependency halves:
+//!
+//! - [`metrics`] — a global registry of site-named counters, gauges and
+//!   fixed-boundary histograms. Counters are cache-line-aligned sharded
+//!   atomics (the `util::sync::ShardCounters` pattern), so hot paths
+//!   pay one relaxed `fetch_add` on a per-thread cell. The registry
+//!   renders a Prometheus-style text exposition in sorted-name order,
+//!   served by the `metrics` wire op and `serve --metrics-addr`.
+//! - [`trace`] — JSON-lines span events behind `--trace FILE|-`. Each
+//!   line carries a deterministic identity part (span name, parent,
+//!   canonical request key, counters) and a clearly separated
+//!   wall-time part (`"wall"`: emission sequence + elapsed µs).
+//! - [`log`] — the serve daemon's stderr lines in one uniform,
+//!   greppable `level=… event=…` shape.
+//!
+//! **Determinism contract.** Observability is read-only with respect to
+//! output bytes: no responder, formatter or `report::` path may read a
+//! metric or span (`dlapm lint` rule `trace-in-response-path`), so wire
+//! responses and CLI stdout are byte-identical with tracing on or off
+//! for any `--jobs` / `--shards` / `--batch-window` combination. This
+//! module is the one sanctioned home for wall-clock reads outside
+//! `util::bench` (the lint's `wall-clock-in-pure-path` rule exempts
+//! `obs/`): timestamps flow only into trace files, histograms and the
+//! exposition — never into responses.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;

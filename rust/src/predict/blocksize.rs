@@ -160,6 +160,7 @@ pub fn optimize_blocksize_grouped(
     items: &[SweepItem],
 ) -> Result<(Vec<(BlockSizeSweep, Vec<Ranked>)>, usize)> {
     let mut batched = 0usize;
+    let span = crate::obs::trace::begin("predict.blocksize", "", "");
     let mut groups: Vec<Vec<Arc<dyn Candidate + Send + Sync>>> = Vec::with_capacity(items.len());
     for item in items {
         assert!(!item.bs.is_empty(), "empty block-size sweep");
@@ -183,6 +184,9 @@ pub fn optimize_blocksize_grouped(
         );
     }
     let rankings = select::rank_candidate_groups(engine, &groups)?;
+    if let Some(s) = span {
+        s.num("items", items.len() as u64).num("points", batched as u64).finish();
+    }
     let out = items
         .iter()
         .zip(rankings)

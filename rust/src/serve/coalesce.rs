@@ -119,6 +119,7 @@ impl<V: Clone> Coalescer<V> {
                     slots.insert(key.to_string(), Slot { done: false, value: None, waiters: 0 });
                     drop(slots);
                     self.led.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::metrics::handles().coalesce_led.add(1);
                     let mut guard = LeaderGuard { shard, key, armed: true };
                     let value = compute();
                     guard.armed = false;
@@ -142,10 +143,12 @@ impl<V: Clone> Coalescer<V> {
                     // A finished slot still draining its waiters: take the
                     // value without registering (purity makes this exact).
                     self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::metrics::handles().coalesce_coalesced.add(1);
                     return slot.value.clone().expect("done slot without value");
                 }
                 Some(slot) => {
                     self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::metrics::handles().coalesce_coalesced.add(1);
                     slot.waiters += 1;
                     let mut slots = shard
                         .cv

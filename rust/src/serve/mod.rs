@@ -39,5 +39,6 @@ pub use protocol::{OPS, PROTOCOL_VERSION};
 pub use scheduler::{BatchScheduler, Gate};
 pub use server::{
     retry_backoff, run_client, run_client_script, run_client_script_with_retry,
-    run_client_with_retry, serve_stdio, serve_tcp, ServeOpts, ServeState,
+    run_client_with_retry, serve_stdio, serve_tcp, spawn_metrics_listener, ServeOpts,
+    ServeState,
 };

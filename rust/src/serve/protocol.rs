@@ -8,9 +8,9 @@
 //!   object maps are `BTreeMap`s — key order in every response line is
 //!   alphabetical by construction, which *is* the canonical encoding.
 //! * Every response to a well-formed request is a pure function of the
-//!   request (state-dependent observability lives in the `status` op and
-//!   on stderr), so response bytes are identical across `--jobs` values,
-//!   request interleavings and warm/cold stores.
+//!   request (state-dependent observability lives in the `status` /
+//!   `metrics` ops and on stderr), so response bytes are identical
+//!   across `--jobs` values, request interleavings and warm/cold stores.
 //! * Unknown fields are rejected, not ignored: a typo'd field name would
 //!   otherwise silently fall back to its default and return a
 //!   well-formed answer to a question the client didn't ask.
@@ -23,12 +23,13 @@ pub const PROTOCOL_VERSION: usize = 1;
 /// Every operation the daemon understands — one string per line; CI's
 /// docs-freshness check extracts them textually and requires each to
 /// appear in `docs/serve-protocol.md`.
-pub const OPS: [&str; 6] = [
+pub const OPS: [&str; 7] = [
     "predict",
     "select",
     "blocksize",
     "contract_rank",
     "status",
+    "metrics",
     "shutdown",
 ];
 
@@ -43,7 +44,7 @@ fn op_fields(op: &str) -> &'static [&'static str] {
         "contract_rank" => {
             &["spec", "preset", "n", "small", "seed", "granularity", "cpu", "lib", "threads"]
         }
-        _ => &[], // status, shutdown
+        _ => &[], // status, metrics, shutdown
     }
 }
 
@@ -319,9 +320,9 @@ mod tests {
     #[test]
     fn every_op_is_known_to_the_field_tables() {
         for op in OPS {
-            // status/shutdown legitimately take no extra fields.
+            // status/metrics/shutdown legitimately take no extra fields.
             let fields = op_fields(op);
-            if matches!(op, "status" | "shutdown") {
+            if matches!(op, "status" | "metrics" | "shutdown") {
                 assert!(fields.is_empty());
             } else {
                 assert!(!fields.is_empty(), "{op} has no field table");

@@ -173,6 +173,10 @@ pub struct ServeState {
     batch_fanouts: AtomicU64,
     /// Engine fan-outs submitted for individual (unfused) requests.
     single_fanouts: AtomicU64,
+    /// Per-op serve latency histograms, pre-registered for every
+    /// protocol op so the `metrics` exposition always lists the full
+    /// per-op series set regardless of which ops traffic has touched.
+    latency: BTreeMap<String, Arc<crate::obs::metrics::Histogram>>,
 }
 
 fn internal(what: &str, e: impl std::fmt::Display) -> ReqError {
@@ -187,7 +191,11 @@ pub struct InflightGuard<'a>(&'a AtomicUsize);
 
 impl Drop for InflightGuard<'_> {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+        let now = self.0.fetch_sub(1, Ordering::SeqCst) - 1;
+        // Mirror gauge only: the atomic above stays authoritative. A
+        // last-writer-wins gauge is approximate under concurrent admits,
+        // which is fine for a scrape endpoint.
+        crate::obs::metrics::handles().serve_inflight.set(now as u64);
     }
 }
 
@@ -451,6 +459,11 @@ impl ServeState {
             Some(dir) => Some(WarmStore::open(dir)?),
             None => None,
         };
+        crate::obs::metrics::handles().serve_queue_max.set(opts.max_queue as u64);
+        let latency = protocol::OPS
+            .iter()
+            .map(|op| (op.to_string(), crate::obs::metrics::latency(op)))
+            .collect();
         Ok(ServeState {
             engine: Arc::new(Engine::new(opts.jobs)),
             warm,
@@ -475,6 +488,7 @@ impl ServeState {
             batch_points_fused: AtomicU64::new(0),
             batch_fanouts: AtomicU64::new(0),
             single_fanouts: AtomicU64::new(0),
+            latency,
         })
     }
 
@@ -553,7 +567,10 @@ impl ServeState {
             let served = self.served.fetch_add(1, Ordering::SeqCst) + 1;
             if self.checkpoint_every > 0 && served % self.checkpoint_every == 0 {
                 if let Err(e) = self.checkpoint() {
-                    eprintln!("[dlapm serve] periodic checkpoint failed: {e}");
+                    crate::obs::log::error(
+                        "checkpoint-failed",
+                        format!("periodic checkpoint failed: {e}"),
+                    );
                 }
             }
         }
@@ -565,7 +582,22 @@ impl ServeState {
     }
 
     fn route(&self, req: Request) -> Disposition<'_> {
+        // Observe the dispatch latency per op on the way out. A parked
+        // request records its admission time here; its wait and fused
+        // execution appear as spans, not in this histogram. Latency only
+        // ever flows into the metrics registry — never into the response.
+        let op = req.op.clone();
+        let clock = crate::obs::metrics::Stopwatch::start();
+        let disp = self.route_inner(req);
+        if let Some(h) = self.latency.get(&op) {
+            h.observe(clock.elapsed_us());
+        }
+        disp
+    }
+
+    fn route_inner(&self, req: Request) -> Disposition<'_> {
         *self.requests.lock().entry(req.op.clone()).or_insert(0) += 1;
+        crate::obs::metrics::handles().serve_requests.add(1);
         match req.op.as_str() {
             "status" => {
                 // Barrier op: close and run every open class first, so the
@@ -574,6 +606,16 @@ impl ServeState {
                 self.drain_gate();
                 let (output, data) = self.status();
                 self.ready(protocol::ok_line("status", &req.id, &output, data))
+            }
+            "metrics" => {
+                // Barrier like `status`, so the scrape reflects every
+                // earlier arrival. The exposition is deliberately
+                // state-dependent: `metrics` joins `status` and stderr as
+                // the sanctioned observability channels outside the pure
+                // response contract.
+                self.drain_gate();
+                let output = crate::obs::metrics::global().render();
+                self.ready(protocol::ok_line("metrics", &req.id, &output, Json::obj(vec![])))
             }
             "shutdown" => {
                 self.drain_gate();
@@ -592,6 +634,7 @@ impl ServeState {
                     &format!("compute queue full (--max-queue {}); retry later", self.max_queue),
                 )),
                 Some(slot) => {
+                    crate::obs::trace::emit("serve.admit", "", &req.key);
                     if self.batch_window == 0 {
                         // Batching off: the exact pre-batching path.
                         let _slot = slot;
@@ -601,6 +644,7 @@ impl ServeState {
                             }
                             Err(e) => protocol::error_line(&req.id, e.code, &e.message),
                         };
+                        crate::obs::trace::emit("serve.render", "serve.admit", &req.key);
                         return self.ready(resp);
                     }
                     match self.scope_of(&req) {
@@ -611,7 +655,10 @@ impl ServeState {
                             match self.gate.try_take(ticket) {
                                 // Already counted by run_batches.
                                 Some(resp) => Disposition::Ready(resp),
-                                None => Disposition::Parked(ticket, slot),
+                                None => {
+                                    crate::obs::trace::emit("serve.park", "serve.admit", &class);
+                                    Disposition::Parked(ticket, slot)
+                                }
                             }
                         }
                     }
@@ -674,13 +721,19 @@ impl ServeState {
             let fallback: Vec<(u64, Json)> =
                 batch.members.iter().map(|(t, req)| (*t, req.id.clone())).collect();
             let count = batch.members.len();
+            if let Some(s) = crate::obs::trace::begin("serve.class_close", "", &batch.class) {
+                s.num("members", count as u64).finish();
+            }
             let results = catch_unwind(AssertUnwindSafe(|| self.execute_class(&batch.members)));
             let results = match results {
                 Ok(r) => r,
                 Err(_) => {
-                    eprintln!(
-                        "[dlapm serve] batched computation panicked; \
-                         answering {count} member(s) with internal errors"
+                    crate::obs::log::error(
+                        "batch-panicked",
+                        format!(
+                            "batched computation panicked; \
+                             answering {count} member(s) with internal errors"
+                        ),
                     );
                     fallback
                         .iter()
@@ -725,7 +778,16 @@ impl ServeState {
         } else {
             self.batch_classes.fetch_add(1, Ordering::SeqCst);
             self.batch_requests_fused.fetch_add(members.len() as u64, Ordering::SeqCst);
-            self.compute_fused(&distinct)
+            let obs = crate::obs::metrics::handles();
+            obs.serve_batch_classes.add(1);
+            obs.serve_batch_requests_fused.add(members.len() as u64);
+            let span =
+                crate::obs::trace::begin("serve.fused_exec", "serve.class_close", &distinct[0].op);
+            let outcomes = self.compute_fused(&distinct);
+            if let Some(s) = span {
+                s.num("distinct", distinct.len() as u64).finish();
+            }
+            outcomes
         };
         members
             .iter()
@@ -737,6 +799,7 @@ impl ServeState {
                     }
                     Err(e) => protocol::error_line(&req.id, e.code, &e.message),
                 };
+                crate::obs::trace::emit("serve.render", "serve.class_close", &req.key);
                 (*t, resp)
             })
             .collect()
@@ -806,6 +869,7 @@ impl ServeState {
             }
         }
         self.batch_points_fused.fetch_add(batched as u64, Ordering::SeqCst);
+        crate::obs::metrics::handles().serve_batch_points_fused.add(batched as u64);
         if !is_select {
             // `predict` reads the now-warm cache per member: no ranking
             // fan-out at all for the class.
@@ -821,6 +885,7 @@ impl ServeState {
             .collect();
         if !groups.is_empty() {
             self.batch_fanouts.fetch_add(1, Ordering::SeqCst);
+            crate::obs::metrics::handles().serve_batch_fanouts.add(1);
         }
         match crate::select::rank_candidate_groups(&self.engine, &groups) {
             Err(e) => {
@@ -877,6 +942,7 @@ impl ServeState {
             .collect();
         if !items.is_empty() {
             self.batch_fanouts.fetch_add(1, Ordering::SeqCst);
+            crate::obs::metrics::handles().serve_batch_fanouts.add(1);
         }
         match blocksize::optimize_blocksize_grouped(&self.engine, &items) {
             Err(e) => {
@@ -885,6 +951,7 @@ impl ServeState {
             }
             Ok((results, batched)) => {
                 self.batch_points_fused.fetch_add(batched as u64, Ordering::SeqCst);
+                crate::obs::metrics::handles().serve_batch_points_fused.add(batched as u64);
                 let mut it = results.into_iter();
                 prepped
                     .into_iter()
@@ -933,6 +1000,7 @@ impl ServeState {
         }
         if !groups.is_empty() {
             self.batch_fanouts.fetch_add(1, Ordering::SeqCst);
+            crate::obs::metrics::handles().serve_batch_fanouts.add(1);
         }
         match crate::select::rank_candidate_groups(&self.engine, &groups) {
             Err(e) => {
@@ -991,6 +1059,9 @@ impl ServeState {
         // Track the high-water mark over *admitted* requests only —
         // refused attempts never occupied a slot.
         self.queue_peak.fetch_max(prev + 1, Ordering::SeqCst);
+        let obs = crate::obs::metrics::handles();
+        obs.serve_inflight.set((prev + 1) as u64);
+        obs.serve_queue_peak.record_max((prev + 1) as u64);
         Some(slot)
     }
 
@@ -1093,6 +1164,7 @@ impl ServeState {
             .map_err(|e| internal("model generation", e))?;
             if generated > 0 {
                 self.models_generated.fetch_add(generated as u64, Ordering::SeqCst);
+                crate::obs::metrics::handles().serve_models_generated.add(generated as u64);
                 models.store = Arc::new(owned);
             }
             models.ensured.insert(family.to_string());
@@ -1163,9 +1235,10 @@ impl ServeState {
         }
         if written > 0 {
             self.checkpoints.fetch_add(1, Ordering::SeqCst);
+            crate::obs::metrics::handles().serve_checkpoints.add(1);
         }
         for line in warm.take_status() {
-            eprintln!("[dlapm serve] warm store: {line}");
+            crate::obs::log::info("warm-store", line);
         }
         Ok(written)
     }
@@ -1188,6 +1261,7 @@ impl ServeState {
         }
         let cands = select_candidates(&a, &models, &cache);
         self.single_fanouts.fetch_add(1, Ordering::SeqCst);
+        crate::obs::metrics::handles().serve_single_fanouts.add(1);
         let ranked = crate::select::rank_candidates_par(&self.engine, &cands)
             .map_err(|e| internal("selection ranking", e))?;
         Ok(render_select(&a, &ranked))
@@ -1199,6 +1273,7 @@ impl ServeState {
         let (models, cache) =
             self.blocked_warm(&a.machine, a.seed, a.cov_n(), a.cov_b(), &a.family, &alg_slice)?;
         self.single_fanouts.fetch_add(1, Ordering::SeqCst);
+        crate::obs::metrics::handles().serve_single_fanouts.add(1);
         let (sweep, ranked) =
             blocksize::optimize_blocksize_with(&self.engine, &models, &cache, &a.alg, a.n, &a.bs)
                 .map_err(|e| internal("block-size ranking", e))?;
@@ -1216,6 +1291,7 @@ impl ServeState {
         let (_reused, distinct) = micro::memo_reuse(&a.machine, &a.con, &algs, Elem::D, &memo);
         let cands = self.contract_candidates(&a, &algs, &memo);
         self.single_fanouts.fetch_add(1, Ordering::SeqCst);
+        crate::obs::metrics::handles().serve_single_fanouts.add(1);
         let ranked = crate::select::rank_candidates_par(&self.engine, &cands)
             .map_err(|e| internal("contraction ranking", e))?;
         Ok(render_contract(&a, algs.len(), distinct, &ranked))
@@ -1316,7 +1392,7 @@ mod sigint {
 
 fn finish(state: &ServeState) -> Result<()> {
     let written = state.checkpoint().context("final checkpoint")?;
-    eprintln!("[dlapm serve] shutdown: {written} warm slot(s) checkpointed");
+    crate::obs::log::info("shutdown", format!("{written} warm slot(s) checkpointed"));
     Ok(())
 }
 
@@ -1392,15 +1468,15 @@ fn drain_stdio_queue<'a>(
 
 /// TCP mode: line-oriented protocol on `addr` (`127.0.0.1:0` picks a free
 /// port), one thread per connection. The bound address is announced on
-/// stderr as `[dlapm serve] listening on <addr>` — tests and scripts
-/// parse that line. Connections beyond `--max-connections` are answered
-/// with a single `overloaded` error line and closed at the accept loop,
-/// before a thread is spawned for them.
+/// stderr as `[dlapm serve] level=info event=listening <addr>` — tests
+/// and scripts parse that line. Connections beyond `--max-connections`
+/// are answered with a single `overloaded` error line and closed at the
+/// accept loop, before a thread is spawned for them.
 pub fn serve_tcp(state: &Arc<ServeState>, addr: &str) -> Result<()> {
     sigint::install();
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr().context("resolving bound address")?;
-    eprintln!("[dlapm serve] listening on {local}");
+    crate::obs::log::info("listening", local);
     listener.set_nonblocking(true).context("nonblocking listener")?;
     let mut handles = Vec::new();
     while !sigint::requested() && !state.shutdown_requested() {
@@ -1411,11 +1487,13 @@ pub fn serve_tcp(state: &Arc<ServeState>, addr: &str) -> Result<()> {
                     reject_overloaded(stream, limit);
                     continue;
                 }
-                state.connections.fetch_add(1, Ordering::SeqCst);
+                let open = state.connections.fetch_add(1, Ordering::SeqCst) + 1;
+                crate::obs::metrics::handles().serve_connections.set(open as u64);
                 let st = Arc::clone(state);
                 handles.push(std::thread::spawn(move || {
                     connection(&st, stream);
-                    st.connections.fetch_sub(1, Ordering::SeqCst);
+                    let open = st.connections.fetch_sub(1, Ordering::SeqCst) - 1;
+                    crate::obs::metrics::handles().serve_connections.set(open as u64);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -1450,6 +1528,29 @@ fn reject_overloaded(mut stream: TcpStream, limit: usize) {
     let _ = stream.write_all(line.as_bytes());
     let _ = stream.write_all(b"\n");
     let _ = stream.flush();
+}
+
+/// `serve --metrics-addr`: a plaintext scrape endpoint on its own
+/// listener thread. Each accepted connection receives one rendering of
+/// the global registry ([`crate::obs::metrics::Registry::render`]) and
+/// is closed — no HTTP framing, no request parsing, so a scrape can
+/// never interact with the serve protocol. Returns after binding; the
+/// bound address is announced as
+/// `[dlapm serve] level=info event=metrics-listening <addr>`.
+pub fn spawn_metrics_listener(addr: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+    let local = listener.local_addr().context("resolving metrics address")?;
+    crate::obs::log::info("metrics-listening", local);
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            let body = crate::obs::metrics::global().render();
+            let _ = stream.write_all(body.as_bytes());
+            let _ = stream.flush();
+        }
+    });
+    Ok(())
 }
 
 fn connection(state: &ServeState, mut stream: TcpStream) {

@@ -227,8 +227,14 @@ pub fn predict_with(
 ) -> MicroPrediction {
     let kcon = keying_view(con, memo);
     let key = precondition_key(machine, &kcon, alg, elem);
-    let timing = memo
-        .get_or_insert_with(&key, || micro_timing(machine, &kcon, alg, elem, key_seed(seed, &key)));
+    let timing = memo.get_or_insert_with(&key, || {
+        let span = crate::obs::trace::begin("micro.bench", "", &key);
+        let t = micro_timing(machine, &kcon, alg, elem, key_seed(seed, &key));
+        if let Some(s) = span {
+            s.finish();
+        }
+        t
+    });
     prediction_from(alg, con, &timing)
 }
 

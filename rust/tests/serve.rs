@@ -184,7 +184,7 @@ fn warm_restart_from_store_is_byte_identical_and_regenerates_nothing() {
     assert!(warm_err.contains(": loaded"), "second run must warm-load:\n{warm_err}");
     // Nothing grew in the warm run, so its final checkpoint writes nothing.
     assert!(
-        warm_err.contains("shutdown: 0 warm slot(s) checkpointed"),
+        warm_err.contains("event=shutdown 0 warm slot(s) checkpointed"),
         "{warm_err}"
     );
     let (cold_lines, warm_lines): (Vec<&str>, Vec<&str>) =
@@ -223,7 +223,7 @@ fn spawn_tcp(extra: &[&str]) -> (std::process::Child, String) {
     let mut addr = None;
     let mut line = String::new();
     while reader.read_line(&mut line).unwrap_or(0) > 0 {
-        if let Some(rest) = line.trim().strip_prefix("[dlapm serve] listening on ") {
+        if let Some(rest) = line.trim().strip_prefix("[dlapm serve] level=info event=listening ") {
             addr = Some(rest.to_string());
             break;
         }
@@ -391,6 +391,134 @@ fn fused_class_counters_show_one_fanout_and_batched_points() {
     assert_eq!(count("single_fanouts"), 0, "no per-request fan-outs: {}", lines[3]);
     assert!(count("batch_points_fused") > 0, "points must batch-evaluate: {}", lines[3]);
     assert!(count("queue_peak") >= 1, "{}", lines[3]);
+}
+
+/// The tracing purity rule, end to end: for every combination of
+/// `--jobs` 1/4, `--shards` 1/4 and `--batch-window` 0/3, the same stdio
+/// script answered with `--trace FILE` produces stdout byte-identical to
+/// the untraced run of the same configuration — spans only ever go to
+/// the trace sink. The windowed runs' trace files must contain the full
+/// request lifecycle (admit, park, class-close, fused-exec, render); the
+/// unbatched runs admit and render without parking. Every trace line is
+/// parseable JSON carrying the identity part (name) and the wall part
+/// (seq).
+#[test]
+fn trace_parity_matrix_and_span_lifecycle() {
+    let script = concat!(
+        r#"{"op":"select","cpu":"sandybridge","n":520,"b":104,"seed":5,"id":"s1"}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":400,"b":96,"seed":5,"id":"s2"}"#,
+        "\n",
+        r#"{"op":"select","cpu":"sandybridge","n":360,"b":104,"seed":5,"id":"s3"}"#,
+        "\n",
+        r#"{"op":"status","id":"st"}"#,
+        "\n",
+    );
+    let dir = TempDir::new("serve_trace_parity");
+    let store = dir.path().join("store");
+    let store = store.to_str().expect("utf-8 temp path").to_string();
+    for jobs in ["1", "4"] {
+        for shards in ["1", "4"] {
+            for window in ["0", "3"] {
+                let mut extra = vec!["--jobs", jobs, "--shards", shards, "--store", &store];
+                if window != "0" {
+                    extra.extend_from_slice(&["--batch-window", window]);
+                }
+                let (plain, err, ok) = serve_stdio(&extra, script);
+                assert!(ok, "jobs {jobs} shards {shards} window {window}: {err}");
+                let trace_path = dir.path().join(format!("trace_{jobs}_{shards}_{window}.jsonl"));
+                let trace_file = trace_path.to_str().expect("utf-8 trace path").to_string();
+                let mut traced_extra = extra.clone();
+                traced_extra.extend_from_slice(&["--trace", &trace_file]);
+                let (traced, terr, tok) = serve_stdio(&traced_extra, script);
+                assert!(tok, "traced jobs {jobs} shards {shards} window {window}: {terr}");
+                assert_eq!(
+                    plain, traced,
+                    "jobs {jobs} shards {shards} window {window}: --trace changed stdout bytes"
+                );
+                let spans = std::fs::read_to_string(&trace_path).expect("reading trace file");
+                assert!(!spans.is_empty(), "trace file must not be empty");
+                for line in spans.lines() {
+                    let j = Json::parse(line).expect("trace line must be JSON");
+                    assert!(j.get("name").unwrap().as_str().is_some(), "{line}");
+                    assert!(j.get("wall").unwrap().get("seq").is_some(), "{line}");
+                }
+                let expected: &[&str] = if window == "0" {
+                    &["serve.admit", "serve.render"]
+                } else {
+                    &[
+                        "serve.admit",
+                        "serve.park",
+                        "serve.class_close",
+                        "serve.fused_exec",
+                        "serve.render",
+                    ]
+                };
+                for name in expected {
+                    assert!(
+                        spans.contains(&format!("\"name\":\"{name}\"")),
+                        "window {window}: missing span '{name}' in trace:\n{spans}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The `metrics` wire op: a barrier op whose `output` is the sorted-name
+/// text exposition of the process metrics registry — every migrated
+/// counter and gauge plus the pre-registered per-op latency histograms
+/// appear even before their code paths run.
+#[test]
+fn metrics_op_exposes_every_migrated_series() {
+    let script = format!("{SELECT}\n{CONTRACT}\n{{\"op\":\"metrics\",\"id\":\"m\"}}\n");
+    let (out, err, ok) = serve_stdio(&["--jobs", "2"], &script);
+    assert!(ok, "{err}");
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 3, "{out}");
+    let j = Json::parse(lines[2]).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{}", lines[2]);
+    assert_eq!(j.get("op").unwrap().as_str(), Some("metrics"));
+    let text = j.get("output").unwrap().as_str().unwrap().to_string();
+    for name in [
+        "dlapm_model_cache_hits_total",
+        "dlapm_model_cache_misses_total",
+        "dlapm_memo_hits_total",
+        "dlapm_memo_misses_total",
+        "dlapm_coalesce_led_total",
+        "dlapm_coalesce_coalesced_total",
+        "dlapm_serve_requests_total",
+        "dlapm_serve_batch_classes_total",
+        "dlapm_serve_batch_requests_fused_total",
+        "dlapm_serve_batch_points_fused_total",
+        "dlapm_serve_batch_fanouts_total",
+        "dlapm_serve_single_fanouts_total",
+        "dlapm_serve_models_generated_total",
+        "dlapm_serve_checkpoints_total",
+        "dlapm_engine_steals_total",
+        "dlapm_engine_parks_total",
+        "dlapm_engine_wakes_total",
+        "dlapm_engine_jobs_total",
+        "dlapm_serve_inflight",
+        "dlapm_serve_queue_max",
+        "dlapm_serve_queue_peak",
+        "dlapm_serve_connections",
+        "dlapm_engine_queue_depth_peak",
+    ] {
+        assert!(text.contains(name), "metrics output missing {name}:\n{text}");
+    }
+    // Per-op latency histograms are pre-registered for every protocol op.
+    for op in ["predict", "select", "blocksize", "contract_rank", "status", "metrics", "shutdown"]
+    {
+        assert!(
+            text.contains(&format!("dlapm_serve_latency_us_bucket{{op=\"{op}\",le=\"+Inf\"}}")),
+            "metrics output missing latency series for op {op}:\n{text}"
+        );
+    }
+    assert!(text.contains("# TYPE dlapm_serve_requests_total counter"), "{text}");
+    // The handled requests counted so far (select, contract_rank,
+    // metrics itself) are visible in the mirrored request counter.
+    assert!(text.contains("dlapm_serve_requests_total 3"), "{text}");
 }
 
 /// `--retry N` on the one-shot client: while the only `--max-connections`
